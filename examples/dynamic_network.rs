@@ -1,0 +1,53 @@
+//! Figure-6 reproduction at paper scale: request throughput under a 600 s
+//! Markovian bandwidth trace (20-100 Mbps), batch size 1, comparing
+//! single-device, SP, BP and ASTRA. Prints the per-10 s completion bars
+//! the paper plots.
+//!
+//!     cargo run --release --example dynamic_network -- [--seed 42]
+
+use anyhow::Result;
+use astra::comm::trace::BandwidthTrace;
+use astra::model::shape::{TransformerShape, VqSetting};
+use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::engine::ServeEngine;
+use astra::server::Request;
+use astra::sim::latency::SimParams;
+use astra::util::cli::Args;
+use astra::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let mut rng = Rng::new(seed);
+    let trace = BandwidthTrace::markovian(&mut rng, 20.0, 100.0, 9, 1.0, 600.0);
+    println!("600 s Markov bandwidth trace, mean {:.1} Mbps", trace.mean_mbps());
+
+    let shape = TransformerShape::paper_encoder(1024);
+    let params = SimParams::paper_encoder();
+    let subjects = vec![
+        Strategy::new(StrategyKind::SingleDevice, 1),
+        Strategy::new(StrategyKind::SequenceParallel, 4),
+        Strategy::new(StrategyKind::BlockParallel { n_b: 1, sp_variant: false }, 4),
+        Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+    ];
+    let mut single_rate = 0.0;
+    for s in subjects {
+        let reqs: Vec<Request> = (0..200_000)
+            .map(|i| Request { id: i, arrival_s: 0.0, tokens: 1024 })
+            .collect();
+        let mut engine = ServeEngine::new(shape, s, params.clone(), trace.clone());
+        let report = engine.serve_stream(reqs, 600.0);
+        if matches!(s.kind, StrategyKind::SingleDevice) {
+            single_rate = report.throughput;
+        }
+        println!("\n{} — {} resolved ({:.2} req/s, {:.2}x single)",
+            s.name(), report.completed, report.throughput,
+            report.throughput / single_rate.max(1e-9));
+        // ascii bars, one char per 2 completions, one row per 60 s
+        for (i, w) in report.windows.chunks(6).enumerate() {
+            let total: usize = w.iter().sum();
+            println!("  {:>4}s |{}", i * 60, "#".repeat(total / 2));
+        }
+    }
+    Ok(())
+}

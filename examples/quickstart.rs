@@ -1,0 +1,52 @@
+//! Quickstart: load the AOT artifacts, run one ASTRA prefill across 4
+//! simulated devices, and compare against the single-device baseline.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the whole public API surface in ~40 lines: artifact
+//! loading, cluster construction, prefill, and the latency/communication
+//! report.
+
+use anyhow::Result;
+use astra::config::RunConfig;
+use astra::coordinator::Cluster;
+use astra::tensor::Tensor;
+use astra::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let config = RunConfig { bandwidth_mbps: 50.0, ..RunConfig::default() };
+    // PJRT backend if the XLA runtime is available, else pure-rust native.
+    let cluster = match Cluster::load("artifacts".as_ref(), config.clone(), true) {
+        Ok(c) => c,
+        Err(_) => Cluster::load("artifacts".as_ref(), config, false)?,
+    };
+    let meta = &cluster.artifact.meta;
+    println!(
+        "loaded AstraFormer: {} layers, d={}, T={}, {} devices, G={}, K={}",
+        meta.n_layers, meta.d_model, meta.seq_len, meta.n_devices, meta.groups,
+        meta.codebook_size
+    );
+
+    // synthetic "image": T patches of patch_dim features
+    let mut rng = Rng::new(42);
+    let mut patches = Tensor::zeros(&[meta.seq_len, meta.patch_dim]);
+    rng.fill_normal(&mut patches.data);
+
+    let out = cluster.prefill(&patches)?;
+    println!("\nASTRA prefill over {} devices @ 50 Mbps:", meta.n_devices);
+    println!("  virtual latency : {:.2} ms", out.report.latency_s * 1e3);
+    println!("  compute / comm  : {:.2} / {:.2} ms",
+        out.report.compute_s * 1e3, out.report.comm_s * 1e3);
+    println!("  wire payload    : {:.1} kbit in {} messages ({} bits/token/block)",
+        out.report.payload_bits / 1e3, out.report.messages, out.report.bits_per_token_block);
+
+    let (baseline, wall) = cluster.prefill_single_device(&patches)?;
+    println!("\nsingle-device baseline: {:.2} ms (host wall time)", wall * 1e3);
+    println!("max |ASTRA - baseline| logit dev: {:.4} (VQ approximation error)",
+        astra::tensor::max_abs_diff(&out.logits, &baseline));
+
+    let pred = |t: &Tensor| t.data.iter().enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+    println!("predicted class: ASTRA={} baseline={}", pred(&out.logits), pred(&baseline));
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! End-to-end serving driver (the DESIGN.md validation experiment):
+//! load the trained small model from artifacts/, serve a batched synthetic
+//! request stream through the full stack — dynamic batcher → coordinator →
+//! VQ codec → simulated network → PJRT/native blocks → DCT head — and
+//! report latency percentiles, throughput, and measured bits-per-token.
+//!
+//!     make artifacts && cargo run --release --example serve_cluster -- \
+//!         [--requests 32] [--bandwidth 50] [--devices 4] [--native]
+
+use std::time::Instant;
+
+use anyhow::Result;
+use astra::config::RunConfig;
+use astra::coordinator::Cluster;
+use astra::server::{Batcher, Request};
+use astra::tensor::Tensor;
+use astra::util::cli::Args;
+use astra::util::rng::Rng;
+use astra::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["native"])?;
+    let n_requests = args.usize_or("requests", 24)?;
+    let config = RunConfig {
+        bandwidth_mbps: args.f64_or("bandwidth", 50.0)?,
+        n_devices: args.usize_or("devices", 4)?,
+        ..RunConfig::default()
+    };
+    let use_pjrt = !args.flag("native");
+    let cluster = match Cluster::load("artifacts".as_ref(), config.clone(), use_pjrt) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e}); using native backend");
+            Cluster::load("artifacts".as_ref(), config, false)?
+        }
+    };
+    let meta = cluster.artifact.meta.clone();
+
+    // open-loop Poisson arrivals into the dynamic batcher (batch=1 service,
+    // the paper's Fig-6 setting)
+    let mut rng = Rng::new(cluster.config.seed);
+    let rate = 8.0; // req/s of *virtual* time
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    for id in 0..n_requests as u64 {
+        t += rng.exp(rate);
+        arrivals.push(Request { id, arrival_s: t, tokens: meta.seq_len });
+    }
+    let mut batcher = Batcher::new(1, 0.0);
+
+    let mut vclock = 0.0f64; // virtual serving clock
+    let mut latency = Summary::new();
+    let mut queue_wait = Summary::new();
+    let mut payload_bits = 0.0;
+    let wall0 = Instant::now();
+    let mut served = 0usize;
+    let mut pending = arrivals.into_iter().peekable();
+    while pending.peek().is_some() || !batcher.is_empty() {
+        while let Some(r) = pending.peek() {
+            if r.arrival_s <= vclock {
+                batcher.push(pending.next().unwrap());
+            } else {
+                break;
+            }
+        }
+        let batch = batcher.next_batch(vclock, true);
+        if batch.is_empty() {
+            if let Some(r) = pending.peek() {
+                vclock = r.arrival_s;
+            }
+            continue;
+        }
+        for req in batch {
+            let start = vclock.max(req.arrival_s);
+            queue_wait.add(start - req.arrival_s);
+            let mut x = Tensor::zeros(&[meta.seq_len, meta.patch_dim]);
+            rng.fill_normal(&mut x.data);
+            let out = cluster.prefill(&x)?;
+            payload_bits += out.report.payload_bits;
+            vclock = start + out.report.latency_s;
+            latency.add(vclock - req.arrival_s);
+            served += 1;
+        }
+    }
+    let wall = wall0.elapsed().as_secs_f64();
+
+    println!("== serve_cluster: {} requests, {} devices, {} Mbps, backend={} ==",
+        served, cluster.config.n_devices, cluster.config.bandwidth_mbps,
+        if use_pjrt { "PJRT" } else { "native" });
+    println!("virtual latency  mean {:.2} ms  p50 {:.2}  p95 {:.2}",
+        latency.mean() * 1e3, latency.p50() * 1e3, latency.p95() * 1e3);
+    println!("queue wait       mean {:.2} ms", queue_wait.mean() * 1e3);
+    println!("virtual throughput {:.2} req/s over {:.2} s", served as f64 / vclock, vclock);
+    println!("host wall          {:.2} s ({:.2} req/s single-core)", wall, served as f64 / wall);
+    println!("wire payload       {:.2} Mbit total ({} bits/token/block)",
+        payload_bits / 1e6, meta.bits_per_token);
+    Ok(())
+}

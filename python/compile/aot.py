@@ -1,0 +1,356 @@
+"""AOT compile path: lower every per-device graph to HLO text + pack weights.
+
+Interchange contract with the rust runtime (rust/src/runtime/):
+
+  artifacts/
+    manifest.json     — model/astra config, graph table (file, arg specs,
+                        output specs), tensor table (name -> offset/shape
+                        into weights.bin), codebook table.
+    weights.bin       — all parameters, flat little-endian f32, in the
+                        order listed by the manifest tensor table.
+    codebooks.bin     — [L, G, K, Dg] f32 flat.
+    <graph>.hlo.txt   — HLO *text* per graph (NOT serialized proto: the
+                        image's xla_extension 0.5.1 rejects jax>=0.5 64-bit
+                        instruction ids; the text parser reassigns them —
+                        see /opt/xla-example/README.md).
+
+Graphs are lowered with return_tuple=True; the rust side unwraps the tuple.
+Weights are runtime *arguments* (uploaded once as PJRT device buffers), so
+one astra_block graph serves all layers and all devices.
+
+Run: `python -m compile.aot --out-dir ../artifacts` (from python/); the
+Makefile `artifacts` target does this plus a short fine-tune to produce
+non-trivial weights/codebooks (skippable with --random-weights for CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+
+
+def to_hlo_text(fn, *args) -> str:
+    """jit-lower fn at the given example args and render XLA HLO text."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.graphs = []
+        self.tensors = []
+        self._weights = []
+        self._offset = 0
+
+    def add_tensor(self, name: str, arr) -> dict:
+        arr = np.asarray(arr, dtype=np.float32)
+        entry = {
+            "name": name,
+            "offset": self._offset,
+            "shape": list(arr.shape),
+            "dtype": "f32",
+        }
+        self.tensors.append(entry)
+        self._weights.append(arr.reshape(-1))
+        self._offset += arr.size
+        return entry
+
+    def add_graph(self, name: str, fn, arg_specs, *, doc: str = ""):
+        """arg_specs: list of (arg_name, example_array, kind) where kind in
+        {activation, weight, codebook}. Lowers fn and records the table."""
+        examples = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a, _ in arg_specs]
+        text = to_hlo_text(fn, *examples)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *examples)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        self.graphs.append(
+            {
+                "name": name,
+                "file": fname,
+                "doc": doc,
+                "args": [
+                    {"name": n, "shape": list(a.shape), "dtype": str(a.dtype), "kind": k}
+                    for n, a, k in arg_specs
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs
+                ],
+            }
+        )
+        return text
+
+    def finish(self, extra: dict):
+        flat = (
+            np.concatenate(self._weights)
+            if self._weights
+            else np.zeros((0,), np.float32)
+        )
+        flat.astype("<f4").tofile(os.path.join(self.out_dir, "weights.bin"))
+        manifest = {
+            "version": 1,
+            "graphs": self.graphs,
+            "tensors": self.tensors,
+            "weights_file": "weights.bin",
+            **extra,
+        }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        return manifest
+
+
+def pack_params(w: ArtifactWriter, params, cfg: model.ModelConfig):
+    """Write every parameter tensor with stable dotted names."""
+    w.add_tensor("pos", params["pos"])
+    w.add_tensor("ln_f.g", params["ln_f"]["g"])
+    w.add_tensor("ln_f.b", params["ln_f"]["b"])
+    if cfg.causal:
+        w.add_tensor("embed", params["embed"])
+    else:
+        w.add_tensor("embed.w", params["embed"]["w"])
+        w.add_tensor("embed.b", params["embed"]["b"])
+        w.add_tensor("cls", params["cls"])
+    w.add_tensor("head.w", params["head"]["w"])
+    w.add_tensor("head.b", params["head"]["b"])
+    for li, blk in enumerate(params["blocks"]):
+        for name, arr in zip(model.BLOCK_WEIGHT_NAMES, model.block_weights_list(blk)):
+            w.add_tensor(f"blocks.{li}.{name}", arr)
+
+
+def build_artifacts(
+    out_dir: str,
+    cfg: model.ModelConfig,
+    acfg: model.AstraConfig,
+    *,
+    trained=None,
+    use_pallas: bool = True,
+):
+    """Lower all graphs for (cfg, acfg) and write the artifact bundle.
+
+    trained: optional TrainResult carrying fine-tuned params + codebooks;
+    otherwise random init (fast path for CI / latency-only work).
+    """
+    key = jax.random.PRNGKey(42)
+    if trained is not None:
+        params, codebooks = trained.params, trained.codebooks
+    else:
+        params = model.init_params(key, cfg)
+        codebooks = model.init_codebooks(jax.random.fold_in(key, 1), cfg, acfg)
+
+    w = ArtifactWriter(out_dir)
+    pack_params(w, params, cfg)
+    np.asarray(codebooks, np.float32).astype("<f4").tofile(
+        os.path.join(out_dir, "codebooks.bin")
+    )
+
+    d, hh = cfg.d_model, cfg.n_heads
+    t, n = cfg.seq_len, acfg.n_devices
+    ncls = 1 if (cfg.use_cls and not cfg.causal) else 0
+    tc = t // n                 # content tokens per device
+    tl = tc + ncls              # local rows (CLS replica first on encoder)
+    tr = t - tc                 # remote content tokens
+    g, kk = acfg.groups, acfg.codebook_size
+    dg = d // g
+
+    f32 = lambda *s: jnp.zeros(s, jnp.float32)
+    i32 = lambda *s: jnp.zeros(s, jnp.int32)
+    cb_ex = f32(g, kk, dg)
+    block_ws = [
+        (f"w.{nm}", jnp.asarray(a), "weight")
+        for nm, a in zip(model.BLOCK_WEIGHT_NAMES, model.block_weights_list(params["blocks"][0]))
+    ]
+
+    # --- per-device MPA block -------------------------------------------
+    w.add_graph(
+        "astra_block",
+        functools.partial(model.astra_block_device, n_heads=hh, use_pallas=use_pallas),
+        [
+            ("h_local", f32(tl, d), "activation"),
+            ("x_hat_remote", f32(tr, d), "activation"),
+            ("bias", f32(tl, tl + tr), "activation"),
+        ]
+        + block_ws,
+        doc="one Mixed-Precision Attention transformer block on one device",
+    )
+
+    # --- VQ encode/decode ------------------------------------------------
+    w.add_graph(
+        "vq_encode",
+        functools.partial(model.vq_encode_graph, use_pallas=use_pallas),
+        [("x", f32(tc, d), "activation"), ("codebook", cb_ex, "codebook")],
+        doc="grouped VQ nearest-neighbour assignment for local content tokens",
+    )
+    w.add_graph(
+        "vq_decode",
+        functools.partial(model.vq_decode_graph, use_pallas=use_pallas),
+        [("idx", i32(tr, g), "activation"), ("codebook", cb_ex, "codebook")],
+        doc="grouped VQ decode of received non-local token codes",
+    )
+
+    # --- full-sequence baseline block (single-device + ground truth) -----
+    t_full = t + ncls
+    w.add_graph(
+        "baseline_block",
+        functools.partial(model.baseline_block, n_heads=hh, use_pallas=use_pallas),
+        [("h", f32(t_full, d), "activation"), ("bias", f32(t_full, t_full), "activation")]
+        + block_ws,
+        doc="full-precision block over the whole sequence",
+    )
+
+    # --- embedding + heads ------------------------------------------------
+    if cfg.causal:
+        w.add_graph(
+            "embed_dec",
+            model.embed_dec_graph,
+            [
+                ("onehot_ids", f32(t, cfg.vocab_size), "activation"),
+                ("embed", jnp.asarray(params["embed"]), "weight"),
+                ("pos", jnp.asarray(params["pos"]), "weight"),
+            ],
+            doc="decoder token embedding (one-hot matmul) + positions",
+        )
+        w.add_graph(
+            "lm_head",
+            model.lm_head_graph,
+            [
+                ("h", f32(tc, d), "activation"),
+                ("ln_f.g", jnp.asarray(params["ln_f"]["g"]), "weight"),
+                ("ln_f.b", jnp.asarray(params["ln_f"]["b"]), "weight"),
+                ("head.w", jnp.asarray(params["head"]["w"]), "weight"),
+                ("head.b", jnp.asarray(params["head"]["b"]), "weight"),
+            ],
+            doc="final LN + LM head over the tail device's local rows",
+        )
+        s_max = t
+        dh = cfg.d_head
+        w.add_graph(
+            "decode_step",
+            functools.partial(model.decode_step_block, n_heads=hh),
+            [
+                ("h_t", f32(1, d), "activation"),
+                ("k_cache", f32(hh, s_max, dh), "activation"),
+                ("v_cache", f32(hh, s_max, dh), "activation"),
+                ("valid", f32(s_max), "activation"),
+            ]
+            + block_ws,
+            doc="autoregressive decode: one block, one token, mixed KV cache",
+        )
+    else:
+        w.add_graph(
+            "embed_enc",
+            model.embed_enc_graph,
+            [
+                ("patches", f32(t, cfg.patch_dim), "activation"),
+                ("embed.w", jnp.asarray(params["embed"]["w"]), "weight"),
+                ("embed.b", jnp.asarray(params["embed"]["b"]), "weight"),
+                ("pos", jnp.asarray(params["pos"]), "weight"),
+            ],
+            doc="encoder patch embedding + positions (CLS prepended by leader)",
+        )
+        w.add_graph(
+            "head",
+            model.head_graph,
+            [
+                ("cls_stack", f32(n, d), "activation"),
+                ("ln_f.g", jnp.asarray(params["ln_f"]["g"]), "weight"),
+                ("ln_f.b", jnp.asarray(params["ln_f"]["b"]), "weight"),
+                ("head.w", jnp.asarray(params["head"]["w"]), "weight"),
+                ("head.b", jnp.asarray(params["head"]["b"]), "weight"),
+            ],
+            doc="Distributed Class Token pooling + LN + classifier head",
+        )
+
+    return w.finish(
+        {
+            "model": {
+                "n_layers": cfg.n_layers,
+                "d_model": d,
+                "n_heads": hh,
+                "d_ff": cfg.d_ff,
+                "seq_len": t,
+                "causal": cfg.causal,
+                "use_cls": cfg.use_cls,
+                "vocab_size": cfg.vocab_size,
+                "patch_dim": cfg.patch_dim,
+                "n_classes": cfg.n_classes,
+            },
+            "astra": {
+                "n_devices": n,
+                "groups": g,
+                "codebook_size": kk,
+                "bits_per_token": acfg.bits_per_token,
+            },
+            "codebooks_file": "codebooks.bin",
+            "codebooks_shape": [cfg.n_layers, g, kk, dg],
+        }
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=120,
+                    help="fine-tune steps for non-trivial weights (0 = random)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower pure-jnp graphs instead of Pallas kernels")
+    ap.add_argument("--causal", action="store_true", help="decoder config")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--groups", type=int, default=16)
+    ap.add_argument("--codebook", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = model.ModelConfig(causal=args.causal, use_cls=not args.causal)
+    acfg = model.AstraConfig(
+        n_devices=args.devices, groups=args.groups, codebook_size=args.codebook
+    )
+
+    trained = None
+    if args.train_steps > 0:
+        key = jax.random.PRNGKey(42)
+        if args.causal:
+            import jax.numpy as _j
+            from . import datasets
+            table = datasets.markov_table(jax.random.fold_in(key, 7), cfg.vocab_size)
+            data_fn = train.lm_data_fn(table, cfg)
+        else:
+            data_fn = train.vision_data_fn(jax.random.fold_in(key, 7), cfg)
+        print(f"pretraining reference ({args.train_steps} steps)...")
+        ref = train.pretrain_reference(key, cfg, data_fn, steps=args.train_steps, log_every=40)
+        print("fine-tuning ASTRA...")
+        trained = train.finetune_astra(
+            jax.random.fold_in(key, 1), ref.params, cfg, acfg, data_fn,
+            steps=max(40, args.train_steps // 2), log_every=20,
+        )
+
+    manifest = build_artifacts(
+        args.out_dir, cfg, acfg, trained=trained, use_pallas=not args.no_pallas
+    )
+    print(
+        f"wrote {len(manifest['graphs'])} graphs, "
+        f"{len(manifest['tensors'])} tensors to {args.out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Procedural datasets standing in for the paper's benchmarks (DESIGN.md §2).
+
+The paper fine-tunes on CIFAR-100 / ImageNet-1K (ViT) and Wikipedia /
+Wikitext-103 (GPT2). Those are multi-GB downloads unavailable here, so we
+use procedurally generated tasks that exercise the identical code paths and
+reproduce the tables' *shape* (orderings and relative gaps):
+
+  * patchy(): "vision" — each sample is a grid of patch feature vectors.
+    A class is a planted set of per-patch prototype directions; samples are
+    prototypes + anisotropic Gaussian noise + global distractor structure.
+    Classification needs aggregating evidence across many patches, which is
+    exactly what the CLS token does, so VQ-ing cross-device patches hurts
+    in the same qualitative way as on CIFAR/ImageNet.
+
+  * markov(): "language" — order-2 Markov chains over a small alphabet with
+    sparse, peaked transition tables. Next-token prediction supports a
+    nontrivial optimal perplexity; a *different* transition table serves as
+    the out-of-domain corpus for the zero-shot row of Table 3 (train on A,
+    evaluate on B), reproducing the zero-shot degradation the paper reports.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def patchy(key, cfg, n: int, noise: float = 0.8):
+    """n samples of the patch-grid classification task.
+
+    Returns (x [n, T, P] f32, y [n] int32). Class c owns a prototype matrix
+    proto[c] [T, P]; a sample is proto[c] + distractor + noise.
+    """
+    t, p, c = cfg.seq_len, cfg.patch_dim, cfg.n_classes
+    kp, kd, kn, ky, km = jax.random.split(key, 5)
+    protos = jax.random.normal(kp, (c, t, p)) * 1.0
+    y = jax.random.randint(ky, (n,), 0, c)
+    # shared distractor subspace (makes the task harder than pure prototypes)
+    dbasis = jax.random.normal(kd, (8, t, p)) * 0.7
+    coefs = jax.random.normal(km, (n, 8))
+    x = (
+        protos[y]
+        + jnp.einsum("nk,ktp->ntp", coefs, dbasis)
+        + noise * jax.random.normal(kn, (n, t, p))
+    )
+    return x.astype(jnp.float32), y.astype(jnp.int32)
+
+
+def markov_table(key, vocab: int, peak: float = 12.0):
+    """Order-2 transition table [V, V, V] (row-stochastic over last axis)."""
+    logits = jax.random.normal(key, (vocab, vocab, vocab)) * peak / 4.0
+    # sparsify: keep ~6 plausible successors per context
+    thresh = jnp.sort(logits, axis=-1)[..., -6][..., None]
+    logits = jnp.where(logits >= thresh, logits, -1e9)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def markov(key, cfg, table, n: int):
+    """n sequences of length seq_len+1 sampled from the order-2 chain.
+
+    Returns int32 [n, T+1]; inputs are [:, :-1], targets [:, 1:].
+    """
+    t, v = cfg.seq_len, cfg.vocab_size
+    k0, k1, ks = jax.random.split(key, 3)
+    s0 = jax.random.randint(k0, (n,), 0, v)
+    s1 = jax.random.randint(k1, (n,), 0, v)
+
+    def step(carry, key):
+        a, b = carry
+        probs = table[a, b]  # [n, V]
+        nxt = jax.random.categorical(key, jnp.log(probs + 1e-12))
+        return (b, nxt), nxt
+
+    keys = jax.random.split(ks, t - 1)
+    (_, _), rest = jax.lax.scan(step, (s0, s1), keys)
+    return jnp.concatenate([s0[None], s1[None], rest], axis=0).T.astype(jnp.int32)
+
+
+def optimal_ppl(table, seqs):
+    """Perplexity of the true generating chain on seqs — the task's floor."""
+    a, b, nxt = seqs[:, :-2], seqs[:, 1:-1], seqs[:, 2:]
+    p = table[a, b, nxt]
+    return float(jnp.exp(-jnp.mean(jnp.log(p + 1e-12))))

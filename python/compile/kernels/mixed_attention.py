@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: Mixed-Precision Attention (paper §3.2, Eq. 1).
+
+The paper's GPU hot spot is fused attention of local full-precision queries
+over the row-wise concatenation [K | K_hat], [V | V_hat] (local full-precision
+plus dequantized non-local VQ keys/values). The CUDA formulation stages K/V
+tiles through threadblock shared memory; the TPU/Pallas re-think
+(DESIGN.md §Hardware-Adaptation):
+
+  * the grid iterates (head, q-tile, kv-tile); BlockSpec expresses the
+    HBM->VMEM schedule that threadblocks did manually;
+  * QK^T and PV are MXU contractions over dh-sized tiles;
+  * the softmax is the standard *online* (running max / running sum)
+    rescaling so a q-tile's accumulator never leaves VMEM while kv-tiles
+    stream past;
+  * the local/non-local distinction is an additive bias matrix, which also
+    carries causal masks for the decoder configuration.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is asserted against kernels.ref and real-TPU
+performance is estimated from the BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Flag kept in one place so tests and AOT agree; real-TPU builds would flip
+# this to False and compile via the TPU plugin instead.
+INTERPRET = True
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref, *, kv_steps: int, sm_scale: float):
+    """One (head, q-tile, kv-tile) grid step of online-softmax attention.
+
+    q_ref:    [1, bq, dh]   current head's q tile (VMEM)
+    k_ref:    [1, bkv, dh]  current kv tile
+    v_ref:    [1, bkv, dh]
+    bias_ref: [bq, bkv]     additive bias tile (mask / causal / -inf padding)
+    o_ref:    [1, bq, dh]   output tile, written on the last kv step
+    m/l/acc:  VMEM scratch carried across kv steps (running max, running
+              normalizer, unnormalized accumulator)
+    """
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [bq, dh]
+    k = k_ref[0]  # [bkv, dh]
+    v = v_ref[0]  # [bkv, dh]
+
+    # MXU contraction; accumulate in f32 regardless of input dtype.
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale  # [bq, bkv]
+    s = s + bias_ref[...]
+
+    m_prev = m_ref[...]           # [bq]
+    m_cur = jnp.max(s, axis=-1)   # [bq]
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Rescale previous accumulator/normalizer to the new max.
+    alpha = jnp.exp(m_prev - m_new)          # [bq]
+    p = jnp.exp(s - m_new[:, None])          # [bq, bkv]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == kv_steps - 1)
+    def _finish():
+        o_ref[0, :, :] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def _pad_to(x, size, axis, value=0.0):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv", "interpret"))
+def attention(q, k, v, bias=None, *, block_q: int = 64, block_kv: int = 128, interpret: bool = INTERPRET):
+    """Fused multi-head attention via Pallas.
+
+    q: [H, Tq, dh]; k, v: [H, S, dh]; bias: [Tq, S] additive or None.
+    Returns [H, Tq, dh] (same dtype as q). Tq and S are padded internally to
+    the block sizes; padded kv columns are masked with -inf bias, padded q
+    rows are dropped on return.
+    """
+    H, Tq, dh = q.shape
+    S = k.shape[1]
+    bq = min(block_q, max(8, Tq))
+    bkv = min(block_kv, max(8, S))
+    Tq_p = -(-Tq // bq) * bq
+    S_p = -(-S // bkv) * bkv
+
+    if bias is None:
+        bias = jnp.zeros((Tq, S), dtype=jnp.float32)
+    bias = _pad_to(_pad_to(bias.astype(jnp.float32), Tq_p, 0), S_p, 1, NEG_INF)
+    q_p = _pad_to(q, Tq_p, 1)
+    k_p = _pad_to(k, S_p, 1)
+    v_p = _pad_to(v, S_p, 1)
+
+    kv_steps = S_p // bkv
+    grid = (H, Tq_p // bq, kv_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, kv_steps=kv_steps, sm_scale=1.0 / (dh ** 0.5)
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bkv, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((bq, bkv), lambda h, i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, Tq_p, dh), q.dtype),
+        scratch_shapes=[
+            # running max, normalizer, accumulator — VMEM residents
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_p, k_p, v_p, bias)
+    return out[:, :Tq, :]
+
+
+def mixed_attention(q, k_local, v_local, k_hat, v_hat, bias=None, **kw):
+    """Mixed-Precision Attention: local FP K/V concatenated with dequantized
+    non-local K/V (paper Eq. 1), then one fused Pallas attention call.
+
+    Shapes as in kernels.ref.ref_mixed_attention.
+    """
+    k = jnp.concatenate([k_local, k_hat], axis=1)
+    v = jnp.concatenate([v_local, v_hat], axis=1)
+    return attention(q, k, v, bias, **kw)

@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float associativity)
+counterpart here. pytest (python/tests/) sweeps shapes and dtypes with
+hypothesis and asserts allclose between kernel and oracle — this file is the
+single source of numerical truth for the whole stack: the rust runtime's
+outputs are in turn checked against HLO lowered from graphs that call the
+kernels, and the pure-rust reference transformer is checked against that.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, bias=None):
+    """Standard scaled dot-product attention.
+
+    q: [H, Tq, dh], k/v: [H, S, dh], bias: [Tq, S] additive (or None).
+    Returns [H, Tq, dh].
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("hqd,hsd->hqs", q, k) / jnp.sqrt(jnp.float32(dh))
+    if bias is not None:
+        logits = logits + bias[None, :, :]
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hqs,hsd->hqd", probs, v)
+
+
+def ref_mixed_attention(q, k_local, v_local, k_hat, v_hat, bias=None):
+    """Mixed-Precision Attention (paper Eq. 1).
+
+    Local queries attend over the row-wise concatenation [K | K_hat] and
+    [V | V_hat]: full-precision local keys/values plus dequantized non-local
+    ones. Numerically this is plain attention over the concatenated set; the
+    'mixed-precision' structure lives in where K_hat/V_hat came from (the VQ
+    decode path) and in what crossed the (simulated) network.
+
+    q: [H, Tq, dh]; k_local/v_local: [H, Tl, dh]; k_hat/v_hat: [H, Tr, dh];
+    bias: [Tq, Tl+Tr] additive mask or None.
+    """
+    k = jnp.concatenate([k_local, k_hat], axis=1)
+    v = jnp.concatenate([v_local, v_hat], axis=1)
+    return ref_attention(q, k, v, bias)
+
+
+def ref_grouped_vq_encode(x, codebook):
+    """Grouped VQ nearest-neighbour assignment.
+
+    x: [T, D]; codebook: [G, K, D/G]. Returns int32 indices [T, G] where
+    indices[t, g] = argmin_k || x[t, g*Dg:(g+1)*Dg] - codebook[g, k] ||^2.
+    Ties broken toward the lower index (argmin semantics).
+    """
+    T, D = x.shape
+    G, K, Dg = codebook.shape
+    assert D == G * Dg, f"D={D} != G*Dg={G}*{Dg}"
+    xg = x.reshape(T, G, Dg)
+    # [T, G, K] squared distances
+    d = jnp.sum((xg[:, :, None, :] - codebook[None, :, :, :]) ** 2, axis=-1)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def ref_grouped_vq_decode(indices, codebook):
+    """Grouped VQ decode: indices [T, G] + codebook [G, K, Dg] -> [T, G*Dg]."""
+    T, G = indices.shape
+    _, _, Dg = codebook.shape
+    # gather per group
+    gathered = jnp.take_along_axis(
+        codebook[None, :, :, :],  # [1, G, K, Dg]
+        indices[:, :, None, None].astype(jnp.int32),  # [T, G, 1, 1]
+        axis=2,
+    )  # [T, G, 1, Dg]
+    return gathered.reshape(T, G * Dg)
+
+
+def ref_grouped_vq_roundtrip(x, codebook):
+    """encode then decode — the quantized embedding X_hat used by MPA."""
+    return ref_grouped_vq_decode(ref_grouped_vq_encode(x, codebook), codebook)
+
+
+def ref_layer_norm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis. x: [..., D]."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def ref_mlp(x, w1, b1, w2, b2):
+    """Position-wise feed-forward with GELU (tanh approximation)."""
+    h = x @ w1 + b1
+    h = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+    return h @ w2 + b2

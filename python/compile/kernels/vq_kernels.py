@@ -1,0 +1,102 @@
+"""L1 Pallas kernels: grouped vector quantization (paper §2, §3.2).
+
+Encode = nearest-neighbour codebook assignment. The GPU-native formulation
+is a per-thread linear scan over centroids; the TPU re-think turns the
+distance computation into an MXU matmul:
+
+    ||x - e||^2 = ||x||^2 - 2 x.e^T + ||e||^2
+
+so the [T, K] distance matrix per group is one contraction plus rank-1
+updates, and the argmin is a VPU reduction. The grid iterates groups; each
+group's codebook slice [K, Dg] is VMEM-resident for the whole group step.
+
+Decode = codebook gather. Gathers are slow on TPU; we instead build a
+one-hot [T, K] matrix from a broadcasted iota comparison and contract it
+with the codebook — again MXU work (this is exact: one-hot times codebook
+selects rows).
+
+interpret=True throughout — see mixed_attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _encode_kernel(x_ref, cb_ref, idx_ref):
+    """One group: x_ref [T, Dg], cb_ref [K, Dg] -> idx_ref [T] int32."""
+    x = x_ref[0]
+    cb = cb_ref[0]
+    # squared distances via the matmul identity; ||x||^2 is constant per row
+    # and does not affect the argmin, so it is dropped.
+    xe = jax.lax.dot_general(
+        x, cb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [T, K]
+    e2 = jnp.sum(cb.astype(jnp.float32) ** 2, axis=-1)  # [K]
+    d = e2[None, :] - 2.0 * xe
+    idx_ref[0, :] = jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_vq_encode(x, codebook, *, interpret: bool = INTERPRET):
+    """x: [T, D], codebook: [G, K, Dg] with D = G*Dg -> int32 indices [T, G]."""
+    T, D = x.shape
+    G, K, Dg = codebook.shape
+    assert D == G * Dg, f"D={D} != G*Dg={G}*{Dg}"
+    xg = x.reshape(T, G, Dg).transpose(1, 0, 2)  # [G, T, Dg]
+
+    idx = pl.pallas_call(
+        _encode_kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, T, Dg), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, K, Dg), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, T), jnp.int32),
+        interpret=interpret,
+    )(xg, codebook)
+    return idx.transpose(1, 0)  # [T, G]
+
+
+def _decode_kernel(idx_ref, cb_ref, o_ref):
+    """One group: idx_ref [T] int32, cb_ref [K, Dg] -> o_ref [T, Dg]."""
+    idx = idx_ref[0]
+    cb = cb_ref[0]
+    K = cb.shape[0]
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)).astype(cb.dtype)
+    o_ref[0, :, :] = jax.lax.dot_general(
+        onehot, cb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_vq_decode(indices, codebook, *, interpret: bool = INTERPRET):
+    """indices: [T, G] int32, codebook: [G, K, Dg] -> x_hat [T, G*Dg] f32."""
+    T, G = indices.shape
+    _, K, Dg = codebook.shape
+    idx_g = indices.transpose(1, 0)  # [G, T]
+
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, T), lambda g: (g, 0)),
+            pl.BlockSpec((1, K, Dg), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, Dg), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, T, Dg), codebook.dtype),
+        interpret=interpret,
+    )(idx_g, codebook)
+    return out.transpose(1, 0, 2).reshape(T, G * Dg)
+
+
+def grouped_vq_roundtrip(x, codebook, **kw):
+    """encode -> decode; the X_hat consumed by Mixed-Precision Attention."""
+    return grouped_vq_decode(grouped_vq_encode(x, codebook, **kw), codebook, **kw)

@@ -1,0 +1,502 @@
+"""L2: the AstraFormer model — JAX fwd for training/eval + per-device AOT graphs.
+
+Two views of the same parameters:
+
+  * `astra_forward` — the *joint* training/eval graph: all N devices'
+    computation expressed in one program. Mixed-Precision Attention is
+    expressed exactly as paper Eq. 1: queries attend over 2·T' columns,
+    [ X (full precision) | X_hat (vector-quantized) ], with an additive
+    mask M that admits full-precision columns only for same-device pairs
+    and quantized columns only for cross-device pairs. This is what
+    fine-tuning (train.py) differentiates through.
+
+  * `build_*` graph builders — the per-device inference graphs the rust
+    coordinator actually runs (one AOT HLO per graph, weights as runtime
+    buffers): embed, vq_encode, vq_decode, astra_block (device-local MPA
+    block), baseline_block (full-precision single-device block), head,
+    decode_step. These call the L1 Pallas kernels so the kernels lower
+    into the same HLO artifact.
+
+Distributed Class Tokens (§3.3): the CLS token is replicated once per
+device; replica d is a *local* token of device d as a query, but is never
+attended as a key and never transmitted (so comm accounting counts content
+tokens only). Replicas are mean-pooled before the prediction head.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import vq as vqlib
+from .kernels import mixed_attention as mak
+from .kernels import ref
+from .kernels import vq_kernels as vqk
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one AstraFormer."""
+
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 64          # content tokens T
+    causal: bool = False       # decoder (GPT-ish) vs encoder (ViT-ish)
+    use_cls: bool = True       # encoder classification
+    vocab_size: int = 64       # decoder vocabulary
+    patch_dim: int = 48        # encoder input patch feature size
+    n_classes: int = 16        # encoder classes
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class AstraConfig:
+    """ASTRA deployment/compression settings."""
+
+    n_devices: int = 4
+    groups: int = 16
+    codebook_size: int = 64
+    noise_lambda: float = 1.0   # NAVQ lambda
+    commit_beta: float = 2e-4   # Eq. 2 beta
+
+    @property
+    def bits_per_token(self) -> int:
+        """VQ code payload for one transmitted token: G * ceil(log2 K)."""
+        import math
+
+        return self.groups * math.ceil(math.log2(self.codebook_size))
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> dict[str, Any]:
+    """Xavier-ish init; returns a nested dict pytree."""
+    d, f = cfg.d_model, cfg.d_ff
+    ks = iter(jax.random.split(key, 6 + 16 * cfg.n_layers))
+
+    def dense(key, din, dout):
+        return jax.random.normal(key, (din, dout), jnp.float32) * (din**-0.5)
+
+    params: dict[str, Any] = {
+        "pos": jax.random.normal(next(ks), (cfg.seq_len, d), jnp.float32) * 0.02,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+    }
+    if cfg.causal:
+        params["embed"] = jax.random.normal(next(ks), (cfg.vocab_size, d)) * 0.02
+        params["head"] = {"w": dense(next(ks), d, cfg.vocab_size), "b": jnp.zeros((cfg.vocab_size,))}
+    else:
+        params["embed"] = {"w": dense(next(ks), cfg.patch_dim, d), "b": jnp.zeros((d,))}
+        params["cls"] = jax.random.normal(next(ks), (1, d)) * 0.02
+        params["head"] = {"w": dense(next(ks), d, cfg.n_classes), "b": jnp.zeros((cfg.n_classes,))}
+    blocks = []
+    for _ in range(cfg.n_layers):
+        blocks.append(
+            {
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "wq": dense(next(ks), d, d),
+                "wk": dense(next(ks), d, d),
+                "wv": dense(next(ks), d, d),
+                "wo": dense(next(ks), d, d),
+                "bq": jnp.zeros((d,)),
+                "bk": jnp.zeros((d,)),
+                "bv": jnp.zeros((d,)),
+                "bo": jnp.zeros((d,)),
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "w1": dense(next(ks), d, f),
+                "b1": jnp.zeros((f,)),
+                "w2": dense(next(ks), f, d),
+                "b2": jnp.zeros((d,)),
+            }
+        )
+    params["blocks"] = blocks
+    return params
+
+
+def init_codebooks(key, cfg: ModelConfig, acfg: AstraConfig):
+    """Random-normal codebooks [L, G, K, Dg]; train.py replaces with k-means."""
+    dg = cfg.d_model // acfg.groups
+    return (
+        jax.random.normal(
+            key, (cfg.n_layers, acfg.groups, acfg.codebook_size, dg), jnp.float32
+        )
+        * 0.5
+    )
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+
+def _split_heads(x, h):
+    t, d = x.shape
+    return x.reshape(t, h, d // h).transpose(1, 0, 2)  # [H, T, dh]
+
+
+def _merge_heads(x):
+    h, t, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * dh)
+
+
+def _attn_jnp(q, k, v, bias):
+    return ref.ref_attention(q, k, v, bias)
+
+
+def _project_qkv(blk, x_norm):
+    q = x_norm @ blk["wq"] + blk["bq"]
+    k = x_norm @ blk["wk"] + blk["bk"]
+    v = x_norm @ blk["wv"] + blk["bv"]
+    return q, k, v
+
+
+def _mlp(blk, x):
+    return ref.ref_mlp(
+        ref.ref_layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"]),
+        blk["w1"], blk["b1"], blk["w2"], blk["b2"],
+    )
+
+
+# --------------------------------------------------------------------------
+# joint (training / eval) ASTRA forward
+# --------------------------------------------------------------------------
+
+
+def make_assign(cfg: ModelConfig, acfg: AstraConfig, sizes=None):
+    """Device assignment for the T content tokens.
+
+    Decoder: contiguous chunks (sequence parallel prefill). Encoder: default
+    even contiguous split; `sizes` (len N, sums to T) gives heterogeneous
+    splits. Returns int32 [T].
+    """
+    t, n = cfg.seq_len, acfg.n_devices
+    if sizes is None:
+        assert t % n == 0, f"T={t} not divisible by N={n}"
+        sizes = [t // n] * n
+    assert sum(sizes) == t
+    return jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sizes)]
+    )
+
+
+def fpar(assign, n_devices: int) -> jnp.ndarray:
+    """Full-Precision Attention Rate (Appendix D Eq. 35)."""
+    t = assign.shape[0]
+    counts = jnp.bincount(assign, length=n_devices)
+    return jnp.sum((counts / t) ** 2)
+
+
+def mixed_bias(cfg: ModelConfig, acfg: AstraConfig, assign):
+    """Additive mask for the joint 2-column-block attention.
+
+    Queries: N CLS replicas (encoder) followed by T content tokens.
+    Keys: [ full(T') | hat(T) ] where T' = N_cls + T; CLS replicas are
+    included as full-precision keys only for *their own device's* queries
+    and are excluded from the hat block entirely (never transmitted).
+    Returns bias [Tq, T' + T] with 0 = allowed, NEG = masked.
+    """
+    t = cfg.seq_len
+    n = acfg.n_devices
+    ncls = n if (cfg.use_cls and not cfg.causal) else 0
+    q_dev = jnp.concatenate([jnp.arange(ncls, dtype=jnp.int32), assign])
+    same = q_dev[:, None] == q_dev[None, :]
+    is_cls_key = jnp.arange(ncls + t) < ncls
+    # CLS keys visible only to same-device queries (which `same` already
+    # encodes); content keys visible to same-device queries.
+    full_ok = same
+    hat_ok = q_dev[:, None] != assign[None, :]
+    if cfg.causal:
+        pos = jnp.arange(t)
+        causal_ok = pos[None, :] <= pos[:, None]
+        full_ok = full_ok & causal_ok
+        hat_ok = hat_ok & causal_ok
+    del is_cls_key
+    bias = jnp.concatenate(
+        [jnp.where(full_ok, 0.0, NEG), jnp.where(hat_ok, 0.0, NEG)], axis=1
+    )
+    return bias.astype(jnp.float32)
+
+
+def _embed(params, cfg: ModelConfig, x):
+    if cfg.causal:
+        h = params["embed"][x] + params["pos"]
+    else:
+        h = x @ params["embed"]["w"] + params["embed"]["b"] + params["pos"]
+    return h
+
+
+def astra_forward(
+    params,
+    codebooks,
+    x,
+    cfg: ModelConfig,
+    acfg: AstraConfig,
+    assign=None,
+    *,
+    train: bool = False,
+    rng=None,
+    use_pallas: bool = False,
+):
+    """Joint multi-device ASTRA forward.
+
+    x: encoder [T, patch_dim] float32; decoder [T] int32 token ids.
+    Returns (outputs, aux) where outputs = logits ([n_classes] encoder,
+    [T, vocab] decoder) and aux carries the commitment loss and per-layer
+    codebook inputs (for EMA updates).
+    """
+    if assign is None:
+        assign = make_assign(cfg, acfg)
+    n = acfg.n_devices
+    ncls = n if (cfg.use_cls and not cfg.causal) else 0
+    h_tok = _embed(params, cfg, x)  # [T, D]
+    if ncls:
+        h = jnp.concatenate([jnp.tile(params["cls"], (n, 1)), h_tok], axis=0)
+    else:
+        h = h_tok
+    bias = mixed_bias(cfg, acfg, assign)
+    attn = mak.attention if use_pallas else _attn_jnp
+
+    commit = 0.0
+    vq_inputs = []
+    for li, blk in enumerate(params["blocks"]):
+        content = h[ncls:]  # only content tokens are quantized/transmitted
+        vq_inputs.append(content)
+        if train:
+            rng, sub = jax.random.split(rng)
+            x_tilde, _, c = vqlib.navq(sub, content, codebooks[li], acfg.noise_lambda)
+            commit = commit + c
+        else:
+            x_tilde = ref.ref_grouped_vq_roundtrip(content, codebooks[li])
+        ln1 = lambda y: ref.ref_layer_norm(y, blk["ln1"]["g"], blk["ln1"]["b"])
+        q, k_full, v_full = _project_qkv(blk, ln1(h))
+        _, k_hat, v_hat = _project_qkv(blk, ln1(x_tilde))
+        hh = cfg.n_heads
+        out = attn(
+            _split_heads(q, hh),
+            jnp.concatenate([_split_heads(k_full, hh), _split_heads(k_hat, hh)], axis=1),
+            jnp.concatenate([_split_heads(v_full, hh), _split_heads(v_hat, hh)], axis=1),
+            bias,
+        )
+        h = h + _merge_heads(out) @ blk["wo"] + blk["bo"]
+        h = h + _mlp(blk, h)
+
+    aux = {"commit": commit, "vq_inputs": vq_inputs}
+    lnf = lambda y: ref.ref_layer_norm(y, params["ln_f"]["g"], params["ln_f"]["b"])
+    if ncls:
+        pooled = jnp.mean(h[:ncls], axis=0)  # Distributed Class Token pooling
+        return lnf(pooled) @ params["head"]["w"] + params["head"]["b"], aux
+    logits = lnf(h) @ params["head"]["w"] + params["head"]["b"]
+    return logits, aux
+
+
+def astra_forward_single_cls(
+    params, codebooks, x, cfg: ModelConfig, acfg: AstraConfig, assign=None
+):
+    """Ablation: a single class token living on device 0 (Table 13 baseline).
+
+    The lone CLS sees device-0 tokens full precision and every other
+    device's tokens only through their VQ codes — the information asymmetry
+    Distributed Class Tokens remove.
+    """
+    if assign is None:
+        assign = make_assign(cfg, acfg)
+    t = cfg.seq_len
+    h_tok = _embed(params, cfg, x)
+    h = jnp.concatenate([params["cls"], h_tok], axis=0)
+    q_dev = jnp.concatenate([jnp.zeros((1,), jnp.int32), assign])
+    same = q_dev[:, None] == q_dev[None, :]
+    hat_ok = q_dev[:, None] != assign[None, :]
+    bias = jnp.concatenate(
+        [jnp.where(same, 0.0, NEG), jnp.where(hat_ok, 0.0, NEG)], axis=1
+    ).astype(jnp.float32)
+
+    for li, blk in enumerate(params["blocks"]):
+        content = h[1:]
+        x_hat = ref.ref_grouped_vq_roundtrip(content, codebooks[li])
+        ln1 = lambda y: ref.ref_layer_norm(y, blk["ln1"]["g"], blk["ln1"]["b"])
+        q, k_full, v_full = _project_qkv(blk, ln1(h))
+        _, k_hat, v_hat = _project_qkv(blk, ln1(x_hat))
+        hh = cfg.n_heads
+        out = _attn_jnp(
+            _split_heads(q, hh),
+            jnp.concatenate([_split_heads(k_full, hh), _split_heads(k_hat, hh)], axis=1),
+            jnp.concatenate([_split_heads(v_full, hh), _split_heads(v_hat, hh)], axis=1),
+            bias,
+        )
+        h = h + _merge_heads(out) @ blk["wo"] + blk["bo"]
+        h = h + _mlp(blk, h)
+    lnf = lambda y: ref.ref_layer_norm(y, params["ln_f"]["g"], params["ln_f"]["b"])
+    return lnf(h[0]) @ params["head"]["w"] + params["head"]["b"]
+
+
+# --------------------------------------------------------------------------
+# single-device reference forward (the "Original Model" baseline)
+# --------------------------------------------------------------------------
+
+
+def reference_forward(params, x, cfg: ModelConfig, *, use_pallas: bool = False):
+    """Full-precision single-device forward; logits as in astra_forward."""
+    h_tok = _embed(params, cfg, x)
+    ncls = 1 if (cfg.use_cls and not cfg.causal) else 0
+    h = jnp.concatenate([params["cls"], h_tok], axis=0) if ncls else h_tok
+    t_all = h.shape[0]
+    if cfg.causal:
+        pos = jnp.arange(t_all)
+        bias = jnp.where(pos[None, :] <= pos[:, None], 0.0, NEG).astype(jnp.float32)
+    else:
+        bias = jnp.zeros((t_all, t_all), jnp.float32)
+    attn = mak.attention if use_pallas else _attn_jnp
+    for blk in params["blocks"]:
+        ln1 = lambda y: ref.ref_layer_norm(y, blk["ln1"]["g"], blk["ln1"]["b"])
+        q, k, v = _project_qkv(blk, ln1(h))
+        hh = cfg.n_heads
+        out = attn(_split_heads(q, hh), _split_heads(k, hh), _split_heads(v, hh), bias)
+        h = h + _merge_heads(out) @ blk["wo"] + blk["bo"]
+        h = h + _mlp(blk, h)
+    lnf = lambda y: ref.ref_layer_norm(y, params["ln_f"]["g"], params["ln_f"]["b"])
+    if ncls:
+        return lnf(h[0]) @ params["head"]["w"] + params["head"]["b"]
+    return lnf(h) @ params["head"]["w"] + params["head"]["b"]
+
+
+# --------------------------------------------------------------------------
+# per-device AOT graph builders (lowered to HLO by aot.py)
+# --------------------------------------------------------------------------
+# Weight arguments are flat, fixed-order lists so the rust side can bind
+# uploaded device buffers positionally. Order must match BLOCK_WEIGHT_NAMES.
+
+BLOCK_WEIGHT_NAMES = [
+    "ln1.g", "ln1.b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln2.g", "ln2.b", "w1", "b1", "w2", "b2",
+]
+
+
+def block_weights_list(blk):
+    return [
+        blk["ln1"]["g"], blk["ln1"]["b"],
+        blk["wq"], blk["bq"], blk["wk"], blk["bk"], blk["wv"], blk["bv"],
+        blk["wo"], blk["bo"],
+        blk["ln2"]["g"], blk["ln2"]["b"],
+        blk["w1"], blk["b1"], blk["w2"], blk["b2"],
+    ]
+
+
+def _blk_from_list(ws):
+    n = dict(zip(BLOCK_WEIGHT_NAMES, ws))
+    return {
+        "ln1": {"g": n["ln1.g"], "b": n["ln1.b"]},
+        "wq": n["wq"], "bq": n["bq"], "wk": n["wk"], "bk": n["bk"],
+        "wv": n["wv"], "bv": n["bv"], "wo": n["wo"], "bo": n["bo"],
+        "ln2": {"g": n["ln2.g"], "b": n["ln2.b"]},
+        "w1": n["w1"], "b1": n["b1"], "w2": n["w2"], "b2": n["b2"],
+    }
+
+
+def astra_block_device(h_local, x_hat_remote, bias, *ws, n_heads: int, use_pallas: bool = True):
+    """One MPA transformer block on one device.
+
+    h_local:      [Tl, D] full-precision local rows (CLS replica first, enc)
+    x_hat_remote: [Tr, D] dequantized non-local token embeddings
+    bias:         [Tl, Tl+Tr] additive mask (local/remote/causal structure,
+                  computed by the rust partitioner)
+    Returns new h_local [Tl, D].
+    """
+    blk = _blk_from_list(ws)
+    ln1 = lambda y: ref.ref_layer_norm(y, blk["ln1"]["g"], blk["ln1"]["b"])
+    q, k_l, v_l = _project_qkv(blk, ln1(h_local))
+    _, k_r, v_r = _project_qkv(blk, ln1(x_hat_remote))
+    hh = n_heads
+    attn = mak.mixed_attention if use_pallas else (
+        lambda q, kl, vl, kr, vr, b: ref.ref_mixed_attention(q, kl, vl, kr, vr, b)
+    )
+    out = attn(
+        _split_heads(q, hh),
+        _split_heads(k_l, hh), _split_heads(v_l, hh),
+        _split_heads(k_r, hh), _split_heads(v_r, hh),
+        bias,
+    )
+    h = h_local + _merge_heads(out) @ blk["wo"] + blk["bo"]
+    return h + _mlp(blk, h)
+
+
+def baseline_block(h, bias, *ws, n_heads: int, use_pallas: bool = True):
+    """Full-precision block over the whole sequence (single-device baseline,
+    and the numeric ground truth the rust runtime is cross-checked against)."""
+    blk = _blk_from_list(ws)
+    ln1 = lambda y: ref.ref_layer_norm(y, blk["ln1"]["g"], blk["ln1"]["b"])
+    q, k, v = _project_qkv(blk, ln1(h))
+    hh = n_heads
+    attn = mak.attention if use_pallas else _attn_jnp
+    out = attn(_split_heads(q, hh), _split_heads(k, hh), _split_heads(v, hh), bias)
+    h = h + _merge_heads(out) @ blk["wo"] + blk["bo"]
+    return h + _mlp(blk, h)
+
+
+def vq_encode_graph(x, codebook, *, use_pallas: bool = True):
+    """[Tc, D] + [G, K, Dg] -> int32 [Tc, G]."""
+    f = vqk.grouped_vq_encode if use_pallas else ref.ref_grouped_vq_encode
+    return f(x, codebook)
+
+
+def vq_decode_graph(idx, codebook, *, use_pallas: bool = True):
+    """int32 [Tr, G] + [G, K, Dg] -> [Tr, D]."""
+    f = vqk.grouped_vq_decode if use_pallas else ref.ref_grouped_vq_decode
+    return f(idx, codebook)
+
+
+def embed_enc_graph(patches, w, b, pos):
+    """[T, P] -> content token embeddings [T, D] (CLS handled by the leader)."""
+    return patches @ w + b + pos
+
+
+def embed_dec_graph(onehot_ids, embed, pos):
+    """One-hot ids [T, V] -> [T, D]. (Rust builds the one-hot; a dense
+    matmul keeps the graph gather-free, cf. the VQ decode kernel.)"""
+    return onehot_ids @ embed + pos
+
+
+def head_graph(cls_stack, g, b, w, bh):
+    """Distributed CLS aggregation: [N, D] -> mean-pool -> LN -> logits."""
+    pooled = jnp.mean(cls_stack, axis=0)
+    return ref.ref_layer_norm(pooled, g, b) @ w + bh
+
+
+def lm_head_graph(h, g, b, w, bh):
+    """Decoder head: [Tl, D] -> LN -> logits [Tl, V]."""
+    return ref.ref_layer_norm(h, g, b) @ w + bh
+
+
+def decode_step_block(h_t, k_cache, v_cache, valid, *ws, n_heads: int):
+    """Autoregressive decode, one block, one new token (runs on the device
+    owning the sequence tail; non-local cache rows were dequantized from VQ
+    codes — Appendix G's mixed KV cache).
+
+    h_t: [1, D]; k_cache/v_cache: [H, S, dh] (rows beyond the current length
+    are garbage); valid: [S] {0,1} float mask. Returns (h_out [1, D],
+    k_new [H, 1, dh], v_new [H, 1, dh]) — rust writes k/v_new into the cache.
+    """
+    blk = _blk_from_list(ws)
+    ln1 = lambda y: ref.ref_layer_norm(y, blk["ln1"]["g"], blk["ln1"]["b"])
+    q, k_t, v_t = _project_qkv(blk, ln1(h_t))
+    hh = n_heads
+    qh = _split_heads(q, hh)        # [H, 1, dh]
+    k_new = _split_heads(k_t, hh)   # [H, 1, dh]
+    v_new = _split_heads(v_t, hh)
+    k_all = jnp.concatenate([k_cache, k_new], axis=1)  # [H, S+1, dh]
+    v_all = jnp.concatenate([v_cache, v_new], axis=1)
+    bias = jnp.concatenate([jnp.where(valid > 0.5, 0.0, NEG), jnp.zeros((1,))])[None, :]
+    out = _attn_jnp(qh, k_all, v_all, bias.astype(jnp.float32))
+    h = h_t + _merge_heads(out) @ blk["wo"] + blk["bo"]
+    return h + _mlp(blk, h), k_new, v_new

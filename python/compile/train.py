@@ -1,0 +1,304 @@
+"""Build-time fine-tuning harness (paper §4.1, Appendix D).
+
+Pipeline per the paper: start from a trained full-precision model, insert
+the VQ bottlenecks, initialize codebooks with k-means over intermediate
+token embeddings, then fine-tune with task loss + commitment loss (Eq. 2),
+NAVQ noise (§3.3) and EMA codebook updates.
+
+Because no pretrained checkpoints exist in this environment, "pretraining"
+is itself a (short) run of the same harness with the reference model; the
+accuracy tables in EXPERIMENTS.md then compare reference vs ASTRA variants
+exactly as the paper compares original vs ASTRA rows.
+
+Everything here is build-time python; optimizers are hand-rolled (no optax
+in the image).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import datasets, model, vq as vqlib
+
+
+# ----------------------------------------------------------------------
+# hand-rolled Adam
+# ----------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t.astype(jnp.float32)), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t.astype(jnp.float32)), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ----------------------------------------------------------------------
+# losses
+# ----------------------------------------------------------------------
+
+
+def xent(logits, y):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return jnp.mean(logz - jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0])
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+# ----------------------------------------------------------------------
+# reference pretraining
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    codebooks: Any
+    metrics: dict
+
+
+def _batched(fn, *in_axes):
+    return jax.vmap(fn, in_axes=in_axes)
+
+
+def pretrain_reference(key, cfg: model.ModelConfig, data_fn: Callable, *, steps=300, batch=32, lr=1e-3, eval_fn=None, log_every=0):
+    """Train the full-precision reference model on the synthetic task."""
+    kp, kd = jax.random.split(key)
+    params = model.init_params(kp, cfg)
+    opt = adam_init(params)
+
+    fwd = _batched(lambda p, x: model.reference_forward(p, x, cfg), None, 0)
+
+    if cfg.causal:
+        def loss_fn(p, xb, yb):
+            logits = fwd(p, xb)
+            return xent(logits, yb)
+    else:
+        def loss_fn(p, xb, yb):
+            logits = fwd(p, xb)
+            return xent(logits, yb)
+
+    @jax.jit
+    def step(p, o, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        p, o = adam_update(g, o, p, lr)
+        return p, o, l
+
+    last = None
+    for i in range(steps):
+        kd, kb = jax.random.split(kd)
+        xb, yb = data_fn(kb, batch)
+        params, opt, last = step(params, opt, xb, yb)
+        if log_every and i % log_every == 0:
+            print(f"  ref step {i}: loss {float(last):.4f}")
+    return TrainResult(params, None, {"final_loss": float(last)})
+
+
+# ----------------------------------------------------------------------
+# ASTRA fine-tuning
+# ----------------------------------------------------------------------
+
+
+def collect_embeddings(key, params, cfg, acfg, data_fn, n_batches=4, batch=16):
+    """Run the reference model and harvest per-layer block inputs for k-means."""
+    # identity codebooks are not needed: run astra_forward in eval mode with
+    # a huge-noise-free roundtrip replaced by identity — easiest is to reuse
+    # reference_forward internals; instead we grab vq_inputs from
+    # astra_forward with codebooks=None path below.
+    outs = [[] for _ in range(cfg.n_layers)]
+    # Temporary "codebooks" that make roundtrip ~identity are impossible;
+    # instead collect from a forward pass that skips quantization: reuse
+    # astra_forward with train=False but patch roundtrip via identity cb is
+    # messy — simply run the reference blocks manually here.
+    def harvest(x):
+        h_tok = model._embed(params, cfg, x)
+        ncls = acfg.n_devices if (cfg.use_cls and not cfg.causal) else 0
+        if ncls:
+            h = jnp.concatenate([jnp.tile(params["cls"], (acfg.n_devices, 1)), h_tok], axis=0)
+        else:
+            h = h_tok
+        t_all = h.shape[0]
+        if cfg.causal:
+            pos = jnp.arange(t_all)
+            bias = jnp.where(pos[None, :] <= pos[:, None], 0.0, model.NEG).astype(jnp.float32)
+        else:
+            bias = jnp.zeros((t_all, t_all), jnp.float32)
+        per_layer = []
+        for blk in params["blocks"]:
+            per_layer.append(h[ncls:])
+            h = model.baseline_block(h, bias, *model.block_weights_list(blk), n_heads=cfg.n_heads, use_pallas=False)
+        return per_layer
+
+    hv = jax.jit(jax.vmap(harvest))
+    for i in range(n_batches):
+        key, kb = jax.random.split(key)
+        xb, _ = data_fn(kb, batch)
+        per_layer = hv(xb)
+        for li in range(cfg.n_layers):
+            outs[li].append(per_layer[li].reshape(-1, cfg.d_model))
+    return [jnp.concatenate(o, axis=0) for o in outs]
+
+
+def kmeans_codebooks(key, embeddings, acfg):
+    """Per-layer k-means init — paper §3.2."""
+    cbs = []
+    for li, emb in enumerate(embeddings):
+        k = jax.random.fold_in(key, li)
+        # subsample for speed
+        m = min(emb.shape[0], 2048)
+        idx = jax.random.choice(k, emb.shape[0], (m,), replace=False)
+        cbs.append(vqlib.kmeans_init(k, emb[idx], acfg.groups, acfg.codebook_size))
+    return jnp.stack(cbs)  # [L, G, K, Dg]
+
+
+def finetune_astra(
+    key,
+    pretrained,
+    cfg: model.ModelConfig,
+    acfg: model.AstraConfig,
+    data_fn,
+    *,
+    steps=300,
+    batch=32,
+    lr=5e-4,
+    single_cls: bool = False,
+    random_assign: bool = False,
+    ema_codebooks: bool = True,
+    log_every=0,
+):
+    """Insert VQ, k-means-init codebooks, fine-tune with Eq. 2 + NAVQ.
+
+    random_assign=True trains with a randomized token-to-device mapping per
+    batch (the paper's recipe for heterogeneity generalization, App. D).
+    """
+    k0, k1, kd = jax.random.split(key, 3)
+    params = pretrained
+    emb = collect_embeddings(k0, params, cfg, acfg, data_fn)
+    codebooks = kmeans_codebooks(k1, emb, acfg)
+    opt = adam_init(params)
+    counts = jnp.zeros((cfg.n_layers, acfg.groups, acfg.codebook_size))
+    sums = jnp.zeros_like(codebooks)
+
+    even = model.make_assign(cfg, acfg)
+
+    def fwd_one(p, cb, x, assign, rng):
+        if single_cls:
+            logits = model.astra_forward_single_cls(p, cb, x, cfg, acfg, assign)
+            return logits, jnp.zeros(()), [jnp.zeros((cfg.seq_len, cfg.d_model))] * cfg.n_layers
+        logits, aux = model.astra_forward(
+            p, cb, x, cfg, acfg, assign, train=True, rng=rng
+        )
+        return logits, aux["commit"], aux["vq_inputs"]
+
+    def loss_fn(p, cb, xb, yb, assign, rngs):
+        logits, commit, vq_in = jax.vmap(
+            fwd_one, in_axes=(None, None, 0, None, 0)
+        )(p, cb, xb, assign, rngs)
+        return xent(logits, yb) + acfg.commit_beta * jnp.mean(commit), vq_in
+
+    @jax.jit
+    def step(p, o, cb, cnt, sm, xb, yb, assign, rng):
+        rngs = jax.random.split(rng, xb.shape[0])
+        (l, vq_in), g = jax.value_and_grad(loss_fn, has_aux=True)(p, cb, xb, yb, assign, rngs)
+        p, o = adam_update(g, o, p, lr)
+        if ema_codebooks and not single_cls:
+            new_cb, new_cnt, new_sm = [], [], []
+            for li in range(cfg.n_layers):
+                flat = vq_in[li].reshape(-1, cfg.d_model)
+                c, ct, s = vqlib.ema_update(cb[li], cnt[li], sm[li], flat)
+                new_cb.append(c); new_cnt.append(ct); new_sm.append(s)
+            cb = jnp.stack(new_cb); cnt = jnp.stack(new_cnt); sm = jnp.stack(new_sm)
+        return p, o, cb, cnt, sm, l
+
+    last = None
+    for i in range(steps):
+        kd, kb, ka, kr = jax.random.split(kd, 4)
+        xb, yb = data_fn(kb, batch)
+        if random_assign:
+            assign = jax.random.randint(ka, (cfg.seq_len,), 0, acfg.n_devices).astype(jnp.int32)
+        else:
+            assign = even
+        params, opt, codebooks, counts, sums, last = step(
+            params, opt, codebooks, counts, sums, xb, yb, assign, kr
+        )
+        if log_every and i % log_every == 0:
+            print(f"  astra step {i}: loss {float(last):.4f}")
+    return TrainResult(params, codebooks, {"final_loss": float(last)})
+
+
+# ----------------------------------------------------------------------
+# evaluation
+# ----------------------------------------------------------------------
+
+
+def eval_reference(params, cfg, data_fn, key, *, n_batches=8, batch=32):
+    fwd = jax.jit(jax.vmap(lambda x: model.reference_forward(params, x, cfg)))
+    return _eval_loop(fwd, cfg, data_fn, key, n_batches, batch)
+
+
+def eval_astra(params, codebooks, cfg, acfg, data_fn, key, *, assign=None, n_batches=8, batch=32, single_cls=False):
+    if single_cls:
+        f = lambda x: model.astra_forward_single_cls(params, codebooks, x, cfg, acfg, assign)
+    else:
+        f = lambda x: model.astra_forward(params, codebooks, x, cfg, acfg, assign)[0]
+    fwd = jax.jit(jax.vmap(f))
+    return _eval_loop(fwd, cfg, data_fn, key, n_batches, batch)
+
+
+def _eval_loop(fwd, cfg, data_fn, key, n_batches, batch):
+    """Returns {'acc', 'loss', 'ppl'} averaged over n_batches."""
+    accs, losses = [], []
+    for _ in range(n_batches):
+        key, kb = jax.random.split(key)
+        xb, yb = data_fn(kb, batch)
+        logits = fwd(xb)
+        losses.append(float(xent(logits, yb)))
+        accs.append(float(accuracy(logits, yb)))
+    loss = sum(losses) / len(losses)
+    return {"acc": sum(accs) / len(accs), "loss": loss, "ppl": float(jnp.exp(loss))}
+
+
+# ----------------------------------------------------------------------
+# data plumbing
+# ----------------------------------------------------------------------
+
+
+# datasets.patchy regenerates prototypes from its key; for train/eval we
+# need a fixed class structure with fresh samples, so split proto/sample keys:
+def _patchy_with(proto_key, sample_key, cfg, n, noise=0.8):
+    t, p, c = cfg.seq_len, cfg.patch_dim, cfg.n_classes
+    kp, kd = jax.random.split(proto_key)
+    protos = jax.random.normal(kp, (c, t, p))
+    dbasis = jax.random.normal(kd, (8, t, p)) * 0.7
+    ky, km, kn = jax.random.split(sample_key, 3)
+    y = jax.random.randint(ky, (n,), 0, c)
+    coefs = jax.random.normal(km, (n, 8))
+    x = protos[y] + jnp.einsum("nk,ktp->ntp", coefs, dbasis) + noise * jax.random.normal(kn, (n, t, p))
+    return x.astype(jnp.float32), y.astype(jnp.int32)
+
+
+def vision_data_fn(proto_key, cfg):
+    """data_fn(key, n) -> (x, y): fixed prototypes, fresh samples per call."""
+    return lambda k, n: _patchy_with(proto_key, k, cfg, n)
+
+
+def lm_data_fn(table, cfg):
+    def fn(k, n):
+        seqs = datasets.markov(k, cfg, table, n)
+        return seqs[:, :-1], seqs[:, 1:]
+    return fn

@@ -1,0 +1,129 @@
+"""Codebook learning + Noise-Augmented Vector Quantization (paper §3.2, §3.3).
+
+Build-time only. The rust coordinator consumes the *learned* codebooks
+(artifacts/codebooks.bin) and performs encode/decode natively / via the AOT
+graphs; nothing here runs on the request path.
+
+Pieces:
+  * k-means codebook initialization over intermediate token embeddings
+    (paper: "initialized by running K-means clustering over intermediate
+    token embeddings from the pretrained model");
+  * EMA codebook updates during fine-tuning (VQVAE-style);
+  * straight-through estimator for the quantization bottleneck;
+  * NAVQ — Gaussian noise fit to the quantization-residual distribution,
+    added to quantized embeddings during training (Thm 3.1). We fit a
+    diagonal covariance (the paper fits empirical mean/covariance; the
+    diagonal restriction matches the i.i.d.-across-dimensions assumption
+    its own proof makes in Appendix B Step 2);
+  * commitment loss (Eq. 2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def kmeans_init(key, x, g: int, k: int, iters: int = 10):
+    """K-means per group over embeddings x [M, D] -> codebook [G, K, D/G].
+
+    Standard Lloyd iterations with dead-centroid re-seeding from random
+    points. M should comfortably exceed K.
+    """
+    m, d = x.shape
+    dg = d // g
+    assert g * dg == d
+    xg = x.reshape(m, g, dg).transpose(1, 0, 2)  # [G, M, Dg]
+
+    def init_one(key, xs):
+        idx = jax.random.choice(key, m, (k,), replace=False)
+        return xs[idx]
+
+    keys = jax.random.split(key, g)
+    cb = jax.vmap(init_one)(keys, xg)  # [G, K, Dg]
+
+    def step(cb, key):
+        # assign
+        d2 = (
+            jnp.sum(xg**2, axis=-1)[:, :, None]
+            - 2.0 * jnp.einsum("gmd,gkd->gmk", xg, cb)
+            + jnp.sum(cb**2, axis=-1)[:, None, :]
+        )  # [G, M, K]
+        assign = jnp.argmin(d2, axis=-1)  # [G, M]
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # [G, M, K]
+        counts = jnp.sum(onehot, axis=1)  # [G, K]
+        sums = jnp.einsum("gmk,gmd->gkd", onehot, xg)
+        new = sums / jnp.maximum(counts, 1.0)[:, :, None]
+        # re-seed dead centroids from random data points
+        rand_pts = xg[:, jax.random.randint(key, (k,), 0, m), :]
+        dead = (counts < 0.5)[:, :, None]
+        return jnp.where(dead, rand_pts, new), None
+
+    step_keys = jax.random.split(jax.random.fold_in(key, 1), iters)
+    cb, _ = jax.lax.scan(step, cb, step_keys)
+    return cb
+
+
+def ema_update(cb, counts_ema, sums_ema, x, decay: float = 0.99, eps: float = 1e-5):
+    """VQVAE-style EMA codebook update from a batch of embeddings x [M, D].
+
+    Returns (new_cb, new_counts_ema, new_sums_ema). Laplace-smoothed so rare
+    codes do not collapse to zero.
+    """
+    g, k, dg = cb.shape
+    m = x.shape[0]
+    xg = x.reshape(m, g, dg).transpose(1, 0, 2)
+    idx = ref.ref_grouped_vq_encode(x, cb)  # [M, G]
+    onehot = jax.nn.one_hot(idx.transpose(1, 0), k, dtype=x.dtype)  # [G, M, K]
+    counts = jnp.sum(onehot, axis=1)  # [G, K]
+    sums = jnp.einsum("gmk,gmd->gkd", onehot, xg)  # [G, K, Dg]
+    counts_ema = decay * counts_ema + (1 - decay) * counts
+    sums_ema = decay * sums_ema + (1 - decay) * sums
+    n = jnp.sum(counts_ema, axis=-1, keepdims=True)
+    stable = (counts_ema + eps) / (n + k * eps) * n  # Laplace smoothing
+    new_cb = sums_ema / stable[:, :, None]
+    # keep old centroid where a code has (numerically) never been used
+    never = (counts_ema < 1e-3)[:, :, None]
+    return jnp.where(never, cb, new_cb), counts_ema, sums_ema
+
+
+def straight_through(x, x_hat):
+    """Quantize with identity gradient (VQVAE straight-through estimator)."""
+    return x + jax.lax.stop_gradient(x_hat - x)
+
+
+def fit_residual_noise(x, x_hat):
+    """Empirical mean/std of the quantization residual eps = X - X_hat.
+
+    Returns (mu [D], sigma [D]) — the distribution NAVQ samples from.
+    """
+    eps = x - x_hat
+    mu = jnp.mean(eps, axis=0)
+    sigma = jnp.sqrt(jnp.mean((eps - mu) ** 2, axis=0) + 1e-12)
+    return mu, sigma
+
+
+def navq(key, x, codebook, lam: float):
+    """Noise-Augmented Vector Quantization (training path).
+
+    Returns (x_tilde, x_hat, commit) where
+      x_tilde = ST(x_hat) + lam * xi,  xi ~ N(mu, diag(sigma^2)) fit on the
+                residuals of this batch (stop-gradient through the noise);
+      commit  = || x - sg(x_hat) ||^2 mean — the Eq. 2 commitment term.
+    At inference (lam irrelevant) use the deterministic roundtrip instead.
+    """
+    x_hat = ref.ref_grouped_vq_roundtrip(x, codebook)
+    mu, sigma = fit_residual_noise(x, x_hat)
+    xi = mu + sigma * jax.random.normal(key, x.shape, x.dtype)
+    x_tilde = straight_through(x, x_hat) + lam * jax.lax.stop_gradient(xi)
+    commit = jnp.mean(jnp.sum((x - jax.lax.stop_gradient(x_hat)) ** 2, axis=-1))
+    return x_tilde, x_hat, commit
+
+
+def codebook_utilization(indices, k: int):
+    """Fraction of codes used at least once. indices [.., G] int32."""
+    flat = indices.reshape(-1)
+    used = jnp.zeros((k,), jnp.int32).at[flat].set(1)
+    return jnp.mean(used.astype(jnp.float32))

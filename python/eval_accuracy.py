@@ -1,0 +1,352 @@
+"""Regenerate the paper's accuracy tables at reproduction scale.
+
+Tables (analogues at AstraFormer scale on procedural datasets; DESIGN.md §2
+documents the substitution, EXPERIMENTS.md the outcomes):
+
+  --table 1   vision accuracy vs #groups (+ zero-VQ reference row)
+  --table 2   accuracy vs device count
+  --table 3   LM perplexity vs #groups, fine-tuned + zero-shot corpus
+  --table 8   seed robustness (mean/std over seeds)
+  --table 9   FPAR vs accuracy under random heterogeneous assignment
+  --table 11  perplexity under packet loss (stale-code fallback)
+  --table 12  NAVQ lambda sweep (train/val gap)
+  --table 13  distributed vs single class token
+  --table 14  commitment beta sweep
+  --table 15  codebook size sweep
+
+`--fast` shrinks steps/batches ~4x (smoke scale); default is the
+EXPERIMENTS.md reporting scale. Results print as tables and are written to
+../results/acc_table<N>.csv.
+
+Build-time python only — nothing here runs on the serving path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from compile import datasets, model, train  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "results")
+
+
+def save(name, header, rows):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.csv"), "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+
+
+def cfg_vision(fast):
+    return model.ModelConfig(
+        n_layers=2 if fast else 3, d_model=96 if fast else 128, n_heads=4,
+        d_ff=256 if fast else 384, seq_len=32 if fast else 64,
+        patch_dim=24, n_classes=8,
+    )
+
+
+def cfg_lm(fast):
+    return model.ModelConfig(
+        n_layers=2, d_model=96 if fast else 128, n_heads=4,
+        d_ff=256 if fast else 384, seq_len=32 if fast else 64,
+        causal=True, use_cls=False, vocab_size=32,
+    )
+
+
+def steps(fast, n):
+    return max(10, n // 4) if fast else n
+
+
+GROUPS = [1, 4, 16]  # analogue of the paper's {1, 16, 32} at D=128
+
+
+def pretrain_vision(key, cfg, fast):
+    data = train.vision_data_fn(jax.random.fold_in(key, 7), cfg)
+    ref = train.pretrain_reference(key, cfg, data, steps=steps(fast, 240))
+    return ref, data
+
+
+# ----------------------------------------------------------------- tables
+
+
+def table1(key, fast):
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    m_ref = train.eval_reference(ref.params, cfg, data, jax.random.fold_in(key, 9))
+    print(f"\n== Table 1 analogue: accuracy vs #groups (reference {m_ref['acc']:.4f}) ==")
+    rows = [["reference", "-", "-", f"{m_ref['acc']:.4f}"]]
+    for g in GROUPS:
+        acfg = model.AstraConfig(n_devices=4, groups=g, codebook_size=64)
+        ft = train.finetune_astra(jax.random.fold_in(key, g), ref.params, cfg, acfg,
+                                  data, steps=steps(fast, 160))
+        m = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data,
+                             jax.random.fold_in(key, 9))
+        bits = acfg.bits_per_token * cfg.n_layers
+        comp = 32 * cfg.d_model / acfg.bits_per_token
+        print(f"  G={g:<3} bits/tok={bits:<6} comp={comp:7.1f}x  acc={m['acc']:.4f}")
+        rows.append([g, bits, f"{comp:.1f}", f"{m['acc']:.4f}"])
+    save("acc_table1", "groups,total_bits_per_token,compression,accuracy", rows)
+
+
+def table2(key, fast):
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    m_ref = train.eval_reference(ref.params, cfg, data, jax.random.fold_in(key, 9))
+    print(f"\n== Table 2 analogue: accuracy vs #devices (reference {m_ref['acc']:.4f}) ==")
+    rows = [["1(ref)", f"{m_ref['acc']:.4f}"]]
+    for n in [2, 4, 8]:
+        acfg = model.AstraConfig(n_devices=n, groups=GROUPS[-1], codebook_size=64)
+        ft = train.finetune_astra(jax.random.fold_in(key, 100 + n), ref.params, cfg,
+                                  acfg, data, steps=steps(fast, 160))
+        m = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data,
+                             jax.random.fold_in(key, 9))
+        print(f"  N={n}: acc={m['acc']:.4f}")
+        rows.append([n, f"{m['acc']:.4f}"])
+    save("acc_table2", "devices,accuracy", rows)
+
+
+def table3(key, fast):
+    cfg = cfg_lm(fast)
+    kt = jax.random.fold_in(key, 70)
+    table_a = datasets.markov_table(kt, cfg.vocab_size)
+    table_b = datasets.markov_table(jax.random.fold_in(kt, 1), cfg.vocab_size)
+    data_a = train.lm_data_fn(table_a, cfg)
+    data_b = train.lm_data_fn(table_b, cfg)
+    ref = train.pretrain_reference(key, cfg, data_a, steps=steps(fast, 240))
+    m_ref = train.eval_reference(ref.params, cfg, data_a, jax.random.fold_in(key, 9))
+    m_ref_zs = train.eval_reference(ref.params, cfg, data_b, jax.random.fold_in(key, 9))
+    print(f"\n== Table 3 analogue: PPL vs #groups "
+          f"(reference {m_ref['ppl']:.3f}, zero-shot {m_ref_zs['ppl']:.3f}) ==")
+    rows = [["reference", f"{m_ref['ppl']:.4f}", f"{m_ref_zs['ppl']:.4f}"]]
+    for g in GROUPS:
+        acfg = model.AstraConfig(n_devices=4, groups=g, codebook_size=64)
+        ft = train.finetune_astra(jax.random.fold_in(key, 200 + g), ref.params, cfg,
+                                  acfg, data_a, steps=steps(fast, 160))
+        m = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data_a,
+                             jax.random.fold_in(key, 9))
+        m_zs = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data_b,
+                                jax.random.fold_in(key, 9))
+        print(f"  G={g:<3} PPL={m['ppl']:.3f}  zero-shot PPL={m_zs['ppl']:.3f}")
+        rows.append([g, f"{m['ppl']:.4f}", f"{m_zs['ppl']:.4f}"])
+    save("acc_table3", "groups,ppl_finetuned,ppl_zeroshot", rows)
+
+
+def table8(key, fast):
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    print("\n== Table 8 analogue: seed robustness (G=max) ==")
+    seeds = range(3 if fast else 5)
+    accs = []
+    for s in seeds:
+        acfg = model.AstraConfig(n_devices=4, groups=GROUPS[-1], codebook_size=64)
+        ft = train.finetune_astra(jax.random.PRNGKey(1000 + s), ref.params, cfg,
+                                  acfg, data, steps=steps(fast, 120))
+        m = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data,
+                             jax.random.fold_in(key, 9))
+        accs.append(m["acc"])
+        print(f"  seed {s}: acc={m['acc']:.4f}")
+    mean = sum(accs) / len(accs)
+    std = (sum((a - mean) ** 2 for a in accs) / len(accs)) ** 0.5
+    print(f"  mean={mean:.4f} std={std:.4f}")
+    save("acc_table8", "seed,accuracy",
+         [[i, f"{a:.4f}"] for i, a in enumerate(accs)] + [["mean", f"{mean:.4f}"], ["std", f"{std:.4f}"]])
+
+
+def table9(key, fast):
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    acfg = model.AstraConfig(n_devices=4, groups=GROUPS[-1], codebook_size=64)
+    ft = train.finetune_astra(jax.random.fold_in(key, 5), ref.params, cfg, acfg,
+                              data, steps=steps(fast, 160), random_assign=True)
+    print("\n== Table 9 analogue: FPAR vs accuracy (random assignment) ==")
+    # evaluate per-batch with random assignments, bin by FPAR
+    records = []
+    kd = jax.random.fold_in(key, 9)
+    for _ in range(12 if fast else 40):
+        kd, ka, kb = jax.random.split(kd, 3)
+        assign = jax.random.randint(ka, (cfg.seq_len,), 0, 4).astype(jnp.int32)
+        f = float(model.fpar(assign, 4))
+        m = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data, kb,
+                             assign=assign, n_batches=1, batch=32)
+        records.append((f, m["acc"]))
+    records.sort()
+    nbins = 4
+    rows = []
+    per = len(records) // nbins
+    for b in range(nbins):
+        chunk = records[b * per:(b + 1) * per] or records[-1:]
+        f_lo, f_hi = chunk[0][0], chunk[-1][0]
+        acc = sum(a for _, a in chunk) / len(chunk)
+        print(f"  FPAR [{f_lo:.3f}, {f_hi:.3f}]: acc={acc:.4f}")
+        rows.append([f"{f_lo:.4f}", f"{f_hi:.4f}", f"{acc:.4f}"])
+    save("acc_table9", "fpar_lo,fpar_hi,accuracy", rows)
+
+
+def table11(key, fast):
+    """Packet loss: at eval time, a fraction of non-local token codes is
+    replaced by the previous layer's codes (stale fallback), mirroring the
+    rust coordinator's loss path."""
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    acfg = model.AstraConfig(n_devices=4, groups=GROUPS[-1], codebook_size=64)
+    ft = train.finetune_astra(jax.random.fold_in(key, 6), ref.params, cfg, acfg,
+                              data, steps=steps(fast, 160))
+    print("\n== Table 11 analogue: accuracy under packet loss ==")
+    from compile.kernels import ref as refk
+
+    def eval_with_loss(loss_p, key):
+        # joint forward but x_tilde rows replaced with *previous layer's*
+        # quantized rows at loss_p rate
+        def fwd(x, k):
+            assign = model.make_assign(cfg, acfg)
+            h_tok = model._embed(ft.params, cfg, x)
+            n = acfg.n_devices
+            h = jnp.concatenate([jnp.tile(ft.params["cls"], (n, 1)), h_tok], axis=0)
+            bias = model.mixed_bias(cfg, acfg, assign)
+            prev = None
+            for li, blk in enumerate(ft.params["blocks"]):
+                content = h[n:]
+                x_hat = refk.ref_grouped_vq_roundtrip(content, ft.codebooks[li])
+                if prev is not None and loss_p > 0:
+                    k, kl = jax.random.split(k)
+                    drop = jax.random.bernoulli(kl, loss_p, (content.shape[0], 1))
+                    x_hat = jnp.where(drop, prev, x_hat)
+                prev = x_hat
+                ln1 = lambda y: refk.ref_layer_norm(y, blk["ln1"]["g"], blk["ln1"]["b"])
+                q, kf, vf = model._project_qkv(blk, ln1(h))
+                _, kh, vh = model._project_qkv(blk, ln1(x_hat))
+                hh = cfg.n_heads
+                out = model._attn_jnp(
+                    model._split_heads(q, hh),
+                    jnp.concatenate([model._split_heads(kf, hh), model._split_heads(kh, hh)], axis=1),
+                    jnp.concatenate([model._split_heads(vf, hh), model._split_heads(vh, hh)], axis=1),
+                    bias,
+                )
+                h = h + model._merge_heads(out) @ blk["wo"] + blk["bo"]
+                h = h + model._mlp(blk, h)
+            lnf = lambda y: refk.ref_layer_norm(y, ft.params["ln_f"]["g"], ft.params["ln_f"]["b"])
+            return lnf(jnp.mean(h[:n], axis=0)) @ ft.params["head"]["w"] + ft.params["head"]["b"]
+
+        accs = []
+        for _ in range(4):
+            key, kb, kf_ = jax.random.split(key, 3)
+            xb, yb = data(kb, 32)
+            logits = jax.vmap(fwd, in_axes=(0, None))(xb, kf_)
+            accs.append(float(train.accuracy(logits, yb)))
+        return sum(accs) / len(accs)
+
+    rows = []
+    for p in [0.0, 0.05, 0.2]:
+        acc = eval_with_loss(p, jax.random.fold_in(key, 9))
+        print(f"  loss={p:.2f}: acc={acc:.4f}")
+        rows.append([p, f"{acc:.4f}"])
+    save("acc_table11", "loss_rate,accuracy", rows)
+
+
+def table12(key, fast):
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    print("\n== Table 12 analogue: NAVQ lambda sweep ==")
+    rows = []
+    for lam in [0.0, 0.1, 0.3, 1.0]:
+        acfg = model.AstraConfig(n_devices=4, groups=GROUPS[1], codebook_size=64,
+                                 noise_lambda=lam)
+        ft = train.finetune_astra(jax.random.fold_in(key, 30), ref.params, cfg,
+                                  acfg, data, steps=steps(fast, 160))
+        m_tr = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data,
+                                jax.random.fold_in(key, 7), n_batches=4)
+        m_va = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data,
+                                jax.random.fold_in(key, 9), n_batches=4)
+        print(f"  lambda={lam}: train={m_tr['acc']:.4f} val={m_va['acc']:.4f} "
+              f"gap={m_tr['acc'] - m_va['acc']:+.4f}")
+        rows.append([lam, f"{m_tr['acc']:.4f}", f"{m_va['acc']:.4f}"])
+    save("acc_table12", "lambda,train_acc,val_acc", rows)
+
+
+def table13(key, fast):
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    print("\n== Table 13 analogue: distributed vs single class token ==")
+    rows = []
+    for g in GROUPS:
+        acfg = model.AstraConfig(n_devices=4, groups=g, codebook_size=64)
+        ft_d = train.finetune_astra(jax.random.fold_in(key, 40 + g), ref.params, cfg,
+                                    acfg, data, steps=steps(fast, 160))
+        m_d = train.eval_astra(ft_d.params, ft_d.codebooks, cfg, acfg, data,
+                               jax.random.fold_in(key, 9))
+        # single-CLS: same codebooks (frozen), single-token forward
+        ft_s = train.finetune_astra(jax.random.fold_in(key, 50 + g), ref.params, cfg,
+                                    acfg, data, steps=steps(fast, 160), single_cls=True,
+                                    ema_codebooks=False)
+        # reuse distributed run's codebooks for the single-CLS eval
+        m_s = train.eval_astra(ft_s.params, ft_d.codebooks, cfg, acfg, data,
+                               jax.random.fold_in(key, 9), single_cls=True)
+        print(f"  G={g:<3} single={m_s['acc']:.4f} dist={m_d['acc']:.4f} "
+              f"delta={m_d['acc'] - m_s['acc']:+.4f}")
+        rows.append([g, f"{m_s['acc']:.4f}", f"{m_d['acc']:.4f}"])
+    save("acc_table13", "groups,single_cls_acc,distributed_cls_acc", rows)
+
+
+def table14(key, fast):
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    print("\n== Table 14 analogue: commitment beta sweep ==")
+    rows = []
+    for beta in [0.0, 2e-4, 0.25]:
+        acfg = model.AstraConfig(n_devices=4, groups=GROUPS[1], codebook_size=64,
+                                 commit_beta=beta)
+        ft = train.finetune_astra(jax.random.fold_in(key, 60), ref.params, cfg,
+                                  acfg, data, steps=steps(fast, 160))
+        m = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data,
+                             jax.random.fold_in(key, 9))
+        print(f"  beta={beta}: acc={m['acc']:.4f}")
+        rows.append([beta, f"{m['acc']:.4f}"])
+    save("acc_table14", "beta,accuracy", rows)
+
+
+def table15(key, fast):
+    cfg = cfg_vision(fast)
+    ref, data = pretrain_vision(key, cfg, fast)
+    print("\n== Table 15 analogue: codebook size sweep (G=max) ==")
+    rows = []
+    for k in [16, 64, 256]:
+        acfg = model.AstraConfig(n_devices=4, groups=GROUPS[-1], codebook_size=k)
+        ft = train.finetune_astra(jax.random.fold_in(key, 80 + k), ref.params, cfg,
+                                  acfg, data, steps=steps(fast, 160))
+        m = train.eval_astra(ft.params, ft.codebooks, cfg, acfg, data,
+                             jax.random.fold_in(key, 9))
+        comp = 32 * cfg.d_model / acfg.bits_per_token
+        print(f"  K={k:<4} comp={comp:7.1f}x acc={m['acc']:.4f}")
+        rows.append([k, f"{comp:.1f}", f"{m['acc']:.4f}"])
+    save("acc_table15", "codebook_size,compression,accuracy", rows)
+
+
+TABLES = {
+    1: table1, 2: table2, 3: table3, 8: table8, 9: table9,
+    11: table11, 12: table12, 13: table13, 14: table14, 15: table15,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--table", type=int, default=0, help="0 = all")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    key = jax.random.PRNGKey(42)
+    if args.table:
+        TABLES[args.table](key, args.fast)
+    else:
+        for t, fn in TABLES.items():
+            fn(jax.random.fold_in(key, t), args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py — the core
+correctness signal for the whole AOT stack.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mixed_attention as mak
+from compile.kernels import ref
+from compile.kernels import vq_kernels as vqk
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rng(*keys):
+    return [jax.random.PRNGKey(k) for k in keys]
+
+
+# ---------------------------------------------------------------- attention
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    tq=st.integers(1, 70),
+    s=st.integers(1, 150),
+    dh=st.sampled_from([8, 16, 32, 64]),
+)
+def test_attention_matches_ref(h, tq, s, dh):
+    k1, k2, k3 = rng(0, 1, 2)
+    q = jax.random.normal(k1, (h, tq, dh), jnp.float32)
+    k = jax.random.normal(k2, (h, s, dh), jnp.float32)
+    v = jax.random.normal(k3, (h, s, dh), jnp.float32)
+    out = mak.attention(q, k, v)
+    want = ref.ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    tq=st.integers(2, 40),
+    s=st.integers(2, 90),
+    frac=st.floats(0.0, 0.4),
+)
+def test_attention_with_mask(tq, s, frac):
+    k1, k2, k3, k4 = rng(0, 1, 2, 3)
+    q = jax.random.normal(k1, (2, tq, 16), jnp.float32)
+    k = jax.random.normal(k2, (2, s, 16), jnp.float32)
+    v = jax.random.normal(k3, (2, s, 16), jnp.float32)
+    mask = jax.random.bernoulli(k4, frac, (tq, s))
+    # never mask the entire row (softmax undefined)
+    mask = mask.at[:, 0].set(False)
+    bias = jnp.where(mask, -1e30, 0.0).astype(jnp.float32)
+    out = mak.attention(q, k, v, bias)
+    want = ref.ref_attention(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+def test_attention_block_sizes():
+    """Same result across q/kv tilings (online softmax invariance)."""
+    k1, k2, k3 = rng(0, 1, 2)
+    q = jax.random.normal(k1, (2, 50, 32), jnp.float32)
+    k = jax.random.normal(k2, (2, 131, 32), jnp.float32)
+    v = jax.random.normal(k3, (2, 131, 32), jnp.float32)
+    base = np.asarray(mak.attention(q, k, v, block_q=64, block_kv=128))
+    for bq, bkv in [(8, 16), (16, 64), (64, 32), (128, 256)]:
+        out = np.asarray(mak.attention(q, k, v, block_q=bq, block_kv=bkv))
+        np.testing.assert_allclose(out, base, atol=3e-5, rtol=3e-5)
+
+
+def test_mixed_attention_equals_concat():
+    k1, k2, k3, k4, k5 = rng(0, 1, 2, 3, 4)
+    h, tq, tl, tr, dh = 2, 9, 9, 24, 16
+    q = jax.random.normal(k1, (h, tq, dh))
+    kl = jax.random.normal(k2, (h, tl, dh))
+    vl = jax.random.normal(k3, (h, tl, dh))
+    kr = jax.random.normal(k4, (h, tr, dh))
+    vr = jax.random.normal(k5, (h, tr, dh))
+    out = mak.mixed_attention(q, kl, vl, kr, vr)
+    want = ref.ref_mixed_attention(q, kl, vl, kr, vr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+def test_attention_causal_bias():
+    h, t, dh = 2, 33, 16
+    k1, k2, k3 = rng(0, 1, 2)
+    q = jax.random.normal(k1, (h, t, dh))
+    k = jax.random.normal(k2, (h, t, dh))
+    v = jax.random.normal(k3, (h, t, dh))
+    pos = jnp.arange(t)
+    bias = jnp.where(pos[None, :] <= pos[:, None], 0.0, -1e30).astype(jnp.float32)
+    out = mak.attention(q, k, v, bias)
+    want = ref.ref_attention(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5, rtol=3e-5)
+    # first row attends only to itself
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(v[:, 0]), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------- VQ
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 64),
+    g=st.sampled_from([1, 2, 4, 8]),
+    k=st.sampled_from([2, 8, 16, 64]),
+    dg=st.sampled_from([2, 4, 8, 16]),
+)
+def test_vq_encode_matches_ref(t, g, k, dg):
+    k1, k2 = rng(0, 1)
+    x = jax.random.normal(k1, (t, g * dg), jnp.float32)
+    cb = jax.random.normal(k2, (g, k, dg), jnp.float32)
+    got = np.asarray(vqk.grouped_vq_encode(x, cb))
+    want = np.asarray(ref.ref_grouped_vq_encode(x, cb))
+    # indices may differ on exact distance ties / float assoc; require the
+    # *distances* to agree instead of the raw argmin
+    xg = np.asarray(x).reshape(t, g, dg)
+    cbn = np.asarray(cb)
+    for ti in range(t):
+        for gi in range(g):
+            dgot = np.sum((xg[ti, gi] - cbn[gi, got[ti, gi]]) ** 2)
+            dwant = np.sum((xg[ti, gi] - cbn[gi, want[ti, gi]]) ** 2)
+            assert abs(dgot - dwant) < 1e-4, (ti, gi, dgot, dwant)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 64),
+    g=st.sampled_from([1, 2, 8]),
+    k=st.sampled_from([2, 16, 64]),
+)
+def test_vq_decode_matches_ref(t, g, k):
+    dg = 8
+    k1, k2 = rng(0, 1)
+    idx = jax.random.randint(k1, (t, g), 0, k).astype(jnp.int32)
+    cb = jax.random.normal(k2, (g, k, dg), jnp.float32)
+    got = np.asarray(vqk.grouped_vq_decode(idx, cb))
+    want = np.asarray(ref.ref_grouped_vq_decode(idx, cb))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_vq_roundtrip_is_idempotent():
+    """Quantizing a quantized vector returns itself."""
+    k1, k2 = rng(0, 1)
+    x = jax.random.normal(k1, (32, 16), jnp.float32)
+    cb = jax.random.normal(k2, (4, 8, 4), jnp.float32)
+    xh = vqk.grouped_vq_roundtrip(x, cb)
+    xhh = vqk.grouped_vq_roundtrip(xh, cb)
+    np.testing.assert_allclose(np.asarray(xh), np.asarray(xhh), atol=1e-5)
+
+
+def test_vq_encode_exact_centroids():
+    """Rows that ARE centroids map to their own index."""
+    k2 = jax.random.PRNGKey(1)
+    cb = jax.random.normal(k2, (2, 8, 4), jnp.float32)
+    x = jnp.concatenate([cb[0, 3], cb[1, 5]])[None, :]  # [1, 8]
+    idx = np.asarray(vqk.grouped_vq_encode(x, cb))
+    assert idx[0, 0] == 3 and idx[0, 1] == 5

@@ -1,0 +1,245 @@
+"""L2 model tests: shapes, masks, joint-vs-per-device equivalence, DCT."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.ModelConfig(
+    n_layers=2, d_model=64, n_heads=4, d_ff=128, seq_len=16, patch_dim=12, n_classes=4
+)
+ACFG = model.AstraConfig(n_devices=4, groups=8, codebook_size=16)
+DCFG = model.ModelConfig(
+    n_layers=2, d_model=64, n_heads=4, d_ff=128, seq_len=16, causal=True,
+    use_cls=False, vocab_size=32,
+)
+
+
+@pytest.fixture(scope="module")
+def enc():
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, CFG)
+    cbs = model.init_codebooks(jax.random.fold_in(key, 1), CFG, ACFG)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (CFG.seq_len, CFG.patch_dim))
+    return params, cbs, x
+
+
+@pytest.fixture(scope="module")
+def dec():
+    key = jax.random.PRNGKey(3)
+    params = model.init_params(key, DCFG)
+    cbs = model.init_codebooks(jax.random.fold_in(key, 1), DCFG, ACFG)
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (DCFG.seq_len,), 0, DCFG.vocab_size)
+    return params, cbs, ids
+
+
+def test_encoder_shapes(enc):
+    params, cbs, x = enc
+    logits, aux = model.astra_forward(params, cbs, x, CFG, ACFG)
+    assert logits.shape == (CFG.n_classes,)
+    assert len(aux["vq_inputs"]) == CFG.n_layers
+    ref_logits = model.reference_forward(params, x, CFG)
+    assert ref_logits.shape == (CFG.n_classes,)
+
+
+def test_decoder_shapes(dec):
+    params, cbs, ids = dec
+    logits, _ = model.astra_forward(params, cbs, ids, DCFG, ACFG)
+    assert logits.shape == (DCFG.seq_len, DCFG.vocab_size)
+
+
+def test_bits_per_token():
+    assert model.AstraConfig(groups=1, codebook_size=1024).bits_per_token == 10
+    assert model.AstraConfig(groups=16, codebook_size=1024).bits_per_token == 160
+    assert model.AstraConfig(groups=32, codebook_size=1024).bits_per_token == 320
+
+
+def test_make_assign_even_and_hetero():
+    a = model.make_assign(CFG, ACFG)
+    assert a.shape == (16,)
+    assert [int(jnp.sum(a == i)) for i in range(4)] == [4, 4, 4, 4]
+    a2 = model.make_assign(CFG, ACFG, sizes=[8, 4, 2, 2])
+    assert [int(jnp.sum(a2 == i)) for i in range(4)] == [8, 4, 2, 2]
+    with pytest.raises(AssertionError):
+        model.make_assign(CFG, ACFG, sizes=[9, 4, 2, 2])
+
+
+def test_fpar():
+    a = model.make_assign(CFG, ACFG)
+    assert abs(float(model.fpar(a, 4)) - 0.25) < 1e-6  # even split: 1/N
+    a2 = model.make_assign(CFG, ACFG, sizes=[16, 0, 0, 0])
+    assert abs(float(model.fpar(a2, 4)) - 1.0) < 1e-6  # all on one device
+    # heterogeneity increases FPAR (Appendix D Eq. 36)
+    a3 = model.make_assign(CFG, ACFG, sizes=[8, 4, 2, 2])
+    assert float(model.fpar(a3, 4)) > 0.25
+
+
+def test_mixed_bias_structure():
+    assign = model.make_assign(CFG, ACFG)
+    bias = np.asarray(model.mixed_bias(CFG, ACFG, assign))
+    n, t = ACFG.n_devices, CFG.seq_len
+    tq = n + t
+    assert bias.shape == (tq, n + t + t)
+    # CLS replica d: full access to its own device tokens, hat elsewhere
+    for d in range(n):
+        row = bias[d]
+        for j in range(t):  # full content columns
+            expect = 0.0 if int(assign[j]) == d else model.NEG
+            assert row[n + j] == expect
+        for j in range(t):  # hat columns
+            expect = model.NEG if int(assign[j]) == d else 0.0
+            assert row[n + t + j] == expect
+    # content token attends its own full column, not its hat column
+    q = n + 0  # first content token (device 0)
+    assert bias[q, n + 0] == 0.0
+    assert bias[q, n + t + 0] == model.NEG
+    # CLS keys: only same replica's queries see them
+    assert bias[0, 0] == 0.0 and bias[0, 1] == model.NEG
+
+
+def test_mixed_bias_causal():
+    assign = model.make_assign(DCFG, ACFG)
+    bias = np.asarray(model.mixed_bias(DCFG, ACFG, assign))
+    t = DCFG.seq_len
+    assert bias.shape == (t, 2 * t)
+    # no attention to the future in either column block
+    for i in range(t):
+        for j in range(i + 1, t):
+            assert bias[i, j] == model.NEG
+            assert bias[i, t + j] == model.NEG
+    # token 5 (device 1 owns 4..7): full for 4..5, hat for 0..3
+    assert bias[5, 4] == 0.0 and bias[5, 5] == 0.0
+    assert bias[5, 0] == model.NEG and bias[5, t + 0] == 0.0
+
+
+def test_joint_equals_per_device(enc):
+    """The joint training graph == composition of per-device AOT graphs."""
+    params, cbs, x = enc
+    logits, _ = model.astra_forward(params, cbs, x, CFG, ACFG)
+    n, t = ACFG.n_devices, CFG.seq_len
+    tc = t // n
+    h_tok = np.asarray(
+        x @ params["embed"]["w"] + params["embed"]["b"] + params["pos"]
+    )
+    locals_ = [
+        np.concatenate([np.asarray(params["cls"]), h_tok[d * tc : (d + 1) * tc]])
+        for d in range(n)
+    ]
+    for li in range(CFG.n_layers):
+        content = np.concatenate([l[1:] for l in locals_], axis=0)
+        xhat = np.asarray(ref.ref_grouped_vq_roundtrip(jnp.asarray(content), cbs[li]))
+        new = []
+        for d in range(n):
+            remote = np.concatenate(
+                [xhat[dd * tc : (dd + 1) * tc] for dd in range(n) if dd != d]
+            )
+            tl, tr = 1 + tc, t - tc
+            bias = jnp.zeros((tl, tl + tr), jnp.float32)
+            out = model.astra_block_device(
+                jnp.asarray(locals_[d]), jnp.asarray(remote), bias,
+                *model.block_weights_list(params["blocks"][li]),
+                n_heads=CFG.n_heads, use_pallas=False,
+            )
+            new.append(np.asarray(out))
+        locals_ = new
+    cls_stack = jnp.asarray(np.stack([l[0] for l in locals_]))
+    logits2 = model.head_graph(
+        cls_stack, params["ln_f"]["g"], params["ln_f"]["b"],
+        params["head"]["w"], params["head"]["b"],
+    )
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2), atol=2e-4, rtol=2e-4)
+
+
+def test_decoder_joint_equals_per_device(dec):
+    """Same equivalence for the causal decoder (contiguous partition)."""
+    params, cbs, ids = dec
+    logits, _ = model.astra_forward(params, cbs, ids, DCFG, ACFG)
+    n, t = ACFG.n_devices, DCFG.seq_len
+    tc = t // n
+    h_tok = np.asarray(params["embed"][ids] + params["pos"])
+    locals_ = [h_tok[d * tc : (d + 1) * tc] for d in range(n)]
+    for li in range(DCFG.n_layers):
+        content = np.concatenate(locals_, axis=0)
+        xhat = np.asarray(ref.ref_grouped_vq_roundtrip(jnp.asarray(content), cbs[li]))
+        new = []
+        for d in range(n):
+            remote = np.concatenate(
+                [xhat[dd * tc : (dd + 1) * tc] for dd in range(n) if dd != d]
+            ) if n > 1 else np.zeros((0, DCFG.d_model), np.float32)
+            # causal bias: local rows are positions d*tc..d*tc+tc-1; remote
+            # columns are ordered by device then position.
+            tl, tr = tc, t - tc
+            bias = np.zeros((tl, tl + tr), np.float32)
+            for qi in range(tl):
+                qpos = d * tc + qi
+                for kj in range(tl):
+                    if d * tc + kj > qpos:
+                        bias[qi, kj] = model.NEG
+                col = tl
+                for dd in range(n):
+                    if dd == d:
+                        continue
+                    for kj in range(tc):
+                        if dd * tc + kj > qpos:
+                            bias[qi, col] = model.NEG
+                        col += 1
+            out = model.astra_block_device(
+                jnp.asarray(locals_[d]), jnp.asarray(remote), jnp.asarray(bias),
+                *model.block_weights_list(params["blocks"][li]),
+                n_heads=DCFG.n_heads, use_pallas=False,
+            )
+            new.append(np.asarray(out))
+        locals_ = new
+    h = jnp.asarray(np.concatenate(locals_, axis=0))
+    logits2 = model.lm_head_graph(
+        h, params["ln_f"]["g"], params["ln_f"]["b"],
+        params["head"]["w"], params["head"]["b"],
+    )
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2), atol=2e-4, rtol=2e-4)
+
+
+def test_single_cls_differs_from_distributed(enc):
+    params, cbs, x = enc
+    d_logits, _ = model.astra_forward(params, cbs, x, CFG, ACFG)
+    s_logits = model.astra_forward_single_cls(params, cbs, x, CFG, ACFG)
+    assert s_logits.shape == d_logits.shape
+    assert not np.allclose(np.asarray(d_logits), np.asarray(s_logits))
+
+
+def test_astra_exact_when_single_device(enc):
+    """N=1 means no remote tokens: ASTRA must equal the reference model
+    (all attention full-precision, CLS pooling over one replica)."""
+    params, cbs, x = enc
+    acfg1 = model.AstraConfig(n_devices=1, groups=8, codebook_size=16)
+    logits, _ = model.astra_forward(params, cbs, x, CFG, acfg1)
+    want = model.reference_forward(params, x, CFG)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_decode_step_matches_full_forward(dec):
+    """Per-token decode_step over a causal sequence == baseline_block row."""
+    params, cbs, ids = dec
+    t, d, hh, dh = DCFG.seq_len, DCFG.d_model, DCFG.n_heads, DCFG.d_head
+    h = jnp.asarray(params["embed"][ids] + params["pos"])
+    pos = jnp.arange(t)
+    bias = jnp.where(pos[None, :] <= pos[:, None], 0.0, model.NEG).astype(jnp.float32)
+    blk = params["blocks"][0]
+    ws = model.block_weights_list(blk)
+    want = model.baseline_block(h, bias, *ws, n_heads=DCFG.n_heads, use_pallas=False)
+
+    s_max = t
+    k_cache = jnp.zeros((hh, s_max, dh))
+    v_cache = jnp.zeros((hh, s_max, dh))
+    outs = []
+    for i in range(t):
+        valid = (jnp.arange(s_max) < i).astype(jnp.float32)
+        o, k_new, v_new = model.decode_step_block(
+            h[i : i + 1], k_cache, v_cache, valid, *ws, n_heads=DCFG.n_heads
+        )
+        k_cache = k_cache.at[:, i : i + 1].set(k_new)
+        v_cache = v_cache.at[:, i : i + 1].set(v_new)
+        outs.append(np.asarray(o)[0])
+    np.testing.assert_allclose(np.stack(outs), np.asarray(want), atol=2e-4, rtol=2e-4)

@@ -1,0 +1,106 @@
+"""Codebook learning + NAVQ unit tests (compile/vq.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import vq as vqlib
+from compile.kernels import ref
+
+
+def _distortion(x, cb):
+    xh = ref.ref_grouped_vq_roundtrip(x, cb)
+    return float(jnp.mean(jnp.sum((x - xh) ** 2, axis=-1)))
+
+
+def test_kmeans_reduces_distortion():
+    key = jax.random.PRNGKey(0)
+    # clustered data: 8 genuine clusters in 16-d
+    centers = jax.random.normal(key, (8, 16)) * 3
+    assign = jax.random.randint(jax.random.fold_in(key, 1), (512,), 0, 8)
+    x = centers[assign] + 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (512, 16))
+    cb_rand = jax.random.normal(jax.random.fold_in(key, 3), (2, 8, 8))
+    cb_km = vqlib.kmeans_init(jax.random.fold_in(key, 4), x, g=2, k=8)
+    assert _distortion(x, cb_km) < 0.5 * _distortion(x, cb_rand)
+
+
+def test_kmeans_shapes():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 32))
+    cb = vqlib.kmeans_init(key, x, g=4, k=16)
+    assert cb.shape == (4, 16, 8)
+    assert bool(jnp.all(jnp.isfinite(cb)))
+
+
+def test_ema_update_moves_toward_data():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512, 8)) + 5.0  # data offset from origin
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 8))
+    counts = jnp.zeros((1, 4))
+    sums = jnp.zeros_like(cb)
+    d0 = _distortion(x, cb)
+    for _ in range(30):
+        cb, counts, sums = vqlib.ema_update(cb, counts, sums, x, decay=0.8)
+    assert _distortion(x, cb) < d0
+
+
+def test_straight_through_gradient_is_identity():
+    x = jnp.ones((4,)) * 2.0
+    x_hat = jnp.ones((4,)) * 7.0
+
+    def f(x):
+        return jnp.sum(vqlib.straight_through(x, x_hat) ** 2)
+
+    g = jax.grad(f)(x)
+    # d/dx sum(st(x)^2) with st(x) -> values of x_hat but grad flows as x
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(x_hat), atol=1e-6)
+
+
+def test_fit_residual_noise_stats():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4096, 4)) * jnp.array([1.0, 2.0, 3.0, 4.0]) + 1.5
+    x_hat = jnp.zeros_like(x)
+    mu, sigma = vqlib.fit_residual_noise(x, x_hat)
+    np.testing.assert_allclose(np.asarray(mu), [1.5] * 4, atol=0.2)
+    np.testing.assert_allclose(np.asarray(sigma), [1, 2, 3, 4], atol=0.25)
+
+
+def test_navq_noise_scales_with_lambda():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 16))
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (2, 4, 8))
+    x_hat = ref.ref_grouped_vq_roundtrip(x, cb)
+    _, _, commit = vqlib.navq(jax.random.fold_in(key, 2), x, cb, 1.0)
+    assert commit > 0
+    devs = []
+    for lam in [0.0, 0.5, 1.0]:
+        x_tilde, _, _ = vqlib.navq(jax.random.fold_in(key, 3), x, cb, lam)
+        devs.append(float(jnp.mean(jnp.abs(x_tilde - x_hat))))
+    assert devs[0] < 1e-6  # lam=0 -> deterministic quantized values
+    assert devs[0] < devs[1] < devs[2]
+
+
+def test_navq_wasserstein_improvement():
+    """Empirical check of Thm 3.1: noise-augmented embeddings are closer in
+    distribution (per-dim 1-D W2 on mean/std) to X than raw quantized ones."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2048, 8)) * 1.3 + 0.4
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 8)) * 0.3
+    x_hat = ref.ref_grouped_vq_roundtrip(x, cb)
+    x_tilde, _, _ = vqlib.navq(jax.random.fold_in(key, 2), x, cb, 1.0)
+
+    def gauss_w2(a, b):
+        # per-dim Gaussian W2^2 = (mu_a-mu_b)^2 + (sd_a-sd_b)^2
+        return float(
+            jnp.sum((jnp.mean(a, 0) - jnp.mean(b, 0)) ** 2)
+            + jnp.sum((jnp.std(a, 0) - jnp.std(b, 0)) ** 2)
+        )
+
+    assert gauss_w2(x, x_tilde) < gauss_w2(x, x_hat)
+
+
+def test_codebook_utilization():
+    idx = jnp.array([[0, 1], [0, 1], [2, 3]], jnp.int32)
+    u = vqlib.codebook_utilization(idx, k=8)
+    assert abs(float(u) - 4 / 8) < 1e-6

@@ -1,0 +1,41 @@
+//! Communication substrate benchmarks: message construction, link
+//! transfer-time computation, trace integration, loss modeling.
+
+use astra::comm::link::{LinkSpec, SimLink};
+use astra::comm::message::Message;
+use astra::comm::trace::BandwidthTrace;
+use astra::tensor::Tensor;
+use astra::util::bench::{black_box, header, Bench};
+use astra::util::rng::Rng;
+
+fn main() {
+    header();
+    let mut b = Bench::new("comm");
+    let mut rng = Rng::new(0);
+
+    let idx: Vec<u32> = (0..256 * 16).map(|_| rng.below(1024) as u32).collect();
+    b.run("vq_message_build_256tok_g16", || {
+        black_box(Message::vq(0, 0, &idx, 256, 16, 10).unwrap())
+    });
+    let mut x = Tensor::zeros(&[256, 768]);
+    rng.fill_normal(&mut x.data);
+    b.run("dense_message_build_256x768", || {
+        black_box(Message::dense(0, 0, &x).unwrap())
+    });
+
+    let link = SimLink::new(LinkSpec::ideal(100.0), 1);
+    b.run("link_send_clean_64KiB", || black_box(link.send(0.0, 65536)));
+    let lossy = SimLink::new(LinkSpec::ideal(100.0).with_loss(0.05, true), 2);
+    b.run("link_send_lossy_64KiB", || black_box(lossy.send(0.0, 65536)));
+
+    let mut trng = Rng::new(7);
+    let trace = BandwidthTrace::markovian(&mut trng, 20.0, 100.0, 9, 1.0, 600.0);
+    b.run("trace_transfer_100Mbit", || {
+        black_box(trace.transfer_time(123.4, 100e6))
+    });
+    b.run("trace_markovian_600s_build", || {
+        let mut r = Rng::new(9);
+        black_box(BandwidthTrace::markovian(&mut r, 20.0, 100.0, 9, 1.0, 600.0))
+    });
+    b.finish();
+}

@@ -1,0 +1,50 @@
+//! Coordinator benchmarks on the live artifacts (native backend): prefill
+//! end-to-end, per-layer block compute, partition/bias construction.
+//! Requires `make artifacts`; skips the live parts otherwise.
+
+use std::path::Path;
+
+use astra::config::RunConfig;
+use astra::coordinator::partition::{decoder_bias, encoder_bias};
+use astra::coordinator::{Cluster, TokenPartition};
+use astra::model::native;
+use astra::tensor::Tensor;
+use astra::util::bench::{black_box, header, Bench};
+use astra::util::rng::Rng;
+
+fn main() {
+    header();
+    let mut b = Bench::new("coordinator");
+    let mut rng = Rng::new(0);
+
+    if Path::new("artifacts/manifest.json").exists() {
+        let cluster = Cluster::load("artifacts".as_ref(), RunConfig::default(), false).unwrap();
+        let meta = cluster.artifact.meta.clone();
+        let mut x = Tensor::zeros(&[meta.seq_len, meta.patch_dim]);
+        rng.fill_normal(&mut x.data);
+        b.run("prefill_native_e2e", || {
+            black_box(cluster.prefill(&x).unwrap().report.latency_s)
+        });
+        b.run("prefill_single_device", || {
+            black_box(cluster.prefill_single_device(&x).unwrap().1)
+        });
+    } else {
+        eprintln!("(artifacts missing; skipping live prefill benches)");
+    }
+
+    // native block at paper-ish tile (one device's share of 12L/768D)
+    let d = 768;
+    let blk = native::BlockWeights::random(&mut rng, d, 3072);
+    let mut local = Tensor::zeros(&[256, d]);
+    let mut remote = Tensor::zeros(&[768, d]);
+    rng.fill_normal(&mut local.data);
+    rng.fill_normal(&mut remote.data);
+    b.run("native_astra_block_256x768", || {
+        black_box(native::astra_block(&local, &remote, None, &blk, 12).unwrap())
+    });
+
+    let part = TokenPartition::even(1024, 4).unwrap();
+    b.run("decoder_bias_1024_4dev", || black_box(decoder_bias(&part, 2)));
+    b.run("encoder_bias_257x1025", || black_box(encoder_bias(257, 768)));
+    b.finish();
+}

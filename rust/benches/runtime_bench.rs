@@ -1,0 +1,64 @@
+//! PJRT runtime benchmarks: executor dispatch overhead vs native compute —
+//! the L3 §Perf accounting of where a prefill's time goes.
+//! Requires `make artifacts`; exits quietly otherwise.
+
+use std::path::Path;
+
+use astra::runtime::{Artifact, ModelRuntime};
+use astra::tensor::Tensor;
+use astra::util::bench::{black_box, header, Bench};
+use astra::util::rng::Rng;
+
+fn main() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("(artifacts missing; skipping runtime benches)");
+        return;
+    }
+    header();
+    let mut b = Bench::new("runtime");
+    let artifact = Artifact::load("artifacts".as_ref()).unwrap();
+    let meta = artifact.meta.clone();
+    let runtime = match ModelRuntime::load(artifact) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("(PJRT unavailable: {e})");
+            return;
+        }
+    };
+    let mut rng = Rng::new(0);
+    let n = meta.n_devices;
+    let tc = meta.seq_len / n;
+    let tl = tc + 1;
+    let tr = meta.seq_len - tc;
+
+    let mk = |rng: &mut Rng, r: usize, c: usize| {
+        let mut t = Tensor::zeros(&[r, c]);
+        rng.fill_normal(&mut t.data);
+        t
+    };
+    let h_local = mk(&mut rng, tl, meta.d_model);
+    let x_hat = mk(&mut rng, tr, meta.d_model);
+    let bias = Tensor::zeros(&[tl, tl + tr]);
+
+    let block = runtime.executor_for_layer("astra_block", 0).unwrap();
+    b.run("pjrt_astra_block", || {
+        black_box(block.run(&[&h_local, &x_hat, &bias]).unwrap())
+    });
+
+    let content = mk(&mut rng, tc, meta.d_model);
+    let enc = runtime.executor_for_layer("vq_encode", 0).unwrap();
+    b.run("pjrt_vq_encode", || black_box(enc.run(&[&content]).unwrap()));
+
+    // native comparison at the same shape
+    let art = runtime.artifact.clone();
+    let nb = art.native_block(0).unwrap();
+    b.run("native_astra_block_same_shape", || {
+        black_box(
+            astra::model::native::astra_block(&h_local, &x_hat, None, &nb, meta.n_heads).unwrap(),
+        )
+    });
+    b.run("native_vq_encode_same_shape", || {
+        black_box(art.codebooks[0].encode(&content).unwrap())
+    });
+    b.finish();
+}

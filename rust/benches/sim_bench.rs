@@ -1,0 +1,63 @@
+//! Simulator benchmarks: full paper-figure sweeps must be interactive
+//! (Fig-1 grid target < 2 s; see DESIGN.md §Perf).
+
+use astra::comm::trace::BandwidthTrace;
+use astra::model::shape::{TransformerShape, VqSetting};
+use astra::parallel::strategies::{figure1_strategies, Strategy, StrategyKind};
+use astra::server::engine::ServeEngine;
+use astra::server::Request;
+use astra::sim::engine::Engine;
+use astra::sim::latency::{evaluate, evaluate_on_trace, SimParams};
+use astra::util::bench::{black_box, header, Bench};
+use astra::util::rng::Rng;
+
+fn main() {
+    header();
+    let mut b = Bench::new("sim");
+    let params = SimParams::paper_encoder();
+
+    b.run("fig1_full_grid", || {
+        let mut acc = 0.0;
+        for t in [256usize, 1024, 4096] {
+            let shape = TransformerShape::paper_encoder(t);
+            for s in figure1_strategies(4) {
+                for bw in [10.0, 20.0, 50.0, 100.0, 200.0, 500.0] {
+                    acc += evaluate(&s.schedule(&shape), &params, bw).total();
+                }
+            }
+        }
+        black_box(acc)
+    });
+
+    let shape = TransformerShape::paper_encoder(1024);
+    let sched = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4)
+        .schedule(&shape);
+    let mut rng = Rng::new(3);
+    let trace = BandwidthTrace::markovian(&mut rng, 20.0, 100.0, 9, 1.0, 600.0);
+    b.run("schedule_on_trace", || {
+        black_box(evaluate_on_trace(&sched, &params, &trace, 211.0))
+    });
+
+    b.run("serve_600s_closed_loop", || {
+        let reqs: Vec<Request> = (0..50_000)
+            .map(|i| Request { id: i, arrival_s: 0.0, tokens: 1024 })
+            .collect();
+        let mut engine = ServeEngine::new(
+            shape,
+            Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+            params.clone(),
+            trace.clone(),
+        );
+        black_box(engine.serve_stream(reqs, 600.0).completed)
+    });
+
+    b.run("event_engine_100k", || {
+        let mut e = Engine::new();
+        for i in 0..100_000u64 {
+            e.at(i as f64 * 0.001, |_| {});
+        }
+        e.run();
+        black_box(e.processed())
+    });
+    b.finish();
+}

@@ -1,0 +1,45 @@
+//! VQ hot-path benchmarks: grouped encode (distance scan), decode
+//! (gather), bit packing/unpacking at paper-relevant shapes.
+
+use astra::tensor::Tensor;
+use astra::util::bench::{black_box, header, Bench};
+use astra::util::rng::Rng;
+use astra::vq::{pack_indices, unpack_indices, Codebook};
+
+fn main() {
+    header();
+    let mut b = Bench::new("vq");
+    let mut rng = Rng::new(0);
+
+    // paper setting scaled: D=768, K=1024, chunk of 256 tokens
+    for (g, k, d, t) in [
+        (1usize, 1024usize, 768usize, 256usize),
+        (16, 1024, 768, 256),
+        (32, 1024, 768, 256),
+        (16, 64, 128, 16),
+    ] {
+        let dg = d / g;
+        let mut data = vec![0.0f32; g * k * dg];
+        rng.fill_normal(&mut data);
+        let cb = Codebook::new(g, k, dg, data).unwrap();
+        let mut x = Tensor::zeros(&[t, d]);
+        rng.fill_normal(&mut x.data);
+        let idx = cb.encode(&x).unwrap();
+
+        b.run(&format!("encode_g{g}_k{k}_d{d}_t{t}"), || {
+            black_box(cb.encode(&x).unwrap())
+        });
+        b.run(&format!("decode_g{g}_k{k}_d{d}_t{t}"), || {
+            black_box(cb.decode(&idx, t).unwrap())
+        });
+    }
+
+    // bit packing at 10 bits (K=1024)
+    let idx: Vec<u32> = (0..256 * 16).map(|i| (i as u32 * 37) % 1024).collect();
+    let packed = pack_indices(&idx, 10).unwrap();
+    b.run("pack_4096x10b", || black_box(pack_indices(&idx, 10).unwrap()));
+    b.run("unpack_4096x10b", || {
+        black_box(unpack_indices(&packed, idx.len(), 10).unwrap())
+    });
+    b.finish();
+}

@@ -1,0 +1,118 @@
+//! Collective communication cost primitives.
+//!
+//! The latency model follows the paper's measurement setting (DESIGN.md §2):
+//! point-to-point transfers between distinct pairs proceed in parallel
+//! ("parallel links"); a collective is a sequence of stages, each paying
+//! the bottleneck link's bits/bandwidth plus one sync latency.
+//!
+//! Costs are expressed as (bits on the bottleneck link, number of latency
+//! stages); the simulator turns them into seconds against a (possibly
+//! time-varying) bandwidth.
+
+/// One communication step of a schedule: the bottleneck link carries
+/// `bits`; `stages` sync latencies are paid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommCost {
+    pub bits: f64,
+    pub stages: usize,
+}
+
+impl CommCost {
+    pub const ZERO: CommCost = CommCost { bits: 0.0, stages: 0 };
+
+    pub fn plus(self, other: CommCost) -> CommCost {
+        CommCost { bits: self.bits + other.bits, stages: self.stages + other.stages }
+    }
+
+    /// Seconds under a static bandwidth (Mbps) and per-stage latency.
+    pub fn seconds(&self, bandwidth_mbps: f64, stage_latency_s: f64) -> f64 {
+        self.bits / (bandwidth_mbps * 1e6) + self.stages as f64 * stage_latency_s
+    }
+}
+
+/// Ring all-gather of a tensor of `total_bits` sharded over `n` devices:
+/// each device ends with the full tensor. Bottleneck link carries
+/// (n-1)/n * total, over n-1 pipelined stages.
+pub fn allgather(total_bits: f64, n: usize) -> CommCost {
+    if n <= 1 {
+        return CommCost::ZERO;
+    }
+    CommCost { bits: total_bits * (n as f64 - 1.0) / n as f64, stages: n - 1 }
+}
+
+/// Ring all-reduce (reduce-scatter + all-gather) of a replicated tensor of
+/// `total_bits`: 2*(n-1)/n * total per link, 2*(n-1) stages.
+pub fn allreduce(total_bits: f64, n: usize) -> CommCost {
+    if n <= 1 {
+        return CommCost::ZERO;
+    }
+    CommCost { bits: 2.0 * total_bits * (n as f64 - 1.0) / n as f64, stages: 2 * (n - 1) }
+}
+
+/// ASTRA's code exchange: every device multicasts its local tokens' VQ
+/// codes (`chunk_bits`) to all peers; transfers are pairwise-parallel so
+/// the bottleneck carries one chunk. One stage.
+pub fn code_multicast(chunk_bits: f64, n: usize) -> CommCost {
+    if n <= 1 {
+        return CommCost::ZERO;
+    }
+    CommCost { bits: chunk_bits, stages: 1 }
+}
+
+/// Unicast all-to-all variant (no multicast offload): the sender's NIC
+/// serializes n-1 copies of its chunk. Used for the ablation comparing
+/// multicast-capable vs plain-TCP deployments.
+pub fn code_unicast_fanout(chunk_bits: f64, n: usize) -> CommCost {
+    if n <= 1 {
+        return CommCost::ZERO;
+    }
+    CommCost { bits: chunk_bits * (n as f64 - 1.0), stages: 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_device_is_free() {
+        assert_eq!(allgather(1e6, 1), CommCost::ZERO);
+        assert_eq!(allreduce(1e6, 1), CommCost::ZERO);
+        assert_eq!(code_multicast(1e6, 1), CommCost::ZERO);
+    }
+
+    #[test]
+    fn ring_costs() {
+        let ag = allgather(100.0, 4);
+        assert!((ag.bits - 75.0).abs() < 1e-9);
+        assert_eq!(ag.stages, 3);
+        let ar = allreduce(100.0, 4);
+        assert!((ar.bits - 150.0).abs() < 1e-9);
+        assert_eq!(ar.stages, 6);
+    }
+
+    #[test]
+    fn allreduce_is_twice_allgather() {
+        for n in [2, 4, 8] {
+            let ag = allgather(1e6, n);
+            let ar = allreduce(1e6, n);
+            assert!((ar.bits - 2.0 * ag.bits).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn seconds_composition() {
+        let c = CommCost { bits: 10e6, stages: 2 };
+        // 10 Mbit at 10 Mbps = 1 s, + 2 * 5 ms
+        assert!((c.seconds(10.0, 0.005) - 1.01).abs() < 1e-9);
+        let sum = c.plus(CommCost { bits: 5e6, stages: 1 });
+        assert_eq!(sum.stages, 3);
+        assert!((sum.bits - 15e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unicast_scales_with_peers() {
+        let m = code_multicast(1e6, 4);
+        let u = code_unicast_fanout(1e6, 4);
+        assert!((u.bits / m.bits - 3.0).abs() < 1e-9);
+    }
+}

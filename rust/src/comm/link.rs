@@ -1,0 +1,217 @@
+//! Simulated point-to-point link: bandwidth (static or trace), propagation
+//! latency, Bernoulli packet loss with optional retransmission.
+//!
+//! Used two ways:
+//!  * by the live threaded cluster ([`crate::coordinator`]): `send` sleeps
+//!    for the modeled transfer time before the payload is delivered, so
+//!    wall-clock latency of the end-to-end examples includes network time;
+//!  * by the discrete-event simulator ([`crate::sim`]): `transfer_time`
+//!    computes durations without sleeping.
+
+use std::sync::Mutex;
+
+use super::trace::BandwidthTrace;
+use crate::util::rng::Rng;
+
+/// Static description of a link.
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    pub trace: BandwidthTrace,
+    /// one-way propagation + protocol latency per message (seconds)
+    pub latency_s: f64,
+    /// Bernoulli per-packet loss probability
+    pub loss_rate: f64,
+    /// MTU for loss accounting (bytes per packet)
+    pub mtu: usize,
+    /// if true, lost packets are retransmitted (reliable link); otherwise
+    /// they are simply dropped from the payload (paper Table 11 setting)
+    pub retransmit: bool,
+}
+
+impl LinkSpec {
+    pub fn ideal(mbps: f64) -> LinkSpec {
+        LinkSpec {
+            trace: BandwidthTrace::constant(mbps, 1e9),
+            latency_s: 0.0005,
+            loss_rate: 0.0,
+            mtu: 1500,
+            retransmit: true,
+        }
+    }
+
+    pub fn with_latency(mut self, s: f64) -> LinkSpec {
+        self.latency_s = s;
+        self
+    }
+
+    pub fn with_loss(mut self, p: f64, retransmit: bool) -> LinkSpec {
+        self.loss_rate = p;
+        self.retransmit = retransmit;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: BandwidthTrace) -> LinkSpec {
+        self.trace = trace;
+        self
+    }
+}
+
+/// Outcome of pushing a payload through a link.
+#[derive(Debug, Clone)]
+pub struct Delivery {
+    /// total modeled time from send start to full delivery (seconds)
+    pub elapsed_s: f64,
+    /// per-packet delivered flags (false = dropped, only when !retransmit)
+    pub delivered: Vec<bool>,
+    /// number of retransmitted packets
+    pub retransmissions: usize,
+}
+
+/// A simulated link with its own RNG stream (loss) and a running clock
+/// offset for trace lookups.
+#[derive(Debug)]
+pub struct SimLink {
+    pub spec: LinkSpec,
+    rng: Mutex<Rng>,
+}
+
+impl SimLink {
+    pub fn new(spec: LinkSpec, seed: u64) -> SimLink {
+        SimLink { spec, rng: Mutex::new(Rng::new(seed)) }
+    }
+
+    /// Pure transfer time of `bytes` starting at absolute time `t0`
+    /// (bandwidth + latency only; no loss).
+    pub fn transfer_time(&self, t0: f64, bytes: usize) -> f64 {
+        self.spec.latency_s + self.spec.trace.transfer_time(t0, bytes as f64 * 8.0)
+    }
+
+    /// Model a send of `bytes` at time `t0`, applying loss.
+    ///
+    /// With retransmission every packet eventually arrives (each lost copy
+    /// costs one extra packet transfer + latency). Without retransmission,
+    /// dropped packets are recorded in `delivered` and the receiver must
+    /// cope (for VQ payloads the coordinator substitutes stale codes).
+    pub fn send(&self, t0: f64, bytes: usize) -> Delivery {
+        let n_packets = bytes.div_ceil(self.spec.mtu).max(1);
+        let mut rng = self.rng.lock().unwrap();
+        let mut delivered = Vec::with_capacity(n_packets);
+        let mut extra_packets = 0usize;
+        for _ in 0..n_packets {
+            if self.spec.loss_rate > 0.0 && rng.chance(self.spec.loss_rate) {
+                if self.spec.retransmit {
+                    // geometric number of retries
+                    let mut tries = 1usize;
+                    while rng.chance(self.spec.loss_rate) {
+                        tries += 1;
+                        if tries > 64 {
+                            break;
+                        }
+                    }
+                    extra_packets += tries;
+                    delivered.push(true);
+                } else {
+                    delivered.push(false);
+                }
+            } else {
+                delivered.push(true);
+            }
+        }
+        let total_bytes = bytes + extra_packets * self.spec.mtu;
+        let elapsed =
+            self.spec.latency_s + self.spec.trace.transfer_time(t0, total_bytes as f64 * 8.0)
+                + extra_packets as f64 * self.spec.latency_s; // each retry pays RTT-ish
+        Delivery { elapsed_s: elapsed, delivered, retransmissions: extra_packets }
+    }
+}
+
+/// Full-mesh network of N devices. Links are "parallel" (the paper's cost
+/// model: concurrent point-to-point transfers do not contend — see
+/// DESIGN.md §Substitutions; a shared-medium mode divides bandwidth by the
+/// number of concurrent senders for Wi-Fi-style contention studies).
+#[derive(Debug)]
+pub struct Network {
+    pub n: usize,
+    links: Vec<SimLink>, // dense [n*n], diagonal unused
+    pub shared_medium: bool,
+}
+
+impl Network {
+    pub fn full_mesh(n: usize, spec: &LinkSpec, seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        let links = (0..n * n)
+            .map(|i| SimLink::new(spec.clone(), rng.fork(i as u64).next_u64()))
+            .collect();
+        Network { n, links, shared_medium: false }
+    }
+
+    pub fn link(&self, from: usize, to: usize) -> &SimLink {
+        assert!(from != to, "no self-link");
+        &self.links[from * self.n + to]
+    }
+
+    /// Effective per-link bandwidth divisor under concurrent senders.
+    pub fn contention_factor(&self, concurrent_senders: usize) -> f64 {
+        if self.shared_medium {
+            concurrent_senders.max(1) as f64
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_basics() {
+        let l = SimLink::new(LinkSpec::ideal(8.0), 1); // 8 Mbps = 1 MB/s
+        let t = l.transfer_time(0.0, 1_000_000);
+        assert!((t - (1.0 + 0.0005)).abs() < 1e-6, "{t}");
+    }
+
+    #[test]
+    fn lossless_send_delivers_all() {
+        let l = SimLink::new(LinkSpec::ideal(100.0), 2);
+        let d = l.send(0.0, 15_000);
+        assert_eq!(d.delivered.len(), 10);
+        assert!(d.delivered.iter().all(|&x| x));
+        assert_eq!(d.retransmissions, 0);
+    }
+
+    #[test]
+    fn lossy_no_retransmit_drops_about_p() {
+        let l = SimLink::new(LinkSpec::ideal(100.0).with_loss(0.05, false), 3);
+        let mut dropped = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let d = l.send(0.0, 150_000); // 100 packets
+            dropped += d.delivered.iter().filter(|&&x| !x).count();
+            total += d.delivered.len();
+        }
+        let rate = dropped as f64 / total as f64;
+        assert!((rate - 0.05).abs() < 0.01, "drop rate {rate}");
+    }
+
+    #[test]
+    fn lossy_retransmit_costs_time() {
+        let spec = LinkSpec::ideal(10.0);
+        let clean = SimLink::new(spec.clone(), 4);
+        let lossy = SimLink::new(spec.with_loss(0.2, true), 4);
+        let bytes = 1_500_000; // 1000 packets
+        let t_clean = clean.send(0.0, bytes).elapsed_s;
+        let d = lossy.send(0.0, bytes);
+        assert!(d.retransmissions > 100, "{}", d.retransmissions);
+        assert!(d.elapsed_s > t_clean);
+        assert!(d.delivered.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn full_mesh_links_independent_rngs() {
+        let net = Network::full_mesh(3, &LinkSpec::ideal(50.0).with_loss(0.5, false), 5);
+        let a = net.link(0, 1).send(0.0, 150_000);
+        let b = net.link(1, 2).send(0.0, 150_000);
+        assert_ne!(a.delivered, b.delivered); // overwhelmingly likely
+    }
+}

@@ -1,0 +1,158 @@
+//! Wire format for inter-device messages.
+//!
+//! Two payload kinds cross the network during prefill:
+//!  * `VqCodes` — bit-packed grouped-VQ indices (ASTRA path);
+//!  * `Dense`   — raw little-endian f32 embeddings (baseline paths).
+//!
+//! A fixed 16-byte header carries (kind, layer, sender, token count) so a
+//! receiver can reassemble without out-of-band state. Header overhead is
+//! accounted in every latency number (the paper's bits/token figures are
+//! payload-only; `Message::payload_bits` reports that number, while
+//! `wire_bytes` is what the link actually carries).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::vq::{pack_indices, unpack_indices};
+
+pub const HEADER_BYTES: usize = 16;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Grouped VQ codes for `tokens` tokens, `groups` indices each, packed
+    /// at `bits` bits per index.
+    VqCodes { tokens: usize, groups: usize, bits: usize, packed: Vec<u8> },
+    /// Dense f32 token embeddings [tokens, d].
+    Dense { tokens: usize, d: usize, bytes: Vec<u8> },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub layer: u16,
+    pub sender: u16,
+    pub payload: Payload,
+}
+
+impl Message {
+    pub fn vq(layer: usize, sender: usize, indices: &[u32], tokens: usize, groups: usize, bits: usize) -> Result<Message> {
+        if indices.len() != tokens * groups {
+            bail!("vq message: {} indices != {tokens} x {groups}", indices.len());
+        }
+        Ok(Message {
+            layer: layer as u16,
+            sender: sender as u16,
+            payload: Payload::VqCodes {
+                tokens,
+                groups,
+                bits,
+                packed: pack_indices(indices, bits)?,
+            },
+        })
+    }
+
+    pub fn dense(layer: usize, sender: usize, x: &Tensor) -> Result<Message> {
+        let (tokens, d) = x.dims2()?;
+        let mut bytes = Vec::with_capacity(x.data.len() * 4);
+        for v in &x.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Message {
+            layer: layer as u16,
+            sender: sender as u16,
+            payload: Payload::Dense { tokens, d, bytes },
+        })
+    }
+
+    /// Decode a VQ payload back to indices.
+    pub fn vq_indices(&self) -> Result<Vec<u32>> {
+        match &self.payload {
+            Payload::VqCodes { tokens, groups, bits, packed } => {
+                unpack_indices(packed, tokens * groups, *bits)
+            }
+            _ => bail!("not a VQ message"),
+        }
+    }
+
+    /// Decode a dense payload back to a tensor.
+    pub fn dense_tensor(&self) -> Result<Tensor> {
+        match &self.payload {
+            Payload::Dense { tokens, d, bytes } => {
+                let mut data = Vec::with_capacity(tokens * d);
+                for c in bytes.chunks_exact(4) {
+                    data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+                Tensor::from_vec(&[*tokens, *d], data)
+            }
+            _ => bail!("not a dense message"),
+        }
+    }
+
+    /// Payload-only bits (the paper's accounting unit).
+    pub fn payload_bits(&self) -> usize {
+        match &self.payload {
+            Payload::VqCodes { tokens, groups, bits, .. } => tokens * groups * bits,
+            Payload::Dense { tokens, d, .. } => tokens * d * 32,
+        }
+    }
+
+    /// Bytes the link actually carries (packed payload + header).
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_BYTES
+            + match &self.payload {
+                Payload::VqCodes { packed, .. } => packed.len(),
+                Payload::Dense { bytes, .. } => bytes.len(),
+            }
+    }
+
+    /// Per transmitted token payload bits.
+    pub fn bits_per_token(&self) -> f64 {
+        let tokens = match &self.payload {
+            Payload::VqCodes { tokens, .. } | Payload::Dense { tokens, .. } => *tokens,
+        };
+        self.payload_bits() as f64 / tokens.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vq::packed_len_bytes;
+
+    #[test]
+    fn vq_roundtrip() {
+        let idx: Vec<u32> = (0..16 * 8).map(|i| (i * 37) % 1024).collect();
+        let m = Message::vq(3, 1, &idx, 16, 8, 10).unwrap();
+        assert_eq!(m.vq_indices().unwrap(), idx);
+        assert_eq!(m.payload_bits(), 16 * 8 * 10);
+        assert_eq!(m.wire_bytes(), HEADER_BYTES + packed_len_bytes(16 * 8, 10));
+        assert_eq!(m.bits_per_token(), 80.0);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, -2.5, 3.25, 0.0, 1e-9, -1e9]).unwrap();
+        let m = Message::dense(0, 2, &x).unwrap();
+        assert_eq!(m.dense_tensor().unwrap(), x);
+        assert_eq!(m.payload_bits(), 2 * 3 * 32);
+        assert_eq!(m.bits_per_token(), 96.0);
+    }
+
+    #[test]
+    fn compression_vs_dense() {
+        // paper headline: 10-bit codes vs 768 f32 dims = 2457.6x
+        let t = 4;
+        let idx = vec![0u32; t];
+        let vq = Message::vq(0, 0, &idx, t, 1, 10).unwrap();
+        let dense = Message::dense(0, 0, &Tensor::zeros(&[t, 768])).unwrap();
+        let ratio = dense.payload_bits() as f64 / vq.payload_bits() as f64;
+        assert!((ratio - 2457.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn kind_mismatch_errors() {
+        let m = Message::dense(0, 0, &Tensor::zeros(&[1, 4])).unwrap();
+        assert!(m.vq_indices().is_err());
+        let v = Message::vq(0, 0, &[1, 2], 2, 1, 4).unwrap();
+        assert!(v.dense_tensor().is_err());
+    }
+}

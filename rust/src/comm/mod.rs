@@ -1,0 +1,18 @@
+//! Communication substrate: simulated links, bandwidth traces, collectives,
+//! and the message wire format.
+//!
+//! The paper deploys on laptops over bandwidth-capped Wi-Fi; here every
+//! inter-device byte flows through [`link::SimLink`]s instead, with
+//! configurable bandwidth (static or a Markovian time-varying trace),
+//! propagation latency, and Bernoulli packet loss. Messages carry *real*
+//! payloads (bit-packed VQ indices or raw f32 embeddings), so measured
+//! message sizes are the paper's bits-per-token numbers, not estimates.
+
+pub mod collective;
+pub mod link;
+pub mod message;
+pub mod trace;
+
+pub use link::{LinkSpec, SimLink};
+pub use message::Message;
+pub use trace::BandwidthTrace;

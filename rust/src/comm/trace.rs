@@ -1,0 +1,148 @@
+//! Time-varying bandwidth traces.
+//!
+//! `BandwidthTrace::markovian` reproduces the paper's Appendix E setup: a
+//! Markov chain over bandwidth states in [lo, hi] Mbps with transitions
+//! biased toward nearby states (temporal correlation), following the
+//! Pensieve trace generator (Mao et al., 2017). Traces are piecewise
+//! constant; `transfer_time` integrates bits over the trace.
+
+use crate::util::rng::Rng;
+
+/// Piecewise-constant bandwidth over time (Mbps per slot).
+#[derive(Debug, Clone)]
+pub struct BandwidthTrace {
+    /// slot duration in seconds
+    pub slot_s: f64,
+    /// bandwidth per slot, Mbps
+    pub mbps: Vec<f64>,
+}
+
+impl BandwidthTrace {
+    pub fn constant(mbps: f64, horizon_s: f64) -> Self {
+        BandwidthTrace { slot_s: horizon_s.max(1.0), mbps: vec![mbps] }
+    }
+
+    /// Markovian trace: `states` evenly spaced bandwidth levels in
+    /// [lo_mbps, hi_mbps]; each slot transitions to a nearby state with
+    /// geometric preference (stay 50%, ±1 30%, ±2 14%, ...).
+    pub fn markovian(
+        rng: &mut Rng,
+        lo_mbps: f64,
+        hi_mbps: f64,
+        states: usize,
+        slot_s: f64,
+        horizon_s: f64,
+    ) -> Self {
+        assert!(states >= 2);
+        let levels: Vec<f64> = (0..states)
+            .map(|i| lo_mbps + (hi_mbps - lo_mbps) * i as f64 / (states - 1) as f64)
+            .collect();
+        let slots = (horizon_s / slot_s).ceil() as usize;
+        let mut state = rng.below(states);
+        let mut mbps = Vec::with_capacity(slots);
+        for _ in 0..slots {
+            mbps.push(levels[state]);
+            // biased random walk: step size geometric, direction uniform
+            let r = rng.f64();
+            let step = if r < 0.5 {
+                0
+            } else if r < 0.8 {
+                1
+            } else if r < 0.94 {
+                2
+            } else {
+                3
+            };
+            if step > 0 {
+                let dir_up = rng.chance(0.5);
+                let s = state as isize + if dir_up { step } else { -step };
+                state = s.clamp(0, states as isize - 1) as usize;
+            }
+        }
+        BandwidthTrace { slot_s, mbps }
+    }
+
+    /// Bandwidth at absolute time t (clamped to the last slot).
+    pub fn at(&self, t: f64) -> f64 {
+        if self.mbps.is_empty() {
+            return 0.0;
+        }
+        let idx = ((t / self.slot_s).floor() as usize).min(self.mbps.len() - 1);
+        self.mbps[idx]
+    }
+
+    /// Time to move `bits` starting at time `t0`, integrating the trace.
+    pub fn transfer_time(&self, t0: f64, bits: f64) -> f64 {
+        if bits <= 0.0 {
+            return 0.0;
+        }
+        let mut remaining = bits;
+        let mut t = t0;
+        loop {
+            let bw = self.at(t) * 1e6; // bits/s
+            let slot_end = ((t / self.slot_s).floor() + 1.0) * self.slot_s;
+            let span = slot_end - t;
+            let cap = bw * span;
+            if cap >= remaining || (t / self.slot_s) as usize >= self.mbps.len() {
+                // final (or clamped-last) slot: finish at current rate
+                return t - t0 + remaining / bw.max(1.0);
+            }
+            remaining -= cap;
+            t = slot_end;
+        }
+    }
+
+    pub fn horizon(&self) -> f64 {
+        self.slot_s * self.mbps.len() as f64
+    }
+
+    pub fn mean_mbps(&self) -> f64 {
+        self.mbps.iter().sum::<f64>() / self.mbps.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_trace() {
+        let tr = BandwidthTrace::constant(100.0, 600.0);
+        assert_eq!(tr.at(0.0), 100.0);
+        assert_eq!(tr.at(599.0), 100.0);
+        // 100 Mbit at 100 Mbps = 1 s
+        assert!((tr.transfer_time(0.0, 100e6) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markovian_in_range_and_correlated() {
+        let mut rng = Rng::new(42);
+        let tr = BandwidthTrace::markovian(&mut rng, 20.0, 100.0, 9, 1.0, 600.0);
+        assert_eq!(tr.mbps.len(), 600);
+        assert!(tr.mbps.iter().all(|&b| (20.0..=100.0).contains(&b)));
+        // temporal correlation: mean |diff| much smaller than range
+        let diffs: f64 = tr.mbps.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f64>()
+            / (tr.mbps.len() - 1) as f64;
+        assert!(diffs < 20.0, "mean step {diffs}");
+        // it does actually vary
+        assert!(tr.mbps.iter().any(|&b| b != tr.mbps[0]));
+    }
+
+    #[test]
+    fn transfer_spans_slots() {
+        // 2 slots: 10 Mbps then 90 Mbps, 1 s each.
+        let tr = BandwidthTrace { slot_s: 1.0, mbps: vec![10.0, 90.0] };
+        // 55 Mbit: 10 in slot 0 (1 s), 45 at 90 Mbps (0.5 s) = 1.5 s
+        assert!((tr.transfer_time(0.0, 55e6) - 1.5).abs() < 1e-9);
+        // starting mid-slot
+        assert!((tr.transfer_time(0.5, 5e6) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamps_past_horizon() {
+        let tr = BandwidthTrace { slot_s: 1.0, mbps: vec![10.0] };
+        // past horizon keeps last bandwidth
+        let t = tr.transfer_time(5.0, 20e6);
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+}

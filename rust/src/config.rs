@@ -1,0 +1,131 @@
+//! Typed configuration for the launcher (`astra` CLI) and examples.
+//!
+//! Config files are JSON (parsed by [`crate::util::json`]); every field has
+//! a default so a minimal file (or none) works. See `configs/` for the
+//! shipped presets.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::shape::{TransformerShape, VqSetting};
+use crate::util::json::Json;
+
+/// Cluster + network + strategy settings for a run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: String,
+    pub n_devices: usize,
+    pub bandwidth_mbps: f64,
+    pub latency_s: f64,
+    pub loss_rate: f64,
+    pub retransmit: bool,
+    /// heterogeneous token split (len n_devices, sums to seq_len); empty = even
+    pub token_split: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: "artifacts".into(),
+            n_devices: 4,
+            bandwidth_mbps: 100.0,
+            latency_s: 0.0005,
+            loss_rate: 0.0,
+            retransmit: true,
+            token_split: Vec::new(),
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        if let Some(v) = j.opt("artifacts_dir") {
+            c.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("n_devices") {
+            c.n_devices = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("bandwidth_mbps") {
+            c.bandwidth_mbps = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("latency_s") {
+            c.latency_s = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("loss_rate") {
+            c.loss_rate = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("retransmit") {
+            c.retransmit = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            c.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("token_split") {
+            c.token_split = v
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+        }
+        Ok(c)
+    }
+}
+
+/// Shape presets addressable from the CLI (`--model vit-base` etc.).
+pub fn shape_preset(name: &str, seq_len: usize) -> Result<TransformerShape> {
+    Ok(match name {
+        "vit-base" | "paper-encoder" => TransformerShape::vit_base(seq_len),
+        "gpt2-s" => TransformerShape::gpt2_small(seq_len),
+        "gpt2-m" => TransformerShape::gpt2_medium(seq_len),
+        "llama3-8b" => TransformerShape::llama3_8b(seq_len),
+        "tiny" => TransformerShape::tiny(seq_len),
+        other => anyhow::bail!("unknown model preset `{other}`"),
+    })
+}
+
+/// VQ presets: "g16k1024" style strings.
+pub fn vq_preset(s: &str) -> Result<VqSetting> {
+    let rest = s.strip_prefix('g').context("vq preset must look like g16k1024")?;
+    let (g, k) = rest.split_once('k').context("vq preset must look like g16k1024")?;
+    Ok(VqSetting::new(g.parse()?, k.parse()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let j = Json::parse(
+            r#"{"n_devices": 8, "bandwidth_mbps": 20.5, "token_split": [4, 4, 4, 4],
+                "loss_rate": 0.05, "retransmit": false}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.n_devices, 8);
+        assert_eq!(c.bandwidth_mbps, 20.5);
+        assert_eq!(c.token_split, vec![4, 4, 4, 4]);
+        assert!(!c.retransmit);
+        assert_eq!(c.seed, 42); // default
+    }
+
+    #[test]
+    fn presets() {
+        assert_eq!(shape_preset("vit-base", 1024).unwrap().d_model, 768);
+        assert_eq!(shape_preset("llama3-8b", 512).unwrap().n_layers, 32);
+        assert!(shape_preset("nope", 1).is_err());
+        let vq = vq_preset("g16k1024").unwrap();
+        assert_eq!((vq.groups, vq.codebook_size), (16, 1024));
+        assert!(vq_preset("16x1024").is_err());
+    }
+}

@@ -1,0 +1,504 @@
+//! The live multi-device cluster: N virtual devices, real numerics, modeled
+//! network, virtual-clock latency accounting.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::comm::link::{LinkSpec, Network};
+use crate::comm::message::Message;
+use crate::config::RunConfig;
+use crate::model::native;
+use crate::runtime::{Artifact, Executor, ModelRuntime};
+use crate::tensor::Tensor;
+
+use super::partition::{decoder_bias, encoder_bias, TokenPartition};
+
+/// Which engine executes block compute.
+pub enum ComputeBackend {
+    /// AOT PJRT executables (requires an even partition matching the
+    /// artifact shapes — the shapes were fixed at lowering time).
+    Pjrt(PjrtBank),
+    /// Pure-rust reference path (any partition; used for cross-checking
+    /// and heterogeneous splits).
+    Native,
+}
+
+/// Per-layer PJRT executors with layer weights pre-bound.
+pub struct PjrtBank {
+    pub runtime: Arc<ModelRuntime>,
+    pub astra_block: Vec<Executor>,
+    pub vq_encode: Vec<Executor>,
+    pub vq_decode: Vec<Executor>,
+    pub baseline_block: Vec<Executor>,
+    pub embed: Executor,
+    pub head: Executor,
+}
+
+/// Latency + communication accounting for one prefill.
+#[derive(Debug, Clone, Default)]
+pub struct PrefillReport {
+    /// end-to-end virtual latency (seconds) as an N-device deployment
+    pub latency_s: f64,
+    /// max over devices of summed compute segments
+    pub compute_s: f64,
+    /// latency_s - compute_s on the critical path device
+    pub comm_s: f64,
+    /// total VQ payload bits that crossed the network
+    pub payload_bits: f64,
+    /// payload bits / (transmitted tokens * layers): the paper's per-block
+    /// bits-per-token (multiply by layers for the table's total column)
+    pub bits_per_token_block: f64,
+    pub messages: usize,
+    /// packets dropped (loss without retransmission)
+    pub packets_dropped: usize,
+    pub fpar: f64,
+}
+
+/// One prefill's result.
+pub struct PrefillOutput {
+    pub logits: Tensor,
+    pub report: PrefillReport,
+    /// per-device final local rows (decoder decode-loop seed)
+    pub locals: Vec<Tensor>,
+}
+
+/// The simulated cluster.
+pub struct Cluster {
+    pub artifact: Arc<Artifact>,
+    pub backend: ComputeBackend,
+    pub native_blocks: Vec<native::BlockWeights>,
+    pub network: Network,
+    pub partition: TokenPartition,
+    pub config: RunConfig,
+}
+
+impl Cluster {
+    /// Load artifacts and build the cluster. `use_pjrt=false` skips PJRT
+    /// compilation (fast start; native numerics only).
+    pub fn load(dir: &Path, config: RunConfig, use_pjrt: bool) -> Result<Cluster> {
+        let artifact = Artifact::load(dir)?;
+        Self::from_artifact(artifact, config, use_pjrt)
+    }
+
+    pub fn from_artifact(artifact: Artifact, config: RunConfig, use_pjrt: bool) -> Result<Cluster> {
+        let meta = &artifact.meta;
+        let t = meta.seq_len;
+        let n = config.n_devices;
+        let partition = if config.token_split.is_empty() {
+            TokenPartition::even(t, n)?
+        } else {
+            if config.token_split.len() != n || config.token_split.iter().sum::<usize>() != t {
+                bail!("token_split must have {n} entries summing to {t}");
+            }
+            TokenPartition::explicit(config.token_split.clone())
+        };
+        let native_blocks = (0..meta.n_layers)
+            .map(|li| artifact.native_block(li))
+            .collect::<Result<Vec<_>>>()?;
+
+        let even_matches_artifact =
+            partition.sizes.iter().all(|&s| s == t / meta.n_devices) && n == meta.n_devices;
+        let backend = if use_pjrt {
+            if !even_matches_artifact {
+                bail!(
+                    "PJRT backend requires the even {}-device partition baked into the \
+                     artifacts; use the native backend for heterogeneous splits",
+                    meta.n_devices
+                );
+            }
+            let runtime = Arc::new(ModelRuntime::load(artifact)?);
+            let artifact = runtime.artifact.clone();
+            let bank = PjrtBank {
+                astra_block: runtime.layer_bank("astra_block")?,
+                vq_encode: runtime.layer_bank("vq_encode")?,
+                vq_decode: runtime.layer_bank("vq_decode")?,
+                baseline_block: runtime.layer_bank("baseline_block")?,
+                embed: runtime.executor_for_layer(
+                    if artifact.meta.causal { "embed_dec" } else { "embed_enc" }, 0)?,
+                head: runtime.executor_for_layer(
+                    if artifact.meta.causal { "lm_head" } else { "head" }, 0)?,
+                runtime: runtime.clone(),
+            };
+            return Ok(Cluster {
+                artifact,
+                backend: ComputeBackend::Pjrt(bank),
+                native_blocks,
+                network: Network::full_mesh(
+                    n,
+                    &link_spec(&config),
+                    config.seed,
+                ),
+                partition,
+                config,
+            });
+        } else {
+            ComputeBackend::Native
+        };
+        Ok(Cluster {
+            artifact: Arc::new(artifact),
+            backend,
+            native_blocks,
+            network: Network::full_mesh(n, &link_spec(&config), config.seed),
+            partition,
+            config,
+        })
+    }
+
+    fn meta(&self) -> &crate::runtime::artifact::ModelMeta {
+        &self.artifact.meta
+    }
+
+    /// Token embedding for the whole sequence (leader-side).
+    /// Encoder: x [T, patch_dim] -> [T, D]; decoder: x = one-hot ids.
+    pub fn embed(&self, x: &Tensor) -> Result<Tensor> {
+        let meta = self.meta();
+        if meta.causal {
+            // x: [T] token ids encoded as f32 in a [T,1] tensor
+            let (t, _) = x.dims2()?;
+            let embed = self.artifact.tensor("embed")?;
+            let pos = self.artifact.tensor("pos")?;
+            let d = meta.d_model;
+            let mut out = Tensor::zeros(&[t, d]);
+            for i in 0..t {
+                let id = x.data[i] as usize;
+                if id >= meta.vocab_size {
+                    bail!("token id {id} >= vocab {}", meta.vocab_size);
+                }
+                for j in 0..d {
+                    out.row_mut(i)[j] = embed.row(id)[j] + pos.row(i)[j];
+                }
+            }
+            Ok(out)
+        } else {
+            let w = self.artifact.tensor("embed.w")?;
+            let b = self.artifact.tensor("embed.b")?;
+            let pos = self.artifact.tensor("pos")?;
+            let mut h = crate::tensor::matmul(x, w)?;
+            crate::tensor::add_bias(&mut h, &b.data);
+            crate::tensor::add_inplace(&mut h, pos);
+            Ok(h)
+        }
+    }
+
+    /// Run one ASTRA prefill over the cluster.
+    ///
+    /// Encoder input: patches [T, patch_dim]; decoder input: ids [T, 1].
+    pub fn prefill(&self, x: &Tensor) -> Result<PrefillOutput> {
+        let meta = self.meta();
+        let n = self.partition.n_devices();
+        let t = meta.seq_len;
+        let use_cls = meta.use_cls && !meta.causal;
+        let bits_tok = self.artifact.codebooks[0].bits_per_token();
+        let code_bits = crate::model::shape::ceil_log2(meta.codebook_size);
+
+        // ---- embed (each device embeds its own chunk; time ∝ chunk) ----
+        let t0 = Instant::now();
+        let h_tok = self.embed(x)?;
+        let embed_time = t0.elapsed().as_secs_f64();
+
+        let cls = if use_cls { Some(self.artifact.tensor("cls")?.clone()) } else { None };
+        let mut locals: Vec<Tensor> = (0..n)
+            .map(|d| {
+                let chunk = h_tok.rows(self.partition.start(d), self.partition.sizes[d])?;
+                match &cls {
+                    Some(c) => Tensor::vcat(&[c, &chunk]),
+                    None => Ok(chunk),
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut clock = vec![0.0f64; n];
+        let mut compute = vec![0.0f64; n];
+        for d in 0..n {
+            let c = embed_time * self.partition.sizes[d] as f64 / t as f64;
+            clock[d] += c;
+            compute[d] += c;
+        }
+
+        let mut report = PrefillReport {
+            fpar: self.partition.fpar(),
+            bits_per_token_block: bits_tok as f64,
+            ..Default::default()
+        };
+        // previous layer's decoded remote rows per device (loss fallback)
+        let mut prev_xhat: Vec<Option<Tensor>> = vec![None; n];
+
+        for li in 0..meta.n_layers {
+            // ---- encode local content on each device ----
+            let mut msgs: Vec<Message> = Vec::with_capacity(n);
+            let mut enc_done = vec![0.0f64; n];
+            for d in 0..n {
+                let ncls = usize::from(use_cls);
+                let content = locals[d].rows(ncls, locals[d].shape[0] - ncls)?;
+                let tc = content.shape[0];
+                let t0 = Instant::now();
+                // §Perf iteration 2: the native VQ codec beats a PJRT
+                // dispatch 5x at serving shapes (87 µs vs 463 µs — see
+                // EXPERIMENTS.md), and its indices are bit-identical to the
+                // kernels', so the codec always runs native; PJRT carries
+                // the block compute.
+                let indices: Vec<u32> = self.artifact.codebooks[li].encode(&content)?;
+                let _ = tc;
+                let dt = t0.elapsed().as_secs_f64();
+                compute[d] += dt;
+                enc_done[d] = clock[d] + dt;
+                msgs.push(Message::vq(li, d, &indices, tc, meta.groups, code_bits)?);
+            }
+
+            // ---- exchange: multicast codes, max-merge arrival times ----
+            // parallel-links model: each sender's multicast completes in one
+            // chunk transfer; receiver d is ready when every peer's message
+            // has arrived and its own encode is done.
+            let mut ready = enc_done.clone();
+            // receiver -> (concatenated remote indices in sender order,
+            //              dropped row offsets within that concat)
+            let mut recv_idx: Vec<Vec<u32>> = vec![Vec::new(); n];
+            let mut recv_dropped: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for d in 0..n {
+                let mut row_base = 0usize;
+                for s in 0..n {
+                    if s == d {
+                        continue;
+                    }
+                    let m = &msgs[s];
+                    report.messages += 1;
+                    report.payload_bits += m.payload_bits() as f64;
+                    let link = self.network.link(s, d);
+                    let delivery = link.send(enc_done[s], m.wire_bytes());
+                    ready[d] = ready[d].max(enc_done[s] + delivery.elapsed_s);
+                    let tc = self.partition.sizes[s];
+                    for ti in dropped_tokens(
+                        &delivery.delivered, link.spec.mtu, tc, meta.groups, code_bits,
+                    ) {
+                        recv_dropped[d].push(row_base + ti);
+                    }
+                    report.packets_dropped +=
+                        delivery.delivered.iter().filter(|&&x| !x).count();
+                    recv_idx[d].extend(m.vq_indices()?);
+                    row_base += tc;
+                }
+            }
+
+            // ---- decode + MPA block per device ----
+            let mut new_locals = Vec::with_capacity(n);
+            for d in 0..n {
+                let tr = t - self.partition.sizes[d];
+                let t0 = Instant::now();
+                // native decode (gather) — same §Perf rationale as encode
+                let mut remote = self.artifact.codebooks[li].decode(&recv_idx[d], tr)?;
+                if !recv_dropped[d].is_empty() {
+                    substitute_stale(&mut remote, &recv_dropped[d], prev_xhat[d].as_ref());
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                compute[d] += dt;
+                ready[d] += dt;
+                prev_xhat[d] = Some(remote.clone());
+                let tl = locals[d].shape[0];
+                let tr = remote.shape[0];
+                let bias = if meta.causal {
+                    decoder_bias(&self.partition, d)
+                } else {
+                    encoder_bias(tl, tr)
+                };
+                let t0 = Instant::now();
+                let out = match &self.backend {
+                    ComputeBackend::Pjrt(bank) => bank.astra_block[li]
+                        .run(&[&locals[d], &remote, &bias])?
+                        .remove(0),
+                    ComputeBackend::Native => native::astra_block(
+                        &locals[d], &remote, Some(&bias), &self.native_blocks[li], meta.n_heads,
+                    )?,
+                };
+                let dt = t0.elapsed().as_secs_f64();
+                compute[d] += dt;
+                clock[d] = ready[d] + dt;
+                new_locals.push(out);
+            }
+            locals = new_locals;
+        }
+
+        // ---- aggregate + head ----
+        let (logits, head_time, head_dev) = if use_cls {
+            // CLS replicas travel to the leader (device 0): D f32 each
+            let mut ready = clock[0];
+            for d in 1..n {
+                let bytes = meta.d_model * 4 + crate::comm::message::HEADER_BYTES;
+                let arr = clock[d] + self.network.link(d, 0).send(clock[d], bytes).elapsed_s;
+                ready = ready.max(arr);
+            }
+            let cls_rows: Vec<Tensor> = locals
+                .iter()
+                .map(|l| l.rows(0, 1))
+                .collect::<Result<Vec<_>>>()?;
+            let refs: Vec<&Tensor> = cls_rows.iter().collect();
+            let stack = Tensor::vcat(&refs)?;
+            let t0 = Instant::now();
+            let logits = match &self.backend {
+                ComputeBackend::Pjrt(bank) => bank.head.run(&[&stack])?.remove(0),
+                ComputeBackend::Native => native::head(
+                    &stack,
+                    &self.artifact.tensor("ln_f.g")?.data,
+                    &self.artifact.tensor("ln_f.b")?.data,
+                    self.artifact.tensor("head.w")?,
+                    &self.artifact.tensor("head.b")?.data,
+                )?,
+            };
+            clock[0] = ready + t0.elapsed().as_secs_f64();
+            (logits, t0.elapsed().as_secs_f64(), 0usize)
+        } else {
+            // decoder: tail device computes the LM head over its local rows
+            let d = n - 1;
+            let t0 = Instant::now();
+            let logits = match &self.backend {
+                ComputeBackend::Pjrt(bank) => bank.head.run(&[&locals[d]])?.remove(0),
+                ComputeBackend::Native => native::lm_head(
+                    &locals[d],
+                    &self.artifact.tensor("ln_f.g")?.data,
+                    &self.artifact.tensor("ln_f.b")?.data,
+                    self.artifact.tensor("head.w")?,
+                    &self.artifact.tensor("head.b")?.data,
+                )?,
+            };
+            clock[d] = clock[d] + t0.elapsed().as_secs_f64();
+            (logits, t0.elapsed().as_secs_f64(), d)
+        };
+        compute[head_dev] += head_time;
+
+        report.latency_s = clock.iter().copied().fold(0.0, f64::max);
+        report.compute_s = compute.iter().copied().fold(0.0, f64::max);
+        report.comm_s = (report.latency_s - report.compute_s).max(0.0);
+        Ok(PrefillOutput { logits, report, locals })
+    }
+
+    /// Single-device baseline: full-precision blocks over the whole
+    /// sequence (the paper's "Original Model" row). Returns logits +
+    /// measured wall latency.
+    pub fn prefill_single_device(&self, x: &Tensor) -> Result<(Tensor, f64)> {
+        let meta = self.meta();
+        let t0 = Instant::now();
+        let h_tok = self.embed(x)?;
+        let use_cls = meta.use_cls && !meta.causal;
+        let mut h = if use_cls {
+            Tensor::vcat(&[self.artifact.tensor("cls")?, &h_tok])?
+        } else {
+            h_tok
+        };
+        let t_all = h.shape[0];
+        let bias = if meta.causal {
+            native::causal_bias(t_all)
+        } else {
+            Tensor::zeros(&[t_all, t_all])
+        };
+        for li in 0..meta.n_layers {
+            h = match &self.backend {
+                ComputeBackend::Pjrt(bank) => {
+                    bank.baseline_block[li].run(&[&h, &bias])?.remove(0)
+                }
+                ComputeBackend::Native => native::baseline_block(
+                    &h, Some(&bias), &self.native_blocks[li], meta.n_heads,
+                )?,
+            };
+        }
+        let logits = if use_cls {
+            let cls_row = h.rows(0, 1)?;
+            native::head(
+                &cls_row,
+                &self.artifact.tensor("ln_f.g")?.data,
+                &self.artifact.tensor("ln_f.b")?.data,
+                self.artifact.tensor("head.w")?,
+                &self.artifact.tensor("head.b")?.data,
+            )?
+        } else {
+            native::lm_head(
+                &h,
+                &self.artifact.tensor("ln_f.g")?.data,
+                &self.artifact.tensor("ln_f.b")?.data,
+                self.artifact.tensor("head.w")?,
+                &self.artifact.tensor("head.b")?.data,
+            )?
+        };
+        Ok((logits, t0.elapsed().as_secs_f64()))
+    }
+}
+
+fn link_spec(config: &RunConfig) -> LinkSpec {
+    LinkSpec::ideal(config.bandwidth_mbps)
+        .with_latency(config.latency_s)
+        .with_loss(config.loss_rate, config.retransmit)
+}
+
+/// Map dropped packets to the token rows whose codes they carried.
+fn dropped_tokens(
+    delivered: &[bool],
+    mtu: usize,
+    tokens: usize,
+    groups: usize,
+    code_bits: usize,
+) -> Vec<usize> {
+    let bits_per_token = groups * code_bits;
+    let mut out = Vec::new();
+    for (p, &ok) in delivered.iter().enumerate() {
+        if ok {
+            continue;
+        }
+        let bit_lo = p * mtu * 8;
+        let bit_hi = (p + 1) * mtu * 8;
+        let tok_lo = bit_lo / bits_per_token.max(1);
+        let tok_hi = bit_hi.div_ceil(bits_per_token.max(1)).min(tokens);
+        out.extend(tok_lo..tok_hi);
+    }
+    out.dedup();
+    out
+}
+
+/// Replace lost rows with the previous layer's decoded rows at the same
+/// offset (stale-code fallback; the remote layout is identical layer to
+/// layer) or zeros at the first layer.
+fn substitute_stale(xhat: &mut Tensor, dropped: &[usize], prev: Option<&Tensor>) {
+    for &ti in dropped {
+        if ti >= xhat.shape[0] {
+            continue;
+        }
+        match prev {
+            Some(p) if ti < p.shape[0] => {
+                let src = p.row(ti).to_vec();
+                xhat.row_mut(ti).copy_from_slice(&src);
+            }
+            _ => {
+                for v in xhat.row_mut(ti) {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropped_token_mapping() {
+        // 10 bits/token, mtu 5 bytes = 40 bits = 4 tokens/packet
+        let delivered = vec![true, false, true];
+        let d = dropped_tokens(&delivered, 5, 12, 1, 10);
+        assert_eq!(d, vec![4, 5, 6, 7]);
+        // all delivered
+        assert!(dropped_tokens(&[true, true], 5, 12, 1, 10).is_empty());
+    }
+
+    #[test]
+    fn substitute_stale_zeros_without_prev() {
+        let mut x = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        substitute_stale(&mut x, &[1], None);
+        assert_eq!(x.data, vec![1.0, 2.0, 0.0, 0.0]);
+        // with prev: copies the stale row
+        let prev = Tensor::from_vec(&[2, 2], vec![9.0, 9.0, 8.0, 8.0]).unwrap();
+        let mut y = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        substitute_stale(&mut y, &[0], Some(&prev));
+        assert_eq!(y.data, vec![9.0, 9.0, 3.0, 4.0]);
+    }
+}

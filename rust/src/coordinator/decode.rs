@@ -1,0 +1,258 @@
+//! Autoregressive decode with a mixed-precision KV cache (paper §3.1/§5 +
+//! Appendix G): after the sequence-parallel prefill, generation proceeds
+//! on the device owning the sequence tail. That device's cache holds its
+//! *local* prefill tokens in full precision and the other devices' tokens
+//! as dequantized VQ codes — Appendix G's memory accounting.
+
+use anyhow::{bail, Result};
+
+use crate::model::native::{self, BlockWeights};
+use crate::tensor::Tensor;
+
+use super::cluster::Cluster;
+use super::partition::TokenPartition;
+
+/// Per-layer KV cache on the tail device: [H, S_max, dh] with `len` valid.
+pub struct DecodeSession<'a> {
+    cluster: &'a Cluster,
+    k_cache: Vec<Tensor>,
+    v_cache: Vec<Tensor>,
+    pub len: usize,
+    pub s_max: usize,
+    pub generated: Vec<usize>,
+}
+
+impl<'a> DecodeSession<'a> {
+    /// Seed the cache from the prompt token ids, replaying the tail
+    /// device's view of the prefill (local rows full precision, remote
+    /// rows dequantized). Decoder artifacts only.
+    pub fn new(cluster: &'a Cluster, prompt: &[usize]) -> Result<DecodeSession<'a>> {
+        let meta = &cluster.artifact.meta;
+        if !meta.causal {
+            bail!("decode sessions require a decoder (causal) artifact");
+        }
+        if prompt.len() != meta.seq_len {
+            bail!("prompt must have exactly {} tokens (AOT shape)", meta.seq_len);
+        }
+        let s_max = 2 * meta.seq_len; // prompt + up to seq_len generated
+        let hh = meta.n_heads;
+        let dh = meta.d_model / hh;
+        let mut sess = DecodeSession {
+            cluster,
+            k_cache: (0..meta.n_layers).map(|_| Tensor::zeros(&[hh, s_max, dh])).collect(),
+            v_cache: (0..meta.n_layers).map(|_| Tensor::zeros(&[hh, s_max, dh])).collect(),
+            len: 0,
+            s_max,
+            generated: Vec::new(),
+        };
+        sess.fill_from_prompt(prompt)?;
+        Ok(sess)
+    }
+
+    /// Replay the prefill from the tail device's perspective, writing KV
+    /// rows: local chunk keys/values come from the full-precision stream,
+    /// remote rows from the VQ-decoded stream of each layer's input.
+    fn fill_from_prompt(&mut self, prompt: &[usize]) -> Result<()> {
+        let meta = &self.cluster.artifact.meta;
+        let t = meta.seq_len;
+        let n = self.cluster.partition.n_devices();
+        let part: &TokenPartition = &self.cluster.partition;
+        let tail = n - 1;
+        let ids = Tensor::from_vec(&[t, 1], prompt.iter().map(|&v| v as f32).collect())?;
+        let mut h = self.cluster.embed(&ids)?; // [T, D] global stream
+        let bias = native::causal_bias(t);
+        for li in 0..meta.n_layers {
+            let blk = &self.cluster.native_blocks[li];
+            // the tail device sees: local rows exact, remote rows quantized
+            let xhat = self.cluster.artifact.codebooks[li].roundtrip(&h)?;
+            let mut mixed = xhat.clone();
+            let start = part.start(tail);
+            for i in 0..part.sizes[tail] {
+                let src = h.row(start + i).to_vec();
+                mixed.row_mut(start + i).copy_from_slice(&src);
+            }
+            self.write_kv_rows(li, &mixed, blk, meta.n_heads)?;
+            // advance the *global* stream exactly (all devices in lockstep);
+            // the decoder's own stream is what decode steps extend
+            h = native::baseline_block(&h, Some(&bias), blk, meta.n_heads)?;
+        }
+        self.len = t;
+        Ok(())
+    }
+
+    fn write_kv_rows(&mut self, li: usize, x: &Tensor, blk: &BlockWeights, hh: usize) -> Result<()> {
+        let xn = crate::tensor::layer_norm(x, &blk.ln1_g, &blk.ln1_b, 1e-5);
+        let mut k = crate::tensor::matmul(&xn, &blk.wk)?;
+        crate::tensor::add_bias(&mut k, &blk.bk);
+        let mut v = crate::tensor::matmul(&xn, &blk.wv)?;
+        crate::tensor::add_bias(&mut v, &blk.bv);
+        let (rows, d) = k.dims2()?;
+        let dh = d / hh;
+        for i in 0..rows {
+            for head in 0..hh {
+                for j in 0..dh {
+                    let kt = &mut self.k_cache[li];
+                    kt.data[(head * self.s_max + i) * dh + j] = k.row(i)[head * dh + j];
+                    let vt = &mut self.v_cache[li];
+                    vt.data[(head * self.s_max + i) * dh + j] = v.row(i)[head * dh + j];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate one token greedily; returns its id.
+    pub fn step(&mut self) -> Result<usize> {
+        let meta = &self.cluster.artifact.meta;
+        if self.len >= self.s_max {
+            bail!("cache full ({} rows)", self.s_max);
+        }
+        let hh = meta.n_heads;
+        let dh = meta.d_model / hh;
+        // embed the most recent token at position len-1's successor
+        let last_id = *self.generated.last().unwrap_or(&0);
+        let pos_idx = (self.len).min(meta.seq_len - 1); // clamp learned pos
+        let embed = self.cluster.artifact.tensor("embed")?;
+        let pos = self.cluster.artifact.tensor("pos")?;
+        let mut h = Tensor::zeros(&[1, meta.d_model]);
+        for j in 0..meta.d_model {
+            h.row_mut(0)[j] = embed.row(last_id)[j] + pos.row(pos_idx)[j];
+        }
+        let valid: Vec<f32> = (0..self.s_max)
+            .map(|i| if i < self.len { 1.0 } else { 0.0 })
+            .collect();
+        let valid_t = Tensor::from_vec(&[self.s_max], valid)?;
+
+        for li in 0..meta.n_layers {
+            let blk = &self.cluster.native_blocks[li];
+            let (h_new, k_new, v_new) =
+                native_decode_step(&h, &self.k_cache[li], &self.v_cache[li], &valid_t, blk, hh)?;
+            // append k/v rows at position len
+            for head in 0..hh {
+                for j in 0..dh {
+                    self.k_cache[li].data[(head * self.s_max + self.len) * dh + j] =
+                        k_new.data[head * dh + j];
+                    self.v_cache[li].data[(head * self.s_max + self.len) * dh + j] =
+                        v_new.data[head * dh + j];
+                }
+            }
+            h = h_new;
+        }
+        self.len += 1;
+        let logits = native::lm_head(
+            &h,
+            &self.cluster.artifact.tensor("ln_f.g")?.data,
+            &self.cluster.artifact.tensor("ln_f.b")?.data,
+            self.cluster.artifact.tensor("head.w")?,
+            &self.cluster.artifact.tensor("head.b")?.data,
+        )?;
+        let next = logits
+            .row(0)
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        self.generated.push(next);
+        Ok(next)
+    }
+
+    /// Appendix G memory accounting for this session's cache strategy.
+    pub fn cache_bytes_mixed(&self) -> usize {
+        let meta = &self.cluster.artifact.meta;
+        let shape = crate::model::TransformerShape {
+            n_layers: meta.n_layers,
+            d_model: meta.d_model,
+            n_heads: meta.n_heads,
+            d_ff: meta.d_ff,
+            seq_len: meta.seq_len,
+            elem_bytes: 4,
+        };
+        crate::model::kv_cache_bytes_astra(
+            &shape,
+            meta.seq_len,
+            4,
+            self.cluster.partition.n_devices(),
+            meta.groups,
+            meta.codebook_size,
+        )
+    }
+}
+
+/// One decode step of one block, mirroring python `decode_step_block`.
+/// Returns (h_out [1, D], k_new [H*dh], v_new [H*dh]).
+fn native_decode_step(
+    h_t: &Tensor,
+    k_cache: &Tensor,
+    v_cache: &Tensor,
+    valid: &Tensor,
+    blk: &BlockWeights,
+    hh: usize,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let d = h_t.shape[1];
+    let dh = d / hh;
+    let s_max = k_cache.shape[1];
+    let xn = crate::tensor::layer_norm(h_t, &blk.ln1_g, &blk.ln1_b, 1e-5);
+    let mut q = crate::tensor::matmul(&xn, &blk.wq)?;
+    crate::tensor::add_bias(&mut q, &blk.bq);
+    let mut k_t = crate::tensor::matmul(&xn, &blk.wk)?;
+    crate::tensor::add_bias(&mut k_t, &blk.bk);
+    let mut v_t = crate::tensor::matmul(&xn, &blk.wv)?;
+    crate::tensor::add_bias(&mut v_t, &blk.bv);
+
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut att_out = Tensor::zeros(&[1, d]);
+    for head in 0..hh {
+        // logits over cached rows (masked) + the new token itself
+        let qh: Vec<f32> = q.row(0)[head * dh..(head + 1) * dh].to_vec();
+        let mut logits = Vec::with_capacity(s_max + 1);
+        for i in 0..s_max {
+            if valid.data[i] < 0.5 {
+                logits.push(f32::NEG_INFINITY);
+                continue;
+            }
+            let mut acc = 0.0f32;
+            for j in 0..dh {
+                acc += qh[j] * k_cache.data[(head * s_max + i) * dh + j];
+            }
+            logits.push(acc * scale);
+        }
+        // self
+        let mut acc = 0.0f32;
+        for j in 0..dh {
+            acc += qh[j] * k_t.row(0)[head * dh + j];
+        }
+        logits.push(acc * scale);
+        // softmax
+        let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for l in logits.iter_mut() {
+            *l = (*l - max).exp();
+            sum += *l;
+        }
+        // weighted value sum
+        for j in 0..dh {
+            let mut o = 0.0f32;
+            for i in 0..s_max {
+                if valid.data[i] < 0.5 {
+                    continue;
+                }
+                o += logits[i] * v_cache.data[(head * s_max + i) * dh + j];
+            }
+            o += logits[s_max] * v_t.row(0)[head * dh + j];
+            att_out.row_mut(0)[head * dh + j] = o / sum;
+        }
+    }
+    let mut h1 = crate::tensor::matmul(&att_out, &blk.wo)?;
+    crate::tensor::add_bias(&mut h1, &blk.bo);
+    crate::tensor::add_inplace(&mut h1, h_t);
+    // MLP
+    let xn2 = crate::tensor::layer_norm(&h1, &blk.ln2_g, &blk.ln2_b, 1e-5);
+    let mut m = crate::tensor::matmul(&xn2, &blk.w1)?;
+    crate::tensor::add_bias(&mut m, &blk.b1);
+    crate::tensor::gelu(&mut m);
+    let mut m2 = crate::tensor::matmul(&m, &blk.w2)?;
+    crate::tensor::add_bias(&mut m2, &blk.b2);
+    crate::tensor::add_inplace(&mut m2, &h1);
+    Ok((m2, k_t, v_t))
+}

@@ -1,0 +1,24 @@
+//! The ASTRA coordinator — the paper's system contribution.
+//!
+//! Orchestrates sequence-parallel prefill across N (simulated) devices:
+//! per transformer block, each device VQ-encodes its local token
+//! embeddings, multicasts the bit-packed codes over the simulated network,
+//! decodes peers' codes, and runs the Mixed-Precision Attention block via
+//! the AOT PJRT executables (or the pure-rust native path). Distributed
+//! Class Token replicas are pooled into the prediction head; decoder
+//! configurations follow with an autoregressive decode loop on the device
+//! owning the sequence tail.
+//!
+//! Device parallelism is *virtual-clock simulated*: compute segments are
+//! timed for real (PJRT/native wall time) and combined with modeled link
+//! delays by max-merging per-device clocks, exactly as independent devices
+//! would overlap. On this 1-core host, thread-per-device would serialize
+//! anyway; the virtual clock keeps reported latencies faithful to an
+//! actual N-device deployment (DESIGN.md §2).
+
+pub mod cluster;
+pub mod decode;
+pub mod partition;
+
+pub use cluster::{Cluster, ComputeBackend, PrefillOutput, PrefillReport};
+pub use partition::TokenPartition;

@@ -1,0 +1,208 @@
+//! Token-to-device partitioning: even, heterogeneous, and randomized
+//! splits; FPAR accounting (Appendix D); attention-bias construction for
+//! the per-device AOT graphs.
+
+use anyhow::{bail, Result};
+
+use crate::model::native::NEG;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Contiguous partition of T content tokens over N devices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenPartition {
+    pub sizes: Vec<usize>,
+}
+
+impl TokenPartition {
+    /// Even split (requires divisibility, like the paper's main setting).
+    pub fn even(t: usize, n: usize) -> Result<TokenPartition> {
+        if n == 0 || t % n != 0 {
+            bail!("cannot split {t} tokens evenly over {n} devices");
+        }
+        Ok(TokenPartition { sizes: vec![t / n; n] })
+    }
+
+    /// Heterogeneous split proportional to device speeds (stronger devices
+    /// take more tokens — paper §4.2 "Heterogeneous Devices").
+    pub fn proportional(t: usize, speeds: &[f64]) -> Result<TokenPartition> {
+        if speeds.is_empty() || speeds.iter().any(|&s| s <= 0.0) {
+            bail!("speeds must be positive");
+        }
+        let total: f64 = speeds.iter().sum();
+        let mut sizes: Vec<usize> =
+            speeds.iter().map(|s| ((s / total) * t as f64).floor() as usize).collect();
+        // distribute the remainder to the fastest devices
+        let mut rem = t - sizes.iter().sum::<usize>();
+        let mut order: Vec<usize> = (0..speeds.len()).collect();
+        order.sort_by(|&a, &b| speeds[b].partial_cmp(&speeds[a]).unwrap());
+        let mut i = 0;
+        while rem > 0 {
+            sizes[order[i % order.len()]] += 1;
+            rem -= 1;
+            i += 1;
+        }
+        Ok(TokenPartition { sizes })
+    }
+
+    /// Random split: each token assigned uniformly (training-style
+    /// randomized mapping, Appendix D). Contiguity is *not* preserved; the
+    /// returned partition records only sizes — use `random_assign` for the
+    /// full mapping.
+    pub fn random(rng: &mut Rng, t: usize, n: usize) -> TokenPartition {
+        let mut sizes = vec![0usize; n];
+        for _ in 0..t {
+            sizes[rng.below(n)] += 1;
+        }
+        TokenPartition { sizes }
+    }
+
+    pub fn explicit(sizes: Vec<usize>) -> TokenPartition {
+        TokenPartition { sizes }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    /// Start offset of device d's contiguous chunk.
+    pub fn start(&self, d: usize) -> usize {
+        self.sizes[..d].iter().sum()
+    }
+
+    /// Full-Precision Attention Rate: sum_k (n_k / T)^2 (Appendix D Eq. 35).
+    pub fn fpar(&self) -> f64 {
+        let t = self.total() as f64;
+        self.sizes.iter().map(|&s| (s as f64 / t).powi(2)).sum()
+    }
+
+    /// Variance of per-device token counts (Eq. 36 relates it to FPAR).
+    pub fn size_variance(&self) -> f64 {
+        let k = self.sizes.len() as f64;
+        let mu = self.total() as f64 / k;
+        self.sizes.iter().map(|&s| (s as f64 - mu).powi(2)).sum::<f64>() / k
+    }
+}
+
+/// Bias for device `d`'s per-device MPA graph in the *encoder* setting:
+/// queries = [CLS replica, local tokens]; keys = [local | remote-hat].
+/// Everything is admissible (local rows full-precision, remote rows are the
+/// dequantized codes — the graph's key layout already encodes the split),
+/// so the bias is all-zeros; kept explicit for shape-checking and to share
+/// the code path with the causal variant.
+pub fn encoder_bias(tl: usize, tr: usize) -> Tensor {
+    Tensor::zeros(&[tl, tl + tr])
+}
+
+/// Bias for device `d` in the *decoder* setting: causal over global
+/// positions. Local rows are positions [start, start+tl); remote columns
+/// are the other devices' chunks in device order.
+pub fn decoder_bias(part: &TokenPartition, d: usize) -> Tensor {
+    let tl = part.sizes[d];
+    let t = part.total();
+    let tr = t - tl;
+    let start = part.start(d);
+    let mut bias = Tensor::zeros(&[tl, tl + tr]);
+    for qi in 0..tl {
+        let qpos = start + qi;
+        // local columns
+        for kj in 0..tl {
+            if start + kj > qpos {
+                bias.data[qi * (tl + tr) + kj] = NEG;
+            }
+        }
+        // remote columns: device order, skipping d
+        let mut col = tl;
+        for dd in 0..part.n_devices() {
+            if dd == d {
+                continue;
+            }
+            let s = part.start(dd);
+            for kj in 0..part.sizes[dd] {
+                if s + kj > qpos {
+                    bias.data[qi * (tl + tr) + col] = NEG;
+                }
+                col += 1;
+            }
+        }
+    }
+    bias
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_and_errors() {
+        let p = TokenPartition::even(16, 4).unwrap();
+        assert_eq!(p.sizes, vec![4, 4, 4, 4]);
+        assert_eq!(p.start(2), 8);
+        assert!(TokenPartition::even(10, 4).is_err());
+        assert!(TokenPartition::even(10, 0).is_err());
+    }
+
+    #[test]
+    fn proportional_sums_and_favors_fast() {
+        let p = TokenPartition::proportional(100, &[2.0, 1.0, 1.0]).unwrap();
+        assert_eq!(p.total(), 100);
+        assert!(p.sizes[0] > p.sizes[1]);
+        assert!(TokenPartition::proportional(10, &[1.0, -1.0]).is_err());
+    }
+
+    #[test]
+    fn fpar_bounds_and_monotonicity() {
+        let even = TokenPartition::even(64, 4).unwrap();
+        assert!((even.fpar() - 0.25).abs() < 1e-12);
+        let skew = TokenPartition::explicit(vec![32, 16, 8, 8]);
+        assert!(skew.fpar() > even.fpar());
+        let all = TokenPartition::explicit(vec![64, 0, 0, 0]);
+        assert!((all.fpar() - 1.0).abs() < 1e-12);
+        // Eq. 36: Var = T^2/K * (FPAR - 1/K)
+        let t = 64.0f64;
+        let k = 4.0;
+        let want = t * t / k * (skew.fpar() - 1.0 / k);
+        assert!((skew.size_variance() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_partition_sums() {
+        let mut rng = Rng::new(0);
+        let p = TokenPartition::random(&mut rng, 128, 4);
+        assert_eq!(p.total(), 128);
+        assert!(p.fpar() >= 0.25 - 1e-12);
+    }
+
+    #[test]
+    fn decoder_bias_causality() {
+        let p = TokenPartition::even(8, 2).unwrap();
+        // device 1 owns positions 4..8; remote = device 0 positions 0..4
+        let b = decoder_bias(&p, 1);
+        assert_eq!(b.shape, vec![4, 8]);
+        // first local query (pos 4): local col 0 (pos 4) ok, col 1 (pos 5) masked
+        assert_eq!(b.data[0], 0.0);
+        assert_eq!(b.data[1], NEG);
+        // all remote (pos 0..4) visible to pos 4
+        for c in 4..8 {
+            assert_eq!(b.data[c], 0.0);
+        }
+        // device 0: remote (device 1, pos 4..8) all masked for its queries
+        let b0 = decoder_bias(&p, 0);
+        for qi in 0..4 {
+            for c in 4..8 {
+                assert_eq!(b0.data[qi * 8 + c], NEG, "q{qi} c{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn encoder_bias_all_open() {
+        let b = encoder_bias(5, 12);
+        assert_eq!(b.shape, vec![5, 17]);
+        assert!(b.data.iter().all(|&v| v == 0.0));
+    }
+}

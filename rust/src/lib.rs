@@ -1,0 +1,43 @@
+//! # ASTRA — communication-efficient multi-device Transformer inference
+//!
+//! Rust L3 coordinator for the three-layer reproduction of
+//! *"ASTRA: Communication-Efficient Acceleration for Multi-Device
+//! Transformer Inference"*:
+//!
+//! * [`runtime`] loads the AOT artifacts (HLO text lowered from JAX/Pallas
+//!   by `python/compile/aot.py`) and executes them on a PJRT CPU client —
+//!   python never runs on the request path.
+//! * [`coordinator`] implements the paper's contribution: sequence-parallel
+//!   orchestration with Mixed-Precision Attention exchanges (VQ codes on
+//!   the wire instead of full-precision embeddings), Distributed Class
+//!   Token aggregation, and the autoregressive decode loop.
+//! * [`comm`] + [`sim`] are the substrate the paper ran on real laptops:
+//!   a simulated network (bandwidth caps, latency, packet loss, dynamic
+//!   Markovian traces) carrying *real* bit-packed payloads, plus a
+//!   discrete-event latency simulator for the paper's sweeps.
+//! * [`parallel`] implements the baselines — Tensor Parallelism
+//!   (Megatron-LM), Sequence Parallelism (Voltage), Block Parallelism
+//!   (DeTransformer, BP+AG / BP+SP) — as per-block communication/compute
+//!   schedules over the same cost model.
+//! * [`vq`] is the native grouped vector-quantization engine used on the
+//!   hot path (encode/decode/bit-packing), mirroring the Pallas kernels.
+//! * [`model`] holds shape/FLOP/memory math and a pure-rust reference
+//!   transformer used to cross-check PJRT numerics.
+//!
+//! The crate is dependency-light by necessity (offline image): JSON, CLI
+//! parsing, PRNG, and the bench harness live in [`util`].
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod parallel;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod vq;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,57 @@
+//! `astra` — launcher CLI.
+//!
+//! Subcommands:
+//!   serve      run the threaded multi-device cluster on the AOT artifacts
+//!              and serve a synthetic request stream (reports latency +
+//!              throughput + bits-per-token)
+//!   run        one prefill through the cluster, printing logits
+//!   simulate   cost-model latency for a (model, strategy, bandwidth) point
+//!   calibrate  measure native/PJRT compute throughput on this host
+//!   info       print artifact manifest summary
+//!
+//! `astra-eval` (separate binary) regenerates every paper table/figure.
+
+use anyhow::Result;
+use astra::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["help", "verbose", "native", "no-pjrt"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    match args.command()? {
+        "serve" => astra::server::cli::serve(&args),
+        "run" => astra::server::cli::run_once(&args),
+        "simulate" => astra::server::cli::simulate(&args),
+        "calibrate" => astra::server::cli::calibrate(&args),
+        "info" => astra::server::cli::info(&args),
+        other => {
+            eprintln!("unknown subcommand `{other}`");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "astra — communication-efficient multi-device transformer inference
+
+USAGE: astra <subcommand> [options]
+
+SUBCOMMANDS
+  serve      serve a synthetic request stream on the simulated cluster
+             --artifacts DIR --devices N --bandwidth MBPS --requests N
+             --arrival-rate R --loss P --seed S
+  run        single prefill through the cluster; prints logits and
+             per-layer communication accounting
+             --artifacts DIR --devices N --bandwidth MBPS [--native]
+  simulate   analytic latency for a model/strategy/bandwidth point
+             --model vit-base|gpt2-s|gpt2-m|llama3-8b --tokens T
+             --devices N --strategy single|tp|sp|bp-ag|bp-sp|astra
+             --nb NB --vq g16k1024 --bandwidth MBPS
+  calibrate  measure this host's matmul + PJRT block throughput
+  info       print the artifact manifest summary  --artifacts DIR"
+    );
+}

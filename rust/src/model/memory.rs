@@ -1,0 +1,78 @@
+//! Appendix G memory models: VQ codebook storage and mixed KV-cache cost.
+
+use super::shape::{ceil_log2, TransformerShape};
+
+/// Codebook bytes: L * C * K * d * b (independent of the group count —
+/// grouped VQ partitions d into G slices of d/G).
+pub fn codebook_bytes(
+    layers: usize,
+    codebooks_per_layer: usize,
+    k: usize,
+    d_model: usize,
+    elem_bytes: usize,
+) -> usize {
+    layers * codebooks_per_layer * k * d_model * elem_bytes
+}
+
+/// Original full-precision KV cache: 2 * N * L * d * b.
+pub fn kv_cache_bytes_full(shape: &TransformerShape, seq_len: usize, elem_bytes: usize) -> usize {
+    2 * seq_len * shape.n_layers * shape.d_model * elem_bytes
+}
+
+/// ASTRA mixed KV cache (Appendix G Eq. 39): local tokens full precision,
+/// non-local tokens as G VQ indices of log2(K) bits each.
+pub fn kv_cache_bytes_astra(
+    shape: &TransformerShape,
+    seq_len: usize,
+    elem_bytes: usize,
+    n_devices: usize,
+    groups: usize,
+    k: usize,
+) -> usize {
+    let local = seq_len / n_devices * shape.n_layers * shape.d_model * elem_bytes;
+    let nonlocal_bits =
+        (n_devices - 1) * (seq_len / n_devices) * shape.n_layers * groups * ceil_log2(k);
+    2 * (local + nonlocal_bits / 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_codebook_128mib() {
+        // Appendix G: L=32, C=2, K=1024, d=1024, b=2 -> 128 MiB
+        assert_eq!(codebook_bytes(32, 2, 1024, 1024, 2), 134_217_728);
+    }
+
+    #[test]
+    fn llama_kv_cache_example() {
+        // Appendix G Eqs. 40-41 use d=1024 (the paper's worked numbers).
+        let shape = TransformerShape {
+            n_layers: 32,
+            d_model: 1024,
+            n_heads: 32,
+            d_ff: 14336,
+            seq_len: 1024,
+            elem_bytes: 2,
+        };
+        assert_eq!(kv_cache_bytes_full(&shape, 1024, 2), 134_217_728);
+        let astra = kv_cache_bytes_astra(&shape, 1024, 2, 4, 32, 1024);
+        assert_eq!(astra, 35_520_512);
+        // ~26.5% of original
+        let ratio = astra as f64 / 134_217_728.0;
+        assert!((ratio - 0.2646).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn astra_cache_always_smaller_with_compression() {
+        let shape = TransformerShape::paper_encoder(1024);
+        let full = kv_cache_bytes_full(&shape, 1024, 4);
+        for n in [2, 4, 8] {
+            for g in [1, 16, 32] {
+                let a = kv_cache_bytes_astra(&shape, 1024, 4, n, g, 1024);
+                assert!(a < full, "n={n} g={g}: {a} vs {full}");
+            }
+        }
+    }
+}

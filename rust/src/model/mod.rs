@@ -1,0 +1,9 @@
+//! Model shape math, FLOP/byte accounting, memory models, and the pure-rust
+//! reference transformer.
+
+pub mod memory;
+pub mod native;
+pub mod shape;
+
+pub use memory::{codebook_bytes, kv_cache_bytes_astra, kv_cache_bytes_full};
+pub use shape::TransformerShape;

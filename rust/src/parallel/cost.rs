@@ -1,0 +1,157 @@
+//! Device model + schedule types for the latency simulator.
+
+use crate::comm::collective::CommCost;
+use crate::model::TransformerShape;
+
+/// Compute capability of one device.
+///
+/// `flops` is effective sustained FLOP/s on transformer blocks; presets
+/// calibrate it so the single-device reference matches the paper's
+/// absolute latencies (99.9 ms for the 12L/768D encoder at T=1024 on the
+/// 1660Ti testbed, 4.578 s for 8-bit Llama-3-8B prefill on the Titan X).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    pub flops: f64,
+    /// fixed per-kernel-launch / per-layer overhead (seconds)
+    pub per_layer_overhead_s: f64,
+    /// relative speed multiplier (1.0 = baseline; heterogeneous clusters
+    /// scale per-device)
+    pub speed: f64,
+}
+
+impl DeviceModel {
+    /// Calibrated so the Fig-1 encoder (12L/768D, T=1024) takes the
+    /// paper's 99.9 ms single-device.
+    pub fn paper_1660ti() -> DeviceModel {
+        let shape = TransformerShape::paper_encoder(1024);
+        let target = 0.0999;
+        let overhead = 0.0002 * shape.n_layers as f64; // 0.2 ms/layer
+        DeviceModel {
+            flops: shape.total_flops() / (target - overhead),
+            per_layer_overhead_s: 0.0002,
+            speed: 1.0,
+        }
+    }
+
+    /// Calibrated so 8-bit Llama-3-8B prefill at T=1024 takes 4.578 s.
+    pub fn paper_titanx_llama() -> DeviceModel {
+        let shape = TransformerShape::llama3_8b(1024);
+        let target = 4.578;
+        let overhead = 0.002 * shape.n_layers as f64;
+        DeviceModel {
+            flops: shape.total_flops() / (target - overhead),
+            per_layer_overhead_s: 0.002,
+            speed: 1.0,
+        }
+    }
+
+    pub fn with_speed(mut self, speed: f64) -> DeviceModel {
+        self.speed = speed;
+        self
+    }
+
+    /// Seconds to execute `flops` of compute plus `layers` launches.
+    pub fn compute_time(&self, flops: f64, layers: usize) -> f64 {
+        flops / (self.flops * self.speed) + layers as f64 * self.per_layer_overhead_s
+    }
+}
+
+/// One phase of a prefill schedule. Phases run sequentially; within a
+/// phase, each device computes `compute_flops` (the slowest device gates)
+/// and then the collective `comm` runs.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub label: &'static str,
+    /// per-device FLOPs (max over devices for heterogeneous splits)
+    pub compute_flops: f64,
+    /// number of kernel launches attributed to this phase
+    pub launches: usize,
+    pub comm: CommCost,
+}
+
+impl Phase {
+    pub fn compute(label: &'static str, flops: f64, launches: usize) -> Phase {
+        Phase { label, compute_flops: flops, launches, comm: CommCost::ZERO }
+    }
+
+    pub fn comm(label: &'static str, comm: CommCost) -> Phase {
+        Phase { label, compute_flops: 0.0, launches: 0, comm }
+    }
+}
+
+/// A full prefill schedule plus bookkeeping for the breakdown figure.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub phases: Vec<Phase>,
+}
+
+impl Schedule {
+    pub fn total_comm_bits(&self) -> f64 {
+        self.phases.iter().map(|p| p.comm.bits).sum()
+    }
+
+    pub fn total_compute_flops(&self) -> f64 {
+        self.phases.iter().map(|p| p.compute_flops).sum()
+    }
+
+    /// Static-bandwidth latency split into (compute_s, comm_s).
+    pub fn latency_breakdown(
+        &self,
+        device: &DeviceModel,
+        bandwidth_mbps: f64,
+        stage_latency_s: f64,
+    ) -> (f64, f64) {
+        let mut compute = 0.0;
+        let mut comm = 0.0;
+        for p in &self.phases {
+            compute += device.compute_time(p.compute_flops, p.launches);
+            comm += p.comm.seconds(bandwidth_mbps, stage_latency_s);
+        }
+        (compute, comm)
+    }
+
+    /// Total static-bandwidth latency in seconds.
+    pub fn latency(&self, device: &DeviceModel, bandwidth_mbps: f64, stage_latency_s: f64) -> f64 {
+        let (c, m) = self.latency_breakdown(device, bandwidth_mbps, stage_latency_s);
+        c + m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_hits_paper_single_device() {
+        let dev = DeviceModel::paper_1660ti();
+        let shape = TransformerShape::paper_encoder(1024);
+        let t = dev.compute_time(shape.total_flops(), shape.n_layers);
+        assert!((t - 0.0999).abs() < 1e-4, "{t}");
+        let dev = DeviceModel::paper_titanx_llama();
+        let shape = TransformerShape::llama3_8b(1024);
+        let t = dev.compute_time(shape.total_flops(), shape.n_layers);
+        assert!((t - 4.578).abs() < 1e-3, "{t}");
+    }
+
+    #[test]
+    fn heterogeneous_speed_scales() {
+        let dev = DeviceModel::paper_1660ti();
+        let slow = dev.with_speed(0.5);
+        assert!((slow.compute_time(dev.flops, 0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_breakdown_adds_up() {
+        let dev = DeviceModel { flops: 1e9, per_layer_overhead_s: 0.001, speed: 1.0 };
+        let sched = Schedule {
+            phases: vec![
+                Phase::compute("a", 1e9, 1),
+                Phase::comm("b", CommCost { bits: 10e6, stages: 1 }),
+            ],
+        };
+        let (c, m) = sched.latency_breakdown(&dev, 10.0, 0.005);
+        assert!((c - 1.001).abs() < 1e-9);
+        assert!((m - 1.005).abs() < 1e-9);
+        assert!((sched.latency(&dev, 10.0, 0.005) - (c + m)).abs() < 1e-12);
+    }
+}

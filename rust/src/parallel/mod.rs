@@ -1,0 +1,13 @@
+//! Multi-device parallelization strategies and their cost schedules.
+//!
+//! Each strategy (the paper's baselines plus ASTRA) describes one prefill
+//! pass as a sequence of [`Phase`]s — per-device compute FLOPs interleaved
+//! with collective communication. The simulator ([`crate::sim`]) turns a
+//! schedule into latency under a device model + bandwidth, which is what
+//! regenerates Figures 1/3/4/5 and Tables 4/7.
+
+pub mod cost;
+pub mod strategies;
+
+pub use cost::{DeviceModel, Phase, Schedule};
+pub use strategies::{Strategy, StrategyKind};

@@ -1,0 +1,235 @@
+//! Artifact bundle parsing: manifest.json + weights.bin + codebooks.bin.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::vq::Codebook;
+
+/// One graph argument/output spec from the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// "activation" | "weight" | "codebook"
+    pub kind: String,
+}
+
+/// One AOT graph (an .hlo.txt file plus its signature).
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model configuration carried in the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub causal: bool,
+    pub use_cls: bool,
+    pub vocab_size: usize,
+    pub patch_dim: usize,
+    pub n_classes: usize,
+    pub n_devices: usize,
+    pub groups: usize,
+    pub codebook_size: usize,
+    pub bits_per_token: usize,
+}
+
+/// A fully-parsed artifact bundle.
+#[derive(Debug)]
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub graphs: BTreeMap<String, GraphSpec>,
+    pub meta: ModelMeta,
+    /// parameter tensors by dotted name
+    pub tensors: BTreeMap<String, Tensor>,
+    /// per-layer grouped codebooks
+    pub codebooks: Vec<Codebook>,
+}
+
+impl Artifact {
+    pub fn load(dir: &Path) -> Result<Artifact> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        // --- model meta ---
+        let m = j.get("model")?;
+        let a = j.get("astra")?;
+        let meta = ModelMeta {
+            n_layers: m.get("n_layers")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            seq_len: m.get("seq_len")?.as_usize()?,
+            causal: m.get("causal")?.as_bool()?,
+            use_cls: m.get("use_cls")?.as_bool()?,
+            vocab_size: m.get("vocab_size")?.as_usize()?,
+            patch_dim: m.get("patch_dim")?.as_usize()?,
+            n_classes: m.get("n_classes")?.as_usize()?,
+            n_devices: a.get("n_devices")?.as_usize()?,
+            groups: a.get("groups")?.as_usize()?,
+            codebook_size: a.get("codebook_size")?.as_usize()?,
+            bits_per_token: a.get("bits_per_token")?.as_usize()?,
+        };
+
+        // --- graphs ---
+        let mut graphs = BTreeMap::new();
+        for g in j.get("graphs")?.as_arr()? {
+            let name = g.get("name")?.as_str()?.to_string();
+            let parse_specs = |key: &str, named: bool| -> Result<Vec<TensorSpec>> {
+                g.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            name: if named {
+                                t.get("name")?.as_str()?.to_string()
+                            } else {
+                                String::new()
+                            },
+                            shape: t
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<Result<_>>()?,
+                            dtype: t.get("dtype")?.as_str()?.to_string(),
+                            kind: t
+                                .opt("kind")
+                                .map(|k| k.as_str().map(str::to_string))
+                                .transpose()?
+                                .unwrap_or_default(),
+                        })
+                    })
+                    .collect()
+            };
+            graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    name,
+                    file: dir.join(g.get("file")?.as_str()?),
+                    args: parse_specs("args", true)?,
+                    outputs: parse_specs("outputs", false)?,
+                },
+            );
+        }
+
+        // --- weights ---
+        let wpath = dir.join(j.get("weights_file")?.as_str()?);
+        let raw = std::fs::read(&wpath)
+            .with_context(|| format!("reading {}", wpath.display()))?;
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut tensors = BTreeMap::new();
+        for t in j.get("tensors")?.as_arr()? {
+            let name = t.get("name")?.as_str()?.to_string();
+            let offset = t.get("offset")?.as_usize()?;
+            let shape: Vec<usize> = t
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?;
+            let n: usize = shape.iter().product();
+            if offset + n > floats.len() {
+                bail!("tensor {name} overruns weights.bin");
+            }
+            // scalar/1-d tensors keep their manifest shape
+            let shape = if shape.is_empty() { vec![1] } else { shape };
+            tensors.insert(name, Tensor::from_vec(&shape, floats[offset..offset + n].to_vec())?);
+        }
+
+        // --- codebooks ---
+        let cshape: Vec<usize> = j
+            .get("codebooks_shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<_>>()?;
+        let (l, g, k, dg) = (cshape[0], cshape[1], cshape[2], cshape[3]);
+        let cpath = dir.join(j.get("codebooks_file")?.as_str()?);
+        let craw = std::fs::read(&cpath)
+            .with_context(|| format!("reading {}", cpath.display()))?;
+        let cfloats: Vec<f32> = craw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        if cfloats.len() != l * g * k * dg {
+            bail!(
+                "codebooks.bin has {} floats, expected {}",
+                cfloats.len(),
+                l * g * k * dg
+            );
+        }
+        let per = g * k * dg;
+        let codebooks = (0..l)
+            .map(|li| Codebook::new(g, k, dg, cfloats[li * per..(li + 1) * per].to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Artifact { dir: dir.to_path_buf(), graphs, meta, tensors, codebooks })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph `{name}` not in manifest"))
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor `{name}` not in weights"))
+    }
+
+    /// Block weight tensors for layer `li`, in BLOCK_WEIGHT_NAMES order.
+    pub fn block_weights(&self, li: usize) -> Result<Vec<&Tensor>> {
+        const NAMES: [&str; 16] = [
+            "ln1.g", "ln1.b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+            "ln2.g", "ln2.b", "w1", "b1", "w2", "b2",
+        ];
+        NAMES
+            .iter()
+            .map(|n| self.tensor(&format!("blocks.{li}.{n}")))
+            .collect()
+    }
+
+    /// Native BlockWeights copy for layer `li` (for the rust reference path).
+    pub fn native_block(&self, li: usize) -> Result<crate::model::native::BlockWeights> {
+        let t = |n: &str| -> Result<Tensor> { Ok(self.tensor(&format!("blocks.{li}.{n}"))?.clone()) };
+        let v = |n: &str| -> Result<Vec<f32>> { Ok(t(n)?.data) };
+        Ok(crate::model::native::BlockWeights {
+            ln1_g: v("ln1.g")?,
+            ln1_b: v("ln1.b")?,
+            wq: t("wq")?,
+            bq: v("bq")?,
+            wk: t("wk")?,
+            bk: v("bk")?,
+            wv: t("wv")?,
+            bv: v("bv")?,
+            wo: t("wo")?,
+            bo: v("bo")?,
+            ln2_g: v("ln2.g")?,
+            ln2_b: v("ln2.b")?,
+            w1: t("w1")?,
+            b1: v("b1")?,
+            w2: t("w2")?,
+            b2: v("b2")?,
+        })
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT execution: compile HLO text once, bind weight literals once,
+//! execute with per-call activations.
+//!
+//! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. Graphs are
+//! lowered with return_tuple=True, so outputs unwrap via `to_tuple`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::artifact::{Artifact, GraphSpec};
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match lit.ty()? {
+        xla::ElementType::F32 => Tensor::from_vec(&dims, lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => {
+            let ints = lit.to_vec::<i32>()?;
+            Tensor::from_vec(&dims, ints.into_iter().map(|v| v as f32).collect())
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+fn tensor_to_i32_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ints: Vec<i32> = t.data.iter().map(|&v| v as i32).collect();
+    let lit = xla::Literal::vec1(&ints);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// One compiled graph plus its pre-staged weight literals. The compiled
+/// PJRT executable is shared (Arc) between per-layer variants — only the
+/// bound weight literals differ.
+pub struct Executor {
+    pub spec: GraphSpec,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    /// literals for `weight`/`codebook` args, keyed by arg position
+    bound: BTreeMap<usize, xla::Literal>,
+}
+
+impl Executor {
+    /// Execute with activations supplied positionally (in the order the
+    /// manifest lists `activation` args). Weight args use bound literals.
+    pub fn run(&self, activations: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(self.spec.args.len());
+        let mut ai = 0usize;
+        for (pos, arg) in self.spec.args.iter().enumerate() {
+            if let Some(b) = self.bound.get(&pos) {
+                lits.push(b.clone());
+            } else {
+                let t = activations
+                    .get(ai)
+                    .with_context(|| format!("missing activation for arg `{}`", arg.name))?;
+                let expect: usize = arg.shape.iter().product();
+                if t.numel() != expect {
+                    bail!(
+                        "arg `{}` expects shape {:?} ({expect}), got {:?}",
+                        arg.name, arg.shape, t.shape
+                    );
+                }
+                if arg.dtype.contains("int32") {
+                    lits.push(tensor_to_i32_literal(t)?);
+                } else {
+                    lits.push(tensor_to_literal(t)?);
+                }
+                ai += 1;
+            }
+        }
+        if ai != activations.len() {
+            bail!("{} activations supplied, {} consumed", activations.len(), ai);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        outs.iter().map(literal_to_tensor).collect()
+    }
+
+    pub fn n_activation_args(&self) -> usize {
+        self.spec.args.len() - self.bound.len()
+    }
+}
+
+/// All compiled graphs of one artifact bundle on a shared PJRT client.
+///
+/// One `ModelRuntime` is shared by every simulated device (they represent
+/// replicas of the same model); per-device state lives in the coordinator.
+pub struct ModelRuntime {
+    pub client: Arc<xla::PjRtClient>,
+    pub artifact: Arc<Artifact>,
+    executors: BTreeMap<String, Arc<Executor>>,
+}
+
+impl ModelRuntime {
+    /// Compile every graph in the bundle. Weight/codebook args are bound to
+    /// literals from weights.bin immediately (layer-0 block weights by
+    /// default; use [`Self::executor_for_layer`] to rebind other layers).
+    pub fn load(artifact: Artifact) -> Result<ModelRuntime> {
+        let client = Arc::new(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        let artifact = Arc::new(artifact);
+        let mut executors = BTreeMap::new();
+        for (name, spec) in &artifact.graphs {
+            let exe = Arc::new(compile(&client, spec)?);
+            let bound = bind_weights(&artifact, spec, 0)?;
+            executors.insert(
+                name.clone(),
+                Arc::new(Executor { spec: spec.clone(), exe, bound }),
+            );
+        }
+        Ok(ModelRuntime { client, artifact, executors })
+    }
+
+    pub fn executor(&self, name: &str) -> Result<Arc<Executor>> {
+        self.executors
+            .get(name)
+            .cloned()
+            .with_context(|| format!("no executor `{name}`"))
+    }
+
+    /// A copy of `name`'s executor with layer-`li` weights bound. The
+    /// compiled PJRT executable is shared; only literals differ.
+    pub fn executor_for_layer(&self, name: &str, li: usize) -> Result<Executor> {
+        let base = self.executor(name)?;
+        let spec = base.spec.clone();
+        let bound = bind_weights(&self.artifact, &spec, li)?;
+        Ok(Executor { spec, exe: base.exe.clone(), bound })
+    }
+
+    /// Build per-layer executors for a block-type graph, binding each
+    /// layer's weights once (the serving hot path's working set).
+    pub fn layer_bank(&self, name: &str) -> Result<Vec<Executor>> {
+        (0..self.artifact.meta.n_layers)
+            .map(|li| self.executor_for_layer(name, li))
+            .collect()
+    }
+}
+
+fn compile(client: &xla::PjRtClient, spec: &GraphSpec) -> Result<xla::PjRtLoadedExecutable> {
+    let path = spec
+        .file
+        .to_str()
+        .with_context(|| format!("non-utf8 path {:?}", spec.file))?;
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Bind `weight` args from the tensor table (w.<name> → blocks.<li>.<name>,
+/// plain names otherwise) and `codebook` args from codebooks[li].
+fn bind_weights(
+    artifact: &Artifact,
+    spec: &GraphSpec,
+    li: usize,
+) -> Result<BTreeMap<usize, xla::Literal>> {
+    let mut bound = BTreeMap::new();
+    for (pos, arg) in spec.args.iter().enumerate() {
+        match arg.kind.as_str() {
+            "weight" => {
+                // block graphs name weight args `w.<name>` (bound per layer);
+                // embed/head graphs use the dotted tensor-table name directly.
+                let t = if let Some(block_name) = arg.name.strip_prefix("w.") {
+                    artifact.tensor(&format!("blocks.{li}.{block_name}"))?
+                } else {
+                    artifact.tensor(&arg.name)?
+                };
+                bound.insert(pos, tensor_to_literal(t)?);
+            }
+            "codebook" => {
+                let cb = &artifact.codebooks[li.min(artifact.codebooks.len() - 1)];
+                let t = Tensor::from_vec(&[cb.groups, cb.k, cb.dg], cb.data.clone())?;
+                bound.insert(pos, tensor_to_literal(&t)?);
+            }
+            _ => {}
+        }
+    }
+    Ok(bound)
+}

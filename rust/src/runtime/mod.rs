@@ -1,0 +1,14 @@
+//! PJRT runtime: load the python-AOT artifacts and execute them.
+//!
+//! `python/compile/aot.py` writes HLO *text* (the only interchange format
+//! the image's xla_extension 0.5.1 accepts from jax ≥ 0.5 — serialized
+//! protos carry 64-bit instruction ids it rejects), plus `manifest.json`,
+//! `weights.bin` and `codebooks.bin`. This module parses the manifest,
+//! compiles each graph on a shared [`xla::PjRtClient`], and binds weight
+//! buffers once per executable so the hot path only uploads activations.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Artifact, GraphSpec, TensorSpec};
+pub use executor::{Executor, ModelRuntime};

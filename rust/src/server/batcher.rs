@@ -1,0 +1,97 @@
+//! Request queue + dynamic batcher.
+//!
+//! The paper's serving experiment (Fig 6) uses batch size 1; the batcher
+//! still exists as a first-class component: it groups compatible queued
+//! requests up to `max_batch` and a `max_wait` deadline (vLLM-style
+//! continuous batching degenerates to FIFO at batch 1).
+
+use std::collections::VecDeque;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// number of content tokens (must match the AOT shape for live runs)
+    pub tokens: usize,
+}
+
+/// FIFO queue with batch formation.
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    pub max_batch: usize,
+    pub max_wait_s: f64,
+    pub enqueued: u64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait_s: f64) -> Batcher {
+        Batcher { queue: VecDeque::new(), max_batch, max_wait_s, enqueued: 0 }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.enqueued += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Form the next batch at time `now`: returns requests if either the
+    /// batch is full or the oldest request has waited past max_wait (or the
+    /// queue is non-empty and `force`).
+    pub fn next_batch(&mut self, now: f64, force: bool) -> Vec<Request> {
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        let oldest_wait = now - self.queue.front().unwrap().arrival_s;
+        if self.queue.len() >= self.max_batch || oldest_wait >= self.max_wait_s || force {
+            let take = self.queue.len().min(self.max_batch);
+            return self.queue.drain(..take).collect();
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request { id, arrival_s: t, tokens: 64 }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = Batcher::new(2, 0.0);
+        b.push(req(1, 0.0));
+        b.push(req(2, 0.1));
+        b.push(req(3, 0.2));
+        let batch = b.next_batch(0.2, false);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn waits_for_fill_until_deadline() {
+        let mut b = Batcher::new(4, 0.5);
+        b.push(req(1, 0.0));
+        assert!(b.next_batch(0.1, false).is_empty()); // not full, not old
+        let batch = b.next_batch(0.6, false); // deadline passed
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn force_drains() {
+        let mut b = Batcher::new(8, 100.0);
+        b.push(req(1, 0.0));
+        assert_eq!(b.next_batch(0.0, true).len(), 1);
+        assert!(b.is_empty());
+    }
+}

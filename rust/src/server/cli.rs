@@ -1,0 +1,226 @@
+//! Implementations of the `astra` CLI subcommands.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{shape_preset, vq_preset, RunConfig};
+use crate::coordinator::Cluster;
+use crate::model::shape::VqSetting;
+use crate::parallel::strategies::{Strategy, StrategyKind};
+use crate::sim::latency::{evaluate, SimParams};
+use crate::tensor::Tensor;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut c = match args.get("config") {
+        Some(p) => RunConfig::from_file(Path::new(p))?,
+        None => RunConfig::default(),
+    };
+    if let Some(d) = args.get("artifacts") {
+        c.artifacts_dir = d.to_string();
+    }
+    c.n_devices = args.usize_or("devices", c.n_devices)?;
+    c.bandwidth_mbps = args.f64_or("bandwidth", c.bandwidth_mbps)?;
+    c.loss_rate = args.f64_or("loss", c.loss_rate)?;
+    c.seed = args.usize_or("seed", c.seed as usize)? as u64;
+    if let Some(split) = args.get("token-split") {
+        c.token_split = split
+            .split(',')
+            .map(|s| s.trim().parse().context("bad --token-split"))
+            .collect::<Result<_>>()?;
+    }
+    Ok(c)
+}
+
+fn synthetic_input(cluster: &Cluster, rng: &mut Rng) -> Result<Tensor> {
+    let meta = &cluster.artifact.meta;
+    if meta.causal {
+        let ids: Vec<f32> = (0..meta.seq_len).map(|_| rng.below(meta.vocab_size) as f32).collect();
+        Tensor::from_vec(&[meta.seq_len, 1], ids)
+    } else {
+        let mut x = Tensor::zeros(&[meta.seq_len, meta.patch_dim]);
+        rng.fill_normal(&mut x.data);
+        Ok(x)
+    }
+}
+
+/// `astra run` — one prefill through the live cluster.
+pub fn run_once(args: &Args) -> Result<()> {
+    let config = run_config(args)?;
+    let use_pjrt = !args.flag("native") && !args.flag("no-pjrt");
+    let dir = config.artifacts_dir.clone();
+    println!("loading artifacts from {dir} (pjrt={use_pjrt})...");
+    let cluster = Cluster::load(Path::new(&dir), config, use_pjrt)?;
+    let mut rng = Rng::new(cluster.config.seed);
+    let x = synthetic_input(&cluster, &mut rng)?;
+
+    let out = cluster.prefill(&x)?;
+    let r = &out.report;
+    println!("\n== ASTRA prefill ({} devices, {} Mbps) ==",
+        cluster.config.n_devices, cluster.config.bandwidth_mbps);
+    println!("virtual latency     {:>10.3} ms", r.latency_s * 1e3);
+    println!("  compute           {:>10.3} ms", r.compute_s * 1e3);
+    println!("  communication     {:>10.3} ms", r.comm_s * 1e3);
+    println!("payload on wire     {:>10.1} kbit ({} messages)", r.payload_bits / 1e3, r.messages);
+    println!("bits/token/block    {:>10.1}", r.bits_per_token_block);
+    println!("FPAR                {:>10.4}", r.fpar);
+    let k = out.logits.data.len().min(8);
+    println!("logits[..{k}]       {:?}", &out.logits.data[..k]);
+
+    let (base_logits, base_t) = cluster.prefill_single_device(&x)?;
+    println!("\n== single-device baseline ==");
+    println!("wall latency        {:>10.3} ms", base_t * 1e3);
+    let diff = crate::tensor::max_abs_diff(&out.logits, &base_logits);
+    println!("|ASTRA - baseline|  {:>10.4} max over logits (VQ approximation error)", diff);
+    Ok(())
+}
+
+/// `astra serve` — synthetic request stream over the live cluster.
+pub fn serve(args: &Args) -> Result<()> {
+    let config = run_config(args)?;
+    let n_requests = args.usize_or("requests", 16)?;
+    let rate = args.f64_or("arrival-rate", 4.0)?;
+    let use_pjrt = !args.flag("native") && !args.flag("no-pjrt");
+    let dir = config.artifacts_dir.clone();
+    let cluster = Cluster::load(Path::new(&dir), config, use_pjrt)?;
+    let mut rng = Rng::new(cluster.config.seed);
+
+    let mut lat = crate::util::stats::Summary::new();
+    let mut vlat = crate::util::stats::Summary::new();
+    let mut bits_total = 0.0;
+    let t0 = Instant::now();
+    let _ = rate; // open-loop pacing is virtual; requests run back-to-back
+    for i in 0..n_requests {
+        let x = synthetic_input(&cluster, &mut rng)?;
+        let w0 = Instant::now();
+        let out = cluster.prefill(&x)?;
+        lat.add(w0.elapsed().as_secs_f64());
+        vlat.add(out.report.latency_s);
+        bits_total += out.report.payload_bits;
+        if i == 0 {
+            println!(
+                "first request: virtual {:.2} ms, {} msgs, {:.0} bits/token/block",
+                out.report.latency_s * 1e3,
+                out.report.messages,
+                out.report.bits_per_token_block
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n== serve report ({n_requests} requests, {} devices, {} Mbps) ==",
+        cluster.config.n_devices, cluster.config.bandwidth_mbps);
+    println!("virtual latency   mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms",
+        vlat.mean() * 1e3, vlat.p50() * 1e3, vlat.p95() * 1e3);
+    println!("host wall/request mean {:.2} ms (single-core execution of all {} devices)",
+        lat.mean() * 1e3, cluster.config.n_devices);
+    println!("virtual throughput {:.2} req/s", 1.0 / vlat.mean());
+    println!("host throughput    {:.2} req/s", n_requests as f64 / wall);
+    println!("total payload      {:.1} Mbit", bits_total / 1e6);
+    Ok(())
+}
+
+/// `astra simulate` — cost-model latency point.
+pub fn simulate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "vit-base");
+    let tokens = args.usize_or("tokens", 1024)?;
+    let n = args.usize_or("devices", 4)?;
+    let bw = args.f64_or("bandwidth", 100.0)?;
+    let shape = shape_preset(&model, tokens)?;
+    let params = if model == "llama3-8b" {
+        SimParams::paper_llama()
+    } else {
+        SimParams::paper_encoder()
+    };
+    let kind = match args.get_or("strategy", "astra").as_str() {
+        "single" => StrategyKind::SingleDevice,
+        "tp" => StrategyKind::TensorParallel,
+        "sp" => StrategyKind::SequenceParallel,
+        "bp-ag" => StrategyKind::BlockParallel {
+            n_b: args.usize_or("nb", 1)?,
+            sp_variant: false,
+        },
+        "bp-sp" => StrategyKind::BlockParallel {
+            n_b: args.usize_or("nb", 1)?,
+            sp_variant: true,
+        },
+        "astra" => StrategyKind::Astra {
+            vq: match args.get("vq") {
+                Some(v) => vq_preset(v)?,
+                None => VqSetting::new(16, 1024),
+            },
+        },
+        other => anyhow::bail!("unknown strategy `{other}`"),
+    };
+    let strat = Strategy::new(kind, n);
+    let single = Strategy::new(StrategyKind::SingleDevice, 1);
+    let bd = evaluate(&strat.schedule(&shape), &params, bw);
+    let bd_single = evaluate(&single.schedule(&shape), &params, bw);
+    println!("model={model} T={tokens} N={n} bandwidth={bw} Mbps strategy={}", strat.name());
+    println!("latency   {:>10.2} ms  (compute {:.2} ms, comm {:.2} ms, comm {:.1}%)",
+        bd.total() * 1e3, bd.compute_s * 1e3, bd.comm_s * 1e3, bd.comm_fraction() * 100.0);
+    println!("single    {:>10.2} ms", bd_single.total() * 1e3);
+    println!("speedup   {:>10.2}x", bd_single.total() / bd.total());
+    Ok(())
+}
+
+/// `astra calibrate` — measure this host's effective FLOP/s on the block
+/// shapes, for feeding a custom DeviceModel.
+pub fn calibrate(args: &Args) -> Result<()> {
+    let d = args.usize_or("dim", 256)?;
+    let t = args.usize_or("tokens", 128)?;
+    let mut rng = Rng::new(0);
+    let blk = crate::model::native::BlockWeights::random(&mut rng, d, 4 * d);
+    let mut x = Tensor::zeros(&[t, d]);
+    rng.fill_normal(&mut x.data);
+    let flops = crate::model::TransformerShape {
+        n_layers: 1, d_model: d, n_heads: 4, d_ff: 4 * d, seq_len: t, elem_bytes: 4,
+    }
+    .block_flops(t, t);
+    // warmup + timed loop
+    for _ in 0..2 {
+        crate::model::native::baseline_block(&x, None, &blk, 4)?;
+    }
+    let t0 = Instant::now();
+    let iters = 10;
+    for _ in 0..iters {
+        crate::model::native::baseline_block(&x, None, &blk, 4)?;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("native block [{t}x{d}] : {:.3} ms/block, {:.2} GFLOP/s", per * 1e3, flops / per / 1e9);
+    println!("(pass as a custom DeviceModel {{ flops }} for host-scale simulations)");
+    Ok(())
+}
+
+/// `astra info` — artifact manifest summary.
+pub fn info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let artifact = crate::runtime::Artifact::load(Path::new(&dir))?;
+    let m = &artifact.meta;
+    println!("artifact bundle: {dir}");
+    println!(
+        "model: {} layers, d={}, heads={}, ff={}, T={}, {}",
+        m.n_layers, m.d_model, m.n_heads, m.d_ff, m.seq_len,
+        if m.causal { "decoder (causal)" } else { "encoder (+CLS)" }
+    );
+    println!(
+        "astra: {} devices, G={}, K={}, {} bits/token/block",
+        m.n_devices, m.groups, m.codebook_size, m.bits_per_token
+    );
+    println!("graphs:");
+    for (name, g) in &artifact.graphs {
+        let args_desc: Vec<String> = g
+            .args
+            .iter()
+            .map(|a| format!("{}{:?}", if a.kind == "weight" { "w:" } else { "" }, a.shape))
+            .collect();
+        println!("  {name:<16} {}", args_desc.join(" "));
+    }
+    println!("tensors: {} ({} floats)", artifact.tensors.len(),
+        artifact.tensors.values().map(|t| t.numel()).sum::<usize>());
+    println!("codebooks: {} layers x [{}x{}x{}]", artifact.codebooks.len(),
+        artifact.codebooks[0].groups, artifact.codebooks[0].k, artifact.codebooks[0].dg);
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Serving layer: request intake, dynamic batching, the serve loop over
+//! the simulated cluster / cost model, metrics, and the CLI entrypoints.
+
+pub mod batcher;
+pub mod cli;
+pub mod engine;
+
+pub use batcher::{Batcher, Request};
+pub use engine::{ServeEngine, ServeReport};

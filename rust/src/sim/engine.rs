@@ -1,0 +1,155 @@
+//! Minimal discrete-event engine: a time-ordered queue of closures.
+//!
+//! Deliberately simple — events are `FnOnce(&mut Engine)` scheduled at
+//! absolute times; the run loop pops in time order. State lives in the
+//! caller's structures (captured via `Rc<RefCell<..>>` or indices), which
+//! keeps the engine generic across the serving simulator and tests.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event: fires `action` at `time`.
+pub struct Event {
+    pub time: f64,
+    seq: u64,
+    action: Box<dyn FnOnce(&mut Engine)>,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, seq): reverse for BinaryHeap
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulation clock + event queue.
+#[derive(Default)]
+pub struct Engine {
+    now: f64,
+    queue: BinaryHeap<Event>,
+    seq: u64,
+    processed: u64,
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine::default()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `action` `delay` seconds from now.
+    pub fn after(&mut self, delay: f64, action: impl FnOnce(&mut Engine) + 'static) {
+        self.at(self.now + delay, action);
+    }
+
+    /// Schedule `action` at absolute time `time` (clamped to now).
+    pub fn at(&mut self, time: f64, action: impl FnOnce(&mut Engine) + 'static) {
+        let time = time.max(self.now);
+        self.seq += 1;
+        self.queue.push(Event { time, seq: self.seq, action: Box::new(action) });
+    }
+
+    /// Run until the queue drains or the horizon passes.
+    pub fn run_until(&mut self, horizon: f64) {
+        while let Some(ev) = self.queue.peek() {
+            if ev.time > horizon {
+                break;
+            }
+            let ev = self.queue.pop().unwrap();
+            self.now = ev.time;
+            self.processed += 1;
+            (ev.action)(self);
+        }
+        self.now = self.now.max(horizon.min(self.now + 0.0));
+    }
+
+    /// Run to quiescence.
+    pub fn run(&mut self) {
+        self.run_until(f64::INFINITY);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        for (t, tag) in [(3.0, 'c'), (1.0, 'a'), (2.0, 'b')] {
+            let log = log.clone();
+            e.at(t, move |_| log.borrow_mut().push(tag));
+        }
+        e.run();
+        assert_eq!(*log.borrow(), vec!['a', 'b', 'c']);
+        assert_eq!(e.now(), 3.0);
+    }
+
+    #[test]
+    fn ties_fire_in_insertion_order() {
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let mut e = Engine::new();
+        for tag in 0..5 {
+            let log = log.clone();
+            e.at(1.0, move |_| log.borrow_mut().push(tag));
+        }
+        e.run();
+        assert_eq!(*log.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cascading_events() {
+        let count = Rc::new(RefCell::new(0));
+        let mut e = Engine::new();
+        fn chain(e: &mut Engine, left: usize, count: Rc<RefCell<usize>>) {
+            if left == 0 {
+                return;
+            }
+            e.after(1.0, move |e| {
+                *count.borrow_mut() += 1;
+                chain(e, left - 1, count);
+            });
+        }
+        chain(&mut e, 10, count.clone());
+        e.run();
+        assert_eq!(*count.borrow(), 10);
+        assert_eq!(e.now(), 10.0);
+    }
+
+    #[test]
+    fn horizon_cuts_off() {
+        let count = Rc::new(RefCell::new(0));
+        let mut e = Engine::new();
+        for t in 0..10 {
+            let count = count.clone();
+            e.at(t as f64, move |_| *count.borrow_mut() += 1);
+        }
+        e.run_until(4.5);
+        assert_eq!(*count.borrow(), 5); // t = 0..4
+    }
+}

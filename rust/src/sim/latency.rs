@@ -1,0 +1,140 @@
+//! Schedule evaluation: latency + compute/comm breakdown under static or
+//! time-varying bandwidth. Regenerates the per-request numbers behind
+//! Figures 1, 3, 4, 5 and Tables 4, 7.
+
+use crate::comm::trace::BandwidthTrace;
+use crate::parallel::cost::{DeviceModel, Schedule};
+
+/// Environment a schedule is evaluated in.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    pub device: DeviceModel,
+    /// per-collective-stage sync latency (protocol overhead), seconds
+    pub stage_latency_s: f64,
+}
+
+impl SimParams {
+    pub fn paper_encoder() -> SimParams {
+        SimParams { device: DeviceModel::paper_1660ti(), stage_latency_s: 0.0006 }
+    }
+
+    pub fn paper_llama() -> SimParams {
+        SimParams { device: DeviceModel::paper_titanx_llama(), stage_latency_s: 0.002 }
+    }
+}
+
+/// Latency breakdown of one prefill.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    pub compute_s: f64,
+    pub comm_s: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+
+    /// Fraction of total latency spent communicating (paper Fig 3 reports
+    /// 58.6–93.5% for the baselines below 100 Mbps).
+    pub fn comm_fraction(&self) -> f64 {
+        if self.total() == 0.0 {
+            0.0
+        } else {
+            self.comm_s / self.total()
+        }
+    }
+}
+
+/// Evaluate under a static bandwidth.
+pub fn evaluate(sched: &Schedule, params: &SimParams, bandwidth_mbps: f64) -> Breakdown {
+    let (compute_s, comm_s) =
+        sched.latency_breakdown(&params.device, bandwidth_mbps, params.stage_latency_s);
+    Breakdown { compute_s, comm_s }
+}
+
+/// Evaluate against a time-varying trace starting at absolute time `t0`;
+/// phases execute sequentially, transfers integrate the trace.
+pub fn evaluate_on_trace(
+    sched: &Schedule,
+    params: &SimParams,
+    trace: &BandwidthTrace,
+    t0: f64,
+) -> Breakdown {
+    let mut t = t0;
+    let mut bd = Breakdown::default();
+    for p in &sched.phases {
+        let c = params.device.compute_time(p.compute_flops, p.launches);
+        t += c;
+        bd.compute_s += c;
+        if p.comm.bits > 0.0 || p.comm.stages > 0 {
+            let m = trace.transfer_time(t, p.comm.bits)
+                + p.comm.stages as f64 * params.stage_latency_s;
+            t += m;
+            bd.comm_s += m;
+        }
+    }
+    bd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shape::{TransformerShape, VqSetting};
+    use crate::parallel::strategies::{Strategy, StrategyKind};
+
+    fn shape() -> TransformerShape {
+        TransformerShape::paper_encoder(1024)
+    }
+
+    #[test]
+    fn static_equals_constant_trace() {
+        let s = Strategy::new(StrategyKind::SequenceParallel, 4).schedule(&shape());
+        let p = SimParams::paper_encoder();
+        let a = evaluate(&s, &p, 50.0);
+        let tr = BandwidthTrace::constant(50.0, 1e9);
+        let b = evaluate_on_trace(&s, &p, &tr, 0.0);
+        assert!((a.total() - b.total()).abs() < 1e-9);
+        assert!((a.comm_s - b.comm_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baselines_comm_dominated_below_100mbps() {
+        // paper Fig 3: comm is 58.6-93.5% of baseline latency under 100 Mbps
+        let p = SimParams::paper_encoder();
+        for mbps in [20.0, 50.0, 100.0] {
+            for s in [
+                Strategy::new(StrategyKind::BlockParallel { n_b: 1, sp_variant: false }, 4),
+                Strategy::new(StrategyKind::BlockParallel { n_b: 1, sp_variant: true }, 4),
+            ] {
+                let bd = evaluate(&s.schedule(&shape()), &p, mbps);
+                assert!(
+                    bd.comm_fraction() > 0.45,
+                    "{} @ {mbps}: {}",
+                    s.name(),
+                    bd.comm_fraction()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn astra_not_comm_dominated() {
+        let p = SimParams::paper_encoder();
+        let astra = Strategy::new(
+            StrategyKind::Astra { vq: VqSetting::new(1, 1024) }, 4);
+        let bd = evaluate(&astra.schedule(&shape()), &p, 20.0);
+        assert!(bd.comm_fraction() < 0.3, "{}", bd.comm_fraction());
+    }
+
+    #[test]
+    fn trace_slowdown_under_low_bandwidth_slot() {
+        let p = SimParams::paper_encoder();
+        let s = Strategy::new(StrategyKind::SequenceParallel, 4).schedule(&shape());
+        let hi = BandwidthTrace::constant(100.0, 1e9);
+        let lo = BandwidthTrace::constant(10.0, 1e9);
+        let t_hi = evaluate_on_trace(&s, &p, &hi, 0.0).total();
+        let t_lo = evaluate_on_trace(&s, &p, &lo, 0.0).total();
+        assert!(t_lo > 5.0 * t_hi);
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event latency simulation.
+//!
+//! Two layers:
+//!  * [`latency`] — evaluates a [`crate::parallel::Schedule`] against a
+//!    device model and a (possibly time-varying) bandwidth, producing the
+//!    compute/communication breakdown used by Figures 1, 3–5 and
+//!    Tables 4/7.
+//!  * [`engine`] — a general binary-heap event queue used by the serving
+//!    simulator (request streams under dynamic bandwidth, Figure 6) and
+//!    by failure-injection tests.
+
+pub mod engine;
+pub mod latency;
+
+pub use engine::{Engine, Event};
+pub use latency::{evaluate, evaluate_on_trace, Breakdown, SimParams};

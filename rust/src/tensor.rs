@@ -1,0 +1,294 @@
+//! Minimal dense f32 tensor used by the native reference model, the VQ
+//! engine, and host-side staging for the PJRT runtime.
+//!
+//! Row-major, owned storage. This is deliberately not a general ndarray:
+//! the hot paths (matmul, layernorm, attention) are hand-written for the
+//! 2-D shapes the coordinator needs, with a cache-blocked matmul that the
+//! §Perf pass tunes.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        if self.shape.len() != 2 {
+            bail!("expected rank-2, got shape {:?}", self.shape);
+        }
+        Ok((self.shape[0], self.shape[1]))
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = (self.shape[0], self.shape[1]);
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {shape:?}", self.shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Stack rows of `parts` (all [ri, C]) into one [sum ri, C] tensor.
+    pub fn vcat(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("vcat of nothing");
+        }
+        let c = parts[0].shape[1];
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            let (r, pc) = p.dims2()?;
+            if pc != c {
+                bail!("vcat width mismatch: {c} vs {pc}");
+            }
+            rows += r;
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::from_vec(&[rows, c], data)
+    }
+
+    /// Slice rows [start, start+len) of a 2-D tensor.
+    pub fn rows(&self, start: usize, len: usize) -> Result<Tensor> {
+        let (r, c) = self.dims2()?;
+        if start + len > r {
+            bail!("row slice {start}+{len} out of {r}");
+        }
+        Ok(Tensor {
+            shape: vec![len, c],
+            data: self.data[start * c..(start + len) * c].to_vec(),
+        })
+    }
+}
+
+/// C = A @ B for A [m, k], B [k, n]. Cache-blocked over k with an
+/// accumulate-into-row inner loop (auto-vectorizes well on one core).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = a.dims2()?;
+    let (kb, n) = b.dims2()?;
+    if k != kb {
+        bail!("matmul inner dim mismatch {k} vs {kb}");
+    }
+    let mut out = vec![0.0f32; m * n];
+    // ikj order: for each a[i, kk], axpy into out row i. Streams B rows.
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// C = A @ B^T for A [m, k], B [n, k] — the attention QK^T shape.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = a.dims2()?;
+    let (n, kb) = b.dims2()?;
+    if k != kb {
+        bail!("matmul_bt inner dim mismatch {k} vs {kb}");
+    }
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow.iter()) {
+                acc += x * y;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// y = x + b broadcast over rows (x [m, n], b [n]).
+pub fn add_bias(x: &mut Tensor, b: &[f32]) {
+    let n = b.len();
+    for row in x.data.chunks_mut(n) {
+        for (v, bv) in row.iter_mut().zip(b.iter()) {
+            *v += bv;
+        }
+    }
+}
+
+/// Element-wise a += b.
+pub fn add_inplace(a: &mut Tensor, b: &Tensor) {
+    debug_assert_eq!(a.shape, b.shape);
+    for (x, y) in a.data.iter_mut().zip(b.data.iter()) {
+        *x += y;
+    }
+}
+
+/// LayerNorm over the last axis of a 2-D tensor.
+pub fn layer_norm(x: &Tensor, gamma: &[f32], beta: &[f32], eps: f32) -> Tensor {
+    let (m, n) = (x.shape[0], x.shape[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x.data[i * n..(i + 1) * n];
+        let mean = row.iter().sum::<f32>() / n as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            orow[j] = (row[j] - mean) * inv * gamma[j] + beta[j];
+        }
+    }
+    Tensor { shape: vec![m, n], data: out }
+}
+
+/// GELU with the tanh approximation (matches kernels/ref.py exactly).
+pub fn gelu(x: &mut Tensor) {
+    for v in x.data.iter_mut() {
+        let h = *v;
+        *v = 0.5 * h * (1.0 + (0.7978845608028654 * (h + 0.044715 * h * h * h)).tanh());
+    }
+}
+
+/// Row-wise softmax with additive bias (bias same shape, may be -1e30).
+pub fn softmax_rows(x: &mut Tensor, bias: Option<&Tensor>) {
+    let (m, n) = (x.shape[0], x.shape[1]);
+    for i in 0..m {
+        let row = &mut x.data[i * n..(i + 1) * n];
+        if let Some(b) = bias {
+            for (v, bv) in row.iter_mut().zip(b.data[i * n..(i + 1) * n].iter()) {
+                *v += bv;
+            }
+        }
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Max |a - b| over all elements.
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    a.data
+        .iter()
+        .zip(b.data.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let a = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let bt = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0]).unwrap();
+        // b = bt^T = [3, 2]
+        let b = Tensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]).unwrap();
+        assert_eq!(matmul_bt(&a, &bt).unwrap().data, matmul(&a, &b).unwrap().data);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let x = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let y = layer_norm(&x, &g, &b, 1e-5);
+        let mean: f32 = y.data.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        let var: f32 = y.data.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let mut x = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]).unwrap();
+        softmax_rows(&mut x, None);
+        for i in 0..2 {
+            let s: f32 = x.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_respects_mask() {
+        let mut x = Tensor::from_vec(&[1, 3], vec![5.0, 5.0, 5.0]).unwrap();
+        let bias = Tensor::from_vec(&[1, 3], vec![0.0, -1e30, 0.0]).unwrap();
+        softmax_rows(&mut x, Some(&bias));
+        assert!(x.data[1] < 1e-12);
+        assert!((x.data[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vcat_and_rows() {
+        let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![3.0, 4.0, 5.0, 6.0]).unwrap();
+        let c = Tensor::vcat(&[&a, &b]).unwrap();
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.rows(1, 2).unwrap().data, vec![3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::from_vec(&[2, 2], vec![0.0; 4]).unwrap();
+        let b = Tensor::from_vec(&[3, 2], vec![0.0; 6]).unwrap();
+        assert!(matmul(&a, &b).is_err());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 4]).is_err());
+    }
+}

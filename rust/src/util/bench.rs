@@ -1,0 +1,127 @@
+//! Micro-benchmark harness (criterion is not vendored in this image).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```no_run
+//! use astra::util::bench::Bench;
+//! let mut b = Bench::new("vq");
+//! b.run("encode_1024", || { /* work */ });
+//! b.finish();
+//! ```
+//! Each case is warmed up, then timed for a target wall budget; reports
+//! mean / p50 / p95 per iteration and iterations/sec.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+pub struct Bench {
+    group: String,
+    budget: Duration,
+    min_iters: usize,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // honor ASTRA_BENCH_BUDGET_MS for quick CI runs
+        let ms = std::env::var("ASTRA_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(500u64);
+        Bench {
+            group: group.to_string(),
+            budget: Duration::from_millis(ms),
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; prevents trivial dead-code elimination by
+    /// requiring the closure to return a value that is black-boxed.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
+        // warmup
+        for _ in 0..2 {
+            black_box(f());
+        }
+        let mut s = Summary::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget || s.len() < self.min_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            s.add(t0.elapsed().as_secs_f64());
+            if s.len() > 1_000_000 {
+                break;
+            }
+        }
+        self.report(name, &mut s);
+        self.results.push((name.to_string(), s));
+    }
+
+    fn report(&self, name: &str, s: &mut Summary) {
+        println!(
+            "{:<40} {:>12} {:>12} {:>12} {:>14}",
+            format!("{}/{}", self.group, name),
+            fmt_time(s.mean()),
+            fmt_time(s.p50()),
+            fmt_time(s.p95()),
+            format!("{:.0} it/s", 1.0 / s.mean()),
+        );
+    }
+
+    pub fn finish(self) {
+        println!("{} cases done: {}", self.group, self.results.len());
+    }
+}
+
+/// Opaque identity that inhibits constant folding.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs.is_nan() {
+        "n/a".into()
+    } else if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Header line for bench output tables.
+pub fn header() {
+    println!(
+        "{:<40} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "mean", "p50", "p95", "rate"
+    );
+    println!("{}", "-".repeat(94));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-10).contains("ns"));
+        assert!(fmt_time(5e-5).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn bench_runs() {
+        std::env::set_var("ASTRA_BENCH_BUDGET_MS", "10");
+        let mut b = Bench::new("test");
+        let mut acc = 0u64;
+        b.run("noop", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        b.finish();
+    }
+}

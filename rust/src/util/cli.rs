@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (`--flag`, `--key value`, positionals).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line: positionals + `--key value` options + `--flag`s.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    /// `known_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&'static str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known_flags: &[&'static str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad number `{v}`")),
+        }
+    }
+
+    /// Comma-separated list of numbers, e.g. `--bw 10,20,50`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| anyhow!("--{name}: bad number `{p}`")))
+                .collect(),
+        }
+    }
+
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| anyhow!("--{name}: bad integer `{p}`")))
+                .collect(),
+        }
+    }
+
+    /// First positional or error.
+    pub fn command(&self) -> Result<&str> {
+        self.positional
+            .first()
+            .map(|s| s.as_str())
+            .ok_or_else(|| bail_usage())
+    }
+}
+
+fn bail_usage() -> anyhow::Error {
+    anyhow!("missing subcommand (try `--help`)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose", "fast"]).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--devices", "4", "--bw=20.5", "--verbose", "extra"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.usize_or("devices", 1).unwrap(), 4);
+        assert_eq!(a.f64_or("bw", 0.0).unwrap(), 20.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--bw", "10,20,50"]);
+        assert_eq!(a.f64_list_or("bw", &[]).unwrap(), vec![10.0, 20.0, 50.0]);
+        assert_eq!(a.usize_list_or("n", &[2, 4]).unwrap(), vec![2, 4]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--devices".to_string()], &[]).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-light utilities: JSON, PRNG, CLI parsing, bench harness.
+//!
+//! The build image has no network access and only the `xla` crate's
+//! transitive dependencies vendored, so the usual suspects (serde, clap,
+//! rand, criterion) are implemented here at the size this project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

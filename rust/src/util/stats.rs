@@ -1,0 +1,162 @@
+//! Latency statistics: online summaries and percentile estimation.
+
+/// Collects samples; computes mean / percentiles / throughput summaries.
+#[derive(Debug, Default, Clone)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Nearest-rank percentile, p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        let rank = ((p / 100.0) * (self.samples.len() as f64 - 1.0)).round() as usize;
+        self.samples[rank.min(self.samples.len() - 1)]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Windowed throughput counter (events per window) — Fig 6 style bars.
+#[derive(Debug, Clone)]
+pub struct WindowedCounter {
+    window: f64,
+    counts: Vec<usize>,
+}
+
+impl WindowedCounter {
+    pub fn new(window_s: f64) -> Self {
+        Self { window: window_s, counts: Vec::new() }
+    }
+
+    /// Record an event at absolute time t (seconds).
+    pub fn record(&mut self, t: f64) {
+        let idx = (t / self.window).floor() as usize;
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+    }
+
+    pub fn bars(&self) -> &[usize] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Overall events/sec across the recorded horizon.
+    pub fn rate(&self) -> f64 {
+        if self.counts.is_empty() {
+            return 0.0;
+        }
+        self.total() as f64 / (self.counts.len() as f64 * self.window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.std() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentiles_on_uniform() {
+        let mut s = Summary::new();
+        for i in 0..1000 {
+            s.add(i as f64);
+        }
+        assert!((s.percentile(95.0) - 949.0).abs() <= 1.0);
+        assert!((s.p99() - 989.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn windowed_counter() {
+        let mut w = WindowedCounter::new(10.0);
+        for t in [0.0, 1.0, 9.9, 10.0, 25.0] {
+            w.record(t);
+        }
+        assert_eq!(w.bars(), &[3, 1, 1]);
+        assert_eq!(w.total(), 5);
+        assert!((w.rate() - 5.0 / 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.p50().is_nan());
+    }
+}

@@ -1,0 +1,120 @@
+//! K-means codebook initialization (Lloyd iterations, dead-centroid
+//! re-seeding) — the rust twin of `compile/vq.py::kmeans_init`, used when
+//! the coordinator (re)builds codebooks from harvested embeddings, e.g.
+//! for bandwidth-aware re-adaptation experiments.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::codebook::Codebook;
+
+/// Run k-means per group over x [M, D]; returns a grouped codebook.
+pub fn kmeans(rng: &mut Rng, x: &Tensor, groups: usize, k: usize, iters: usize) -> Result<Codebook> {
+    let (m, d) = x.dims2()?;
+    if d % groups != 0 {
+        bail!("D={d} not divisible by G={groups}");
+    }
+    if m < k {
+        bail!("need at least K={k} samples, got {m}");
+    }
+    let dg = d / groups;
+    let mut data = vec![0.0f32; groups * k * dg];
+
+    for g in 0..groups {
+        // init: k distinct random samples
+        let seeds = rng.sample_indices(m, k);
+        for (c, &si) in seeds.iter().enumerate() {
+            let src = &x.row(si)[g * dg..(g + 1) * dg];
+            data[(g * k + c) * dg..(g * k + c + 1) * dg].copy_from_slice(src);
+        }
+        let mut assign = vec![0usize; m];
+        for _ in 0..iters {
+            // assignment step
+            for ti in 0..m {
+                let xg = &x.row(ti)[g * dg..(g + 1) * dg];
+                let mut best = f32::INFINITY;
+                for c in 0..k {
+                    let e = &data[(g * k + c) * dg..(g * k + c + 1) * dg];
+                    let mut dist = 0.0f32;
+                    for (a, b) in xg.iter().zip(e.iter()) {
+                        let diff = a - b;
+                        dist += diff * diff;
+                    }
+                    if dist < best {
+                        best = dist;
+                        assign[ti] = c;
+                    }
+                }
+            }
+            // update step
+            let mut counts = vec![0usize; k];
+            let mut sums = vec![0.0f32; k * dg];
+            for ti in 0..m {
+                let c = assign[ti];
+                counts[c] += 1;
+                let xg = &x.row(ti)[g * dg..(g + 1) * dg];
+                for (s, v) in sums[c * dg..(c + 1) * dg].iter_mut().zip(xg.iter()) {
+                    *s += v;
+                }
+            }
+            for c in 0..k {
+                let dst = &mut data[(g * k + c) * dg..(g * k + c + 1) * dg];
+                if counts[c] == 0 {
+                    // dead centroid: re-seed from a random sample
+                    let si = rng.below(m);
+                    dst.copy_from_slice(&x.row(si)[g * dg..(g + 1) * dg]);
+                } else {
+                    let inv = 1.0 / counts[c] as f32;
+                    for (d_, s) in dst.iter_mut().zip(sums[c * dg..(c + 1) * dg].iter()) {
+                        *d_ = s * inv;
+                    }
+                }
+            }
+        }
+    }
+    Codebook::new(groups, k, dg, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_beats_random_on_clustered_data() {
+        let mut rng = Rng::new(0);
+        // 4 well-separated clusters in 8-d
+        let mut centers = Tensor::zeros(&[4, 8]);
+        rng.fill_normal(&mut centers.data);
+        for v in centers.data.iter_mut() {
+            *v *= 5.0;
+        }
+        let mut x = Tensor::zeros(&[256, 8]);
+        for i in 0..256 {
+            let c = rng.below(4);
+            for j in 0..8 {
+                x.row_mut(i)[j] = centers.row(c)[j] + rng.normal_f32(0.0, 0.2);
+            }
+        }
+        let km = kmeans(&mut rng, &x, 2, 4, 12).unwrap();
+        let mut rand_data = vec![0.0f32; 2 * 4 * 4];
+        rng.fill_normal(&mut rand_data);
+        let rand_cb = Codebook::new(2, 4, 4, rand_data).unwrap();
+        let d_km = km.distortion(&x).unwrap();
+        let d_rand = rand_cb.distortion(&x).unwrap();
+        assert!(d_km < 0.5 * d_rand, "kmeans {d_km} vs random {d_rand}");
+    }
+
+    #[test]
+    fn kmeans_shape_and_errors() {
+        let mut rng = Rng::new(1);
+        let mut x = Tensor::zeros(&[32, 12]);
+        rng.fill_normal(&mut x.data);
+        let cb = kmeans(&mut rng, &x, 3, 8, 4).unwrap();
+        assert_eq!((cb.groups, cb.k, cb.dg), (3, 8, 4));
+        assert!(kmeans(&mut rng, &x, 5, 8, 4).is_err()); // 12 % 5 != 0
+        let tiny = Tensor::zeros(&[4, 12]);
+        assert!(kmeans(&mut rng, &tiny, 3, 8, 4).is_err()); // m < k
+    }
+}

@@ -1,0 +1,12 @@
+//! Native grouped vector quantization — the L3 hot-path twin of the Pallas
+//! kernels (`python/compile/kernels/vq_kernels.py`). The coordinator uses
+//! this for encode-before-send / decode-after-receive when it is cheaper
+//! than a PJRT dispatch, and the bit-packing codec that puts `G·log2(K)`
+//! bits per token on the (simulated) wire.
+
+pub mod codebook;
+pub mod kmeans;
+pub mod packing;
+
+pub use codebook::Codebook;
+pub use packing::{pack_indices, unpack_indices, packed_len_bytes};

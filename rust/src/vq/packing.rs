@@ -1,0 +1,114 @@
+//! Bit-packing codec for VQ indices.
+//!
+//! What actually crosses the simulated network: each index is `ceil(log2 K)`
+//! bits, packed little-endian into a byte stream. This makes the paper's
+//! "Total Bits per Token" columns *measured* quantities (message length in
+//! bits) rather than asserted formulas.
+
+use anyhow::{bail, Result};
+
+/// Bytes needed for `count` indices of `bits` bits each.
+pub fn packed_len_bytes(count: usize, bits: usize) -> usize {
+    (count * bits + 7) / 8
+}
+
+/// Pack indices (each < 2^bits) into a little-endian bitstream.
+pub fn pack_indices(indices: &[u32], bits: usize) -> Result<Vec<u8>> {
+    if bits == 0 || bits > 32 {
+        bail!("bits must be 1..=32, got {bits}");
+    }
+    let limit = if bits == 32 { u64::from(u32::MAX) + 1 } else { 1u64 << bits };
+    let mut out = vec![0u8; packed_len_bytes(indices.len(), bits)];
+    let mut bitpos = 0usize;
+    for &idx in indices {
+        if u64::from(idx) >= limit {
+            bail!("index {idx} does not fit in {bits} bits");
+        }
+        let mut v = u64::from(idx);
+        let mut remaining = bits;
+        while remaining > 0 {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(remaining);
+            out[byte] |= ((v & ((1 << take) - 1)) as u8) << off;
+            v >>= take;
+            bitpos += take;
+            remaining -= take;
+        }
+    }
+    Ok(out)
+}
+
+/// Unpack `count` indices of `bits` bits each.
+pub fn unpack_indices(bytes: &[u8], count: usize, bits: usize) -> Result<Vec<u32>> {
+    if bits == 0 || bits > 32 {
+        bail!("bits must be 1..=32, got {bits}");
+    }
+    if bytes.len() < packed_len_bytes(count, bits) {
+        bail!(
+            "need {} bytes for {count} x {bits}-bit indices, got {}",
+            packed_len_bytes(count, bits),
+            bytes.len()
+        );
+    }
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let mut v = 0u64;
+        let mut got = 0usize;
+        while got < bits {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(bits - got);
+            let chunk = (bytes[byte] >> off) as u64 & ((1 << take) - 1);
+            v |= chunk << got;
+            got += take;
+            bitpos += take;
+        }
+        out.push(v as u32);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_various_widths() {
+        let mut rng = Rng::new(0);
+        for bits in [1usize, 3, 7, 8, 10, 11, 13, 16, 24, 32] {
+            let limit = if bits == 32 { u64::from(u32::MAX) } else { (1u64 << bits) - 1 };
+            let idx: Vec<u32> = (0..257)
+                .map(|_| (rng.next_u64() % (limit + 1)) as u32)
+                .collect();
+            let packed = pack_indices(&idx, bits).unwrap();
+            assert_eq!(packed.len(), packed_len_bytes(idx.len(), bits));
+            let back = unpack_indices(&packed, idx.len(), bits).unwrap();
+            assert_eq!(back, idx, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn ten_bit_paper_setting() {
+        // K=1024 -> 10 bits; 12 indices -> 120 bits -> 15 bytes (Table 1 G=1
+        // per-layer accounting: one token over 12 layers).
+        let idx: Vec<u32> = (0..12).map(|i| (i * 83) % 1024).collect();
+        let packed = pack_indices(&idx, 10).unwrap();
+        assert_eq!(packed.len(), 15);
+        assert_eq!(unpack_indices(&packed, 12, 10).unwrap(), idx);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        assert!(pack_indices(&[8], 3).is_err());
+        assert!(pack_indices(&[7], 3).is_ok());
+    }
+
+    #[test]
+    fn short_buffer_rejected() {
+        let packed = pack_indices(&[1, 2, 3], 10).unwrap();
+        assert!(unpack_indices(&packed[..2], 3, 10).is_err());
+    }
+}

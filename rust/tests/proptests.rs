@@ -1,0 +1,219 @@
+//! Property-based tests (randomized with the in-crate PRNG; the vendored
+//! image has no proptest crate) over coordinator/VQ/comm invariants.
+//! Each property runs across many random cases with distinct seeds.
+
+use astra::comm::collective::{allgather, allreduce};
+use astra::comm::message::Message;
+use astra::coordinator::TokenPartition;
+use astra::model::shape::{ceil_log2, TransformerShape, VqSetting};
+use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::sim::latency::{evaluate, SimParams};
+use astra::tensor::Tensor;
+use astra::util::rng::Rng;
+use astra::vq::{pack_indices, unpack_indices, Codebook};
+
+const CASES: usize = 60;
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    let mut rng = Rng::new(100);
+    for case in 0..CASES {
+        let bits = 1 + rng.below(20);
+        let count = 1 + rng.below(500);
+        let limit: u64 = 1u64 << bits;
+        let idx: Vec<u32> = (0..count).map(|_| (rng.next_u64() % limit) as u32).collect();
+        let packed = pack_indices(&idx, bits).unwrap();
+        let back = unpack_indices(&packed, count, bits).unwrap();
+        assert_eq!(back, idx, "case {case}: bits={bits} count={count}");
+        // packed length is exactly ceil(count*bits/8)
+        assert_eq!(packed.len(), (count * bits + 7) / 8);
+    }
+}
+
+#[test]
+fn prop_vq_roundtrip_is_projection() {
+    // decode(encode(x)) is idempotent; every returned index is valid;
+    // nearest-neighbour assignment never loses to a random assignment.
+    let mut rng = Rng::new(200);
+    for case in 0..20 {
+        let g = 1 + rng.below(4);
+        let k = 2 + rng.below(30);
+        let dg = 1 + rng.below(8);
+        let t = 1 + rng.below(40);
+        let mut data = vec![0.0f32; g * k * dg];
+        rng.fill_normal(&mut data);
+        let cb = Codebook::new(g, k, dg, data).unwrap();
+        let mut x = Tensor::zeros(&[t, g * dg]);
+        rng.fill_normal(&mut x.data);
+        let idx = cb.encode(&x).unwrap();
+        assert!(idx.iter().all(|&i| (i as usize) < k), "case {case}");
+        let x1 = cb.decode(&idx, t).unwrap();
+        let x2 = cb.roundtrip(&x1).unwrap();
+        assert_eq!(x1.data, x2.data, "case {case}: projection not idempotent");
+        let d_opt = cb.distortion(&x).unwrap();
+        let rand_idx: Vec<u32> = (0..t * g).map(|_| rng.below(k) as u32).collect();
+        let x_rand = cb.decode(&rand_idx, t).unwrap();
+        let d_rand = x
+            .data
+            .iter()
+            .zip(x_rand.data.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / x.numel() as f32;
+        assert!(d_opt <= d_rand + 1e-5, "case {case}: {d_opt} > {d_rand}");
+    }
+}
+
+#[test]
+fn prop_partition_invariants() {
+    let mut rng = Rng::new(300);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(8);
+        let t = n * (1 + rng.below(64));
+        let even = TokenPartition::even(t, n).unwrap();
+        assert_eq!(even.total(), t);
+        assert!((even.fpar() - 1.0 / n as f64).abs() < 1e-9);
+        let p = TokenPartition::random(&mut rng, t, n);
+        assert_eq!(p.total(), t);
+        assert!(p.fpar() >= 1.0 / n as f64 - 1e-9);
+        assert!(p.fpar() <= 1.0 + 1e-9);
+        let mut acc = 0;
+        for d in 0..n {
+            assert_eq!(p.start(d), acc);
+            acc += p.sizes[d];
+        }
+        // Eq. 36 identity between count variance and FPAR
+        let k = n as f64;
+        let want = (t * t) as f64 / k * (p.fpar() - 1.0 / k);
+        assert!((p.size_variance() - want).abs() < 1e-6 * (t * t) as f64);
+    }
+}
+
+#[test]
+fn prop_proportional_partition_matches_speeds() {
+    let mut rng = Rng::new(400);
+    for _ in 0..CASES {
+        let n = 2 + rng.below(6);
+        let t = 64 + rng.below(512);
+        let speeds: Vec<f64> = (0..n).map(|_| 0.25 + rng.f64() * 4.0).collect();
+        let p = TokenPartition::proportional(t, &speeds).unwrap();
+        assert_eq!(p.total(), t);
+        let fastest = speeds
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let slowest = speeds
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(p.sizes[fastest] >= p.sizes[slowest], "{speeds:?} -> {:?}", p.sizes);
+    }
+}
+
+#[test]
+fn prop_message_accounting() {
+    let mut rng = Rng::new(500);
+    for _ in 0..CASES {
+        let tokens = 1 + rng.below(200);
+        let groups = 1 + rng.below(32);
+        let k = 2 + rng.below(2000);
+        let bits = ceil_log2(k);
+        let idx: Vec<u32> = (0..tokens * groups).map(|_| rng.below(k) as u32).collect();
+        let m = Message::vq(0, 0, &idx, tokens, groups, bits).unwrap();
+        assert_eq!(m.payload_bits(), tokens * groups * bits);
+        assert_eq!(m.bits_per_token(), (groups * bits) as f64);
+        assert_eq!(m.wire_bytes(), 16 + (tokens * groups * bits + 7) / 8);
+        assert_eq!(m.vq_indices().unwrap(), idx);
+    }
+}
+
+#[test]
+fn prop_collective_costs_scale() {
+    let mut rng = Rng::new(600);
+    for _ in 0..CASES {
+        let bits = rng.f64() * 1e9;
+        let n = 2 + rng.below(15);
+        let ag = allgather(bits, n);
+        let ar = allreduce(bits, n);
+        assert!((ar.bits - 2.0 * ag.bits).abs() < 1e-3);
+        assert_eq!(ar.stages, 2 * ag.stages);
+        assert!(ag.bits < bits);
+        assert!(ag.bits >= bits * 0.5 - 1e-3);
+    }
+}
+
+#[test]
+fn prop_latency_monotonic_in_bandwidth() {
+    let shape = TransformerShape::paper_encoder(1024);
+    let params = SimParams::paper_encoder();
+    let mut rng = Rng::new(700);
+    for s in astra::parallel::strategies::figure1_strategies(4) {
+        let mut prev = f64::INFINITY;
+        for bw in [5.0, 10.0, 50.0, 100.0, 500.0, 1000.0] {
+            let t = evaluate(&s.schedule(&shape), &params, bw).total();
+            assert!(t <= prev + 1e-12, "{} at {bw}", s.name());
+            prev = t;
+        }
+        // compute shrinks with device count
+        let n1 = rng.below(3) + 2;
+        let n2 = n1 * 2;
+        let c1 = evaluate(&Strategy::new(s.kind, n1).schedule(&shape), &params, 1e9).compute_s;
+        let c2 = evaluate(&Strategy::new(s.kind, n2).schedule(&shape), &params, 1e9).compute_s;
+        if !matches!(s.kind, StrategyKind::SingleDevice) {
+            assert!(c2 < c1 + 1e-12, "{}: compute {c1} -> {c2}", s.name());
+        }
+    }
+}
+
+#[test]
+fn prop_astra_comm_below_dense_comm() {
+    let shape = TransformerShape::paper_encoder(1024);
+    let mut rng = Rng::new(800);
+    for _ in 0..CASES {
+        let g = [1, 2, 4, 8, 16, 32][rng.below(6)];
+        let k = [256, 512, 1024, 2048][rng.below(4)];
+        let astra = Strategy::new(
+            StrategyKind::Astra { vq: VqSetting::new(g, k) }, 4);
+        let sp = Strategy::new(StrategyKind::SequenceParallel, 4);
+        let a = astra.schedule(&shape).total_comm_bits();
+        let s = sp.schedule(&shape).total_comm_bits();
+        assert!(a < s / 50.0, "G={g} K={k}: {a} vs {s}");
+    }
+}
+
+#[test]
+fn prop_native_attention_rows_are_convex_combos() {
+    // attention output rows lie in the convex hull of V rows (per column)
+    let mut rng = Rng::new(900);
+    for _ in 0..20 {
+        let t = 1 + rng.below(12);
+        let s = 1 + rng.below(24);
+        let dh = 4 * (1 + rng.below(4));
+        let h = 1 + rng.below(2);
+        let d = dh * h;
+        let mk = |rng: &mut Rng, r: usize| {
+            let mut t_ = Tensor::zeros(&[r, d]);
+            rng.fill_normal(&mut t_.data);
+            t_
+        };
+        let q = mk(&mut rng, t);
+        let k = mk(&mut rng, s);
+        let v = mk(&mut rng, s);
+        let out = astra::model::native::attention(&q, &k, &v, None, h).unwrap();
+        for col in 0..d {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for i in 0..s {
+                lo = lo.min(v.row(i)[col]);
+                hi = hi.max(v.row(i)[col]);
+            }
+            for i in 0..t {
+                let o = out.row(i)[col];
+                assert!(o >= lo - 1e-4 && o <= hi + 1e-4, "col {col}: {o} not in [{lo},{hi}]");
+            }
+        }
+    }
+}
