@@ -10,9 +10,13 @@
 use std::time::Instant;
 
 use anyhow::Result;
+use astra::comm::trace::BandwidthTrace;
 use astra::config::RunConfig;
 use astra::coordinator::Cluster;
-use astra::server::{Batcher, Request};
+use astra::model::shape::{TransformerShape, VqSetting};
+use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::{Batcher, CbConfig, CbEngine, Request};
+use astra::sim::latency::SimParams;
 use astra::tensor::Tensor;
 use astra::util::cli::Args;
 use astra::util::rng::Rng;
@@ -94,5 +98,38 @@ fn main() -> Result<()> {
     println!("host wall          {:.2} s ({:.2} req/s single-core)", wall, served as f64 / wall);
     println!("wire payload       {:.2} Mbit total ({} bits/token/block)",
         payload_bits / 1e6, meta.bits_per_token);
+
+    // ---- continuous batching vs batch-1 FIFO on the cost model ----
+    // Same arrival process, served by the CbEngine at this cluster's shape
+    // and bandwidth: shows what slot-based admission would buy this
+    // deployment (cargo run --release --example serve_cluster -- --slots 8).
+    let slots = args.usize_or("slots", 8)?;
+    let shape = TransformerShape {
+        n_layers: meta.n_layers,
+        d_model: meta.d_model,
+        n_heads: meta.n_heads,
+        d_ff: meta.d_ff,
+        seq_len: meta.seq_len,
+        elem_bytes: 4,
+    };
+    let strategy = Strategy::new(
+        StrategyKind::Astra { vq: VqSetting::new(meta.groups, meta.codebook_size) },
+        cluster.config.n_devices,
+    );
+    let trace = BandwidthTrace::constant(cluster.config.bandwidth_mbps, 1e9);
+    let horizon = 60.0;
+    let cfg = CbConfig { max_slots: slots, max_batch: slots, ..CbConfig::default() };
+    println!("\n== cost-model projection: batch-1 FIFO vs continuous batching ==");
+    for (mode, cfg) in [("fifo-b1", cfg.clone().batch1()), ("cont-batch", cfg)] {
+        let mut engine = CbEngine::new(
+            shape, strategy, SimParams::paper_encoder(), trace.clone(), cfg);
+        let mut arr_rng = Rng::new(cluster.config.seed);
+        let mut r = engine.serve_poisson(&mut arr_rng, rate, horizon);
+        println!(
+            "{mode:<12} {:>5} done {:>5} censored  p50 {:.0} ms  p99 {:.0} ms  TTFT p50 {:.0} ms",
+            r.completed, r.censored,
+            r.latency.p50() * 1e3, r.latency.p99() * 1e3, r.ttft.p50() * 1e3
+        );
+    }
     Ok(())
 }

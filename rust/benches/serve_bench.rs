@@ -1,0 +1,67 @@
+//! Serving benchmarks: batch-1 FIFO vs continuous batching across Poisson
+//! rates and bandwidth traces, plus the acceptance evidence for the
+//! continuous-batching engine (>= 2x completed-request throughput at
+//! saturating load with max_slots >= 8 under a constant 100 Mbps trace).
+
+use astra::comm::trace::BandwidthTrace;
+use astra::model::shape::{TransformerShape, VqSetting};
+use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::scheduler::{CbConfig, CbEngine};
+use astra::server::Request;
+use astra::sim::latency::SimParams;
+use astra::util::bench::{black_box, header, Bench};
+use astra::util::rng::Rng;
+
+fn engine(trace: BandwidthTrace, cfg: CbConfig) -> CbEngine {
+    CbEngine::new(
+        TransformerShape::paper_encoder(1024),
+        Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+        SimParams::paper_encoder(),
+        trace,
+        cfg,
+    )
+}
+
+fn saturating(n: usize) -> Vec<Request> {
+    (0..n as u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 1024 }).collect()
+}
+
+fn main() {
+    header();
+    let mut b = Bench::new("serve");
+    let cfg = CbConfig::default();
+    let const100 = BandwidthTrace::constant(100.0, 1e9);
+    let mut rng = Rng::new(7);
+    let markov = BandwidthTrace::markovian(&mut rng, 20.0, 100.0, 9, 1.0, 120.0);
+
+    for (tname, trace) in [("const100", const100.clone()), ("markov", markov)] {
+        for (mode, cfg) in [("fifo1", cfg.clone().batch1()), ("cb8", cfg.clone())] {
+            let trace = trace.clone();
+            b.run(&format!("{mode}_{tname}_saturating_120s"), move || {
+                let mut e = engine(trace.clone(), cfg.clone());
+                black_box(e.serve_stream(saturating(4000), 120.0).completed)
+            });
+        }
+        // open-loop Poisson at a rate between the two capacities
+        for (mode, cfg) in [("fifo1", cfg.clone().batch1()), ("cb8", cfg.clone())] {
+            let trace = trace.clone();
+            b.run(&format!("{mode}_{tname}_poisson8_120s"), move || {
+                let mut e = engine(trace.clone(), cfg.clone());
+                let mut rng = Rng::new(42);
+                black_box(e.serve_poisson(&mut rng, 8.0, 120.0).completed)
+            });
+        }
+    }
+    b.finish();
+
+    // acceptance evidence (also asserted by the unit tests in
+    // src/server/scheduler.rs, continuous_batching_doubles_throughput_vs_batch1)
+    let r1 = engine(const100.clone(), cfg.clone().batch1()).serve_stream(saturating(4000), 120.0);
+    let r8 = engine(const100, cfg).serve_stream(saturating(4000), 120.0);
+    println!(
+        "\nsaturating const-100Mbps: fifo-b1 {} vs cont-batch(8) {} completed = {:.2}x",
+        r1.completed,
+        r8.completed,
+        r8.completed as f64 / r1.completed.max(1) as f64
+    );
+}

@@ -65,6 +65,9 @@ pub struct Delivery {
     pub delivered: Vec<bool>,
     /// number of retransmitted packets
     pub retransmissions: usize,
+    /// bytes billed to the link: payload plus every retransmitted copy at
+    /// that packet's true size (the final packet may be shorter than MTU)
+    pub billed_bytes: usize,
 }
 
 /// A simulated link with its own RNG stream (loss) and a running clock
@@ -93,11 +96,15 @@ impl SimLink {
     /// dropped packets are recorded in `delivered` and the receiver must
     /// cope (for VQ payloads the coordinator substitutes stale codes).
     pub fn send(&self, t0: f64, bytes: usize) -> Delivery {
-        let n_packets = bytes.div_ceil(self.spec.mtu).max(1);
+        let mtu = self.spec.mtu;
+        let n_packets = bytes.div_ceil(mtu).max(1);
         let mut rng = self.rng.lock().unwrap();
         let mut delivered = Vec::with_capacity(n_packets);
         let mut extra_packets = 0usize;
-        for _ in 0..n_packets {
+        let mut extra_bytes = 0usize;
+        for p in 0..n_packets {
+            // the final packet carries only the payload remainder
+            let pkt_bytes = if p + 1 == n_packets { bytes - (n_packets - 1) * mtu } else { mtu };
             if self.spec.loss_rate > 0.0 && rng.chance(self.spec.loss_rate) {
                 if self.spec.retransmit {
                     // geometric number of retries
@@ -109,6 +116,7 @@ impl SimLink {
                         }
                     }
                     extra_packets += tries;
+                    extra_bytes += tries * pkt_bytes;
                     delivered.push(true);
                 } else {
                     delivered.push(false);
@@ -117,11 +125,16 @@ impl SimLink {
                 delivered.push(true);
             }
         }
-        let total_bytes = bytes + extra_packets * self.spec.mtu;
+        let total_bytes = bytes + extra_bytes;
         let elapsed =
             self.spec.latency_s + self.spec.trace.transfer_time(t0, total_bytes as f64 * 8.0)
                 + extra_packets as f64 * self.spec.latency_s; // each retry pays RTT-ish
-        Delivery { elapsed_s: elapsed, delivered, retransmissions: extra_packets }
+        Delivery {
+            elapsed_s: elapsed,
+            delivered,
+            retransmissions: extra_packets,
+            billed_bytes: total_bytes,
+        }
     }
 }
 
@@ -205,6 +218,41 @@ mod tests {
         assert!(d.retransmissions > 100, "{}", d.retransmissions);
         assert!(d.elapsed_s > t_clean);
         assert!(d.delivered.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn final_short_packet_billed_at_true_size() {
+        // 1 packet of 100 bytes on a lossy retransmitting link: every
+        // retransmission must bill 100 bytes, not a full 1500-byte MTU.
+        let l = SimLink::new(LinkSpec::ideal(100.0).with_loss(0.9, true), 11);
+        for _ in 0..50 {
+            let d = l.send(0.0, 100);
+            assert_eq!(d.billed_bytes, 100 * (1 + d.retransmissions));
+            if d.retransmissions > 0 {
+                return;
+            }
+        }
+        panic!("no loss in 50 sends at p=0.9");
+    }
+
+    #[test]
+    fn prop_retransmit_expected_bytes() {
+        // With retransmission, E[billed bytes] = bytes / (1 - p): each
+        // packet's transmission count is geometric with mean 1/(1-p).
+        let p = 0.2;
+        let bytes = 150_100; // 100 full packets + one 100-byte tail
+        let l = SimLink::new(LinkSpec::ideal(100.0).with_loss(p, true), 12);
+        let trials = 400;
+        let mut total = 0usize;
+        for _ in 0..trials {
+            let d = l.send(0.0, bytes);
+            assert!(d.delivered.iter().all(|&x| x));
+            total += d.billed_bytes;
+        }
+        let mean = total as f64 / trials as f64;
+        let want = bytes as f64 / (1.0 - p);
+        // ~40k samples of a geometric: the sample mean sits within 2%
+        assert!((mean / want - 1.0).abs() < 0.02, "mean {mean} want {want}");
     }
 
     #[test]

@@ -20,6 +20,17 @@ pub struct DecodeSession<'a> {
     pub len: usize,
     pub s_max: usize,
     pub generated: Vec<usize>,
+    /// last prompt token id — the first decode step conditions on this
+    /// (NOT token 0; see `conditioning_token`)
+    pub prompt_tail: usize,
+}
+
+/// The token id the next decode step embeds: the most recently generated
+/// token, or — before anything has been generated — the prompt's last
+/// token. Conditioning the first step on a hardcoded id 0 instead was a
+/// correctness bug that invalidated first-token generation quality.
+pub fn next_conditioning_token(generated: &[usize], prompt_tail: usize) -> usize {
+    generated.last().copied().unwrap_or(prompt_tail)
 }
 
 impl<'a> DecodeSession<'a> {
@@ -44,6 +55,7 @@ impl<'a> DecodeSession<'a> {
             len: 0,
             s_max,
             generated: Vec::new(),
+            prompt_tail: prompt.last().copied().unwrap_or(0),
         };
         sess.fill_from_prompt(prompt)?;
         Ok(sess)
@@ -109,8 +121,9 @@ impl<'a> DecodeSession<'a> {
         }
         let hh = meta.n_heads;
         let dh = meta.d_model / hh;
-        // embed the most recent token at position len-1's successor
-        let last_id = *self.generated.last().unwrap_or(&0);
+        // embed the most recent token at position len-1's successor; before
+        // any generation this is the prompt's last token, not id 0
+        let last_id = self.conditioning_token();
         let pos_idx = (self.len).min(meta.seq_len - 1); // clamp learned pos
         let embed = self.cluster.artifact.tensor("embed")?;
         let pos = self.cluster.artifact.tensor("pos")?;
@@ -155,6 +168,11 @@ impl<'a> DecodeSession<'a> {
             .unwrap_or(0);
         self.generated.push(next);
         Ok(next)
+    }
+
+    /// The token id the next `step()` will embed.
+    pub fn conditioning_token(&self) -> usize {
+        next_conditioning_token(&self.generated, self.prompt_tail)
     }
 
     /// Appendix G memory accounting for this session's cache strategy.
@@ -255,4 +273,22 @@ fn native_decode_step(
     crate::tensor::add_bias(&mut m2, &blk.b2);
     crate::tensor::add_inplace(&mut m2, &h1);
     Ok((m2, k_t, v_t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::next_conditioning_token;
+
+    #[test]
+    fn first_step_conditions_on_prompt_tail_not_token_zero() {
+        // regression: before the fix, the first decode step embedded token
+        // id 0 (`generated.last().unwrap_or(&0)`) regardless of the prompt
+        assert_eq!(next_conditioning_token(&[], 173), 173);
+        assert_ne!(next_conditioning_token(&[], 173), 0);
+        // after generation starts, the newest generated token wins
+        assert_eq!(next_conditioning_token(&[5, 9], 173), 9);
+        // degenerate tail id 0 is still honoured (only correct when the
+        // prompt really ends in token 0)
+        assert_eq!(next_conditioning_token(&[], 0), 0);
+    }
 }

@@ -15,6 +15,16 @@
 //!   a simulated network (bandwidth caps, latency, packet loss, dynamic
 //!   Markovian traces) carrying *real* bit-packed payloads, plus a
 //!   discrete-event latency simulator for the paper's sweeps.
+//! * [`server`] serves request streams over the cost model: the paper's
+//!   batch-1 FIFO loop ([`server::engine`], Fig 6) and a continuous-batching
+//!   engine ([`server::scheduler`]) that admits prefill batches into
+//!   in-flight decode slots. Batched execution semantics live in the cost
+//!   model ([`parallel::cost::Phase::for_batch`]): per-request FLOPs and
+//!   wire bits scale with the batch, while kernel launches, collective sync
+//!   stages, and the weight-streaming memory floor — which gates
+//!   single-token decode — are paid once, so co-scheduled decode slots are
+//!   nearly free. Reports cover p50/p95/p99 latency, TTFT, queue depth,
+//!   censored requests, and goodput under an SLO.
 //! * [`parallel`] implements the baselines — Tensor Parallelism
 //!   (Megatron-LM), Sequence Parallelism (Voltage), Block Parallelism
 //!   (DeTransformer, BP+AG / BP+SP) — as per-block communication/compute

@@ -22,6 +22,7 @@ fn main() -> Result<()> {
     }
     match args.command()? {
         "serve" => astra::server::cli::serve(&args),
+        "serve-cb" => astra::server::cli::serve_cb(&args),
         "run" => astra::server::cli::run_once(&args),
         "simulate" => astra::server::cli::simulate(&args),
         "calibrate" => astra::server::cli::calibrate(&args),
@@ -44,6 +45,11 @@ SUBCOMMANDS
   serve      serve a synthetic request stream on the simulated cluster
              --artifacts DIR --devices N --bandwidth MBPS --requests N
              --arrival-rate R --loss P --seed S
+  serve-cb   continuous-batching load test on the cost model, with the
+             batch-1 FIFO baseline on the same Poisson stream
+             --model M --tokens T --devices N --strategy S --bandwidth MBPS
+             --trace constant|markov --rate R --horizon S --slots K
+             --max-batch B --max-wait S --decode-tokens D --slo S --seed S
   run        single prefill through the cluster; prints logits and
              per-layer communication accounting
              --artifacts DIR --devices N --bandwidth MBPS [--native]

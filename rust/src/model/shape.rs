@@ -123,6 +123,33 @@ impl TransformerShape {
         groups as f64 * t as f64 * dg
     }
 
+    /// Block weight parameters: attention (4 D^2) + MLP (2 D d_ff),
+    /// biases/norms omitted (sub-percent).
+    pub fn block_params(&self) -> f64 {
+        let d = self.d_model as f64;
+        4.0 * d * d + 2.0 * d * self.d_ff as f64
+    }
+
+    /// Bytes of the whole model's block weights at `elem_bytes` precision —
+    /// the working set one decode step must stream (memory-bound floor).
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_layers as f64 * self.block_params() * self.elem_bytes as f64
+    }
+
+    /// FLOPs of one single-token decode step over a KV cache of `ctx`
+    /// positions: q/k/v are projected for the new token only (cache hit),
+    /// attention reads `ctx + 1` positions, MLP runs on one token.
+    pub fn decode_step_flops(&self, ctx: usize) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let kv = ctx as f64 + 1.0;
+        let qkv = 3.0 * 2.0 * d * d;
+        let attn = 2.0 * kv * d /* qK^T */ + 2.0 * kv * d /* PV */;
+        let proj = 2.0 * d * d;
+        let mlp = 2.0 * d * f * 2.0;
+        self.n_layers as f64 * (qkv + attn + proj + mlp)
+    }
+
     /// Bits of one full-precision token embedding (the paper's r*D).
     pub fn token_bits(&self) -> usize {
         self.d_model * self.elem_bytes * 8
@@ -230,5 +257,17 @@ mod tests {
         assert!(s.block_flops(256, 1024) < s.block_flops(1024, 1024));
         assert!(s.block_flops(1024, 256) < s.block_flops(1024, 1024));
         assert!(s.total_flops() > 0.0);
+    }
+
+    #[test]
+    fn decode_step_is_tiny_vs_prefill() {
+        let s = TransformerShape::paper_encoder(1024);
+        // one cached decode step is orders of magnitude below a prefill
+        assert!(s.decode_step_flops(1024) < s.total_flops() / 100.0);
+        // and grows with context
+        assert!(s.decode_step_flops(2048) > s.decode_step_flops(64));
+        // ViT-Base block weights: 12 * (4*768^2 + 2*768*3072) * 4 bytes
+        let want = 12.0 * (4.0 * 768.0 * 768.0 + 2.0 * 768.0 * 3072.0) * 4.0;
+        assert!((s.weight_bytes() - want).abs() < 1.0);
     }
 }

@@ -17,6 +17,11 @@ pub struct DeviceModel {
     /// relative speed multiplier (1.0 = baseline; heterogeneous clusters
     /// scale per-device)
     pub speed: f64,
+    /// effective memory bandwidth (bytes/s) for streaming a phase's weight
+    /// working set. Single-token decode is memory-bound: the step cannot go
+    /// faster than one pass over the weights, however small the matmuls —
+    /// this is the floor that batched decode amortizes.
+    pub mem_bytes_per_s: f64,
 }
 
 impl DeviceModel {
@@ -30,6 +35,8 @@ impl DeviceModel {
             flops: shape.total_flops() / (target - overhead),
             per_layer_overhead_s: 0.0002,
             speed: 1.0,
+            // GTX 1660 Ti: 288 GB/s peak, ~2/3 effective on strided KV reads
+            mem_bytes_per_s: 192e9,
         }
     }
 
@@ -42,6 +49,8 @@ impl DeviceModel {
             flops: shape.total_flops() / (target - overhead),
             per_layer_overhead_s: 0.002,
             speed: 1.0,
+            // Titan X (Maxwell): 336 GB/s peak
+            mem_bytes_per_s: 224e9,
         }
     }
 
@@ -53,6 +62,18 @@ impl DeviceModel {
     /// Seconds to execute `flops` of compute plus `layers` launches.
     pub fn compute_time(&self, flops: f64, layers: usize) -> f64 {
         flops / (self.flops * self.speed) + layers as f64 * self.per_layer_overhead_s
+    }
+
+    /// Seconds for a phase's compute: the matmul term floored by one
+    /// streaming pass over `mem_bytes` of weights, plus launch overheads.
+    pub fn phase_compute_time(&self, flops: f64, launches: usize, mem_bytes: f64) -> f64 {
+        let matmul = flops / (self.flops * self.speed);
+        let stream = if mem_bytes > 0.0 {
+            mem_bytes / (self.mem_bytes_per_s * self.speed)
+        } else {
+            0.0
+        };
+        matmul.max(stream) + launches as f64 * self.per_layer_overhead_s
     }
 }
 
@@ -67,15 +88,38 @@ pub struct Phase {
     /// number of kernel launches attributed to this phase
     pub launches: usize,
     pub comm: CommCost,
+    /// weight working set streamed once per execution (bytes). Zero for
+    /// compute-bound phases; the full layer-weight footprint for decode
+    /// steps, where it floors the phase regardless of batch size.
+    pub mem_bytes: f64,
 }
 
 impl Phase {
     pub fn compute(label: &'static str, flops: f64, launches: usize) -> Phase {
-        Phase { label, compute_flops: flops, launches, comm: CommCost::ZERO }
+        Phase { label, compute_flops: flops, launches, comm: CommCost::ZERO, mem_bytes: 0.0 }
+    }
+
+    /// Compute phase with a memory-bandwidth floor of `mem_bytes` streamed.
+    pub fn compute_mem(label: &'static str, flops: f64, launches: usize, mem_bytes: f64) -> Phase {
+        Phase { label, compute_flops: flops, launches, comm: CommCost::ZERO, mem_bytes }
     }
 
     pub fn comm(label: &'static str, comm: CommCost) -> Phase {
-        Phase { label, compute_flops: 0.0, launches: 0, comm }
+        Phase { label, compute_flops: 0.0, launches: 0, comm, mem_bytes: 0.0 }
+    }
+
+    /// Cost of `b` requests executing this phase together: per-request
+    /// FLOPs and wire bits scale with the batch; kernel launches, collective
+    /// sync stages, and the weight-streaming floor are paid once. This is
+    /// the batched-execution semantics of the continuous-batching engine.
+    pub fn for_batch(&self, b: usize) -> Phase {
+        Phase {
+            label: self.label,
+            compute_flops: self.compute_flops * b as f64,
+            launches: self.launches,
+            comm: CommCost { bits: self.comm.bits * b as f64, stages: self.comm.stages },
+            mem_bytes: self.mem_bytes,
+        }
     }
 }
 
@@ -94,6 +138,12 @@ impl Schedule {
         self.phases.iter().map(|p| p.compute_flops).sum()
     }
 
+    /// The same schedule executed by a batch of `b` requests at once
+    /// (see [`Phase::for_batch`] for the scaling semantics).
+    pub fn for_batch(&self, b: usize) -> Schedule {
+        Schedule { phases: self.phases.iter().map(|p| p.for_batch(b)).collect() }
+    }
+
     /// Static-bandwidth latency split into (compute_s, comm_s).
     pub fn latency_breakdown(
         &self,
@@ -104,7 +154,7 @@ impl Schedule {
         let mut compute = 0.0;
         let mut comm = 0.0;
         for p in &self.phases {
-            compute += device.compute_time(p.compute_flops, p.launches);
+            compute += device.phase_compute_time(p.compute_flops, p.launches, p.mem_bytes);
             comm += p.comm.seconds(bandwidth_mbps, stage_latency_s);
         }
         (compute, comm)
@@ -142,7 +192,12 @@ mod tests {
 
     #[test]
     fn schedule_breakdown_adds_up() {
-        let dev = DeviceModel { flops: 1e9, per_layer_overhead_s: 0.001, speed: 1.0 };
+        let dev = DeviceModel {
+            flops: 1e9,
+            per_layer_overhead_s: 0.001,
+            speed: 1.0,
+            mem_bytes_per_s: f64::INFINITY,
+        };
         let sched = Schedule {
             phases: vec![
                 Phase::compute("a", 1e9, 1),
@@ -153,5 +208,51 @@ mod tests {
         assert!((c - 1.001).abs() < 1e-9);
         assert!((m - 1.005).abs() < 1e-9);
         assert!((sched.latency(&dev, 10.0, 0.005) - (c + m)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_floor_gates_small_matmuls() {
+        let dev = DeviceModel {
+            flops: 1e12,
+            per_layer_overhead_s: 0.0,
+            speed: 1.0,
+            mem_bytes_per_s: 1e9,
+        };
+        // 1 MFLOP would take 1 µs compute, but streaming 1 MB takes 1 ms
+        let t = dev.phase_compute_time(1e6, 0, 1e6);
+        assert!((t - 1e-3).abs() < 1e-12, "{t}");
+        // a big matmul is unaffected by the floor
+        let t = dev.phase_compute_time(1e12, 0, 1e6);
+        assert!((t - 1.0).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn batching_scales_flops_and_bits_but_not_overheads() {
+        let p = Phase {
+            label: "x",
+            compute_flops: 1e9,
+            launches: 3,
+            comm: CommCost { bits: 1e6, stages: 2 },
+            mem_bytes: 5e6,
+        };
+        let b = p.for_batch(8);
+        assert!((b.compute_flops - 8e9).abs() < 1e-3);
+        assert!((b.comm.bits - 8e6).abs() < 1e-3);
+        assert_eq!(b.launches, 3);
+        assert_eq!(b.comm.stages, 2);
+        assert!((b.mem_bytes - 5e6).abs() < 1e-9);
+        // batch-8 latency is strictly less than 8x the batch-1 latency
+        // whenever overheads/floor are non-trivial
+        let dev = DeviceModel {
+            flops: 1e12,
+            per_layer_overhead_s: 0.001,
+            speed: 1.0,
+            mem_bytes_per_s: 1e9,
+        };
+        let sched = Schedule { phases: vec![p] };
+        let t1 = sched.latency(&dev, 100.0, 0.001);
+        let t8 = sched.for_batch(8).latency(&dev, 100.0, 0.001);
+        assert!(t8 < 8.0 * t1, "{t8} vs {}", 8.0 * t1);
+        assert!(t8 > t1, "{t8} vs {t1}");
     }
 }

@@ -122,6 +122,43 @@ impl Strategy {
         Schedule { phases }
     }
 
+    /// One-token decode-step schedule at KV context `ctx` (prompt plus
+    /// already-generated tokens). Decode runs on the device owning the
+    /// sequence tail (paper §5 / Appendix G: the tail device holds the
+    /// mixed-precision cache), so for Single/SP/BP/ASTRA it is pure local
+    /// compute floored by one streaming pass over the weights — the
+    /// memory-bound regime that batched decode amortizes. TP keeps weights
+    /// sharded and pays two one-token all-reduces per layer.
+    pub fn decode_step_schedule(&self, shape: &TransformerShape, ctx: usize) -> Schedule {
+        let n = self.n_devices;
+        let mut phases = Vec::new();
+        match self.kind {
+            StrategyKind::TensorParallel => {
+                phases.push(Phase::compute_mem(
+                    "decode block/N",
+                    shape.decode_step_flops(ctx) / n as f64,
+                    shape.n_layers,
+                    shape.weight_bytes() / n as f64,
+                ));
+                let act_bits = shape.token_bits() as f64;
+                let mut comm = CommCost::ZERO;
+                for _ in 0..shape.n_layers {
+                    comm = comm.plus(sum2(allreduce(act_bits, n)));
+                }
+                phases.push(Phase::comm("decode allreduce x2", comm));
+            }
+            _ => {
+                phases.push(Phase::compute_mem(
+                    "decode step (tail device)",
+                    shape.decode_step_flops(ctx),
+                    shape.n_layers,
+                    shape.weight_bytes(),
+                ));
+            }
+        }
+        Schedule { phases }
+    }
+
     /// Payload bits a single transmitted token costs over the whole model
     /// (the paper's "Total Bits per Token" column).
     pub fn total_bits_per_token(&self, shape: &TransformerShape) -> usize {
@@ -228,6 +265,26 @@ mod tests {
         assert_eq!(astra.total_bits_per_token(&shape), 120);
         let sp = Strategy::new(StrategyKind::SequenceParallel, 4);
         assert_eq!(sp.total_bits_per_token(&shape), 294_912);
+    }
+
+    #[test]
+    fn decode_step_memory_bound_and_batchable() {
+        let shape = TransformerShape::paper_encoder(1024);
+        let dev = DeviceModel::paper_1660ti();
+        let astra = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4);
+        let step = astra.decode_step_schedule(&shape, 1024);
+        let t1 = step.latency(&dev, 100.0, 0.0006);
+        // batching decode steps is nearly free while under the memory floor
+        let t8 = step.for_batch(8).latency(&dev, 100.0, 0.0006);
+        assert!(t8 < 2.0 * t1, "{t8} vs {t1}");
+        // a decode step is far cheaper than a prefill
+        let prefill = astra.schedule(&shape).latency(&dev, 100.0, 0.0006);
+        assert!(t1 < prefill / 5.0, "{t1} vs {prefill}");
+        // TP decode pays per-layer sync latency and loses to the local path
+        let tp = Strategy::new(StrategyKind::TensorParallel, 4)
+            .decode_step_schedule(&shape, 1024)
+            .latency(&dev, 100.0, 0.0006);
+        assert!(tp > t1, "{tp} vs {t1}");
     }
 
     #[test]

@@ -7,6 +7,8 @@
 
 use std::collections::VecDeque;
 
+use crate::util::rng::Rng;
+
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
@@ -14,6 +16,24 @@ pub struct Request {
     pub arrival_s: f64,
     /// number of content tokens (must match the AOT shape for live runs)
     pub tokens: usize,
+}
+
+/// Open-loop Poisson arrival stream: exponential inter-arrivals at `rate`
+/// req/s, truncated at `horizon_s`, ids starting at 1. Shared by both
+/// serve engines so the workload convention cannot drift between them.
+pub fn poisson_arrivals(rng: &mut Rng, rate: f64, horizon_s: f64, tokens: usize) -> Vec<Request> {
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+    loop {
+        t += rng.exp(rate);
+        if t >= horizon_s {
+            break;
+        }
+        id += 1;
+        arrivals.push(Request { id, arrival_s: t, tokens });
+    }
+    arrivals
 }
 
 /// FIFO queue with batch formation.
@@ -47,15 +67,33 @@ impl Batcher {
     /// batch is full or the oldest request has waited past max_wait (or the
     /// queue is non-empty and `force`).
     pub fn next_batch(&mut self, now: f64, force: bool) -> Vec<Request> {
-        if self.queue.is_empty() {
+        self.next_batch_capped(now, force, usize::MAX)
+    }
+
+    /// `next_batch` additionally capped at `cap` requests — the continuous
+    /// batching admission path, where the cap is the number of free decode
+    /// slots. The full/deadline trigger still looks at the whole queue.
+    pub fn next_batch_capped(&mut self, now: f64, force: bool, cap: usize) -> Vec<Request> {
+        if self.queue.is_empty() || cap == 0 {
             return Vec::new();
         }
         let oldest_wait = now - self.queue.front().unwrap().arrival_s;
         if self.queue.len() >= self.max_batch || oldest_wait >= self.max_wait_s || force {
-            let take = self.queue.len().min(self.max_batch);
+            let take = self.queue.len().min(self.max_batch).min(cap);
             return self.queue.drain(..take).collect();
         }
         Vec::new()
+    }
+
+    /// Arrival time of the oldest queued request (None when the queue is
+    /// empty); `now - oldest_arrival()` is its current fill-deadline wait.
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.queue.front().map(|r| r.arrival_s)
+    }
+
+    /// Remove and return everything still queued (end-of-horizon census).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
     }
 }
 
@@ -93,5 +131,23 @@ mod tests {
         b.push(req(1, 0.0));
         assert_eq!(b.next_batch(0.0, true).len(), 1);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn capped_batch_respects_free_slots() {
+        let mut b = Batcher::new(4, 0.0);
+        for i in 0..4 {
+            b.push(req(i, 0.0));
+        }
+        // full batch available, but only 2 slots free
+        let batch = b.next_batch_capped(0.0, false, 2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.len(), 2);
+        // zero cap admits nothing
+        assert!(b.next_batch_capped(0.0, true, 0).is_empty());
+        assert_eq!(b.oldest_arrival(), Some(0.0));
+        assert_eq!(b.drain_all().len(), 2);
+        assert!(b.is_empty());
+        assert_eq!(b.oldest_arrival(), None);
     }
 }

@@ -5,10 +5,12 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::comm::trace::BandwidthTrace;
 use crate::config::{shape_preset, vq_preset, RunConfig};
 use crate::coordinator::Cluster;
 use crate::model::shape::VqSetting;
 use crate::parallel::strategies::{Strategy, StrategyKind};
+use crate::server::scheduler::{CbConfig, CbEngine};
 use crate::sim::latency::{evaluate, SimParams};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
@@ -122,19 +124,9 @@ pub fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `astra simulate` — cost-model latency point.
-pub fn simulate(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "vit-base");
-    let tokens = args.usize_or("tokens", 1024)?;
-    let n = args.usize_or("devices", 4)?;
-    let bw = args.f64_or("bandwidth", 100.0)?;
-    let shape = shape_preset(&model, tokens)?;
-    let params = if model == "llama3-8b" {
-        SimParams::paper_llama()
-    } else {
-        SimParams::paper_encoder()
-    };
-    let kind = match args.get_or("strategy", "astra").as_str() {
+/// Parse `--strategy` (+ `--nb`, `--vq`) into a [`StrategyKind`].
+fn strategy_kind_from_args(args: &Args) -> Result<StrategyKind> {
+    Ok(match args.get_or("strategy", "astra").as_str() {
         "single" => StrategyKind::SingleDevice,
         "tp" => StrategyKind::TensorParallel,
         "sp" => StrategyKind::SequenceParallel,
@@ -153,8 +145,97 @@ pub fn simulate(args: &Args) -> Result<()> {
             },
         },
         other => anyhow::bail!("unknown strategy `{other}`"),
+    })
+}
+
+/// `astra serve-cb` — continuous-batching load test on the cost model,
+/// with the batch-1 FIFO baseline run on the same arrival stream.
+pub fn serve_cb(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "vit-base");
+    let tokens = args.usize_or("tokens", 1024)?;
+    let n = args.usize_or("devices", 4)?;
+    let bw = args.f64_or("bandwidth", 100.0)?;
+    let rate = args.f64_or("rate", 8.0)?;
+    let horizon = args.f64_or("horizon", 120.0)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let shape = shape_preset(&model, tokens)?;
+    let params = if model == "llama3-8b" {
+        SimParams::paper_llama()
+    } else {
+        SimParams::paper_encoder()
     };
-    let strat = Strategy::new(kind, n);
+    let strategy = Strategy::new(strategy_kind_from_args(args)?, n);
+    let trace = match args.get_or("trace", "constant").as_str() {
+        "constant" => BandwidthTrace::constant(bw, 1e9),
+        // markov trace honours --bandwidth as its ceiling, dipping to 20%
+        // of it (the paper's 20-100 Mbps shape at the default 100)
+        "markov" => {
+            let mut rng = Rng::new(seed);
+            BandwidthTrace::markovian(&mut rng, 0.2 * bw, bw, 9, 1.0, horizon)
+        }
+        other => anyhow::bail!("unknown trace `{other}` (constant|markov)"),
+    };
+    let cfg = CbConfig {
+        max_slots: args.usize_or("slots", 8)?,
+        max_batch: args.usize_or("max-batch", 8)?,
+        max_wait_s: args.f64_or("max-wait", 0.02)?,
+        decode_tokens: args.usize_or("decode-tokens", 64)?,
+        slo_s: args.f64_or("slo", 2.0)?,
+        window_s: 10.0,
+    };
+
+    println!(
+        "== serve-cb: {} on {model} T={tokens} N={n}, {} trace, rate {rate}/s, {horizon} s ==",
+        strategy.name(),
+        args.get_or("trace", "constant"),
+    );
+    let mut rows = Vec::new();
+    for (mode, cfg) in [("fifo-b1", cfg.clone().batch1()), ("cont-batch", cfg)] {
+        let mut engine =
+            CbEngine::new(shape, strategy, params.clone(), trace.clone(), cfg.clone());
+        let mut rng = Rng::new(seed);
+        let mut r = engine.serve_poisson(&mut rng, rate, horizon);
+        println!(
+            "-- {mode} (slots={}, batch<={}, {} decode tokens, SLO {:.1} s) --",
+            cfg.max_slots, cfg.max_batch, cfg.decode_tokens, cfg.slo_s
+        );
+        println!(
+            "completed {:>6}   censored {:>6}   throughput {:.2}/s (horizon) {:.2}/s (completion)",
+            r.completed, r.censored, r.throughput, r.throughput_completion
+        );
+        println!(
+            "latency   p50 {:>8.1} ms  p95 {:>8.1} ms  p99 {:>8.1} ms",
+            r.latency.p50() * 1e3, r.latency.p95() * 1e3, r.latency.p99() * 1e3
+        );
+        println!(
+            "TTFT      p50 {:>8.1} ms  p95 {:>8.1} ms   queue depth mean {:.1}",
+            r.ttft.p50() * 1e3, r.ttft.p95() * 1e3, r.mean_queue_depth()
+        );
+        println!("goodput   {:.2}/s within SLO", r.goodput);
+        rows.push((mode, r.completed));
+    }
+    if let [(_, fifo), (_, cb)] = rows[..] {
+        if fifo > 0 {
+            println!("\ncontinuous batching completed {:.2}x the batch-1 FIFO total",
+                cb as f64 / fifo as f64);
+        }
+    }
+    Ok(())
+}
+
+/// `astra simulate` — cost-model latency point.
+pub fn simulate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "vit-base");
+    let tokens = args.usize_or("tokens", 1024)?;
+    let n = args.usize_or("devices", 4)?;
+    let bw = args.f64_or("bandwidth", 100.0)?;
+    let shape = shape_preset(&model, tokens)?;
+    let params = if model == "llama3-8b" {
+        SimParams::paper_llama()
+    } else {
+        SimParams::paper_encoder()
+    };
+    let strat = Strategy::new(strategy_kind_from_args(args)?, n);
     let single = Strategy::new(StrategyKind::SingleDevice, 1);
     let bd = evaluate(&strat.schedule(&shape), &params, bw);
     let bd_single = evaluate(&single.schedule(&shape), &params, bw);

@@ -15,12 +15,21 @@ use super::batcher::{Batcher, Request};
 #[derive(Debug)]
 pub struct ServeReport {
     pub completed: usize,
+    /// requests admitted (or still queued) but not completed inside the
+    /// horizon — previously dropped silently with no wait accounting
+    pub censored: usize,
     pub horizon_s: f64,
     /// requests per second over the horizon
     pub throughput: f64,
+    /// requests per second up to the *last completion* — unbiased when
+    /// arrivals end early and the tail of the horizon is idle
+    pub throughput_completion: f64,
     pub latency: Summary,
     pub queue_wait: Summary,
-    /// per-10s-window completion counts (Fig 6 bars)
+    /// queue wait accrued by censored requests up to the horizon
+    pub censored_wait: Summary,
+    /// per-10s-window completion counts (Fig 6 bars), zero-padded to cover
+    /// the whole horizon
     pub windows: Vec<usize>,
 }
 
@@ -46,17 +55,8 @@ impl ServeEngine {
 
     /// Serve an open-loop Poisson stream at `rate` req/s for `horizon_s`.
     pub fn serve_poisson(&mut self, rng: &mut Rng, rate: f64, horizon_s: f64) -> ServeReport {
-        let mut arrivals = Vec::new();
-        let mut t = 0.0;
-        let mut id = 0u64;
-        loop {
-            t += rng.exp(rate);
-            if t >= horizon_s {
-                break;
-            }
-            id += 1;
-            arrivals.push(Request { id, arrival_s: t, tokens: self.shape.seq_len });
-        }
+        let arrivals =
+            super::batcher::poisson_arrivals(rng, rate, horizon_s, self.shape.seq_len);
         self.serve_stream(arrivals, horizon_s)
     }
 
@@ -66,8 +66,11 @@ impl ServeEngine {
         let mut now = 0.0f64;
         let mut latency = Summary::new();
         let mut wait = Summary::new();
+        let mut censored_wait = Summary::new();
         let mut windows = WindowedCounter::new(10.0);
         let mut completed = 0usize;
+        let mut censored = 0usize;
+        let mut last_completion = 0.0f64;
         let mut pending = arrivals.into_iter().peekable();
         loop {
             // admit everything that has arrived by `now`
@@ -81,16 +84,21 @@ impl ServeEngine {
             let batch = self.batcher.next_batch(now, true);
             if batch.is_empty() {
                 match pending.peek() {
-                    Some(r) => {
+                    // jump to the next arrival, but never admit post-horizon
+                    // arrivals (they are outside the run, not censored)
+                    Some(r) if r.arrival_s < horizon_s => {
                         now = r.arrival_s;
                         continue;
                     }
-                    None => break,
+                    _ => break,
                 }
             }
             for req in batch {
                 if now >= horizon_s {
-                    break;
+                    // admitted but never started: censored, waited to horizon
+                    censored += 1;
+                    censored_wait.add((horizon_s - req.arrival_s).max(0.0));
+                    continue;
                 }
                 let start = now.max(req.arrival_s);
                 wait.add(start - req.arrival_s);
@@ -100,6 +108,11 @@ impl ServeEngine {
                     completed += 1;
                     latency.add(done - req.arrival_s);
                     windows.record(done);
+                    last_completion = done;
+                } else {
+                    // started but straddles the horizon
+                    censored += 1;
+                    censored_wait.add(start - req.arrival_s);
                 }
                 now = done;
             }
@@ -107,13 +120,31 @@ impl ServeEngine {
                 break;
             }
         }
+        // census the queue and any arrivals inside the horizon never admitted
+        for req in self.batcher.drain_all() {
+            censored += 1;
+            censored_wait.add((horizon_s - req.arrival_s).max(0.0));
+        }
+        for req in pending {
+            if req.arrival_s < horizon_s {
+                censored += 1;
+                censored_wait.add(horizon_s - req.arrival_s);
+            }
+        }
         ServeReport {
             completed,
+            censored,
             horizon_s,
-            throughput: completed as f64 / horizon_s,
+            throughput_completion: if last_completion > 0.0 {
+                completed as f64 / last_completion
+            } else {
+                0.0
+            },
             latency,
             queue_wait: wait,
-            windows: windows.bars().to_vec(),
+            censored_wait,
+            throughput: windows.rate_until(horizon_s),
+            windows: windows.bars_until(horizon_s),
         }
     }
 }
@@ -169,6 +200,41 @@ mod tests {
         let r_single = single.serve_stream(reqs.clone(), 300.0);
         let r_sp = sp.serve_stream(reqs, 300.0);
         assert!(r_sp.completed < r_single.completed);
+    }
+
+    #[test]
+    fn censored_requests_are_accounted() {
+        // saturating load over a short horizon: most requests cannot finish
+        let trace = BandwidthTrace::constant(100.0, 1e9);
+        let mut e = engine(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4, trace);
+        let total = 200usize;
+        let reqs: Vec<Request> = (0..total as u64)
+            .map(|i| Request { id: i, arrival_s: 0.0, tokens: 1024 })
+            .collect();
+        let r = e.serve_stream(reqs, 2.0);
+        assert_eq!(r.completed + r.censored, total);
+        assert!(r.censored > 0);
+        // every censored request's queue wait is recorded
+        assert_eq!(r.censored_wait.len(), r.censored);
+        assert_eq!(r.windows.len(), 1); // ceil(2s / 10s window)
+    }
+
+    #[test]
+    fn completion_throughput_unbiased_by_idle_tail() {
+        // a handful of requests finishing early inside a long horizon
+        let trace = BandwidthTrace::constant(200.0, 1e9);
+        let mut e = engine(StrategyKind::Astra { vq: VqSetting::new(1, 1024) }, 4, trace);
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| Request { id: i, arrival_s: 0.0, tokens: 1024 })
+            .collect();
+        let r = e.serve_stream(reqs, 600.0);
+        assert_eq!(r.completed, 10);
+        assert_eq!(r.censored, 0);
+        // horizon-based throughput is diluted by the idle tail; the
+        // completion-based figure is not
+        assert!(r.throughput_completion > 10.0 * r.throughput);
+        // bars span the whole horizon (idle tail = zero windows)
+        assert_eq!(r.windows.len(), 60);
     }
 
     #[test]

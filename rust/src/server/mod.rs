@@ -1,9 +1,16 @@
-//! Serving layer: request intake, dynamic batching, the serve loop over
+//! Serving layer: request intake, dynamic batching, the serve loops over
 //! the simulated cluster / cost model, metrics, and the CLI entrypoints.
+//!
+//! Two engines share the cost model:
+//!  * [`engine::ServeEngine`] — the paper's Fig-6 setting: batch-1 FIFO.
+//!  * [`scheduler::CbEngine`] — continuous batching: slot-based admission
+//!    with batched prefill and interleaved batched decode steps.
 
 pub mod batcher;
 pub mod cli;
 pub mod engine;
+pub mod scheduler;
 
 pub use batcher::{Batcher, Request};
 pub use engine::{ServeEngine, ServeReport};
+pub use scheduler::{CbConfig, CbEngine, CbReport};

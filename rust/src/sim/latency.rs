@@ -64,7 +64,7 @@ pub fn evaluate_on_trace(
     let mut t = t0;
     let mut bd = Breakdown::default();
     for p in &sched.phases {
-        let c = params.device.compute_time(p.compute_flops, p.launches);
+        let c = params.device.phase_compute_time(p.compute_flops, p.launches, p.mem_bytes);
         t += c;
         bd.compute_s += c;
         if p.comm.bits > 0.0 || p.comm.stages > 0 {
@@ -75,6 +75,30 @@ pub fn evaluate_on_trace(
         }
     }
     bd
+}
+
+/// Evaluate a schedule executed by a batch of `b` requests at once under a
+/// static bandwidth: per-request FLOPs/bits scale with `b`; launches, sync
+/// stages, and the weight-streaming floor are paid once (see
+/// [`crate::parallel::cost::Phase::for_batch`]).
+pub fn evaluate_batched(
+    sched: &Schedule,
+    params: &SimParams,
+    bandwidth_mbps: f64,
+    batch: usize,
+) -> Breakdown {
+    evaluate(&sched.for_batch(batch.max(1)), params, bandwidth_mbps)
+}
+
+/// Batched evaluation against a time-varying trace starting at `t0`.
+pub fn evaluate_on_trace_batched(
+    sched: &Schedule,
+    params: &SimParams,
+    trace: &BandwidthTrace,
+    t0: f64,
+    batch: usize,
+) -> Breakdown {
+    evaluate_on_trace(&sched.for_batch(batch.max(1)), params, trace, t0)
 }
 
 #[cfg(test)]
@@ -125,6 +149,27 @@ mod tests {
             StrategyKind::Astra { vq: VqSetting::new(1, 1024) }, 4);
         let bd = evaluate(&astra.schedule(&shape()), &p, 20.0);
         assert!(bd.comm_fraction() < 0.3, "{}", bd.comm_fraction());
+    }
+
+    #[test]
+    fn batched_amortizes_stage_latency() {
+        let p = SimParams::paper_encoder();
+        let s = Strategy::new(
+            StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4)
+            .schedule(&shape());
+        let b1 = evaluate_batched(&s, &p, 100.0, 1);
+        let b8 = evaluate_batched(&s, &p, 100.0, 8);
+        // batch-1 equals the unbatched evaluation
+        let plain = evaluate(&s, &p, 100.0);
+        assert!((b1.total() - plain.total()).abs() < 1e-12);
+        // 8 requests cost less than 8 separate prefills (launches + sync
+        // stages amortize) but more than one
+        assert!(b8.total() < 8.0 * b1.total());
+        assert!(b8.total() > b1.total());
+        // trace and static variants agree on a constant trace
+        let tr = BandwidthTrace::constant(100.0, 1e9);
+        let b8t = evaluate_on_trace_batched(&s, &p, &tr, 0.0, 8);
+        assert!((b8.total() - b8t.total()).abs() < 1e-9);
     }
 
     #[test]

@@ -13,4 +13,6 @@ pub mod engine;
 pub mod latency;
 
 pub use engine::{Engine, Event};
-pub use latency::{evaluate, evaluate_on_trace, Breakdown, SimParams};
+pub use latency::{
+    evaluate, evaluate_batched, evaluate_on_trace, evaluate_on_trace_batched, Breakdown, SimParams,
+};

@@ -102,16 +102,39 @@ impl WindowedCounter {
         &self.counts
     }
 
+    /// Bars covering the full `[0, horizon)` span: zero-padded past the last
+    /// event so an idle tail shows up as empty windows instead of being
+    /// silently truncated (the `bars()` behaviour).
+    pub fn bars_until(&self, horizon_s: f64) -> Vec<usize> {
+        let n = (horizon_s / self.window).ceil().max(0.0) as usize;
+        let mut out = self.counts.clone();
+        if out.len() < n {
+            out.resize(n, 0);
+        }
+        out
+    }
+
     pub fn total(&self) -> usize {
         self.counts.iter().sum()
     }
 
-    /// Overall events/sec across the recorded horizon.
+    /// Events/sec over the span that saw events (up to the last non-empty
+    /// window). NOTE: an idle tail after the last event is NOT counted —
+    /// use [`rate_until`](Self::rate_until) with an explicit horizon for
+    /// unbiased serve-throughput numbers.
     pub fn rate(&self) -> f64 {
         if self.counts.is_empty() {
             return 0.0;
         }
         self.total() as f64 / (self.counts.len() as f64 * self.window)
+    }
+
+    /// Events/sec over an explicit `[0, horizon)` span.
+    pub fn rate_until(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            return 0.0;
+        }
+        self.total() as f64 / horizon_s
     }
 }
 
@@ -151,6 +174,23 @@ mod tests {
         assert_eq!(w.bars(), &[3, 1, 1]);
         assert_eq!(w.total(), 5);
         assert!((w.rate() - 5.0 / 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windowed_counter_horizon() {
+        let mut w = WindowedCounter::new(10.0);
+        for t in [0.0, 1.0, 25.0] {
+            w.record(t);
+        }
+        // bars() truncates at the last event; bars_until pads the idle tail
+        assert_eq!(w.bars(), &[2, 0, 1]);
+        assert_eq!(w.bars_until(60.0), vec![2, 0, 1, 0, 0, 0]);
+        // and never shrinks below recorded events
+        assert_eq!(w.bars_until(5.0), vec![2, 0, 1]);
+        // rate() is inflated by ignoring the idle tail; rate_until is not
+        assert!((w.rate() - 3.0 / 30.0).abs() < 1e-12);
+        assert!((w.rate_until(60.0) - 3.0 / 60.0).abs() < 1e-12);
+        assert_eq!(w.rate_until(0.0), 0.0);
     }
 
     #[test]

@@ -98,6 +98,40 @@ fn decode_session_generates() {
 }
 
 #[test]
+fn first_decode_step_conditions_on_prompt_tail() {
+    let dir = require_dec!();
+    let cluster = Cluster::load(&dir, RunConfig::default(), false).unwrap();
+    let meta = &cluster.artifact.meta;
+    // prompt deliberately ending in a non-zero token id
+    let tail = 1 + (meta.vocab_size - 1) / 2;
+    let mut prompt: Vec<usize> =
+        (0..meta.seq_len).map(|i| (i * 3) % meta.vocab_size).collect();
+    *prompt.last_mut().unwrap() = tail;
+    let sess = DecodeSession::new(&cluster, &prompt).unwrap();
+    // the very first step must embed the prompt tail, not token 0
+    assert_eq!(sess.conditioning_token(), tail);
+    // and that actually matters: the embedding row it selects differs from
+    // the token-0 row the old code used
+    let embed = cluster.artifact.tensor("embed").unwrap();
+    let diff = embed
+        .row(tail)
+        .iter()
+        .zip(embed.row(0))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff > 1e-6, "embedding rows 0 and {tail} coincide");
+    // generations from prompts differing only in the last token diverge in
+    // cache state: the two sessions' first steps see different inputs
+    let mut a = DecodeSession::new(&cluster, &prompt).unwrap();
+    let mut prompt_b = prompt.clone();
+    *prompt_b.last_mut().unwrap() = 0;
+    let mut b = DecodeSession::new(&cluster, &prompt_b).unwrap();
+    assert_ne!(a.conditioning_token(), b.conditioning_token());
+    // (argmax may still coincide, so compare conditioning, not tokens)
+    let _ = (a.step().unwrap(), b.step().unwrap());
+}
+
+#[test]
 fn decoder_astra_close_to_baseline() {
     let dir = require_dec!();
     let cluster = Cluster::load(&dir, RunConfig::default(), false).unwrap();
