@@ -1,0 +1,120 @@
+//! Live-path benchmarks: real `DecodeSession` prefill replay and decode
+//! steps on a synthetic decoder, and the end-to-end live
+//! continuous-batching engine vs the pure cost-model run of the same
+//! trace — the overhead of driving actual tensors through the scheduler.
+
+use astra::comm::trace::BandwidthTrace;
+use astra::config::RunConfig;
+use astra::coordinator::decode::DecodeSession;
+use astra::coordinator::Cluster;
+use astra::model::shape::VqSetting;
+use astra::model::TransformerShape;
+use astra::server::live::{live_arrivals, live_engine, serve_live, synth_prompt};
+use astra::server::scheduler::{CbConfig, ModelBackend};
+use astra::sim::latency::SimParams;
+use astra::util::bench::{black_box, header, Bench};
+use astra::util::rng::Rng;
+
+fn cluster() -> Cluster {
+    let shape = TransformerShape {
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 32,
+        elem_bytes: 4,
+    };
+    let config = RunConfig { n_devices: 4, ..RunConfig::default() };
+    Cluster::synthetic_decoder(&shape, 64, VqSetting::new(4, 16), config, 5).unwrap()
+}
+
+fn main() {
+    header();
+    let cl = cluster();
+    let meta = cl.artifact.meta.clone();
+    let mut b = Bench::new("live");
+
+    // variable-length prefill replay into a fresh mixed-precision cache
+    for plen in [8usize, 32] {
+        let prompt = synth_prompt(1, 1, plen, meta.vocab_size);
+        let cl_ref = &cl;
+        b.run(&format!("session_prefill_t{plen}"), move || {
+            black_box(DecodeSession::new(cl_ref, &prompt).unwrap().len)
+        });
+    }
+
+    // single decode step (the unit the scheduler amortizes); the session
+    // is rebuilt whenever its budget fills
+    let prompt = synth_prompt(1, 2, 32, meta.vocab_size);
+    let mut sess = DecodeSession::with_budget(&cl, &prompt, 32 + 2048).unwrap();
+    let cl_ref = &cl;
+    let prompt_ref = &prompt;
+    b.run("decode_step", move || {
+        if sess.len == sess.s_max {
+            sess = DecodeSession::with_budget(cl_ref, prompt_ref, 32 + 2048).unwrap();
+        }
+        black_box(sess.step().unwrap())
+    });
+
+    // end-to-end: the same fixed trace through the cost model alone vs
+    // with real sessions attached
+    let cfg = CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 8, ..CbConfig::default() };
+    let arrivals = live_arrivals(&mut Rng::new(9), 10.0, 3.0, meta.seq_len);
+    let params = SimParams::paper_encoder();
+    let trace = BandwidthTrace::constant(100.0, 1e9);
+    {
+        let cl_ref = &cl;
+        let cfg = cfg.clone();
+        let arrivals = arrivals.clone();
+        let params = params.clone();
+        let trace = trace.clone();
+        b.run("serve_model_only", move || {
+            let mut e = live_engine(cl_ref, cfg.clone(), params.clone(), trace.clone());
+            black_box(
+                e.serve_stream_with(&mut ModelBackend, arrivals.clone(), 1e4)
+                    .unwrap()
+                    .completed,
+            )
+        });
+    }
+    {
+        let cl_ref = &cl;
+        let cfg = cfg.clone();
+        let arrivals = arrivals.clone();
+        b.run("serve_live_sessions", move || {
+            black_box(
+                serve_live(
+                    cl_ref,
+                    cfg.clone(),
+                    params.clone(),
+                    trace.clone(),
+                    arrivals.clone(),
+                    1e4,
+                )
+                .unwrap()
+                .report
+                .completed,
+            )
+        });
+    }
+    b.finish();
+
+    // headline numbers: live generation really happened
+    let live = serve_live(
+        &cl,
+        cfg,
+        SimParams::paper_encoder(),
+        BandwidthTrace::constant(100.0, 1e9),
+        arrivals,
+        1e4,
+    )
+    .unwrap();
+    println!(
+        "\nlive run: {} completed, {} real decode steps, host compute {:.1} ms, \
+         virtual {:.1} ms",
+        live.report.completed,
+        live.live_steps,
+        live.host_compute_s * 1e3,
+        live.report.model_time.total() * 1e3,
+    );
+}

@@ -83,6 +83,23 @@ impl Cluster {
         Self::from_artifact(artifact, config, use_pjrt)
     }
 
+    /// Build a cluster over an in-memory synthetic decoder bundle
+    /// ([`Artifact::synthetic_decoder`]): random weights, native backend,
+    /// `config.n_devices` devices. The self-contained entry point for the
+    /// live continuous-batching path — tests, CI smoke runs, and
+    /// `astra serve-cb --live` without trained artifacts.
+    pub fn synthetic_decoder(
+        shape: &crate::model::TransformerShape,
+        vocab_size: usize,
+        vq: crate::model::shape::VqSetting,
+        config: RunConfig,
+        seed: u64,
+    ) -> Result<Cluster> {
+        let artifact =
+            Artifact::synthetic_decoder(shape, vocab_size, config.n_devices, vq, seed)?;
+        Self::from_artifact(artifact, config, false)
+    }
+
     pub fn from_artifact(artifact: Artifact, config: RunConfig, use_pjrt: bool) -> Result<Cluster> {
         let meta = &artifact.meta;
         let t = meta.seq_len;

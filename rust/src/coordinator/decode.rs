@@ -19,10 +19,26 @@ pub struct DecodeSession<'a> {
     v_cache: Vec<Tensor>,
     pub len: usize,
     pub s_max: usize,
+    /// prompt tokens replayed into the cache at construction
+    pub prompt_len: usize,
     pub generated: Vec<usize>,
     /// last prompt token id — the first decode step conditions on this
     /// (NOT token 0; see `conditioning_token`)
     pub prompt_tail: usize,
+}
+
+/// Scale the cluster's token partition down to a `t`-token prompt: each
+/// device keeps its proportional share (floor), and the tail device — the
+/// one that owns the sequence tail and runs decode — absorbs the
+/// remainder. For `t == partition.total()` this reproduces the partition
+/// exactly, so full-length prompts behave as before.
+pub fn prompt_partition(full: &TokenPartition, t: usize) -> TokenPartition {
+    let n = full.n_devices();
+    let total = full.total().max(1);
+    let mut sizes: Vec<usize> = full.sizes.iter().map(|&s| s * t / total).collect();
+    let used: usize = sizes.iter().sum();
+    sizes[n - 1] += t - used;
+    TokenPartition::explicit(sizes)
 }
 
 /// The token id the next decode step embeds: the most recently generated
@@ -36,16 +52,44 @@ pub fn next_conditioning_token(generated: &[usize], prompt_tail: usize) -> usize
 impl<'a> DecodeSession<'a> {
     /// Seed the cache from the prompt token ids, replaying the tail
     /// device's view of the prefill (local rows full precision, remote
-    /// rows dequantized). Decoder artifacts only.
+    /// rows dequantized). Decoder artifacts only. Accepts any prompt of
+    /// 1..=seq_len tokens (variable-length serving); the default cache
+    /// budget leaves room for `seq_len` generated tokens.
     pub fn new(cluster: &'a Cluster, prompt: &[usize]) -> Result<DecodeSession<'a>> {
+        let s_max = prompt.len() + cluster.artifact.meta.seq_len;
+        Self::with_budget(cluster, prompt, s_max)
+    }
+
+    /// `new` with an explicit per-slot cache budget: the session allocates
+    /// `s_max` KV rows and can generate `s_max - prompt.len()` tokens.
+    /// Continuous-batching slots size this to prompt + decode budget so
+    /// KV-pressure admission (`server::scheduler::KvBudget`) sees the true
+    /// per-slot footprint.
+    pub fn with_budget(
+        cluster: &'a Cluster,
+        prompt: &[usize],
+        s_max: usize,
+    ) -> Result<DecodeSession<'a>> {
         let meta = &cluster.artifact.meta;
         if !meta.causal {
             bail!("decode sessions require a decoder (causal) artifact");
         }
-        if prompt.len() != meta.seq_len {
-            bail!("prompt must have exactly {} tokens (AOT shape)", meta.seq_len);
+        if prompt.is_empty() {
+            // an empty prompt has no tail token to condition on; falling
+            // back to token id 0 would silently decode from a fabricated
+            // context (the same bug class as the token-0 conditioning fix)
+            bail!("decode sessions require a non-empty prompt");
         }
-        let s_max = 2 * meta.seq_len; // prompt + up to seq_len generated
+        if prompt.len() > meta.seq_len {
+            bail!(
+                "prompt has {} tokens; the artifact supports at most {} (learned positions)",
+                prompt.len(),
+                meta.seq_len
+            );
+        }
+        if s_max < prompt.len() {
+            bail!("cache budget {s_max} cannot hold the {}-token prompt", prompt.len());
+        }
         let hh = meta.n_heads;
         let dh = meta.d_model / hh;
         let mut sess = DecodeSession {
@@ -54,8 +98,9 @@ impl<'a> DecodeSession<'a> {
             v_cache: (0..meta.n_layers).map(|_| Tensor::zeros(&[hh, s_max, dh])).collect(),
             len: 0,
             s_max,
+            prompt_len: prompt.len(),
             generated: Vec::new(),
-            prompt_tail: prompt.last().copied().unwrap_or(0),
+            prompt_tail: *prompt.last().expect("prompt checked non-empty"),
         };
         sess.fill_from_prompt(prompt)?;
         Ok(sess)
@@ -66,9 +111,9 @@ impl<'a> DecodeSession<'a> {
     /// remote rows from the VQ-decoded stream of each layer's input.
     fn fill_from_prompt(&mut self, prompt: &[usize]) -> Result<()> {
         let meta = &self.cluster.artifact.meta;
-        let t = meta.seq_len;
+        let t = prompt.len();
         let n = self.cluster.partition.n_devices();
-        let part: &TokenPartition = &self.cluster.partition;
+        let part = prompt_partition(&self.cluster.partition, t);
         let tail = n - 1;
         let ids = Tensor::from_vec(&[t, 1], prompt.iter().map(|&v| v as f32).collect())?;
         let mut h = self.cluster.embed(&ids)?; // [T, D] global stream
@@ -175,20 +220,42 @@ impl<'a> DecodeSession<'a> {
         next_conditioning_token(&self.generated, self.prompt_tail)
     }
 
-    /// Appendix G memory accounting for this session's cache strategy.
-    pub fn cache_bytes_mixed(&self) -> usize {
+    fn accounting_shape(&self) -> crate::model::TransformerShape {
         let meta = &self.cluster.artifact.meta;
-        let shape = crate::model::TransformerShape {
+        crate::model::TransformerShape {
             n_layers: meta.n_layers,
             d_model: meta.d_model,
             n_heads: meta.n_heads,
             d_ff: meta.d_ff,
             seq_len: meta.seq_len,
             elem_bytes: 4,
-        };
-        crate::model::kv_cache_bytes_astra(
-            &shape,
-            meta.seq_len,
+        }
+    }
+
+    /// Appendix G memory accounting for the cache's *current* occupancy:
+    /// mixed-precision prompt rows plus full-precision generated rows.
+    pub fn cache_bytes_mixed(&self) -> usize {
+        let meta = &self.cluster.artifact.meta;
+        crate::model::kv_cache_bytes_astra_live(
+            &self.accounting_shape(),
+            self.prompt_len,
+            self.len.saturating_sub(self.prompt_len),
+            4,
+            self.cluster.partition.n_devices(),
+            meta.groups,
+            meta.codebook_size,
+        )
+    }
+
+    /// Appendix G accounting at the full `s_max` budget — what this slot
+    /// will hold once its decode budget is exhausted (the admission gate's
+    /// per-slot ceiling).
+    pub fn cache_bytes_budget(&self) -> usize {
+        let meta = &self.cluster.artifact.meta;
+        crate::model::kv_cache_bytes_astra_live(
+            &self.accounting_shape(),
+            self.prompt_len,
+            self.s_max - self.prompt_len,
             4,
             self.cluster.partition.n_devices(),
             meta.groups,
@@ -277,7 +344,11 @@ fn native_decode_step(
 
 #[cfg(test)]
 mod tests {
-    use super::next_conditioning_token;
+    use super::{next_conditioning_token, prompt_partition, DecodeSession};
+    use crate::config::RunConfig;
+    use crate::coordinator::{Cluster, TokenPartition};
+    use crate::model::shape::VqSetting;
+    use crate::model::TransformerShape;
 
     #[test]
     fn first_step_conditions_on_prompt_tail_not_token_zero() {
@@ -290,5 +361,83 @@ mod tests {
         // degenerate tail id 0 is still honoured (only correct when the
         // prompt really ends in token 0)
         assert_eq!(next_conditioning_token(&[], 0), 0);
+    }
+
+    #[test]
+    fn prompt_partition_scales_and_tail_owns_remainder() {
+        let full = TokenPartition::explicit(vec![4, 4, 4, 4]);
+        assert_eq!(prompt_partition(&full, 16).sizes, vec![4, 4, 4, 4]);
+        assert_eq!(prompt_partition(&full, 10).sizes, vec![2, 2, 2, 4]);
+        assert_eq!(prompt_partition(&full, 3).sizes, vec![0, 0, 0, 3]);
+        assert_eq!(prompt_partition(&full, 1).sizes, vec![0, 0, 0, 1]);
+        // heterogeneous splits keep their proportions
+        let het = TokenPartition::explicit(vec![8, 4, 4]);
+        let p = prompt_partition(&het, 8);
+        assert_eq!(p.total(), 8);
+        assert!(p.sizes[0] >= p.sizes[1]);
+    }
+
+    fn tiny_cluster() -> Cluster {
+        let shape = TransformerShape {
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 16,
+            elem_bytes: 4,
+        };
+        let config = RunConfig { n_devices: 2, ..RunConfig::default() };
+        Cluster::synthetic_decoder(&shape, 32, VqSetting::new(2, 8), config, 11).unwrap()
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected() {
+        // regression: `prompt_tail` used to fall back to token 0 via
+        // `unwrap_or(0)`, so an empty prompt silently decoded from a
+        // fabricated context instead of erroring
+        let cluster = tiny_cluster();
+        let err = DecodeSession::new(&cluster, &[]).err().expect("empty prompt must fail");
+        assert!(err.to_string().contains("non-empty"), "{err}");
+        assert!(DecodeSession::with_budget(&cluster, &[], 8).is_err());
+        // one token is the minimum viable prompt
+        assert!(DecodeSession::new(&cluster, &[3]).is_ok());
+    }
+
+    #[test]
+    fn variable_length_prompts_generate_deterministically() {
+        let cluster = tiny_cluster();
+        let vocab = cluster.artifact.meta.vocab_size;
+        for plen in [1usize, 5, 9, 16] {
+            let prompt: Vec<usize> = (0..plen).map(|i| (i * 5 + 1) % vocab).collect();
+            let mut sess = DecodeSession::new(&cluster, &prompt).unwrap();
+            assert_eq!(sess.len, plen);
+            assert_eq!(sess.prompt_len, plen);
+            let toks: Vec<usize> = (0..4).map(|_| sess.step().unwrap()).collect();
+            assert!(toks.iter().all(|&t| t < vocab));
+            assert_eq!(sess.len, plen + 4);
+            // greedy decode reproduces bit-for-bit from a fresh session
+            let mut again = DecodeSession::new(&cluster, &prompt).unwrap();
+            let toks2: Vec<usize> = (0..4).map(|_| again.step().unwrap()).collect();
+            assert_eq!(toks, toks2, "plen={plen}");
+        }
+        // prompts longer than the learned positions are rejected
+        assert!(DecodeSession::new(&cluster, &[1usize; 17]).is_err());
+    }
+
+    #[test]
+    fn cache_budget_caps_generation() {
+        let cluster = tiny_cluster();
+        let prompt = [1usize, 2, 3, 4, 5];
+        // budget must at least hold the prompt
+        assert!(DecodeSession::with_budget(&cluster, &prompt, 4).is_err());
+        let mut sess = DecodeSession::with_budget(&cluster, &prompt, 7).unwrap();
+        sess.step().unwrap();
+        sess.step().unwrap();
+        let err = sess.step().expect_err("cache must be full at s_max");
+        assert!(err.to_string().contains("cache full"), "{err}");
+        // budget accounting: current occupancy grows toward the ceiling
+        assert!(sess.cache_bytes_mixed() <= sess.cache_bytes_budget());
+        let fresh = DecodeSession::with_budget(&cluster, &prompt, 7).unwrap();
+        assert!(fresh.cache_bytes_mixed() < sess.cache_bytes_mixed());
     }
 }

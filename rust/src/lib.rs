@@ -15,16 +15,26 @@
 //!   a simulated network (bandwidth caps, latency, packet loss, dynamic
 //!   Markovian traces) carrying *real* bit-packed payloads, plus a
 //!   discrete-event latency simulator for the paper's sweeps.
-//! * [`server`] serves request streams over the cost model: the paper's
-//!   batch-1 FIFO loop ([`server::engine`], Fig 6) and a continuous-batching
-//!   engine ([`server::scheduler`]) that admits prefill batches into
-//!   in-flight decode slots. Batched execution semantics live in the cost
-//!   model ([`parallel::cost::Phase::for_batch`]): per-request FLOPs and
-//!   wire bits scale with the batch, while kernel launches, collective sync
+//! * [`server`] serves request streams: the paper's batch-1 FIFO loop
+//!   ([`server::engine`], Fig 6) and a continuous-batching engine
+//!   ([`server::scheduler`]) that admits prefill batches into in-flight
+//!   decode slots. Batched execution semantics live in the cost model
+//!   ([`parallel::cost::Phase::for_batch`]): per-request FLOPs and wire
+//!   bits scale with the batch, while kernel launches, collective sync
 //!   stages, and the weight-streaming memory floor — which gates
 //!   single-token decode — are paid once, so co-scheduled decode slots are
-//!   nearly free. Reports cover p50/p95/p99 latency, TTFT, queue depth,
-//!   censored requests, and goodput under an SLO.
+//!   nearly free. Admission is gated on Appendix-G mixed-KV memory
+//!   ([`server::scheduler::KvBudget`]): slots grow two full-precision rows
+//!   per generated token, and under pressure the newest slots are evicted
+//!   back to the queue for recompute. The same scheduler loop drives two
+//!   backends through [`server::scheduler::DecodeBackend`]: the pure cost
+//!   model, and the *live* path ([`server::live`]) executing real
+//!   [`coordinator::decode::DecodeSession`]s — variable-length prompt
+//!   replay into mixed-precision KV caches, greedy generations — behind
+//!   `astra serve-cb --live`. `tests/live_vs_model.rs` is the differential
+//!   harness pinning both backends to identical decision streams. Reports
+//!   cover p50/p95/p99 latency, TTFT, queue depth, censored requests,
+//!   goodput under an SLO, and KV peak/eviction/violation counters.
 //! * [`parallel`] implements the baselines — Tensor Parallelism
 //!   (Megatron-LM), Sequence Parallelism (Voltage), Block Parallelism
 //!   (DeTransformer, BP+AG / BP+SP) — as per-block communication/compute

@@ -15,7 +15,7 @@ use anyhow::Result;
 use astra::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["help", "verbose", "native", "no-pjrt"])?;
+    let args = Args::from_env(&["help", "verbose", "native", "no-pjrt", "live"])?;
     if args.flag("help") || args.positional.is_empty() {
         print_help();
         return Ok(());
@@ -50,6 +50,11 @@ SUBCOMMANDS
              --model M --tokens T --devices N --strategy S --bandwidth MBPS
              --trace constant|markov --rate R --horizon S --slots K
              --max-batch B --max-wait S --decode-tokens D --slo S --seed S
+             --kv-cap BYTES (mixed-KV admission cap, 0 = off)
+             --live: drive real DecodeSessions (variable-length prompts,
+             mixed-precision KV caches, greedy generations) through the
+             same slot scheduler; uses --artifacts DIR when a decoder
+             bundle exists, else a synthetic tiny decoder
   run        single prefill through the cluster; prints logits and
              per-layer communication accounting
              --artifacts DIR --devices N --bandwidth MBPS [--native]

@@ -20,7 +20,10 @@ pub fn kv_cache_bytes_full(shape: &TransformerShape, seq_len: usize, elem_bytes:
 }
 
 /// ASTRA mixed KV cache (Appendix G Eq. 39): local tokens full precision,
-/// non-local tokens as G VQ indices of log2(K) bits each.
+/// non-local tokens as G VQ indices of log2(K) bits each. The tail device
+/// (which runs decode and owns the cache) holds the remainder when
+/// `seq_len` does not divide evenly, so every token is accounted exactly —
+/// `seq_len / n_devices` alone silently undercounted the tail remainder.
 pub fn kv_cache_bytes_astra(
     shape: &TransformerShape,
     seq_len: usize,
@@ -29,10 +32,35 @@ pub fn kv_cache_bytes_astra(
     groups: usize,
     k: usize,
 ) -> usize {
-    let local = seq_len / n_devices * shape.n_layers * shape.d_model * elem_bytes;
-    let nonlocal_bits =
-        (n_devices - 1) * (seq_len / n_devices) * shape.n_layers * groups * ceil_log2(k);
-    2 * (local + nonlocal_bits / 8)
+    let n = n_devices.max(1);
+    let local_tokens = seq_len / n + seq_len % n;
+    let remote_tokens = seq_len - local_tokens;
+    let local = local_tokens * shape.n_layers * shape.d_model * elem_bytes;
+    let nonlocal_bits = remote_tokens * shape.n_layers * groups * ceil_log2(k);
+    2 * (local + nonlocal_bits.div_ceil(8))
+}
+
+/// Full-precision K+V bytes one appended token costs across all layers —
+/// the per-step growth of a decode session's cache on the tail device.
+pub fn kv_token_bytes_full(shape: &TransformerShape, elem_bytes: usize) -> usize {
+    2 * shape.n_layers * shape.d_model * elem_bytes
+}
+
+/// Memory held by a live decode slot: the Appendix-G mixed cache over the
+/// `prompt_len` prefill tokens plus `generated` decode tokens appended in
+/// full precision on the tail device. This is the quantity the serving
+/// scheduler's `KvBudget` admission gate tracks per slot.
+pub fn kv_cache_bytes_astra_live(
+    shape: &TransformerShape,
+    prompt_len: usize,
+    generated: usize,
+    elem_bytes: usize,
+    n_devices: usize,
+    groups: usize,
+    k: usize,
+) -> usize {
+    kv_cache_bytes_astra(shape, prompt_len, elem_bytes, n_devices, groups, k)
+        + generated * kv_token_bytes_full(shape, elem_bytes)
 }
 
 #[cfg(test)]
@@ -62,6 +90,59 @@ mod tests {
         // ~26.5% of original
         let ratio = astra as f64 / 134_217_728.0;
         assert!((ratio - 0.2646).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn non_divisible_seq_len_counts_the_tail_remainder() {
+        // regression: seq_len / n_devices silently dropped the remainder
+        // tokens the tail device owns. 7 tokens over 2 devices: the tail
+        // holds 4 locally (3 + the remainder 1), 3 arrive as codes.
+        let shape = TransformerShape {
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 7,
+            elem_bytes: 4,
+        };
+        // local: 4 tok * 2 L * 8 D * 4 B = 256; remote: 3 * 2 * 4 groups
+        // * 4 bits (K=16) = 96 bits = 12 B; K and V each -> 2 * 268
+        assert_eq!(kv_cache_bytes_astra(&shape, 7, 4, 2, 4, 16), 536);
+        // the old formula dropped the `seq_len % n` remainder tokens from
+        // BOTH the local and remote counts; the fix never under-counts,
+        // and strictly exceeds the buggy value whenever a remainder exists
+        for n in [2usize, 3, 4] {
+            for s in 1..64 {
+                let fixed = kv_cache_bytes_astra(&shape, s, 4, n, 4, 16);
+                let local_old = s / n * shape.n_layers * shape.d_model * 4;
+                let bits_old = (n - 1) * (s / n) * shape.n_layers * 4 * 4;
+                let old = 2 * (local_old + bits_old / 8);
+                assert!(fixed >= old, "n={n} s={s}: {fixed} < {old}");
+                if s % n != 0 {
+                    assert!(fixed > old, "n={n} s={s}: remainder still uncounted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn live_cache_adds_full_precision_decode_rows() {
+        let shape = TransformerShape {
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 7,
+            elem_bytes: 4,
+        };
+        let base = kv_cache_bytes_astra(&shape, 7, 4, 2, 4, 16);
+        let per_tok = kv_token_bytes_full(&shape, 4);
+        assert_eq!(per_tok, 2 * 2 * 8 * 4);
+        assert_eq!(kv_cache_bytes_astra_live(&shape, 7, 0, 4, 2, 4, 16), base);
+        assert_eq!(
+            kv_cache_bytes_astra_live(&shape, 7, 5, 4, 2, 4, 16),
+            base + 5 * per_tok
+        );
     }
 
     #[test]

@@ -185,6 +185,98 @@ impl Artifact {
         Ok(Artifact { dir: dir.to_path_buf(), graphs, meta, tensors, codebooks })
     }
 
+    /// Build a fully in-memory decoder bundle with random weights: no
+    /// files on disk, no AOT graphs (native backend only). This is what
+    /// lets the live continuous-batching path run anywhere — unit tests,
+    /// the CI smoke job, and `astra serve-cb --live` when no trained
+    /// bundle exists. Deterministic in `seed`.
+    pub fn synthetic_decoder(
+        shape: &crate::model::TransformerShape,
+        vocab_size: usize,
+        n_devices: usize,
+        vq: crate::model::shape::VqSetting,
+        seed: u64,
+    ) -> Result<Artifact> {
+        use crate::model::shape::ceil_log2;
+        let (l, d, hh) = (shape.n_layers, shape.d_model, shape.n_heads);
+        let (ff, t) = (shape.d_ff, shape.seq_len);
+        if d == 0 || hh == 0 || d % hh != 0 {
+            bail!("d_model {d} must divide into {hh} heads");
+        }
+        if vq.groups == 0 || d % vq.groups != 0 {
+            bail!("d_model {d} must divide into {} VQ groups", vq.groups);
+        }
+        if n_devices == 0 || t % n_devices != 0 {
+            bail!("seq_len {t} must split evenly over {n_devices} devices");
+        }
+        if vocab_size < 2 {
+            bail!("vocab_size must be at least 2");
+        }
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut tensors = BTreeMap::new();
+        tensors.insert(
+            "embed".to_string(),
+            rand_tensor(&mut rng, &[vocab_size, d], 0.5),
+        );
+        tensors.insert("pos".to_string(), rand_tensor(&mut rng, &[t, d], 0.1));
+        const NAMES: [&str; 16] = [
+            "ln1.g", "ln1.b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+            "ln2.g", "ln2.b", "w1", "b1", "w2", "b2",
+        ];
+        for li in 0..l {
+            let blk = crate::model::native::BlockWeights::random(&mut rng, d, ff);
+            for (name, tensor) in NAMES.iter().zip(blk.as_list()) {
+                tensors.insert(format!("blocks.{li}.{name}"), tensor);
+            }
+        }
+        tensors.insert(
+            "ln_f.g".to_string(),
+            Tensor::from_vec(&[d], vec![1.0; d])?,
+        );
+        tensors.insert(
+            "ln_f.b".to_string(),
+            Tensor::from_vec(&[d], vec![0.0; d])?,
+        );
+        tensors.insert(
+            "head.w".to_string(),
+            rand_tensor(&mut rng, &[d, vocab_size], (d as f32).powf(-0.5)),
+        );
+        tensors.insert(
+            "head.b".to_string(),
+            Tensor::from_vec(&[vocab_size], vec![0.0; vocab_size])?,
+        );
+        let dg = d / vq.groups;
+        let codebooks = (0..l)
+            .map(|_| {
+                let data = rand_tensor(&mut rng, &[vq.groups * vq.codebook_size, dg], 0.5).data;
+                Codebook::new(vq.groups, vq.codebook_size, dg, data)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let meta = ModelMeta {
+            n_layers: l,
+            d_model: d,
+            n_heads: hh,
+            d_ff: ff,
+            seq_len: t,
+            causal: true,
+            use_cls: false,
+            vocab_size,
+            patch_dim: 1,
+            n_classes: 0,
+            n_devices,
+            groups: vq.groups,
+            codebook_size: vq.codebook_size,
+            bits_per_token: vq.groups * ceil_log2(vq.codebook_size),
+        };
+        Ok(Artifact {
+            dir: PathBuf::from("<synthetic>"),
+            graphs: BTreeMap::new(),
+            meta,
+            tensors,
+            codebooks,
+        })
+    }
+
     pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
         self.graphs
             .get(name)
@@ -231,5 +323,65 @@ impl Artifact {
             w2: t("w2")?,
             b2: v("b2")?,
         })
+    }
+}
+
+/// Normal-random tensor for synthetic bundles.
+fn rand_tensor(rng: &mut crate::util::rng::Rng, shape: &[usize], std: f32) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    for v in t.data.iter_mut() {
+        *v = rng.normal_f32(0.0, std);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shape::VqSetting;
+    use crate::model::TransformerShape;
+
+    fn tiny_shape() -> TransformerShape {
+        TransformerShape {
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 16,
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn synthetic_decoder_is_complete_and_deterministic() {
+        let a = Artifact::synthetic_decoder(&tiny_shape(), 32, 2, VqSetting::new(2, 8), 7).unwrap();
+        assert!(a.meta.causal);
+        assert_eq!(a.meta.bits_per_token, 2 * 3);
+        assert_eq!(a.codebooks.len(), 2);
+        // everything the native decode path reads is present
+        for name in ["embed", "pos", "ln_f.g", "ln_f.b", "head.w", "head.b"] {
+            assert!(a.tensor(name).is_ok(), "missing {name}");
+        }
+        for li in 0..2 {
+            assert!(a.native_block(li).is_ok(), "incomplete block {li}");
+        }
+        // deterministic in the seed
+        let b = Artifact::synthetic_decoder(&tiny_shape(), 32, 2, VqSetting::new(2, 8), 7).unwrap();
+        assert_eq!(a.tensor("embed").unwrap().data, b.tensor("embed").unwrap().data);
+        let c = Artifact::synthetic_decoder(&tiny_shape(), 32, 2, VqSetting::new(2, 8), 8).unwrap();
+        assert_ne!(a.tensor("embed").unwrap().data, c.tensor("embed").unwrap().data);
+    }
+
+    #[test]
+    fn synthetic_decoder_rejects_bad_shapes() {
+        let vq = VqSetting::new(2, 8);
+        let mut s = tiny_shape();
+        s.seq_len = 15; // not divisible by 2 devices
+        assert!(Artifact::synthetic_decoder(&s, 32, 2, vq, 0).is_err());
+        let mut s = tiny_shape();
+        s.n_heads = 3; // 16 % 3 != 0
+        assert!(Artifact::synthetic_decoder(&s, 32, 2, vq, 0).is_err());
+        assert!(Artifact::synthetic_decoder(&tiny_shape(), 1, 2, vq, 0).is_err());
+        assert!(Artifact::synthetic_decoder(&tiny_shape(), 32, 5, vq, 0).is_err());
     }
 }

@@ -74,15 +74,52 @@ impl Batcher {
     /// batching admission path, where the cap is the number of free decode
     /// slots. The full/deadline trigger still looks at the whole queue.
     pub fn next_batch_capped(&mut self, now: f64, force: bool, cap: usize) -> Vec<Request> {
+        self.next_batch_filtered(now, force, cap, |_| true)
+    }
+
+    /// `next_batch_capped` with a per-request admission predicate: requests
+    /// are popped front-to-back (FIFO — no reordering around a blocked
+    /// head) and the batch stops at the first request `fits` rejects. The
+    /// continuous-batching scheduler uses this for the KV-pressure gate,
+    /// where `fits` checks the request's projected cache bytes against the
+    /// remaining [`super::scheduler::KvBudget`].
+    pub fn next_batch_filtered(
+        &mut self,
+        now: f64,
+        force: bool,
+        cap: usize,
+        mut fits: impl FnMut(&Request) -> bool,
+    ) -> Vec<Request> {
         if self.queue.is_empty() || cap == 0 {
             return Vec::new();
         }
         let oldest_wait = now - self.queue.front().unwrap().arrival_s;
         if self.queue.len() >= self.max_batch || oldest_wait >= self.max_wait_s || force {
             let take = self.queue.len().min(self.max_batch).min(cap);
-            return self.queue.drain(..take).collect();
+            let mut out = Vec::with_capacity(take);
+            while out.len() < take {
+                let admissible = match self.queue.front() {
+                    Some(r) => fits(r),
+                    None => false,
+                };
+                if !admissible {
+                    break;
+                }
+                out.push(self.queue.pop_front().unwrap());
+            }
+            return out;
         }
         Vec::new()
+    }
+
+    /// The request at the head of the queue, if any.
+    pub fn front(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
+    /// Pop the head of the queue (KV-pressure rejection path).
+    pub fn pop_front(&mut self) -> Option<Request> {
+        self.queue.pop_front()
     }
 
     /// Arrival time of the oldest queued request (None when the queue is
@@ -131,6 +168,20 @@ mod tests {
         b.push(req(1, 0.0));
         assert_eq!(b.next_batch(0.0, true).len(), 1);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn filtered_batch_stops_at_first_misfit_fifo() {
+        let mut b = Batcher::new(4, 0.0);
+        for i in 0..4 {
+            b.push(req(i, 0.0));
+        }
+        // requests 0 and 1 fit; 2 does not — 3 must NOT jump the queue
+        let batch = b.next_batch_filtered(0.0, true, 4, |r| r.id != 2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.front().map(|r| r.id), Some(2));
+        assert_eq!(b.pop_front().map(|r| r.id), Some(2));
+        assert_eq!(b.len(), 1);
     }
 
     #[test]

@@ -1,16 +1,26 @@
 //! Serving layer: request intake, dynamic batching, the serve loops over
 //! the simulated cluster / cost model, metrics, and the CLI entrypoints.
 //!
-//! Two engines share the cost model:
-//!  * [`engine::ServeEngine`] — the paper's Fig-6 setting: batch-1 FIFO.
+//! Three serve paths:
+//!  * [`engine::ServeEngine`] — the paper's Fig-6 setting: batch-1 FIFO
+//!    over the cost model.
 //!  * [`scheduler::CbEngine`] — continuous batching: slot-based admission
-//!    with batched prefill and interleaved batched decode steps.
+//!    with batched prefill, interleaved batched decode steps, and
+//!    KV-pressure admission ([`scheduler::KvBudget`]).
+//!  * [`live`] — the same scheduler loop driving *real*
+//!    [`crate::coordinator::decode::DecodeSession`]s through a
+//!    [`scheduler::DecodeBackend`]: actual tensors, mixed-precision KV
+//!    caches, greedy generations (`astra serve-cb --live`). The
+//!    differential harness `tests/live_vs_model.rs` pins that live and
+//!    cost-model runs make identical scheduling decisions.
 
 pub mod batcher;
 pub mod cli;
 pub mod engine;
+pub mod live;
 pub mod scheduler;
 
 pub use batcher::{Batcher, Request};
 pub use engine::{ServeEngine, ServeReport};
-pub use scheduler::{CbConfig, CbEngine, CbReport};
+pub use live::{serve_live, LiveBackend, LiveReport};
+pub use scheduler::{CbConfig, CbEngine, CbEvent, CbReport, DecodeBackend, KvBudget, ModelBackend};

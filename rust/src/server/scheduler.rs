@@ -1,4 +1,4 @@
-//! Continuous-batching serve scheduler over the cost model.
+//! Continuous-batching serve scheduler.
 //!
 //! Replaces the batch-1 FIFO loop for load testing: requests are admitted
 //! into `max_slots` in-flight decode slots (vLLM/Orca-style continuous
@@ -12,15 +12,44 @@
 //!    token — single-token decode is memory-bound (one streaming pass over
 //!    the weights), so co-scheduled slots share that floor almost for free.
 //!
+//! # Backends
+//!
+//! The loop owns every scheduling decision and all *timing* (the cost
+//! model's virtual clock); per-slot execution is delegated to a
+//! [`DecodeBackend`]. [`ModelBackend`] is the pure cost-model run;
+//! [`crate::server::live::LiveBackend`] drives real
+//! [`crate::coordinator::decode::DecodeSession`]s — actual tensors,
+//! mixed-precision KV caches, greedy decode. Because both backends share
+//! this loop, their decision streams ([`CbEvent`]) must be identical on
+//! the same trace; `tests/live_vs_model.rs` asserts exactly that.
+//!
+//! # KV-pressure admission
+//!
+//! With `CbConfig::kv_cap_bytes > 0`, a [`KvBudget`] gates admission on
+//! Appendix-G mixed-KV memory ([`crate::model::kv_cache_bytes_astra_live`]):
+//! a request is admitted only when its prefill cache fits the cap next to
+//! every in-flight slot; otherwise it queues (FIFO — nothing jumps a
+//! blocked head). Slots grow by two full-precision rows per generated
+//! token, so pressure can build *during* decode; before a step would
+//! overflow the cap, the newest slots are evicted back to the queue
+//! (recompute-style preemption — their requests re-prefill later, and
+//! their queue/TTFT waits are recorded again on re-admission). The oldest
+//! slot is never evicted, and requests whose full budget can never fit are
+//! rejected outright, so admission always makes progress. Requests that
+//! can never fit are counted in `CbReport::kv_rejected`.
+//!
 //! The engine reports tail latency (p50/p95/p99), time-to-first-token,
-//! queue depth over time, goodput under an SLO, and both horizon- and
-//! completion-based throughput, with censored (unfinished) requests
-//! accounted separately.
+//! queue depth over time, goodput under an SLO, both horizon- and
+//! completion-based throughput with censored (unfinished) requests
+//! accounted separately, KV peak/eviction counters, and the full decision
+//! event stream.
+
+use anyhow::Result;
 
 use crate::comm::trace::BandwidthTrace;
-use crate::model::TransformerShape;
-use crate::parallel::strategies::Strategy;
-use crate::sim::latency::{evaluate_on_trace_batched, SimParams};
+use crate::model::{kv_cache_bytes_astra_live, kv_cache_bytes_full, TransformerShape};
+use crate::parallel::strategies::{Strategy, StrategyKind};
+use crate::sim::latency::{evaluate_on_trace_batched, Breakdown, SimParams};
 use crate::util::rng::Rng;
 use crate::util::stats::{Summary, WindowedCounter};
 
@@ -42,6 +71,8 @@ pub struct CbConfig {
     pub slo_s: f64,
     /// completion-bar window (Fig 6 style)
     pub window_s: f64,
+    /// mixed-KV memory cap for the admission gate, bytes (0 = unlimited)
+    pub kv_cap_bytes: usize,
 }
 
 impl Default for CbConfig {
@@ -53,6 +84,7 @@ impl Default for CbConfig {
             decode_tokens: 64,
             slo_s: 0.0,
             window_s: 10.0,
+            kv_cap_bytes: 0,
         }
     }
 }
@@ -65,12 +97,102 @@ impl CbConfig {
     }
 }
 
+/// One scheduling decision. The stream of events is the scheduler's
+/// complete decision record; the live-vs-model differential harness
+/// (`tests/live_vs_model.rs`) asserts two backends produce identical
+/// streams on the same fixed-seed trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CbEvent {
+    /// batched prefill admitted these request ids into slots (queue order)
+    Admit { ids: Vec<u64> },
+    /// one batched decode step advanced these in-flight slots by a token
+    Decode { ids: Vec<u64> },
+    /// request finished (decode budget exhausted, or prefill-only done)
+    Complete { id: u64 },
+    /// slot evicted back to the queue under KV pressure (will re-prefill)
+    Evict { id: u64 },
+    /// request whose full KV budget can never fit the cap; dropped
+    Reject { id: u64 },
+}
+
+/// Admission gate over Appendix-G mixed-KV memory: the bytes held by all
+/// in-flight slots must fit a device cap. `cap_bytes == 0` disables the
+/// gate (every request fits).
+#[derive(Debug, Clone, Default)]
+pub struct KvBudget {
+    pub cap_bytes: usize,
+    pub used_bytes: usize,
+    pub peak_bytes: usize,
+}
+
+impl KvBudget {
+    pub fn new(cap_bytes: usize) -> KvBudget {
+        KvBudget { cap_bytes, used_bytes: 0, peak_bytes: 0 }
+    }
+
+    /// Would `bytes` more fit under the cap?
+    pub fn fits(&self, bytes: usize) -> bool {
+        self.cap_bytes == 0 || self.used_bytes + bytes <= self.cap_bytes
+    }
+
+    pub fn acquire(&mut self, bytes: usize) {
+        self.used_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+    }
+
+    pub fn release(&mut self, bytes: usize) {
+        self.used_bytes = self.used_bytes.saturating_sub(bytes);
+    }
+}
+
+/// Execution backend driven by the scheduler loop. All methods mirror a
+/// decision the loop already recorded as a [`CbEvent`]; a backend performs
+/// the corresponding real work (or nothing, for the cost model).
+pub trait DecodeBackend {
+    /// A batch was admitted: start real work (live: replay each request's
+    /// prefill into a fresh `DecodeSession` sized prompt + decode budget).
+    fn admit(&mut self, batch: &[Request], decode_tokens: usize) -> Result<()>;
+    /// One co-scheduled decode step advancing every listed slot by a token.
+    fn step(&mut self, ids: &[u64]) -> Result<()>;
+    /// The request finished; release its state and collect output.
+    fn complete(&mut self, id: u64) -> Result<()>;
+    /// The slot was evicted back to the queue; drop its state (it will be
+    /// rebuilt from scratch on re-admission).
+    fn evict(&mut self, id: u64) -> Result<()>;
+    /// Actual bytes currently held by in-flight slots (0 if untracked);
+    /// the loop counts a `kv_violations` whenever this exceeds the cap.
+    fn kv_bytes_in_flight(&self) -> usize;
+}
+
+/// Cost-model-only backend: the event stream *is* the run.
+pub struct ModelBackend;
+
+impl DecodeBackend for ModelBackend {
+    fn admit(&mut self, _batch: &[Request], _decode_tokens: usize) -> Result<()> {
+        Ok(())
+    }
+    fn step(&mut self, _ids: &[u64]) -> Result<()> {
+        Ok(())
+    }
+    fn complete(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    fn evict(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    fn kv_bytes_in_flight(&self) -> usize {
+        0
+    }
+}
+
 /// Outcome of a continuous-batching serve run.
 #[derive(Debug)]
 pub struct CbReport {
     pub completed: usize,
     /// admitted or queued inside the horizon but not completed by it
     pub censored: usize,
+    /// dropped at admission: full KV budget exceeds the cap
+    pub kv_rejected: usize,
     pub horizon_s: f64,
     /// completed / horizon
     pub throughput: f64,
@@ -94,6 +216,20 @@ pub struct CbReport {
     pub queue_depth: Vec<(f64, usize)>,
     /// completion bars covering the whole horizon
     pub windows: Vec<usize>,
+    /// the scheduler's full decision stream (admissions, decode steps,
+    /// completions, evictions, rejections) in order
+    pub events: Vec<CbEvent>,
+    /// summed virtual cost of every evaluated prefill + decode step
+    pub model_time: Breakdown,
+    /// high-water mark of modeled in-flight KV bytes
+    pub kv_peak_bytes: usize,
+    /// the configured cap (0 = unlimited)
+    pub kv_cap_bytes: usize,
+    /// KV-pressure evictions (slots requeued mid-decode)
+    pub kv_evictions: usize,
+    /// iterations where the backend's *actual* in-flight bytes exceeded
+    /// the cap — must be zero; asserted by the live tests
+    pub kv_violations: usize,
 }
 
 impl CbReport {
@@ -107,15 +243,71 @@ impl CbReport {
     }
 }
 
+/// Completion bookkeeping shared by the prefill-only and decode paths —
+/// one point of truth for what "a request finished at `done`" updates.
+struct CompletionTally {
+    completed: usize,
+    within_slo: usize,
+    last_completion: f64,
+    slo: f64,
+    latency: Summary,
+    windows: WindowedCounter,
+}
+
+impl CompletionTally {
+    fn new(slo: f64, window_s: f64) -> CompletionTally {
+        CompletionTally {
+            completed: 0,
+            within_slo: 0,
+            last_completion: 0.0,
+            slo,
+            latency: Summary::new(),
+            windows: WindowedCounter::new(window_s),
+        }
+    }
+
+    fn record(&mut self, arrival_s: f64, done: f64) {
+        self.completed += 1;
+        let l = done - arrival_s;
+        self.latency.add(l);
+        self.windows.record(done);
+        self.last_completion = done;
+        if self.slo <= 0.0 || l <= self.slo {
+            self.within_slo += 1;
+        }
+    }
+}
+
 /// One in-flight request occupying a decode slot.
 #[derive(Debug, Clone, Copy)]
 struct Slot {
+    id: u64,
     arrival_s: f64,
+    /// prompt length (the request's `tokens`)
+    tokens: usize,
     remaining: usize,
     generated: usize,
+    /// modeled mixed-KV bytes currently held (grows each decode step)
+    kv_bytes: usize,
+    /// virtual time of admission (eviction picks the newest slot)
+    admitted_at: f64,
 }
 
-/// Continuous-batching cost-model serving engine.
+/// Index of the newest slot (latest admission, ties broken by larger id) —
+/// the KV-pressure eviction victim. The oldest slot is never chosen while
+/// another exists, which keeps preemption livelock-free.
+fn newest_slot_index(slots: &[Slot]) -> usize {
+    let mut best = 0;
+    for (i, s) in slots.iter().enumerate().skip(1) {
+        let b = &slots[best];
+        if s.admitted_at > b.admitted_at || (s.admitted_at == b.admitted_at && s.id > b.id) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Continuous-batching serving engine over the cost-model clock.
 pub struct CbEngine {
     pub shape: TransformerShape,
     pub strategy: Strategy,
@@ -135,6 +327,40 @@ impl CbEngine {
         CbEngine { shape, strategy, params, trace, cfg }
     }
 
+    /// Modeled mixed-KV bytes a slot holds after `generated` decode tokens
+    /// on a `prompt_tokens` prompt. ASTRA strategies hold the Appendix-G
+    /// mixed cache; everything else holds full precision.
+    pub fn kv_slot_bytes(&self, prompt_tokens: usize, generated: usize) -> usize {
+        match self.strategy.kind {
+            StrategyKind::Astra { vq } => kv_cache_bytes_astra_live(
+                &self.shape,
+                prompt_tokens,
+                generated,
+                self.shape.elem_bytes,
+                self.strategy.n_devices,
+                vq.groups,
+                vq.codebook_size,
+            ),
+            _ => kv_cache_bytes_full(
+                &self.shape,
+                prompt_tokens + generated,
+                self.shape.elem_bytes,
+            ),
+        }
+    }
+
+    /// Bytes a slot will hold once its decode budget is exhausted — the
+    /// admission gate's per-request ceiling (requests above the cap are
+    /// rejected outright: they could never complete).
+    pub fn kv_projection(&self, prompt_tokens: usize) -> usize {
+        self.kv_slot_bytes(prompt_tokens, self.cfg.decode_tokens)
+    }
+
+    /// Per-token cache growth during decode (full-precision K+V rows).
+    pub fn kv_step_bytes(&self) -> usize {
+        self.kv_slot_bytes(1, 1) - self.kv_slot_bytes(1, 0)
+    }
+
     /// Serve an open-loop Poisson stream at `rate` req/s for `horizon_s`.
     pub fn serve_poisson(&mut self, rng: &mut Rng, rate: f64, horizon_s: f64) -> CbReport {
         let arrivals =
@@ -142,38 +368,40 @@ impl CbEngine {
         self.serve_stream(arrivals, horizon_s)
     }
 
-    /// Serve a fixed arrival list under continuous batching.
+    /// Serve a fixed arrival list under continuous batching on the cost
+    /// model alone.
     pub fn serve_stream(&mut self, arrivals: Vec<Request>, horizon_s: f64) -> CbReport {
-        let prefill = self.strategy.schedule(&self.shape);
+        self.serve_stream_with(&mut ModelBackend, arrivals, horizon_s)
+            .expect("the cost-model backend is infallible")
+    }
+
+    /// Serve a fixed arrival list, delegating per-slot execution to
+    /// `backend` while this loop makes every scheduling decision on the
+    /// cost model's virtual clock. `arrivals` must be sorted by arrival.
+    pub fn serve_stream_with<B: DecodeBackend>(
+        &mut self,
+        backend: &mut B,
+        arrivals: Vec<Request>,
+        horizon_s: f64,
+    ) -> Result<CbReport> {
         let max_slots = self.cfg.max_slots.max(1);
         let mut batcher = Batcher::new(self.cfg.max_batch.max(1), self.cfg.max_wait_s);
         let mut slots: Vec<Slot> = Vec::new();
         let mut pending = arrivals.into_iter().peekable();
+        let mut budget = KvBudget::new(self.cfg.kv_cap_bytes);
+        let mut events: Vec<CbEvent> = Vec::new();
 
         let mut now = 0.0f64;
-        let mut latency = Summary::new();
+        let mut tally = CompletionTally::new(self.cfg.slo_s, self.cfg.window_s);
         let mut ttft = Summary::new();
         let mut queue_wait = Summary::new();
         let mut censored_wait = Summary::new();
         let mut queue_depth: Vec<(f64, usize)> = Vec::new();
-        let mut windows = WindowedCounter::new(self.cfg.window_s);
-        let mut completed = 0usize;
-        let mut within_slo = 0usize;
+        let mut model_time = Breakdown::default();
         let mut censored = 0usize;
-        let mut last_completion = 0.0f64;
-
-        let slo = self.cfg.slo_s;
-        let mut complete =
-            |arrival_s: f64, done: f64, latency: &mut Summary, windows: &mut WindowedCounter| {
-                completed += 1;
-                let l = done - arrival_s;
-                latency.add(l);
-                windows.record(done);
-                last_completion = done;
-                if slo <= 0.0 || l <= slo {
-                    within_slo += 1;
-                }
-            };
+        let mut kv_rejected = 0usize;
+        let mut kv_evictions = 0usize;
+        let mut kv_violations = 0usize;
 
         while now < horizon_s {
             // pull arrivals into the queue
@@ -185,17 +413,64 @@ impl CbEngine {
                 }
             }
 
-            // ---- admission: batched prefill into free slots ----
+            // a request whose full KV budget exceeds the cap can never be
+            // served; drop it rather than head-of-line-block forever
+            if budget.cap_bytes > 0 {
+                loop {
+                    let oversized = match batcher.front() {
+                        Some(r) => self.kv_projection(r.tokens) > budget.cap_bytes,
+                        None => false,
+                    };
+                    if !oversized {
+                        break;
+                    }
+                    let r = batcher.pop_front().unwrap();
+                    kv_rejected += 1;
+                    events.push(CbEvent::Reject { id: r.id });
+                }
+            }
+
+            // ---- admission: batched prefill into free slots, gated on
+            //      the KV budget at prefill footprint (optimistic — decode
+            //      growth is handled by eviction below) ----
             let free = max_slots.saturating_sub(slots.len());
             // an idle cluster never waits on the fill deadline
             let force = slots.is_empty();
-            let batch =
-                if free > 0 { batcher.next_batch_capped(now, force, free) } else { Vec::new() };
+            let batch = if free > 0 {
+                let mut pending_bytes = 0usize;
+                batcher.next_batch_filtered(now, force, free, |r| {
+                    // a request that can never fit must not be admitted on
+                    // its (smaller) prefill footprint — it would grow past
+                    // the cap with no evictable peer. It blocks here until
+                    // it reaches the head, where the reject pass drops it.
+                    if budget.cap_bytes > 0
+                        && self.kv_projection(r.tokens) > budget.cap_bytes
+                    {
+                        return false;
+                    }
+                    let need = self.kv_slot_bytes(r.tokens, 0);
+                    if budget.fits(pending_bytes + need) {
+                        pending_bytes += need;
+                        true
+                    } else {
+                        false
+                    }
+                })
+            } else {
+                Vec::new()
+            };
             if !batch.is_empty() {
                 queue_depth.push((now, batcher.len()));
                 let b = batch.len();
+                // prefill cost scales with the longest prompt in the batch
+                let mut pshape = self.shape;
+                pshape.seq_len = batch.iter().map(|r| r.tokens).max().unwrap_or(1).max(1);
+                let prefill = self.strategy.schedule(&pshape);
                 let bd = evaluate_on_trace_batched(&prefill, &self.params, &self.trace, now, b);
+                model_time.accumulate(&bd);
                 let done = now + bd.total();
+                events.push(CbEvent::Admit { ids: batch.iter().map(|r| r.id).collect() });
+                backend.admit(&batch, self.cfg.decode_tokens)?;
                 for req in &batch {
                     queue_wait.add(now - req.arrival_s);
                     if done <= horizon_s {
@@ -203,10 +478,14 @@ impl CbEngine {
                     }
                 }
                 if self.cfg.decode_tokens == 0 {
-                    // prefill-only workload: requests complete at prefill end
+                    // prefill-only workload: requests complete at prefill
+                    // end; past the horizon they are censored, not
+                    // completed, so no Complete event is emitted for them
                     for req in &batch {
                         if done <= horizon_s {
-                            complete(req.arrival_s, done, &mut latency, &mut windows);
+                            backend.complete(req.id)?;
+                            events.push(CbEvent::Complete { id: req.id });
+                            tally.record(req.arrival_s, done);
                         } else {
                             censored += 1;
                             censored_wait.add(now - req.arrival_s);
@@ -214,12 +493,21 @@ impl CbEngine {
                     }
                 } else {
                     for req in &batch {
+                        let kv_bytes = self.kv_slot_bytes(req.tokens, 0);
+                        budget.acquire(kv_bytes);
                         slots.push(Slot {
+                            id: req.id,
                             arrival_s: req.arrival_s,
+                            tokens: req.tokens,
                             remaining: self.cfg.decode_tokens,
                             generated: 0,
+                            kv_bytes,
+                            admitted_at: now,
                         });
                     }
+                }
+                if budget.cap_bytes > 0 && backend.kv_bytes_in_flight() > budget.cap_bytes {
+                    kv_violations += 1;
                 }
                 now = done;
                 continue;
@@ -227,40 +515,76 @@ impl CbEngine {
 
             // ---- one batched decode step for all active slots ----
             if !slots.is_empty() {
+                // KV pressure: the step grows every slot by one token's
+                // full-precision rows; evict newest slots back to the
+                // queue until the growth fits the cap. A lone slot always
+                // fits (over-cap requests were rejected at admission).
+                if budget.cap_bytes > 0 {
+                    let step_bytes = self.kv_step_bytes();
+                    while slots.len() > 1
+                        && budget.used_bytes + slots.len() * step_bytes > budget.cap_bytes
+                    {
+                        let i = newest_slot_index(&slots);
+                        let s = slots.remove(i);
+                        budget.release(s.kv_bytes);
+                        backend.evict(s.id)?;
+                        events.push(CbEvent::Evict { id: s.id });
+                        kv_evictions += 1;
+                        batcher.push(Request {
+                            id: s.id,
+                            arrival_s: s.arrival_s,
+                            tokens: s.tokens,
+                        });
+                    }
+                }
                 let b = slots.len();
-                let ctx = self.shape.seq_len
-                    + slots.iter().map(|s| s.generated).max().unwrap_or(0);
+                let ctx = slots.iter().map(|s| s.tokens + s.generated).max().unwrap_or(0);
                 let step = self.strategy.decode_step_schedule(&self.shape, ctx);
                 let bd = evaluate_on_trace_batched(&step, &self.params, &self.trace, now, b);
+                model_time.accumulate(&bd);
                 let done = now + bd.total();
                 if done > horizon_s {
                     // the step straddles the horizon: nobody finishes in time
                     now = done;
                     continue;
                 }
+                let ids: Vec<u64> = slots.iter().map(|s| s.id).collect();
+                backend.step(&ids)?;
+                events.push(CbEvent::Decode { ids });
                 now = done;
                 let mut i = 0;
                 while i < slots.len() {
                     slots[i].remaining -= 1;
                     slots[i].generated += 1;
+                    let grown = self.kv_slot_bytes(slots[i].tokens, slots[i].generated);
+                    budget.acquire(grown - slots[i].kv_bytes);
+                    slots[i].kv_bytes = grown;
                     if slots[i].remaining == 0 {
                         let s = slots.swap_remove(i);
-                        complete(s.arrival_s, now, &mut latency, &mut windows);
+                        budget.release(s.kv_bytes);
+                        backend.complete(s.id)?;
+                        events.push(CbEvent::Complete { id: s.id });
+                        tally.record(s.arrival_s, now);
                     } else {
                         i += 1;
                     }
+                }
+                if budget.cap_bytes > 0 && backend.kv_bytes_in_flight() > budget.cap_bytes {
+                    kv_violations += 1;
                 }
                 continue;
             }
 
             // ---- idle: jump to the next arrival ----
-            // (an idle engine force-admits, so the queue is empty here)
+            // (an idle engine force-admits anything admissible, so the
+            // queue holds at most KV-blocked requests; those wait for
+            // in-flight work that doesn't exist here — meaning the queue
+            // is empty whenever the KV gate is off)
             match pending.peek().map(|r| r.arrival_s) {
                 Some(t) => now = t,
                 None => break,
             }
         }
-        drop(complete);
 
         // census: everything in flight or queued at the horizon is censored
         for s in &slots {
@@ -278,25 +602,32 @@ impl CbEngine {
             }
         }
 
-        CbReport {
-            completed,
+        Ok(CbReport {
+            completed: tally.completed,
             censored,
+            kv_rejected,
             horizon_s,
-            throughput: windows.rate_until(horizon_s),
-            throughput_completion: if last_completion > 0.0 {
-                completed as f64 / last_completion
+            throughput: tally.windows.rate_until(horizon_s),
+            throughput_completion: if tally.last_completion > 0.0 {
+                tally.completed as f64 / tally.last_completion
             } else {
                 0.0
             },
-            goodput: within_slo as f64 / horizon_s,
-            slo_s: slo,
-            latency,
+            goodput: tally.within_slo as f64 / horizon_s,
+            slo_s: tally.slo,
+            latency: tally.latency,
             ttft,
             queue_wait,
             censored_wait,
             queue_depth,
-            windows: windows.bars_until(horizon_s),
-        }
+            windows: tally.windows.bars_until(horizon_s),
+            events,
+            model_time,
+            kv_peak_bytes: budget.peak_bytes,
+            kv_cap_bytes: budget.cap_bytes,
+            kv_evictions,
+            kv_violations,
+        })
     }
 }
 
@@ -363,6 +694,9 @@ mod tests {
         assert!(!r.ttft.is_empty());
         assert!(r.ttft.mean() < r.latency.mean());
         assert!((6..=7).contains(&r.windows.len()), "{}", r.windows.len());
+        // the virtual accounting sums every evaluated prefill/decode step
+        assert!(r.model_time.total() > 0.0);
+        assert!(r.model_time.compute_s > 0.0);
     }
 
     #[test]
@@ -374,6 +708,10 @@ mod tests {
         assert!(r.censored > 0, "20 s should not drain 500 saturating requests");
         assert_eq!(r.censored_wait.len(), r.censored);
         assert!(r.mean_queue_depth() > 0.0);
+        // with the KV gate off nothing is rejected or evicted
+        assert_eq!(r.kv_rejected, 0);
+        assert_eq!(r.kv_evictions, 0);
+        assert_eq!(r.kv_violations, 0);
     }
 
     #[test]
@@ -417,5 +755,145 @@ mod tests {
         let r_fifo = fifo.serve_stream(arrivals, 120.0);
         let diff = (r_cb.completed as i64 - r_fifo.completed as i64).abs();
         assert!(diff <= 1, "cb {} vs fifo {}", r_cb.completed, r_fifo.completed);
+    }
+
+    #[test]
+    fn kv_gate_defers_admission_and_respects_cap() {
+        // cap sized for ~2 full slots: the 8-slot engine must throttle to
+        // the budget, never exceed it, and still finish everything
+        let cfg = CbConfig { decode_tokens: 32, ..CbConfig::default() };
+        let probe = astra_engine(cfg.clone());
+        let cap = 2 * probe.kv_projection(1024) + probe.kv_step_bytes();
+        let mut capped = astra_engine(CbConfig { kv_cap_bytes: cap, ..cfg.clone() });
+        let mut open = astra_engine(cfg);
+        let r_capped = capped.serve_stream(saturating(24), 1e4);
+        let r_open = open.serve_stream(saturating(24), 1e4);
+        assert_eq!(r_capped.completed + r_capped.censored + r_capped.kv_rejected, 24);
+        assert_eq!(r_capped.completed, 24, "{r_capped:?}");
+        assert!(r_capped.kv_peak_bytes <= cap, "{} > {cap}", r_capped.kv_peak_bytes);
+        // without the gate the same workload runs 8 slots deep
+        assert!(r_open.kv_peak_bytes > cap, "{} <= {cap}", r_open.kv_peak_bytes);
+        // throttled admission serializes work: strictly later completion
+        assert!(r_capped.latency.max() >= r_open.latency.max());
+    }
+
+    #[test]
+    fn kv_pressure_evicts_newest_and_still_completes_everyone() {
+        // prompts are cheap but decode growth is not: admit optimistically,
+        // then force mid-decode evictions. decode budget 512 over a short
+        // 128-token prompt makes growth dominate the prefill footprint.
+        let base =
+            CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 512, ..CbConfig::default() };
+        let probe = CbEngine::new(
+            TransformerShape::paper_encoder(128),
+            Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+            SimParams::paper_encoder(),
+            BandwidthTrace::constant(100.0, 1e9),
+            base.clone(),
+        );
+        // all 4 prefill footprints fit, but nowhere near 4 full budgets
+        let cap = 2 * probe.kv_projection(128);
+        assert!(4 * probe.kv_slot_bytes(128, 0) <= cap);
+        assert!(4 * probe.kv_projection(128) > cap);
+        let mut engine = CbEngine::new(
+            probe.shape,
+            probe.strategy,
+            probe.params.clone(),
+            probe.trace.clone(),
+            CbConfig { kv_cap_bytes: cap, ..base },
+        );
+        let arrivals: Vec<Request> =
+            (0..4u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 128 }).collect();
+        let r = engine.serve_stream(arrivals, 1e4);
+        assert!(r.kv_evictions > 0, "pressure must trigger eviction: {r:?}");
+        assert!(r.events.iter().any(|e| matches!(e, CbEvent::Evict { .. })));
+        assert!(r.kv_peak_bytes <= cap, "{} > {cap}", r.kv_peak_bytes);
+        // evicted requests are requeued and re-prefilled, not lost
+        assert_eq!(r.completed, 4, "{r:?}");
+        assert_eq!(r.kv_rejected, 0);
+    }
+
+    #[test]
+    fn oversized_requests_are_rejected_not_hung() {
+        // a request whose full budget exceeds the cap outright must be
+        // dropped (Reject event), letting the rest of the queue proceed
+        let cfg = CbConfig { decode_tokens: 32, ..CbConfig::default() };
+        let probe = astra_engine(cfg.clone());
+        let cap = probe.kv_projection(1024) + probe.kv_step_bytes();
+        let mut engine = astra_engine(CbConfig { kv_cap_bytes: cap, ..cfg });
+        // tokens=2048 projects past the cap; tokens=1024 fits
+        let arrivals = vec![
+            Request { id: 1, arrival_s: 0.0, tokens: 2048 },
+            Request { id: 2, arrival_s: 0.0, tokens: 1024 },
+            Request { id: 3, arrival_s: 0.0, tokens: 1024 },
+        ];
+        let r = engine.serve_stream(arrivals, 1e4);
+        assert_eq!(r.kv_rejected, 1, "{r:?}");
+        assert!(r.events.contains(&CbEvent::Reject { id: 1 }));
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.completed + r.censored + r.kv_rejected, 3);
+    }
+
+    #[test]
+    fn oversized_request_behind_the_head_is_never_admitted() {
+        // a request whose *prefill footprint* fits but whose full budget
+        // does not must not sneak into a slot from behind an admissible
+        // head — a lone oversized slot would outgrow the cap with nothing
+        // to evict. It waits, reaches the head, and is rejected there.
+        let cfg = CbConfig { decode_tokens: 32, max_wait_s: 0.0, ..CbConfig::default() };
+        let probe = astra_engine(cfg.clone());
+        // cap sits between the 2048-token prefill footprint and its full
+        // projection, and above two 512-token full projections
+        let cap = probe.kv_slot_bytes(2048, 0) + 16 * probe.kv_step_bytes();
+        assert!(probe.kv_slot_bytes(2048, 0) <= cap);
+        assert!(probe.kv_projection(2048) > cap);
+        assert!(2 * probe.kv_projection(512) < cap);
+        let mut engine = astra_engine(CbConfig { kv_cap_bytes: cap, ..cfg });
+        let arrivals = vec![
+            Request { id: 1, arrival_s: 0.0, tokens: 512 },
+            Request { id: 2, arrival_s: 0.0, tokens: 2048 },
+            Request { id: 3, arrival_s: 0.0, tokens: 512 },
+        ];
+        let r = engine.serve_stream(arrivals, 1e4);
+        // id 2 was rejected (once at the head), never admitted, and the
+        // cap was never breached by an unevictable lone slot
+        assert_eq!(r.kv_rejected, 1, "{r:?}");
+        assert!(r.events.contains(&CbEvent::Reject { id: 2 }));
+        assert!(!r
+            .events
+            .iter()
+            .any(|e| matches!(e, CbEvent::Admit { ids } if ids.contains(&2))));
+        assert_eq!(r.completed, 2);
+        assert!(r.kv_peak_bytes <= cap, "{} > {cap}", r.kv_peak_bytes);
+        assert_eq!(r.kv_evictions, 0);
+    }
+
+    #[test]
+    fn event_stream_is_a_complete_record() {
+        let mut cb = astra_engine(CbConfig { decode_tokens: 4, ..CbConfig::default() });
+        let r = cb.serve_stream(saturating(20), 1e4);
+        assert_eq!(r.completed, 20);
+        let admits: usize = r
+            .events
+            .iter()
+            .map(|e| match e {
+                CbEvent::Admit { ids } => ids.len(),
+                _ => 0,
+            })
+            .sum();
+        let completes =
+            r.events.iter().filter(|e| matches!(e, CbEvent::Complete { .. })).count();
+        assert_eq!(admits, 20);
+        assert_eq!(completes, 20);
+        // every slot advanced exactly decode_tokens times
+        let steps: usize = r
+            .events
+            .iter()
+            .map(|e| match e {
+                CbEvent::Decode { ids } => ids.len(),
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(steps, 20 * 4);
     }
 }

@@ -44,6 +44,13 @@ impl Breakdown {
             self.comm_s / self.total()
         }
     }
+
+    /// Add another breakdown into this one — serving loops sum many
+    /// schedule evaluations (prefills + decode steps) into one report.
+    pub fn accumulate(&mut self, other: &Breakdown) {
+        self.compute_s += other.compute_s;
+        self.comm_s += other.comm_s;
+    }
 }
 
 /// Evaluate under a static bandwidth.
@@ -170,6 +177,33 @@ mod tests {
         let tr = BandwidthTrace::constant(100.0, 1e9);
         let b8t = evaluate_on_trace_batched(&s, &p, &tr, 0.0, 8);
         assert!((b8.total() - b8t.total()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch1_trace_evaluation_is_exactly_unbatched() {
+        // the continuous-batching engine at batch 1 must price work
+        // identically to the unbatched evaluator (the live-vs-model
+        // differential harness relies on this identity)
+        let p = SimParams::paper_encoder();
+        let s = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4)
+            .schedule(&shape());
+        let tr = BandwidthTrace::constant(42.0, 1e9);
+        for t0 in [0.0, 3.7, 100.0] {
+            let a = evaluate_on_trace(&s, &p, &tr, t0);
+            let b = evaluate_on_trace_batched(&s, &p, &tr, t0, 1);
+            assert_eq!(a.compute_s, b.compute_s);
+            assert_eq!(a.comm_s, b.comm_s);
+        }
+    }
+
+    #[test]
+    fn accumulate_sums_componentwise() {
+        let mut acc = Breakdown::default();
+        acc.accumulate(&Breakdown { compute_s: 1.0, comm_s: 2.0 });
+        acc.accumulate(&Breakdown { compute_s: 0.5, comm_s: 0.25 });
+        assert!((acc.compute_s - 1.5).abs() < 1e-12);
+        assert!((acc.comm_s - 2.25).abs() < 1e-12);
+        assert!((acc.total() - 3.75).abs() < 1e-12);
     }
 
     #[test]

@@ -91,6 +91,46 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_exhaustive_over_every_bit_width() {
+        // every legal width 1..=32, counts chosen to hit byte-aligned and
+        // non-byte-aligned tails (count*bits % 8 != 0), plus the empty
+        // stream; packed_len_bytes must match the produced length exactly
+        let mut rng = Rng::new(1234);
+        for bits in 1..=32usize {
+            let limit: u64 = if bits == 32 { 1u64 << 32 } else { 1u64 << bits };
+            for count in [0usize, 1, 2, 3, 5, 7, 8, 9, 11, 64, 257] {
+                let idx: Vec<u32> =
+                    (0..count).map(|_| (rng.next_u64() % limit) as u32).collect();
+                let packed = pack_indices(&idx, bits).unwrap();
+                assert_eq!(
+                    packed.len(),
+                    packed_len_bytes(count, bits),
+                    "bits={bits} count={count}"
+                );
+                assert_eq!(packed.len(), (count * bits).div_ceil(8));
+                let back = unpack_indices(&packed, count, bits).unwrap();
+                assert_eq!(back, idx, "bits={bits} count={count}");
+            }
+            // boundary values (0 and 2^bits - 1) survive a non-byte-aligned
+            // tail: 3 indices guarantee a ragged final byte for bits % 8 != 0
+            let max = (limit - 1) as u32;
+            let edge = vec![0u32, max, max];
+            let packed = pack_indices(&edge, bits).unwrap();
+            assert_eq!(packed.len(), packed_len_bytes(3, bits), "bits={bits}");
+            assert_eq!(unpack_indices(&packed, 3, bits).unwrap(), edge, "bits={bits}");
+            // one past the top of the range is rejected (except u32::MAX)
+            if bits < 32 {
+                assert!(pack_indices(&[max + 1], bits).is_err(), "bits={bits}");
+            }
+        }
+        // widths outside 1..=32 are rejected by both directions
+        assert!(pack_indices(&[0], 0).is_err());
+        assert!(pack_indices(&[0], 33).is_err());
+        assert!(unpack_indices(&[0u8; 16], 1, 0).is_err());
+        assert!(unpack_indices(&[0u8; 16], 1, 33).is_err());
+    }
+
+    #[test]
     fn ten_bit_paper_setting() {
         // K=1024 -> 10 bits; 12 indices -> 120 bits -> 15 bytes (Table 1 G=1
         // per-layer accounting: one token over 12 layers).

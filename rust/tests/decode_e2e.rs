@@ -81,7 +81,9 @@ fn decode_session_generates() {
     let mut sess2 = DecodeSession::new(&cluster, &prompt).unwrap();
     let again: Vec<usize> = (0..8).map(|_| sess2.step().unwrap()).collect();
     assert_eq!(toks, again);
-    // Appendix G: mixed cache is smaller than a full-precision one
+    // Appendix G: the mixed cache at the session's occupancy (prompt rows
+    // mixed-precision, the 8 generated rows full-precision) is smaller
+    // than an all-full-precision cache over the same rows
     let full = astra::model::kv_cache_bytes_full(
         &astra::model::TransformerShape {
             n_layers: meta.n_layers,
@@ -91,10 +93,11 @@ fn decode_session_generates() {
             seq_len: meta.seq_len,
             elem_bytes: 4,
         },
-        meta.seq_len,
+        meta.seq_len + 8,
         4,
     );
     assert!(sess.cache_bytes_mixed() < full);
+    assert!(sess.cache_bytes_mixed() <= sess.cache_bytes_budget());
 }
 
 #[test]

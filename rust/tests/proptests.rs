@@ -4,10 +4,13 @@
 
 use astra::comm::collective::{allgather, allreduce};
 use astra::comm::message::Message;
+use astra::comm::trace::BandwidthTrace;
 use astra::coordinator::TokenPartition;
 use astra::model::shape::{ceil_log2, TransformerShape, VqSetting};
 use astra::parallel::strategies::{Strategy, StrategyKind};
-use astra::sim::latency::{evaluate, SimParams};
+use astra::sim::latency::{
+    evaluate, evaluate_batched, evaluate_on_trace, evaluate_on_trace_batched, SimParams,
+};
 use astra::tensor::Tensor;
 use astra::util::rng::Rng;
 use astra::vq::{pack_indices, unpack_indices, Codebook};
@@ -143,6 +146,50 @@ fn prop_collective_costs_scale() {
         assert_eq!(ar.stages, 2 * ag.stages);
         assert!(ag.bits < bits);
         assert!(ag.bits >= bits * 0.5 - 1e-3);
+    }
+}
+
+#[test]
+fn prop_batch1_equals_unbatched_evaluation() {
+    // the continuous-batching engine prices work through the batched
+    // evaluators; at batch size 1 they must agree EXACTLY with the
+    // unbatched `evaluate`/`evaluate_on_trace` on the same trace — over
+    // random cluster sizes, strategies, bandwidths, start times, and both
+    // constant and Markovian link configs. The live-vs-model differential
+    // harness leans on this identity.
+    let mut rng = Rng::new(1000);
+    for case in 0..CASES {
+        let n = 2 + rng.below(7);
+        let t = n * (8 + rng.below(128));
+        let shape = TransformerShape::paper_encoder(t);
+        let protos = astra::parallel::strategies::figure1_strategies(4);
+        let s = Strategy::new(protos[rng.below(protos.len())].kind, n);
+        let params = SimParams::paper_encoder();
+        let bw = 5.0 + rng.f64() * 495.0;
+        let states = 2 + rng.below(8);
+        let trace = if rng.chance(0.5) {
+            BandwidthTrace::constant(bw, 1e9)
+        } else {
+            BandwidthTrace::markovian(&mut rng, 0.2 * bw, bw, states, 1.0, 500.0)
+        };
+        let t0 = rng.f64() * 100.0;
+        let label = format!("case {case}: {} n={n} t={t} bw={bw:.1} t0={t0:.2}", s.name());
+        let prefill = s.schedule(&shape);
+        let a = evaluate_on_trace(&prefill, &params, &trace, t0);
+        let b = evaluate_on_trace_batched(&prefill, &params, &trace, t0, 1);
+        assert_eq!(a.compute_s, b.compute_s, "{label}");
+        assert_eq!(a.comm_s, b.comm_s, "{label}");
+        // static evaluator too
+        let sa = evaluate(&prefill, &params, bw);
+        let sb = evaluate_batched(&prefill, &params, bw, 1);
+        assert_eq!(sa.compute_s, sb.compute_s, "{label}");
+        assert_eq!(sa.comm_s, sb.comm_s, "{label}");
+        // and the decode-step schedule the scheduler interleaves
+        let step = s.decode_step_schedule(&shape, t + rng.below(64));
+        let da = evaluate_on_trace(&step, &params, &trace, t0);
+        let db = evaluate_on_trace_batched(&step, &params, &trace, t0, 1);
+        assert_eq!(da.compute_s, db.compute_s, "{label}");
+        assert_eq!(da.comm_s, db.comm_s, "{label}");
     }
 }
 
