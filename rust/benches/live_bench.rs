@@ -2,6 +2,11 @@
 //! steps on a synthetic decoder, and the end-to-end live
 //! continuous-batching engine vs the pure cost-model run of the same
 //! trace — the overhead of driving actual tensors through the scheduler.
+//!
+//! `--json [--out BENCH_live.json]` skips the wall-clock timing and emits
+//! deterministic metrics for the CI regression gate: modeled scheduling
+//! numbers on the fixed trace plus a checksum of the *real* greedy
+//! generations (chunked and unchunked), which pins live-numerics drift.
 
 use astra::comm::trace::BandwidthTrace;
 use astra::config::RunConfig;
@@ -12,7 +17,8 @@ use astra::model::TransformerShape;
 use astra::server::live::{live_arrivals, live_engine, serve_live, synth_prompt};
 use astra::server::scheduler::{CbConfig, ModelBackend};
 use astra::sim::latency::SimParams;
-use astra::util::bench::{black_box, header, Bench};
+use astra::util::bench::{black_box, header, Bench, MetricSet};
+use astra::util::cli::Args;
 use astra::util::rng::Rng;
 
 fn cluster() -> Cluster {
@@ -28,7 +34,56 @@ fn cluster() -> Cluster {
     Cluster::synthetic_decoder(&shape, 64, VqSetting::new(4, 16), config, 5).unwrap()
 }
 
+/// Deterministic metrics on the fixed live trace (see module docs).
+fn emit_json(out: &str) {
+    let cl = cluster();
+    let meta = cl.artifact.meta.clone();
+    let params = SimParams::paper_encoder();
+    let trace = BandwidthTrace::constant(100.0, 1e9);
+    let arrivals = live_arrivals(&mut Rng::new(9), 10.0, 3.0, meta.seq_len);
+    let base = CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 8, ..CbConfig::default() };
+    let chunked = CbConfig { prefill_chunk_tokens: 10, ..base.clone() };
+    let mut m = MetricSet::new("live");
+    for (name, cfg) in [("model_trace", &base), ("model_trace_chunk10", &chunked)] {
+        let mut e = live_engine(&cl, cfg.clone(), params.clone(), trace.clone());
+        let mut r = e
+            .serve_stream_with(&mut ModelBackend, arrivals.clone(), 1e4)
+            .expect("model backend run");
+        m.push(name, "completed", r.completed as f64);
+        m.push(name, "events", r.events.len() as f64);
+        m.push(name, "model_total_s", r.model_time.total());
+        m.push(name, "ttft_p50", r.ttft.p50());
+        m.push(name, "prefill_chunks", r.prefill_chunks as f64);
+    }
+    for (name, cfg) in [("live_generations", &base), ("live_generations_chunk10", &chunked)] {
+        let live =
+            serve_live(&cl, cfg.clone(), params.clone(), trace.clone(), arrivals.clone(), 1e4)
+                .expect("live run");
+        // checksum of the real greedy generations: any drift in the
+        // numerics (incl. incremental chunk replay) moves this integer
+        let checksum: u64 = live
+            .generations
+            .iter()
+            .map(|(id, toks)| {
+                toks.iter().fold(id.wrapping_mul(31), |acc, &t| {
+                    acc.wrapping_mul(131).wrapping_add(t as u64)
+                }) % 1_000_000_007
+            })
+            .fold(0u64, |a, b| a.wrapping_add(b));
+        m.push(name, "generation_checksum", checksum as f64);
+        m.push(name, "live_steps", live.live_steps as f64);
+        m.push(name, "completed", live.report.completed as f64);
+    }
+    m.write(out).expect("writing bench metrics");
+}
+
 fn main() {
+    // `cargo bench` forwards a libtest-style `--bench` flag to the binary
+    let args = Args::from_env(&["json", "bench"]).expect("parsing bench args");
+    if args.flag("json") {
+        emit_json(&args.get_or("out", "BENCH_live.json"));
+        return;
+    }
     header();
     let cl = cluster();
     let meta = cl.artifact.meta.clone();

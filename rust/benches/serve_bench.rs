@@ -2,6 +2,11 @@
 //! rates and bandwidth traces, plus the acceptance evidence for the
 //! continuous-batching engine (>= 2x completed-request throughput at
 //! saturating load with max_slots >= 8 under a constant 100 Mbps trace).
+//!
+//! `--json [--out BENCH_serve.json]` skips the wall-clock timing and emits
+//! *modeled* metrics instead — virtual-clock p50/p95/TTFT/ITL/throughput
+//! on fixed-seed traces, bit-reproducible on any machine — for the CI
+//! regression gate (`astra bench-gate`).
 
 use astra::comm::trace::BandwidthTrace;
 use astra::model::shape::{TransformerShape, VqSetting};
@@ -9,7 +14,8 @@ use astra::parallel::strategies::{Strategy, StrategyKind};
 use astra::server::scheduler::{CbConfig, CbEngine};
 use astra::server::Request;
 use astra::sim::latency::SimParams;
-use astra::util::bench::{black_box, header, Bench};
+use astra::util::bench::{black_box, header, Bench, MetricSet};
+use astra::util::cli::Args;
 use astra::util::rng::Rng;
 
 fn engine(trace: BandwidthTrace, cfg: CbConfig) -> CbEngine {
@@ -26,7 +32,50 @@ fn saturating(n: usize) -> Vec<Request> {
     (0..n as u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 1024 }).collect()
 }
 
+/// Deterministic modeled metrics on fixed-seed traces (see module docs).
+fn emit_json(out: &str) {
+    enum Load {
+        Saturating(usize),
+        Poisson(f64),
+    }
+    let mut m = MetricSet::new("serve");
+    let const100 = BandwidthTrace::constant(100.0, 1e9);
+    let mut markov_rng = Rng::new(7);
+    let markov = BandwidthTrace::markovian(&mut markov_rng, 20.0, 100.0, 9, 1.0, 60.0);
+    let base = CbConfig::default();
+    let chunked = CbConfig { prefill_chunk_tokens: 256, ..CbConfig::default() };
+    let cases: Vec<(&str, BandwidthTrace, CbConfig, Load)> = vec![
+        ("fifo1_const100_sat", const100.clone(), base.clone().batch1(), Load::Saturating(2000)),
+        ("cb8_const100_sat", const100.clone(), base.clone(), Load::Saturating(2000)),
+        ("cb8_markov_sat", markov, base.clone(), Load::Saturating(2000)),
+        ("cb8_const100_poisson8", const100.clone(), base, Load::Poisson(8.0)),
+        ("cb8_chunk256_sat", const100.clone(), chunked.clone(), Load::Saturating(2000)),
+        ("cb8_chunk256_poisson8", const100, chunked, Load::Poisson(8.0)),
+    ];
+    for (name, trace, cfg, load) in cases {
+        let mut e = engine(trace, cfg);
+        let mut r = match load {
+            Load::Saturating(n) => e.serve_stream(saturating(n), 60.0),
+            Load::Poisson(rate) => e.serve_poisson(&mut Rng::new(42), rate, 60.0),
+        };
+        m.push(name, "completed", r.completed as f64);
+        m.push(name, "throughput", r.throughput);
+        m.push(name, "p50", r.latency.p50());
+        m.push(name, "p95", r.latency.p95());
+        m.push(name, "ttft_p50", r.ttft.p50());
+        m.push(name, "itl_p95", r.itl.p95());
+        m.push(name, "prefill_chunks", r.prefill_chunks as f64);
+    }
+    m.write(out).expect("writing bench metrics");
+}
+
 fn main() {
+    // `cargo bench` forwards a libtest-style `--bench` flag to the binary
+    let args = Args::from_env(&["json", "bench"]).expect("parsing bench args");
+    if args.flag("json") {
+        emit_json(&args.get_or("out", "BENCH_serve.json"));
+        return;
+    }
     header();
     let mut b = Bench::new("serve");
     let cfg = CbConfig::default();

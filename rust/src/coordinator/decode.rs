@@ -19,12 +19,23 @@ pub struct DecodeSession<'a> {
     v_cache: Vec<Tensor>,
     pub len: usize,
     pub s_max: usize,
-    /// prompt tokens replayed into the cache at construction
+    /// prompt length; rows `[0, len.min(prompt_len))` have been replayed
+    /// (all of them at construction, except for [`Self::deferred`]
+    /// sessions, which receive the prompt chunk by chunk through
+    /// [`Self::replay_range`])
     pub prompt_len: usize,
     pub generated: Vec<usize>,
     /// last prompt token id — the first decode step conditions on this
     /// (NOT token 0; see `conditioning_token`)
     pub prompt_tail: usize,
+    /// prompt ids retained for deferred (chunked) replay; drained to empty
+    /// once the whole prompt has been replayed. Chunked replay recomputes
+    /// the full-precision prefix from these ids each chunk (compute for
+    /// memory, like the recompute-style eviction path) instead of caching
+    /// exact K/V rows — the mixed cache stays the only persistent
+    /// allocation, so the KV accounting the admission gate sees is the
+    /// whole live footprint.
+    pending_prompt: Vec<usize>,
 }
 
 /// Scale the cluster's token partition down to a `t`-token prompt: each
@@ -70,6 +81,29 @@ impl<'a> DecodeSession<'a> {
         prompt: &[usize],
         s_max: usize,
     ) -> Result<DecodeSession<'a>> {
+        let mut sess = Self::alloc(cluster, prompt, s_max)?;
+        sess.fill_from_prompt(prompt)?;
+        Ok(sess)
+    }
+
+    /// `with_budget` with the prompt replay *deferred*: the cache is
+    /// allocated but no rows are written until [`Self::replay_range`]
+    /// delivers them chunk by chunk (the live half of the scheduler's
+    /// chunked prefill). [`Self::step`] refuses to run until the whole
+    /// prompt has been replayed.
+    pub fn deferred(
+        cluster: &'a Cluster,
+        prompt: &[usize],
+        s_max: usize,
+    ) -> Result<DecodeSession<'a>> {
+        let mut sess = Self::alloc(cluster, prompt, s_max)?;
+        sess.pending_prompt = prompt.to_vec();
+        Ok(sess)
+    }
+
+    /// Validation + cache allocation shared by the immediate and deferred
+    /// constructors. The returned session holds zero replayed rows.
+    fn alloc(cluster: &'a Cluster, prompt: &[usize], s_max: usize) -> Result<DecodeSession<'a>> {
         let meta = &cluster.artifact.meta;
         if !meta.causal {
             bail!("decode sessions require a decoder (causal) artifact");
@@ -92,7 +126,7 @@ impl<'a> DecodeSession<'a> {
         }
         let hh = meta.n_heads;
         let dh = meta.d_model / hh;
-        let mut sess = DecodeSession {
+        Ok(DecodeSession {
             cluster,
             k_cache: (0..meta.n_layers).map(|_| Tensor::zeros(&[hh, s_max, dh])).collect(),
             v_cache: (0..meta.n_layers).map(|_| Tensor::zeros(&[hh, s_max, dh])).collect(),
@@ -101,9 +135,8 @@ impl<'a> DecodeSession<'a> {
             prompt_len: prompt.len(),
             generated: Vec::new(),
             prompt_tail: *prompt.last().expect("prompt checked non-empty"),
-        };
-        sess.fill_from_prompt(prompt)?;
-        Ok(sess)
+            pending_prompt: Vec::new(),
+        })
     }
 
     /// Replay the prefill from the tail device's perspective, writing KV
@@ -138,6 +171,19 @@ impl<'a> DecodeSession<'a> {
     }
 
     fn write_kv_rows(&mut self, li: usize, x: &Tensor, blk: &BlockWeights, hh: usize) -> Result<()> {
+        self.write_kv_rows_at(li, x, blk, hh, 0)
+    }
+
+    /// Write the mixed-precision K/V rows of `x` into cache positions
+    /// `[row0, row0 + x.rows)` — `row0 > 0` is the chunked-replay path.
+    fn write_kv_rows_at(
+        &mut self,
+        li: usize,
+        x: &Tensor,
+        blk: &BlockWeights,
+        hh: usize,
+        row0: usize,
+    ) -> Result<()> {
         let xn = crate::tensor::layer_norm(x, &blk.ln1_g, &blk.ln1_b, 1e-5);
         let mut k = crate::tensor::matmul(&xn, &blk.wk)?;
         crate::tensor::add_bias(&mut k, &blk.bk);
@@ -149,11 +195,71 @@ impl<'a> DecodeSession<'a> {
             for head in 0..hh {
                 for j in 0..dh {
                     let kt = &mut self.k_cache[li];
-                    kt.data[(head * self.s_max + i) * dh + j] = k.row(i)[head * dh + j];
+                    kt.data[(head * self.s_max + row0 + i) * dh + j] = k.row(i)[head * dh + j];
                     let vt = &mut self.v_cache[li];
-                    vt.data[(head * self.s_max + i) * dh + j] = v.row(i)[head * dh + j];
+                    vt.data[(head * self.s_max + row0 + i) * dh + j] = v.row(i)[head * dh + j];
                 }
             }
+        }
+        Ok(())
+    }
+
+    /// Incrementally replay prompt rows `[lo, hi)` into the mixed cache —
+    /// the live half of a scheduler `PrefillChunk` event. Chunks must
+    /// arrive contiguously: `lo` equals the rows already replayed.
+    ///
+    /// Implementation is recompute-style: the full-precision prefix
+    /// `[0, hi)` is re-derived from the retained prompt ids through the
+    /// very same `embed` + [`native::baseline_block`] path the one-shot
+    /// replay uses, and only the new rows `[lo, hi)` are written. Because
+    /// the stream is causal, rows `[0, hi)` of the prefix pass are
+    /// bit-identical to the same rows of the full pass — so chunked replay
+    /// reproduces the one-shot cache exactly and generations are
+    /// independent of the chunking schedule. The trade is recomputed host
+    /// FLOPs (like the recompute-style eviction path), not memory: no
+    /// shadow full-precision K/V buffers exist, and the mixed cache the
+    /// admission gate accounts for is the session's whole footprint.
+    pub fn replay_range(&mut self, lo: usize, hi: usize) -> Result<()> {
+        let meta = &self.cluster.artifact.meta;
+        if self.pending_prompt.is_empty() {
+            bail!("no deferred prompt replay in progress (session is fully prefilled)");
+        }
+        if lo != self.len {
+            bail!("chunks must be contiguous: expected lo={}, got lo={lo}", self.len);
+        }
+        if hi <= lo || hi > self.prompt_len {
+            bail!("bad chunk range [{lo}, {hi}) for a {}-token prompt", self.prompt_len);
+        }
+        let hh = meta.n_heads;
+        let n = self.cluster.partition.n_devices();
+        let part = prompt_partition(&self.cluster.partition, self.prompt_len);
+        let tail = n - 1;
+        let (local_start, local_len) = (part.start(tail), part.sizes[tail]);
+        // recompute the exact stream over the visible prefix [0, hi)
+        let ids = Tensor::from_vec(
+            &[hi, 1],
+            self.pending_prompt[..hi].iter().map(|&v| v as f32).collect(),
+        )?;
+        let mut h = self.cluster.embed(&ids)?;
+        let bias = native::causal_bias(hi);
+        for li in 0..meta.n_layers {
+            let blk = &self.cluster.native_blocks[li];
+            // the tail device sees: local rows exact, remote rows quantized
+            let xhat = self.cluster.artifact.codebooks[li].roundtrip(&h)?;
+            let d = meta.d_model;
+            let mut mixed = Tensor::zeros(&[hi - lo, d]);
+            for g in lo..hi {
+                let local = g >= local_start && g < local_start + local_len;
+                let src = if local { h.row(g) } else { xhat.row(g) };
+                let src = src.to_vec();
+                mixed.row_mut(g - lo).copy_from_slice(&src);
+            }
+            self.write_kv_rows_at(li, &mixed, blk, hh, lo)?;
+            h = native::baseline_block(&h, Some(&bias), blk, hh)?;
+        }
+        self.len = hi;
+        if hi == self.prompt_len {
+            self.pending_prompt = Vec::new(); // replay complete
         }
         Ok(())
     }
@@ -161,6 +267,13 @@ impl<'a> DecodeSession<'a> {
     /// Generate one token greedily; returns its id.
     pub fn step(&mut self) -> Result<usize> {
         let meta = &self.cluster.artifact.meta;
+        if self.len < self.prompt_len {
+            bail!(
+                "prompt replay incomplete ({} of {} rows): deliver the remaining chunks first",
+                self.len,
+                self.prompt_len
+            );
+        }
         if self.len >= self.s_max {
             bail!("cache full ({} rows)", self.s_max);
         }
@@ -233,12 +346,14 @@ impl<'a> DecodeSession<'a> {
     }
 
     /// Appendix G memory accounting for the cache's *current* occupancy:
-    /// mixed-precision prompt rows plus full-precision generated rows.
+    /// mixed-precision prompt rows (only those already replayed, so a
+    /// deferred session's footprint grows chunk by chunk) plus
+    /// full-precision generated rows.
     pub fn cache_bytes_mixed(&self) -> usize {
         let meta = &self.cluster.artifact.meta;
         crate::model::kv_cache_bytes_astra_live(
             &self.accounting_shape(),
-            self.prompt_len,
+            self.len.min(self.prompt_len),
             self.len.saturating_sub(self.prompt_len),
             4,
             self.cluster.partition.n_devices(),
@@ -422,6 +537,54 @@ mod tests {
         }
         // prompts longer than the learned positions are rejected
         assert!(DecodeSession::new(&cluster, &[1usize; 17]).is_err());
+    }
+
+    #[test]
+    fn chunked_replay_matches_one_shot_bit_for_bit() {
+        // the chunked-prefill correctness anchor: delivering the prompt in
+        // arbitrary contiguous chunks must build the exact cache the
+        // one-shot replay builds (causality: a chunk advanced over the
+        // exact K/V of its predecessors sees what the full pass saw)
+        let cluster = tiny_cluster();
+        let vocab = cluster.artifact.meta.vocab_size;
+        let prompt: Vec<usize> = (0..13).map(|i| (i * 7 + 2) % vocab).collect();
+        let mut full = DecodeSession::with_budget(&cluster, &prompt, 13 + 4).unwrap();
+        let mut chunked = DecodeSession::deferred(&cluster, &prompt, 13 + 4).unwrap();
+        // decode refuses to run mid-replay
+        assert!(chunked.step().is_err());
+        assert_eq!(chunked.cache_bytes_mixed(), 0);
+        for (lo, hi) in [(0usize, 5usize), (5, 6), (6, 13)] {
+            chunked.replay_range(lo, hi).unwrap();
+            assert_eq!(chunked.len, hi);
+        }
+        assert_eq!(chunked.cache_bytes_mixed(), full.cache_bytes_mixed());
+        for li in 0..cluster.artifact.meta.n_layers {
+            assert_eq!(chunked.k_cache[li].data, full.k_cache[li].data, "K layer {li}");
+            assert_eq!(chunked.v_cache[li].data, full.v_cache[li].data, "V layer {li}");
+        }
+        let a: Vec<usize> = (0..4).map(|_| full.step().unwrap()).collect();
+        let b: Vec<usize> = (0..4).map(|_| chunked.step().unwrap()).collect();
+        assert_eq!(a, b, "incremental replay diverged from one-shot replay");
+    }
+
+    #[test]
+    fn replay_range_enforces_contiguity_and_bounds() {
+        let cluster = tiny_cluster();
+        let vocab = cluster.artifact.meta.vocab_size;
+        let prompt = [1usize, 2, 3, 4, 5, 6];
+        let mut sess = DecodeSession::deferred(&cluster, &prompt, 12).unwrap();
+        assert!(sess.replay_range(2, 4).is_err(), "must start at 0");
+        assert!(sess.replay_range(0, 0).is_err(), "empty chunk");
+        assert!(sess.replay_range(0, 7).is_err(), "past the prompt");
+        sess.replay_range(0, 3).unwrap();
+        assert!(sess.replay_range(0, 4).is_err(), "must resume at row 3");
+        // partial occupancy: fewer bytes than a fully replayed session
+        let full = DecodeSession::with_budget(&cluster, &prompt, 12).unwrap();
+        assert!(sess.cache_bytes_mixed() < full.cache_bytes_mixed());
+        sess.replay_range(3, 6).unwrap();
+        // replay complete: buffers freed, further chunks rejected
+        assert!(sess.replay_range(6, 7).is_err());
+        assert!(sess.step().unwrap() < vocab);
     }
 
     #[test]

@@ -23,18 +23,31 @@
 //!   bits scale with the batch, while kernel launches, collective sync
 //!   stages, and the weight-streaming memory floor — which gates
 //!   single-token decode — are paid once, so co-scheduled decode slots are
-//!   nearly free. Admission is gated on Appendix-G mixed-KV memory
-//!   ([`server::scheduler::KvBudget`]): slots grow two full-precision rows
-//!   per generated token, and under pressure the newest slots are evicted
-//!   back to the queue for recompute. The same scheduler loop drives two
-//!   backends through [`server::scheduler::DecodeBackend`]: the pure cost
-//!   model, and the *live* path ([`server::live`]) executing real
+//!   nearly free. With `CbConfig::prefill_chunk_tokens` set, long prompts
+//!   stop monopolizing the cluster: Sarathi-style *chunked piggybacked
+//!   prefill* splits them into fixed-token-budget chunks and fuses at most
+//!   one chunk batch into each decode iteration
+//!   ([`parallel::strategies::Strategy::fused_iteration_schedule`] +
+//!   [`parallel::cost::Schedule::piggyback`]: chunk FLOPs/bits plus one
+//!   decode token per slot, launches/sync/floor once per iteration), with
+//!   `chunk_tokens >= max prompt` reproducing the unchunked event stream
+//!   bit for bit. Admission is gated on Appendix-G mixed-KV memory
+//!   ([`server::scheduler::KvBudget`]): slots grow chunk by chunk during
+//!   prefill and two full-precision rows per generated token, and under
+//!   pressure the newest slots are evicted back to the queue for
+//!   recompute. The same scheduler loop drives two backends through
+//!   [`server::scheduler::DecodeBackend`]: the pure cost model, and the
+//!   *live* path ([`server::live`]) executing real
 //!   [`coordinator::decode::DecodeSession`]s — variable-length prompt
-//!   replay into mixed-precision KV caches, greedy generations — behind
-//!   `astra serve-cb --live`. `tests/live_vs_model.rs` is the differential
-//!   harness pinning both backends to identical decision streams. Reports
-//!   cover p50/p95/p99 latency, TTFT, queue depth, censored requests,
-//!   goodput under an SLO, and KV peak/eviction/violation counters.
+//!   replay into mixed-precision KV caches (incremental under chunking via
+//!   [`coordinator::decode::DecodeSession::replay_range`]), greedy
+//!   generations — behind `astra serve-cb --live`.
+//!   `tests/live_vs_model.rs` is the differential harness pinning both
+//!   backends to identical decision streams, chunked or not. Reports cover
+//!   p50/p95/p99 latency, TTFT (recorded once per request from its
+//!   original arrival, eviction-safe), inter-token latency, queue depth,
+//!   censored requests, goodput under an SLO, and KV
+//!   peak/eviction/violation counters.
 //! * [`parallel`] implements the baselines — Tensor Parallelism
 //!   (Megatron-LM), Sequence Parallelism (Voltage), Block Parallelism
 //!   (DeTransformer, BP+AG / BP+SP) — as per-block communication/compute

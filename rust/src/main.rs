@@ -15,7 +15,8 @@ use anyhow::Result;
 use astra::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["help", "verbose", "native", "no-pjrt", "live"])?;
+    let args =
+        Args::from_env(&["help", "verbose", "native", "no-pjrt", "live", "assert-invariants"])?;
     if args.flag("help") || args.positional.is_empty() {
         print_help();
         return Ok(());
@@ -26,6 +27,7 @@ fn main() -> Result<()> {
         "run" => astra::server::cli::run_once(&args),
         "simulate" => astra::server::cli::simulate(&args),
         "calibrate" => astra::server::cli::calibrate(&args),
+        "bench-gate" => astra::util::bench::gate_cli(&args),
         "info" => astra::server::cli::info(&args),
         other => {
             eprintln!("unknown subcommand `{other}`");
@@ -51,10 +53,19 @@ SUBCOMMANDS
              --trace constant|markov --rate R --horizon S --slots K
              --max-batch B --max-wait S --decode-tokens D --slo S --seed S
              --kv-cap BYTES (mixed-KV admission cap, 0 = off)
+             --chunk-tokens C (Sarathi-style chunked prefill: mix at most
+             C prompt tokens per iteration into the decode steps instead
+             of monopolizing the cluster; 0 = off)
              --live: drive real DecodeSessions (variable-length prompts,
              mixed-precision KV caches, greedy generations) through the
              same slot scheduler; uses --artifacts DIR when a decoder
              bundle exists, else a synthetic tiny decoder
+             --assert-invariants: print the live smoke-invariant checklist
+             (full generations, zero kv_violations, zero TTFT anomalies);
+             failures name the broken invariant before the non-zero exit
+  bench-gate deterministic bench-regression gate for CI
+             --baseline FILE --current FILE --tolerance 0.02
+             fails listing every modeled metric that regressed
   run        single prefill through the cluster; prints logits and
              per-layer communication accounting
              --artifacts DIR --devices N --bandwidth MBPS [--native]

@@ -150,6 +150,26 @@ impl TransformerShape {
         self.n_layers as f64 * (qkv + attn + proj + mlp)
     }
 
+    /// FLOPs of one block advancing a *prefill chunk* whose predecessors
+    /// are already cached: q / output-projection / MLP for the device's
+    /// `t_local` chunk rows, K/V projections for all `t_chunk` new rows
+    /// (local full-precision plus dequantized remote — earlier rows' K/V
+    /// live in the cache and are not re-projected, which is what separates
+    /// a chunk from the from-scratch [`Self::block_flops`]), and attention
+    /// of the local rows over `ctx` total positions.
+    pub fn chunk_block_flops(&self, t_local: usize, t_chunk: usize, ctx: usize) -> f64 {
+        let d = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let tq = t_local as f64;
+        let kv = ctx as f64;
+        let q = 2.0 * tq * d * d;
+        let kvproj = 2.0 * 2.0 * t_chunk as f64 * d * d;
+        let attn = 2.0 * tq * kv * d /* QK^T */ + 2.0 * tq * kv * d /* PV */;
+        let proj = 2.0 * tq * d * d;
+        let mlp = 2.0 * tq * d * f * 2.0;
+        q + kvproj + attn + proj + mlp
+    }
+
     /// Bits of one full-precision token embedding (the paper's r*D).
     pub fn token_bits(&self) -> usize {
         self.d_model * self.elem_bytes * 8
@@ -257,6 +277,33 @@ mod tests {
         assert!(s.block_flops(256, 1024) < s.block_flops(1024, 1024));
         assert!(s.block_flops(1024, 256) < s.block_flops(1024, 1024));
         assert!(s.total_flops() > 0.0);
+    }
+
+    #[test]
+    fn chunked_prefill_never_exceeds_from_scratch_flops() {
+        // chunks tiling the prompt re-project K/V once per token (cached
+        // thereafter) and attend triangularly, so their FLOP total stays at
+        // or below the monolithic prefill that block_flops prices
+        let s = TransformerShape::paper_encoder(1024);
+        let n = 4;
+        for chunk in [128usize, 256, 512, 1024] {
+            let mut total = 0.0;
+            let mut done = 0;
+            while done < 1024 {
+                let c = chunk.min(1024 - done);
+                done += c;
+                total += s.chunk_block_flops(c / n, c, done);
+            }
+            let whole = s.block_flops(1024 / n, 1024);
+            assert!(total <= whole + 1.0, "chunk={chunk}: {total} vs {whole}");
+            // and a single whole-prompt chunk is strictly cheaper than the
+            // from-scratch pass only via attention context, not projections
+            if chunk == 1024 {
+                assert!(total > 0.9 * whole, "{total} vs {whole}");
+            }
+        }
+        // chunk flops grow with the attention context the chunk pays
+        assert!(s.chunk_block_flops(64, 256, 1024) > s.chunk_block_flops(64, 256, 256));
     }
 
     #[test]

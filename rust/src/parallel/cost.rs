@@ -144,6 +144,29 @@ impl Schedule {
         Schedule { phases: self.phases.iter().map(|p| p.for_batch(b)).collect() }
     }
 
+    /// Fold piggybacked work into this schedule without paying new
+    /// overheads: `flops` join the first compute phase (sharing its kernel
+    /// launches and weight-stream floor) and `bits` join the first phase
+    /// that already syncs (sharing its stages). This is the fused-iteration
+    /// semantics of chunked prefill: the decode tokens co-scheduled with a
+    /// prompt chunk add FLOPs and wire bits, while launches, sync stages,
+    /// and the memory floor are paid once per iteration. `bits > 0.0` with
+    /// no comm phase to ride is a caller error and is ignored (single-device
+    /// schedules have nothing to sync with).
+    pub fn piggyback(mut self, flops: f64, bits: f64) -> Schedule {
+        if let Some(p) = self.phases.iter_mut().find(|p| p.compute_flops > 0.0) {
+            p.compute_flops += flops;
+        } else if flops > 0.0 {
+            self.phases.insert(0, Phase::compute("piggyback", flops, 0));
+        }
+        if bits > 0.0 {
+            if let Some(p) = self.phases.iter_mut().find(|p| p.comm.stages > 0) {
+                p.comm.bits += bits;
+            }
+        }
+        self
+    }
+
     /// Static-bandwidth latency split into (compute_s, comm_s).
     pub fn latency_breakdown(
         &self,
@@ -224,6 +247,43 @@ mod tests {
         // a big matmul is unaffected by the floor
         let t = dev.phase_compute_time(1e12, 0, 1e6);
         assert!((t - 1.0).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn piggyback_adds_work_but_no_overheads() {
+        let sched = Schedule {
+            phases: vec![
+                Phase::compute_mem("chunk", 1e9, 4, 2e6),
+                Phase::comm("exchange", CommCost { bits: 1e6, stages: 3 }),
+            ],
+        };
+        let fused = sched.clone().piggyback(5e8, 2e5);
+        assert!((fused.total_compute_flops() - 1.5e9).abs() < 1.0);
+        assert!((fused.total_comm_bits() - 1.2e6).abs() < 1e-6);
+        // overheads unchanged: same launches, stages, memory floor
+        assert_eq!(fused.phases[0].launches, 4);
+        assert_eq!(fused.phases[1].comm.stages, 3);
+        assert!((fused.phases[0].mem_bytes - 2e6).abs() < 1e-9);
+        // fused latency < running the two workloads as separate iterations
+        let dev = DeviceModel {
+            flops: 1e12,
+            per_layer_overhead_s: 0.001,
+            speed: 1.0,
+            mem_bytes_per_s: 1e9,
+        };
+        let alone = Schedule {
+            phases: vec![
+                Phase::compute_mem("dec", 5e8, 4, 2e6),
+                Phase::comm("sync", CommCost { bits: 2e5, stages: 3 }),
+            ],
+        };
+        let t_fused = fused.latency(&dev, 10.0, 0.001);
+        let t_split = sched.latency(&dev, 10.0, 0.001) + alone.latency(&dev, 10.0, 0.001);
+        assert!(t_fused < t_split, "{t_fused} vs {t_split}");
+        // bits with no comm phase to ride are dropped, not crashed on
+        let local = Schedule { phases: vec![Phase::compute("c", 1e9, 1)] }.piggyback(1e8, 1e6);
+        assert!((local.total_comm_bits() - 0.0).abs() < 1e-12);
+        assert!((local.total_compute_flops() - 1.1e9).abs() < 1.0);
     }
 
     #[test]

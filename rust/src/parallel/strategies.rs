@@ -159,6 +159,134 @@ impl Strategy {
         Schedule { phases }
     }
 
+    /// Schedule of one prefill *chunk*: `chunk` new prompt tokens advanced
+    /// through every layer while attending to `ctx` total context (the
+    /// prompt rows prefilled so far, including this chunk). Aggregated into
+    /// one compute phase — carrying the weight-streaming floor, because a
+    /// small chunk is memory-bound exactly like a decode step — plus one
+    /// comm phase, so decode work can be piggybacked onto it
+    /// ([`Schedule::piggyback`]) paying launches/sync/floor once.
+    pub fn prefill_chunk_schedule(
+        &self,
+        shape: &TransformerShape,
+        chunk: usize,
+        ctx: usize,
+    ) -> Schedule {
+        let n = self.n_devices;
+        let l = shape.n_layers;
+        let ctx = ctx.max(chunk).max(1);
+        // bottleneck device's share of the chunk (ceil: the tail device
+        // absorbs the remainder, mirroring prompt_partition)
+        let local = chunk.div_ceil(n.max(1)).max(1);
+        let act_bits = (chunk * shape.d_model * shape.elem_bytes * 8) as f64;
+        let (flops, launches, comm, mem_bytes) = match self.kind {
+            StrategyKind::SingleDevice => (
+                l as f64 * shape.chunk_block_flops(chunk, chunk, ctx),
+                l,
+                CommCost::ZERO,
+                shape.weight_bytes(),
+            ),
+            StrategyKind::TensorParallel => {
+                let mut comm = CommCost::ZERO;
+                for _ in 0..l {
+                    comm = comm.plus(sum2(allreduce(act_bits, n)));
+                }
+                (
+                    l as f64 * shape.chunk_block_flops(chunk, chunk, ctx) / n as f64,
+                    l,
+                    comm,
+                    shape.weight_bytes() / n as f64,
+                )
+            }
+            StrategyKind::SequenceParallel => {
+                let mut comm = CommCost::ZERO;
+                for _ in 0..l {
+                    comm = comm.plus(allgather(act_bits, n));
+                }
+                (
+                    l as f64 * shape.chunk_block_flops(local, chunk, ctx),
+                    l,
+                    comm,
+                    shape.weight_bytes(),
+                )
+            }
+            StrategyKind::BlockParallel { n_b, sp_variant } => {
+                let factor = if sp_variant { 1.0 } else { BP_AG_COMPUTE_FACTOR };
+                let mut comm = CommCost::ZERO;
+                for _ in 0..n_b {
+                    comm = comm.plus(if sp_variant {
+                        sum2(allgather(act_bits, n))
+                    } else {
+                        allgather(act_bits, n)
+                    });
+                }
+                (
+                    l as f64 * shape.chunk_block_flops(chunk, chunk, ctx) * factor / n as f64,
+                    l,
+                    comm,
+                    shape.weight_bytes() / n as f64,
+                )
+            }
+            StrategyKind::Astra { vq } => {
+                let code_chunk_bits = (local * vq.bits_per_token()) as f64;
+                let remote = chunk.saturating_sub(local);
+                let vq_flops = shape.vq_encode_flops(local, vq.groups, vq.codebook_size)
+                    + shape.vq_decode_flops(remote, vq.groups, vq.codebook_size);
+                let mut comm = CommCost::ZERO;
+                for _ in 0..l {
+                    comm = comm.plus(code_multicast(code_chunk_bits, n));
+                }
+                (
+                    l as f64 * (vq_flops + shape.chunk_block_flops(local, chunk, ctx)),
+                    2 * l, // vq encode/decode + mpa block per layer
+                    comm,
+                    shape.weight_bytes(),
+                )
+            }
+        };
+        let mut phases = vec![Phase::compute_mem("prefill chunk", flops, launches, mem_bytes)];
+        if comm.bits > 0.0 || comm.stages > 0 {
+            phases.push(Phase::comm("chunk exchange", comm));
+        }
+        Schedule { phases }
+    }
+
+    /// One fused chunk+decode iteration (Sarathi-style piggybacking):
+    /// `chunk` prompt tokens advanced at context `ctx_prefill`, co-scheduled
+    /// with one decode token for each of `decode_batch` in-flight slots at
+    /// KV context `ctx_decode`. FLOPs and wire bits are paid for the chunk
+    /// tokens plus one token per decode slot; kernel launches, collective
+    /// sync stages, and the weight-streaming floor are paid once for the
+    /// whole fused iteration. With `chunk == 0` this degenerates to the
+    /// plain batched decode step; with `decode_batch == 0` to the bare
+    /// chunk.
+    pub fn fused_iteration_schedule(
+        &self,
+        shape: &TransformerShape,
+        chunk: usize,
+        ctx_prefill: usize,
+        decode_batch: usize,
+        ctx_decode: usize,
+    ) -> Schedule {
+        if chunk == 0 {
+            return self.decode_step_schedule(shape, ctx_decode).for_batch(decode_batch.max(1));
+        }
+        let sched = self.prefill_chunk_schedule(shape, chunk, ctx_prefill);
+        if decode_batch == 0 {
+            return sched;
+        }
+        let n = self.n_devices;
+        let b = decode_batch as f64;
+        let (dec_flops, dec_bits) = match self.kind {
+            StrategyKind::TensorParallel => (
+                shape.decode_step_flops(ctx_decode) / n as f64 * b,
+                sum2(allreduce(shape.token_bits() as f64, n)).bits * shape.n_layers as f64 * b,
+            ),
+            _ => (shape.decode_step_flops(ctx_decode) * b, 0.0),
+        };
+        sched.piggyback(dec_flops, dec_bits)
+    }
+
     /// Payload bits a single transmitted token costs over the whole model
     /// (the paper's "Total Bits per Token" column).
     pub fn total_bits_per_token(&self, shape: &TransformerShape) -> usize {
@@ -285,6 +413,73 @@ mod tests {
             .decode_step_schedule(&shape, 1024)
             .latency(&dev, 100.0, 0.0006);
         assert!(tp > t1, "{tp} vs {t1}");
+    }
+
+    #[test]
+    fn fused_iteration_degenerates_to_its_parts() {
+        let shape = TransformerShape::paper_encoder(1024);
+        for s in figure1_strategies(4) {
+            // chunk = 0: exactly the batched decode step the scheduler
+            // already prices (bit-identity anchor for the unchunked path)
+            let fused = s.fused_iteration_schedule(&shape, 0, 0, 8, 1024);
+            let step = s.decode_step_schedule(&shape, 1024).for_batch(8);
+            assert_eq!(fused.total_compute_flops(), step.total_compute_flops(), "{}", s.name());
+            assert_eq!(fused.total_comm_bits(), step.total_comm_bits(), "{}", s.name());
+            // decode_batch = 0: exactly the bare chunk
+            let fused = s.fused_iteration_schedule(&shape, 128, 512, 0, 0);
+            let chunk = s.prefill_chunk_schedule(&shape, 128, 512);
+            assert_eq!(fused.total_compute_flops(), chunk.total_compute_flops(), "{}", s.name());
+            assert_eq!(fused.total_comm_bits(), chunk.total_comm_bits(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn fused_iteration_cheaper_than_separate_iterations() {
+        // piggybacking decode onto a chunk must beat running the chunk and
+        // the decode step as two iterations (launches/sync/floor paid once)
+        let shape = TransformerShape::paper_encoder(1024);
+        let dev = DeviceModel::paper_1660ti();
+        for s in figure1_strategies(4) {
+            let fused =
+                s.fused_iteration_schedule(&shape, 128, 512, 8, 1024).latency(&dev, 100.0, 0.0006);
+            let split = s.prefill_chunk_schedule(&shape, 128, 512).latency(&dev, 100.0, 0.0006)
+                + s.decode_step_schedule(&shape, 1024).for_batch(8).latency(&dev, 100.0, 0.0006);
+            assert!(fused < split, "{}: {fused} vs {split}", s.name());
+            // and the piggybacked decode is not free: fused > bare chunk
+            let bare = s.prefill_chunk_schedule(&shape, 128, 512).latency(&dev, 100.0, 0.0006);
+            assert!(fused > bare, "{}: {fused} vs {bare}", s.name());
+        }
+    }
+
+    #[test]
+    fn chunk_schedule_scales_with_chunk_and_context() {
+        let shape = TransformerShape::paper_encoder(1024);
+        let astra = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4);
+        let small = astra.prefill_chunk_schedule(&shape, 64, 64);
+        let big = astra.prefill_chunk_schedule(&shape, 256, 256);
+        assert!(big.total_compute_flops() > small.total_compute_flops());
+        assert!(big.total_comm_bits() > small.total_comm_bits());
+        // a later chunk of the same size pays more attention context
+        let late = astra.prefill_chunk_schedule(&shape, 64, 1024);
+        assert!(late.total_compute_flops() > small.total_compute_flops());
+        assert_eq!(late.total_comm_bits(), small.total_comm_bits());
+        // chunking the whole prompt costs at least the monopolizing prefill
+        // in overheads: N chunks pay N launch sets + N floors, one pays one
+        let dev = DeviceModel::paper_1660ti();
+        let chunks: f64 = (0..8)
+            .map(|i| {
+                astra
+                    .prefill_chunk_schedule(&shape, 128, (i + 1) * 128)
+                    .latency(&dev, 100.0, 0.0006)
+            })
+            .sum();
+        let whole = astra.schedule(&shape).latency(&dev, 100.0, 0.0006);
+        assert!(chunks > 0.0 && whole > 0.0);
+        // the two are the same order of magnitude — chunking trades a
+        // bounded per-iteration overhead (launches + sync stages + memory
+        // floor, once per chunk) for interleaving freedom
+        assert!(chunks > whole, "{chunks} vs {whole}");
+        assert!(chunks < 4.0 * whole, "{chunks} vs {whole}");
     }
 
     #[test]

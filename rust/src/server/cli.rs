@@ -10,7 +10,7 @@ use crate::config::{shape_preset, vq_preset, RunConfig};
 use crate::coordinator::Cluster;
 use crate::model::shape::VqSetting;
 use crate::parallel::strategies::{Strategy, StrategyKind};
-use crate::server::scheduler::{CbConfig, CbEngine};
+use crate::server::scheduler::{CbConfig, CbEngine, CbEvent};
 use crate::sim::latency::{evaluate, SimParams};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
@@ -188,6 +188,7 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         slo_s: args.f64_or("slo", 2.0)?,
         window_s: 10.0,
         kv_cap_bytes: args.usize_or("kv-cap", 0)?,
+        prefill_chunk_tokens: args.usize_or("chunk-tokens", 0)?,
     };
 
     println!(
@@ -202,8 +203,16 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         let mut rng = Rng::new(seed);
         let mut r = engine.serve_poisson(&mut rng, rate, horizon);
         println!(
-            "-- {mode} (slots={}, batch<={}, {} decode tokens, SLO {:.1} s) --",
-            cfg.max_slots, cfg.max_batch, cfg.decode_tokens, cfg.slo_s
+            "-- {mode} (slots={}, batch<={}, {} decode tokens, SLO {:.1} s{}) --",
+            cfg.max_slots,
+            cfg.max_batch,
+            cfg.decode_tokens,
+            cfg.slo_s,
+            if cfg.prefill_chunk_tokens > 0 {
+                format!(", chunked prefill @{} tokens", cfg.prefill_chunk_tokens)
+            } else {
+                String::new()
+            },
         );
         println!(
             "completed {:>6}   censored {:>6}   throughput {:.2}/s (horizon) {:.2}/s (completion)",
@@ -217,6 +226,14 @@ pub fn serve_cb(args: &Args) -> Result<()> {
             "TTFT      p50 {:>8.1} ms  p95 {:>8.1} ms   queue depth mean {:.1}",
             r.ttft.p50() * 1e3, r.ttft.p95() * 1e3, r.mean_queue_depth()
         );
+        if !r.itl.is_empty() {
+            println!(
+                "ITL       p50 {:>8.1} ms  p95 {:>8.1} ms   prefill chunks {}",
+                r.itl.p50() * 1e3,
+                r.itl.p95() * 1e3,
+                r.prefill_chunks
+            );
+        }
         println!("goodput   {:.2}/s within SLO", r.goodput);
         rows.push((mode, r.completed));
     }
@@ -271,6 +288,7 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         slo_s: args.f64_or("slo", 0.0)?,
         window_s: 10.0,
         kv_cap_bytes: args.usize_or("kv-cap", 0)?,
+        prefill_chunk_tokens: args.usize_or("chunk-tokens", 0)?,
     };
     let mut rng = Rng::new(cluster.config.seed);
     let arrivals =
@@ -285,9 +303,18 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
 
     let mut r = live.report;
     println!(
-        "\n== serve-cb --live: {} devices, T<= {}, {} Mbps, {} slots, {} decode tokens ==",
-        cluster.config.n_devices, meta.seq_len, cluster.config.bandwidth_mbps,
-        cfg.max_slots, cfg.decode_tokens
+        "\n== serve-cb --live: {} devices, T<= {}, {} Mbps, {} slots, {} decode tokens{} ==",
+        cluster.config.n_devices,
+        meta.seq_len,
+        cluster.config.bandwidth_mbps,
+        cfg.max_slots,
+        cfg.decode_tokens,
+        if cfg.prefill_chunk_tokens > 0 {
+            format!(", chunked prefill @{} tokens ({} chunks)",
+                cfg.prefill_chunk_tokens, r.prefill_chunks)
+        } else {
+            String::new()
+        },
     );
     println!(
         "arrivals {n_arrivals}   completed {}   censored {}   rejected {}",
@@ -316,23 +343,71 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         println!("sample generation (request {id}): {:?}", &toks[..k]);
     }
 
-    // smoke invariants: the live path must really generate, within the cap
-    anyhow::ensure!(
-        r.kv_violations == 0,
-        "KV admission violated the cap {} times",
-        r.kv_violations
-    );
-    anyhow::ensure!(r.completed > 0, "no request completed inside the horizon");
-    let empty = live
+    // smoke invariants: the live path must really generate, within the
+    // cap, with sane first-token accounting. Each is evaluated
+    // independently so a failing run names exactly what broke
+    // (`--assert-invariants` prints the checklist even on success).
+    let partial = live
         .generations
         .iter()
         .filter(|(_, t)| t.len() != cfg.decode_tokens)
         .count();
-    anyhow::ensure!(
-        cfg.decode_tokens == 0 || empty == 0,
-        "{empty} completed requests lack full generations"
-    );
-    println!("smoke invariants hold: non-empty generations, zero KV violations");
+    let admitted: std::collections::BTreeSet<u64> = r
+        .events
+        .iter()
+        .flat_map(|e| match e {
+            CbEvent::Admit { ids } => ids.clone(),
+            _ => Vec::new(),
+        })
+        .collect();
+    let invariants: Vec<(&str, bool, String)> = vec![
+        (
+            "completed > 0",
+            r.completed > 0,
+            format!("{} of {n_arrivals} arrivals completed inside the horizon", r.completed),
+        ),
+        (
+            "full generations",
+            cfg.decode_tokens == 0 || partial == 0,
+            format!(
+                "{partial} of {} completed requests lack their {}-token generation",
+                live.generations.len(),
+                cfg.decode_tokens
+            ),
+        ),
+        (
+            "zero kv_violations",
+            r.kv_violations == 0,
+            format!(
+                "live session bytes exceeded the KV cap in {} iterations",
+                r.kv_violations
+            ),
+        ),
+        (
+            "zero TTFT anomalies",
+            !r.ttft.is_empty()
+                && r.ttft.min() >= 0.0
+                && r.ttft.max().is_finite()
+                && r.ttft.len() <= admitted.len(),
+            format!(
+                "{} TTFT samples over {} distinct admitted requests (min {:.4}, max {:.4}): \
+                 every sample must be finite, non-negative, and recorded at most once",
+                r.ttft.len(),
+                admitted.len(),
+                r.ttft.min(),
+                r.ttft.max()
+            ),
+        ),
+    ];
+    let failed: Vec<&str> = invariants.iter().filter(|t| !t.1).map(|t| t.0).collect();
+    if args.flag("assert-invariants") || !failed.is_empty() {
+        println!("\nsmoke invariants:");
+        for (name, ok, detail) in &invariants {
+            println!("  [{}] {name}: {detail}", if *ok { "ok" } else { "FAIL" });
+        }
+    }
+    anyhow::ensure!(failed.is_empty(), "smoke invariants violated: {}", failed.join(", "));
+    println!("smoke invariants hold: full generations, zero KV violations, sane TTFT");
     Ok(())
 }
 

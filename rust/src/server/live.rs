@@ -6,11 +6,14 @@
 //! admission, eviction. This module plugs a [`LiveBackend`] into that loop
 //! so each decision executes for real: an admission replays the request's
 //! variable-length prompt into a fresh mixed-precision KV cache
-//! ([`DecodeSession::with_budget`], sized prompt + decode budget), a
-//! batched decode step greedily generates one token per in-flight slot,
-//! and an eviction drops the session for later recompute. Per-request
-//! latency comes from the shared virtual clock; real generated tokens and
-//! measured host compute come from the sessions.
+//! ([`DecodeSession::with_budget`], sized prompt + decode budget) — or,
+//! under chunked prefill, opens a deferred session and replays only the
+//! admission chunk, the rest arriving chunk by chunk through
+//! [`DecodeSession::replay_range`] as the scheduler fuses it into decode
+//! iterations — a batched decode step greedily generates one token per
+//! in-flight slot, and an eviction drops the session for later recompute.
+//! Per-request latency comes from the shared virtual clock; real generated
+//! tokens and measured host compute come from the sessions.
 //!
 //! Because the decisions are made by the shared loop, a live run and a
 //! [`ModelBackend`](super::scheduler::ModelBackend) run over the same
@@ -103,7 +106,12 @@ impl<'a> LiveBackend<'a> {
 }
 
 impl DecodeBackend for LiveBackend<'_> {
-    fn admit(&mut self, batch: &[Request], decode_tokens: usize) -> Result<()> {
+    fn admit(
+        &mut self,
+        batch: &[Request],
+        decode_tokens: usize,
+        prefill_limit: usize,
+    ) -> Result<()> {
         if decode_tokens == 0 {
             return Ok(()); // prefill-only: nothing to hold between events
         }
@@ -119,12 +127,35 @@ impl DecodeBackend for LiveBackend<'_> {
             }
             let prompt = synth_prompt(self.prompt_seed, req.id, req.tokens, meta.vocab_size);
             let t0 = Instant::now();
-            let sess =
+            let sess = if prefill_limit >= req.tokens {
+                // classic path: the whole prompt replays at admission
                 DecodeSession::with_budget(self.cluster, &prompt, req.tokens + decode_tokens)
-                    .with_context(|| format!("admitting request {}", req.id))?;
+                    .with_context(|| format!("admitting request {}", req.id))?
+            } else {
+                // chunked path: replay only the admission chunk; the rest
+                // arrives through prefill_chunk calls as the scheduler
+                // fuses it into decode iterations
+                let mut sess =
+                    DecodeSession::deferred(self.cluster, &prompt, req.tokens + decode_tokens)
+                        .with_context(|| format!("admitting request {}", req.id))?;
+                sess.replay_range(0, prefill_limit)
+                    .with_context(|| format!("admission chunk of request {}", req.id))?;
+                sess
+            };
             self.host_compute_s += t0.elapsed().as_secs_f64();
             self.sessions.insert(req.id, sess);
         }
+        Ok(())
+    }
+
+    fn prefill_chunk(&mut self, id: u64, lo: usize, hi: usize) -> Result<()> {
+        let t0 = Instant::now();
+        let sess = self
+            .sessions
+            .get_mut(&id)
+            .with_context(|| format!("no live session for prefilling slot {id}"))?;
+        sess.replay_range(lo, hi)?;
+        self.host_compute_s += t0.elapsed().as_secs_f64();
         Ok(())
     }
 
@@ -310,6 +341,43 @@ mod tests {
         for (_, toks) in &live.generations {
             assert_eq!(toks.len(), 8);
         }
+    }
+
+    #[test]
+    fn chunked_live_run_matches_unchunked_generations() {
+        // chunked prefill reshapes the schedule (chunk events, deferred
+        // TTFT) but must not change what any request decodes: incremental
+        // replay_range builds the same mixed cache as one-shot replay
+        let cluster = tiny_cluster(11);
+        let base = CbConfig { max_slots: 3, max_batch: 3, decode_tokens: 5, ..CbConfig::default() };
+        let chunked = CbConfig { prefill_chunk_tokens: 6, ..base.clone() };
+        let arrivals = live_arrivals(&mut Rng::new(8), 12.0, 3.0, 16);
+        assert!(arrivals.len() > 4, "{}", arrivals.len());
+        assert!(arrivals.iter().any(|r| r.tokens > 6), "need prompts longer than the budget");
+        let run = |cfg: &CbConfig| {
+            serve_live(
+                &cluster,
+                cfg.clone(),
+                SimParams::paper_encoder(),
+                BandwidthTrace::constant(100.0, 1e9),
+                arrivals.clone(),
+                1e4,
+            )
+            .unwrap()
+        };
+        let plain = run(&base);
+        let chunky = run(&chunked);
+        assert_eq!(plain.report.completed, arrivals.len());
+        assert_eq!(chunky.report.completed, arrivals.len());
+        assert!(chunky.report.prefill_chunks > 0);
+        // different schedules...
+        assert_ne!(plain.report.events, chunky.report.events);
+        // ...identical greedy generations, token for token
+        assert_eq!(plain.generations, chunky.generations);
+        // and the chunked run is reproducible bit for bit
+        let again = run(&chunked);
+        assert_eq!(again.report.events, chunky.report.events);
+        assert_eq!(again.generations, chunky.generations);
     }
 
     #[test]

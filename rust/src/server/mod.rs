@@ -5,8 +5,10 @@
 //!  * [`engine::ServeEngine`] — the paper's Fig-6 setting: batch-1 FIFO
 //!    over the cost model.
 //!  * [`scheduler::CbEngine`] — continuous batching: slot-based admission
-//!    with batched prefill, interleaved batched decode steps, and
-//!    KV-pressure admission ([`scheduler::KvBudget`]).
+//!    with batched prefill, interleaved batched decode steps, Sarathi-style
+//!    chunked piggybacked prefill (`CbConfig::prefill_chunk_tokens`: prompt
+//!    chunks fused into decode iterations instead of monopolizing the
+//!    cluster), and KV-pressure admission ([`scheduler::KvBudget`]).
 //!  * [`live`] — the same scheduler loop driving *real*
 //!    [`crate::coordinator::decode::DecodeSession`]s through a
 //!    [`scheduler::DecodeBackend`]: actual tensors, mixed-precision KV
@@ -23,4 +25,6 @@ pub mod scheduler;
 pub use batcher::{Batcher, Request};
 pub use engine::{ServeEngine, ServeReport};
 pub use live::{serve_live, LiveBackend, LiveReport};
-pub use scheduler::{CbConfig, CbEngine, CbEvent, CbReport, DecodeBackend, KvBudget, ModelBackend};
+pub use scheduler::{
+    CbConfig, CbEngine, CbEvent, CbReport, DecodeBackend, KvBudget, ModelBackend, SlotState,
+};

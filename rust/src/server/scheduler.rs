@@ -12,6 +12,27 @@
 //!    token — single-token decode is memory-bound (one streaming pass over
 //!    the weights), so co-scheduled slots share that floor almost for free.
 //!
+//! # Chunked piggybacked prefill
+//!
+//! With `CbConfig::prefill_chunk_tokens > 0`, a prompt longer than the
+//! budget no longer monopolizes the cluster for its full prefill. Its
+//! admission iteration replays only the first `prefill_chunk_tokens` rows;
+//! the slot then sits in [`SlotState::Prefilling`] and each subsequent
+//! iteration *fuses* one chunk batch — up to the budget of prompt tokens,
+//! shared FIFO across all prefilling slots — with the decode step advancing
+//! the in-flight decoding slots
+//! ([`crate::parallel::strategies::Strategy::fused_iteration_schedule`]:
+//! FLOPs and wire bits are paid for the chunk tokens plus one token per
+//! decode slot, launches/sync/memory-floor once per iteration). Every chunk
+//! is recorded as a [`CbEvent::PrefillChunk`]; TTFT for a chunked request
+//! fires on its first decode step after the last chunk. Prompts that fit
+//! inside the budget take the classic monopolizing path (their "first
+//! chunk" is the whole prompt), so `prefill_chunk_tokens >= max prompt` —
+//! and `prefill_chunk_tokens == 0`, the disabled default — reproduce the
+//! unchunked scheduler's event stream bit for bit; `tests/proptests.rs`
+//! pins that anchor. Prefill-only workloads (`decode_tokens == 0`) have no
+//! decode iterations to piggyback on and always take the classic path.
+//!
 //! # Backends
 //!
 //! The loop owns every scheduling decision and all *timing* (the cost
@@ -44,12 +65,14 @@
 //! accounted separately, KV peak/eviction counters, and the full decision
 //! event stream.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::comm::trace::BandwidthTrace;
 use crate::model::{kv_cache_bytes_astra_live, kv_cache_bytes_full, TransformerShape};
 use crate::parallel::strategies::{Strategy, StrategyKind};
-use crate::sim::latency::{evaluate_on_trace_batched, Breakdown, SimParams};
+use crate::sim::latency::{evaluate_on_trace, evaluate_on_trace_batched, Breakdown, SimParams};
 use crate::util::rng::Rng;
 use crate::util::stats::{Summary, WindowedCounter};
 
@@ -73,6 +96,13 @@ pub struct CbConfig {
     pub window_s: f64,
     /// mixed-KV memory cap for the admission gate, bytes (0 = unlimited)
     pub kv_cap_bytes: usize,
+    /// Sarathi-style chunked prefill: per-iteration prompt-token budget
+    /// mixed into decode iterations, shared across prefilling slots. 0
+    /// disables chunking (a prompt prefills whole at its admission — the
+    /// monopolizing baseline). Prompts no longer than the budget also take
+    /// that classic path, so any budget >= the longest prompt reproduces
+    /// the unchunked scheduler's event stream bit for bit.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for CbConfig {
@@ -85,6 +115,7 @@ impl Default for CbConfig {
             slo_s: 0.0,
             window_s: 10.0,
             kv_cap_bytes: 0,
+            prefill_chunk_tokens: 0,
         }
     }
 }
@@ -113,6 +144,11 @@ pub enum CbEvent {
     Evict { id: u64 },
     /// request whose full KV budget can never fit the cap; dropped
     Reject { id: u64 },
+    /// a prefill chunk advanced slot `id`'s prompt rows `[lo, hi)` through
+    /// the model, fused into the surrounding iteration. Emitted only for
+    /// prompts longer than the chunk budget; per admission episode the
+    /// chunk events of a slot tile `[0, prompt_len)` contiguously in order.
+    PrefillChunk { id: u64, lo: usize, hi: usize },
 }
 
 /// Admission gate over Appendix-G mixed-KV memory: the bytes held by all
@@ -149,9 +185,20 @@ impl KvBudget {
 /// decision the loop already recorded as a [`CbEvent`]; a backend performs
 /// the corresponding real work (or nothing, for the cost model).
 pub trait DecodeBackend {
-    /// A batch was admitted: start real work (live: replay each request's
-    /// prefill into a fresh `DecodeSession` sized prompt + decode budget).
-    fn admit(&mut self, batch: &[Request], decode_tokens: usize) -> Result<()>;
+    /// A batch was admitted: start real work (live: open a `DecodeSession`
+    /// per request, sized prompt + decode budget, and replay the first
+    /// `min(prompt, prefill_limit)` prompt rows). `prefill_limit` is
+    /// `usize::MAX` when chunking is off (whole prompts replay here); the
+    /// remainder of a longer prompt arrives through [`Self::prefill_chunk`].
+    fn admit(
+        &mut self,
+        batch: &[Request],
+        decode_tokens: usize,
+        prefill_limit: usize,
+    ) -> Result<()>;
+    /// Replay prompt rows `[lo, hi)` of slot `id` into its cache — one
+    /// chunk the scheduler fused into a decode iteration.
+    fn prefill_chunk(&mut self, id: u64, lo: usize, hi: usize) -> Result<()>;
     /// One co-scheduled decode step advancing every listed slot by a token.
     fn step(&mut self, ids: &[u64]) -> Result<()>;
     /// The request finished; release its state and collect output.
@@ -168,7 +215,15 @@ pub trait DecodeBackend {
 pub struct ModelBackend;
 
 impl DecodeBackend for ModelBackend {
-    fn admit(&mut self, _batch: &[Request], _decode_tokens: usize) -> Result<()> {
+    fn admit(
+        &mut self,
+        _batch: &[Request],
+        _decode_tokens: usize,
+        _prefill_limit: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
+    fn prefill_chunk(&mut self, _id: u64, _lo: usize, _hi: usize) -> Result<()> {
         Ok(())
     }
     fn step(&mut self, _ids: &[u64]) -> Result<()> {
@@ -205,20 +260,33 @@ pub struct CbReport {
     pub slo_s: f64,
     /// end-to-end latency of completed requests (p50/p95/p99 via Summary)
     pub latency: Summary,
-    /// time to first token (prefill end - arrival) of admitted requests
-    /// whose prefill finished inside the horizon
+    /// time to first token, measured from the request's ORIGINAL arrival to
+    /// the first token it ever produced — recorded once per request, so an
+    /// eviction + re-admission cannot overwrite it. Classic (unchunked)
+    /// requests fire at prefill end; chunked requests fire on the first
+    /// decode step after their last chunk.
     pub ttft: Summary,
-    /// queue wait (admission - arrival) of admitted requests
+    /// queue wait per admitted request: the SUM of its queueing episodes
+    /// (arrival -> first admission, plus each eviction -> re-admission) —
+    /// in-service time never counts as waiting
     pub queue_wait: Summary,
+    /// inter-token latency: gaps between consecutive decode-step
+    /// completions of the same slot within one residency — the in-flight
+    /// decode stall metric chunked prefill improves (a monopolizing prefill
+    /// shows up here as one giant gap for every in-flight slot)
+    pub itl: Summary,
     /// queue wait accrued by censored requests up to the horizon
     pub censored_wait: Summary,
     /// (time, queued requests) samples taken at admission decisions
     pub queue_depth: Vec<(f64, usize)>,
     /// completion bars covering the whole horizon
     pub windows: Vec<usize>,
-    /// the scheduler's full decision stream (admissions, decode steps,
-    /// completions, evictions, rejections) in order
+    /// the scheduler's full decision stream (admissions, prefill chunks,
+    /// decode steps, completions, evictions, rejections) in order
     pub events: Vec<CbEvent>,
+    /// prefill-chunk events emitted (0 when chunking is off or every
+    /// prompt fit its admission chunk)
+    pub prefill_chunks: usize,
     /// summed virtual cost of every evaluated prefill + decode step
     pub model_time: Breakdown,
     /// high-water mark of modeled in-flight KV bytes
@@ -278,6 +346,16 @@ impl CompletionTally {
     }
 }
 
+/// Chunked-prefill progress of an in-flight slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// prompt rows `[0, next_token)` are in the cache; `[next_token,
+    /// total)` still arrive as fused chunks
+    Prefilling { next_token: usize, total: usize },
+    /// prompt fully prefilled; each iteration decodes one token
+    Decoding,
+}
+
 /// One in-flight request occupying a decode slot.
 #[derive(Debug, Clone, Copy)]
 struct Slot {
@@ -287,10 +365,27 @@ struct Slot {
     tokens: usize,
     remaining: usize,
     generated: usize,
-    /// modeled mixed-KV bytes currently held (grows each decode step)
+    /// modeled mixed-KV bytes currently held (grows per chunk during
+    /// chunked prefill, then two full-precision rows per decode step)
     kv_bytes: usize,
     /// virtual time of admission (eviction picks the newest slot)
     admitted_at: f64,
+    state: SlotState,
+    /// virtual time this slot last completed a decode step (ITL tracking)
+    last_token_at: f64,
+}
+
+/// Per-request accounting that must survive eviction and re-admission:
+/// TTFT is measured once, from the original arrival to the first token the
+/// request ever produced, and queue wait sums every queueing episode
+/// instead of being overwritten when a request re-enters through admission.
+#[derive(Debug, Clone, Copy)]
+struct ReqStats {
+    /// when the current queueing episode began (arrival, or last eviction)
+    queued_since: f64,
+    /// completed queueing episodes, summed
+    queue_wait_s: f64,
+    ttft_recorded: bool,
 }
 
 /// Index of the newest slot (latest admission, ties broken by larger id) —
@@ -361,6 +456,43 @@ impl CbEngine {
         self.kv_slot_bytes(1, 1) - self.kv_slot_bytes(1, 0)
     }
 
+    /// Plan one iteration's chunk batch: `(slot index, tokens)` pairs in
+    /// admission order (FIFO across prefilling slots, sharing the
+    /// per-iteration token budget), plus the modeled KV growth the whole
+    /// iteration causes — planned chunk rows for prefilling slots and one
+    /// decode token's full-precision rows per decoding slot. With chunking
+    /// disabled there are no prefilling slots, so the plan is empty and the
+    /// growth reduces to the old `slots * kv_step_bytes()` check.
+    fn plan_chunks(&self, slots: &[Slot], chunk_budget: usize) -> (Vec<(usize, usize)>, usize) {
+        let mut order: Vec<usize> = (0..slots.len())
+            .filter(|&i| matches!(slots[i].state, SlotState::Prefilling { .. }))
+            .collect();
+        order.sort_by(|&a, &b| {
+            slots[a]
+                .admitted_at
+                .partial_cmp(&slots[b].admitted_at)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(slots[a].id.cmp(&slots[b].id))
+        });
+        let mut plan = Vec::new();
+        let mut left = chunk_budget;
+        let mut growth = 0usize;
+        for i in order {
+            if left == 0 {
+                break;
+            }
+            if let SlotState::Prefilling { next_token, total } = slots[i].state {
+                let take = (total - next_token).min(left);
+                left -= take;
+                growth += self.kv_slot_bytes(next_token + take, 0) - slots[i].kv_bytes;
+                plan.push((i, take));
+            }
+        }
+        let decoding = slots.iter().filter(|s| s.state == SlotState::Decoding).count();
+        growth += decoding * self.kv_step_bytes();
+        (plan, growth)
+    }
+
     /// Serve an open-loop Poisson stream at `rate` req/s for `horizon_s`.
     pub fn serve_poisson(&mut self, rng: &mut Rng, rate: f64, horizon_s: f64) -> CbReport {
         let arrivals =
@@ -385,23 +517,33 @@ impl CbEngine {
         horizon_s: f64,
     ) -> Result<CbReport> {
         let max_slots = self.cfg.max_slots.max(1);
+        // prefill-only workloads have no decode iterations to piggyback
+        // chunks on, so chunking applies only when decode happens
+        let chunk_budget = if self.cfg.prefill_chunk_tokens > 0 && self.cfg.decode_tokens > 0 {
+            self.cfg.prefill_chunk_tokens
+        } else {
+            usize::MAX
+        };
         let mut batcher = Batcher::new(self.cfg.max_batch.max(1), self.cfg.max_wait_s);
         let mut slots: Vec<Slot> = Vec::new();
         let mut pending = arrivals.into_iter().peekable();
         let mut budget = KvBudget::new(self.cfg.kv_cap_bytes);
         let mut events: Vec<CbEvent> = Vec::new();
+        let mut stats: BTreeMap<u64, ReqStats> = BTreeMap::new();
 
         let mut now = 0.0f64;
         let mut tally = CompletionTally::new(self.cfg.slo_s, self.cfg.window_s);
         let mut ttft = Summary::new();
         let mut queue_wait = Summary::new();
         let mut censored_wait = Summary::new();
+        let mut itl = Summary::new();
         let mut queue_depth: Vec<(f64, usize)> = Vec::new();
         let mut model_time = Breakdown::default();
         let mut censored = 0usize;
         let mut kv_rejected = 0usize;
         let mut kv_evictions = 0usize;
         let mut kv_violations = 0usize;
+        let mut prefill_chunks = 0usize;
 
         while now < horizon_s {
             // pull arrivals into the queue
@@ -462,18 +604,45 @@ impl CbEngine {
             if !batch.is_empty() {
                 queue_depth.push((now, batcher.len()));
                 let b = batch.len();
-                // prefill cost scales with the longest prompt in the batch
+                // the admission iteration replays each request's *first
+                // chunk* — the whole prompt when it fits the budget (the
+                // classic monopolizing path) — priced by the longest first
+                // chunk in the batch
                 let mut pshape = self.shape;
-                pshape.seq_len = batch.iter().map(|r| r.tokens).max().unwrap_or(1).max(1);
+                pshape.seq_len = batch
+                    .iter()
+                    .map(|r| r.tokens.min(chunk_budget))
+                    .max()
+                    .unwrap_or(1)
+                    .max(1);
                 let prefill = self.strategy.schedule(&pshape);
                 let bd = evaluate_on_trace_batched(&prefill, &self.params, &self.trace, now, b);
                 model_time.accumulate(&bd);
                 let done = now + bd.total();
                 events.push(CbEvent::Admit { ids: batch.iter().map(|r| r.id).collect() });
-                backend.admit(&batch, self.cfg.decode_tokens)?;
                 for req in &batch {
-                    queue_wait.add(now - req.arrival_s);
-                    if done <= horizon_s {
+                    let first = req.tokens.min(chunk_budget);
+                    if first < req.tokens {
+                        events.push(CbEvent::PrefillChunk { id: req.id, lo: 0, hi: first });
+                        prefill_chunks += 1;
+                    }
+                }
+                backend.admit(&batch, self.cfg.decode_tokens, chunk_budget)?;
+                for req in &batch {
+                    let st = stats.entry(req.id).or_insert(ReqStats {
+                        queued_since: req.arrival_s,
+                        queue_wait_s: 0.0,
+                        ttft_recorded: false,
+                    });
+                    st.queue_wait_s += now - st.queued_since;
+                    st.queued_since = now; // in service: not queueing
+                    // classic path: the first token's latency is known at
+                    // prefill end. Chunked slots record TTFT at their first
+                    // decode step instead, and an evicted-then-readmitted
+                    // request keeps the TTFT of the first token it ever
+                    // emitted rather than overwriting it here.
+                    if req.tokens <= chunk_budget && done <= horizon_s && !st.ttft_recorded {
+                        st.ttft_recorded = true;
                         ttft.add(done - req.arrival_s);
                     }
                 }
@@ -482,6 +651,8 @@ impl CbEngine {
                     // end; past the horizon they are censored, not
                     // completed, so no Complete event is emitted for them
                     for req in &batch {
+                        let waited = stats.get(&req.id).map(|s| s.queue_wait_s).unwrap_or(0.0);
+                        queue_wait.add(waited);
                         if done <= horizon_s {
                             backend.complete(req.id)?;
                             events.push(CbEvent::Complete { id: req.id });
@@ -493,7 +664,8 @@ impl CbEngine {
                     }
                 } else {
                     for req in &batch {
-                        let kv_bytes = self.kv_slot_bytes(req.tokens, 0);
+                        let first = req.tokens.min(chunk_budget);
+                        let kv_bytes = self.kv_slot_bytes(first, 0);
                         budget.acquire(kv_bytes);
                         slots.push(Slot {
                             id: req.id,
@@ -503,6 +675,12 @@ impl CbEngine {
                             generated: 0,
                             kv_bytes,
                             admitted_at: now,
+                            state: if first < req.tokens {
+                                SlotState::Prefilling { next_token: first, total: req.tokens }
+                            } else {
+                                SlotState::Decoding
+                            },
+                            last_token_at: now,
                         });
                     }
                 }
@@ -513,49 +691,137 @@ impl CbEngine {
                 continue;
             }
 
-            // ---- one batched decode step for all active slots ----
+            // ---- one fused chunk+decode iteration for all active slots ----
             if !slots.is_empty() {
-                // KV pressure: the step grows every slot by one token's
-                // full-precision rows; evict newest slots back to the
-                // queue until the growth fits the cap. A lone slot always
-                // fits (over-cap requests were rejected at admission).
-                if budget.cap_bytes > 0 {
-                    let step_bytes = self.kv_step_bytes();
-                    while slots.len() > 1
-                        && budget.used_bytes + slots.len() * step_bytes > budget.cap_bytes
-                    {
+                // KV pressure: this iteration grows every decoding slot by
+                // one token's full-precision rows and every planned
+                // prefilling slot by its chunk's mixed rows; evict newest
+                // slots back to the queue until the growth fits the cap. A
+                // lone slot always fits (over-cap requests were rejected at
+                // admission).
+                let plan = if budget.cap_bytes > 0 {
+                    loop {
+                        let (plan, growth) = self.plan_chunks(&slots, chunk_budget);
+                        if slots.len() <= 1 || budget.used_bytes + growth <= budget.cap_bytes {
+                            break plan;
+                        }
                         let i = newest_slot_index(&slots);
                         let s = slots.remove(i);
                         budget.release(s.kv_bytes);
                         backend.evict(s.id)?;
                         events.push(CbEvent::Evict { id: s.id });
                         kv_evictions += 1;
+                        if let Some(st) = stats.get_mut(&s.id) {
+                            st.queued_since = now; // queueing again
+                        }
                         batcher.push(Request {
                             id: s.id,
                             arrival_s: s.arrival_s,
                             tokens: s.tokens,
                         });
                     }
-                }
-                let b = slots.len();
-                let ctx = slots.iter().map(|s| s.tokens + s.generated).max().unwrap_or(0);
-                let step = self.strategy.decode_step_schedule(&self.shape, ctx);
-                let bd = evaluate_on_trace_batched(&step, &self.params, &self.trace, now, b);
+                } else {
+                    self.plan_chunks(&slots, chunk_budget).0
+                };
+                let decode_ids: Vec<u64> = slots
+                    .iter()
+                    .filter(|s| s.state == SlotState::Decoding)
+                    .map(|s| s.id)
+                    .collect();
+                let b = decode_ids.len();
+                let ctx = slots
+                    .iter()
+                    .filter(|s| s.state == SlotState::Decoding)
+                    .map(|s| s.tokens + s.generated)
+                    .max()
+                    .unwrap_or(0);
+                let bd = if plan.is_empty() {
+                    // no prefilling slots: the classic batched decode step
+                    // (bit-identical pricing to the unchunked scheduler)
+                    let step = self.strategy.decode_step_schedule(&self.shape, ctx);
+                    evaluate_on_trace_batched(&step, &self.params, &self.trace, now, b)
+                } else {
+                    // fuse the chunk batch with the piggybacked decode
+                    let chunk_tokens: usize = plan.iter().map(|&(_, take)| take).sum();
+                    let ctx_prefill = plan
+                        .iter()
+                        .map(|&(i, take)| match slots[i].state {
+                            SlotState::Prefilling { next_token, .. } => next_token + take,
+                            SlotState::Decoding => 0,
+                        })
+                        .max()
+                        .unwrap_or(chunk_tokens);
+                    let fused = self.strategy.fused_iteration_schedule(
+                        &self.shape,
+                        chunk_tokens,
+                        ctx_prefill,
+                        b,
+                        ctx,
+                    );
+                    evaluate_on_trace(&fused, &self.params, &self.trace, now)
+                };
                 model_time.accumulate(&bd);
                 let done = now + bd.total();
                 if done > horizon_s {
-                    // the step straddles the horizon: nobody finishes in time
+                    // the iteration straddles the horizon: nothing advances
                     now = done;
                     continue;
                 }
-                let ids: Vec<u64> = slots.iter().map(|s| s.id).collect();
-                backend.step(&ids)?;
-                events.push(CbEvent::Decode { ids });
                 now = done;
+                // chunk effects: record and replay the planned chunks, grow
+                // the mixed cache per chunk, release finished prompts into
+                // decode (their first decode step — and TTFT — comes next
+                // iteration, never fused with their own last chunk)
+                for &(i, take) in &plan {
+                    let (next_token, total) = match slots[i].state {
+                        SlotState::Prefilling { next_token, total } => (next_token, total),
+                        SlotState::Decoding => unreachable!("planned a decoding slot"),
+                    };
+                    events.push(CbEvent::PrefillChunk {
+                        id: slots[i].id,
+                        lo: next_token,
+                        hi: next_token + take,
+                    });
+                    prefill_chunks += 1;
+                    backend.prefill_chunk(slots[i].id, next_token, next_token + take)?;
+                    let grown = self.kv_slot_bytes(next_token + take, 0);
+                    budget.acquire(grown - slots[i].kv_bytes);
+                    slots[i].kv_bytes = grown;
+                    slots[i].state = if next_token + take == total {
+                        SlotState::Decoding
+                    } else {
+                        SlotState::Prefilling { next_token: next_token + take, total }
+                    };
+                }
+                if b > 0 {
+                    backend.step(&decode_ids)?;
+                    events.push(CbEvent::Decode { ids: decode_ids.clone() });
+                }
                 let mut i = 0;
                 while i < slots.len() {
+                    // only the slots that decoded this iteration advance
+                    // (a slot whose last chunk just landed waits one turn)
+                    if !decode_ids.contains(&slots[i].id) {
+                        i += 1;
+                        continue;
+                    }
                     slots[i].remaining -= 1;
                     slots[i].generated += 1;
+                    if slots[i].generated == 1 {
+                        // first token this request ever produced: TTFT for
+                        // chunked slots (classic slots recorded theirs at
+                        // prefill end; the recorded-once guard keeps
+                        // re-admitted evictees at their original value)
+                        if let Some(st) = stats.get_mut(&slots[i].id) {
+                            if !st.ttft_recorded {
+                                st.ttft_recorded = true;
+                                ttft.add(now - slots[i].arrival_s);
+                            }
+                        }
+                    } else {
+                        itl.add(now - slots[i].last_token_at);
+                    }
+                    slots[i].last_token_at = now;
                     let grown = self.kv_slot_bytes(slots[i].tokens, slots[i].generated);
                     budget.acquire(grown - slots[i].kv_bytes);
                     slots[i].kv_bytes = grown;
@@ -565,6 +831,8 @@ impl CbEngine {
                         backend.complete(s.id)?;
                         events.push(CbEvent::Complete { id: s.id });
                         tally.record(s.arrival_s, now);
+                        queue_wait
+                            .add(stats.get(&s.id).map(|st| st.queue_wait_s).unwrap_or(0.0));
                     } else {
                         i += 1;
                     }
@@ -590,10 +858,18 @@ impl CbEngine {
         for s in &slots {
             censored += 1;
             censored_wait.add((horizon_s - s.arrival_s).max(0.0));
+            if let Some(st) = stats.get(&s.id) {
+                queue_wait.add(st.queue_wait_s);
+            }
         }
         for req in batcher.drain_all() {
             censored += 1;
             censored_wait.add((horizon_s - req.arrival_s).max(0.0));
+            // an evicted request waiting for re-admission was still
+            // queueing when the horizon fell: close its open episode
+            if let Some(st) = stats.get(&req.id) {
+                queue_wait.add(st.queue_wait_s + (horizon_s - st.queued_since).max(0.0));
+            }
         }
         for req in pending {
             if req.arrival_s < horizon_s {
@@ -618,10 +894,12 @@ impl CbEngine {
             latency: tally.latency,
             ttft,
             queue_wait,
+            itl,
             censored_wait,
             queue_depth,
             windows: tally.windows.bars_until(horizon_s),
             events,
+            prefill_chunks,
             model_time,
             kv_peak_bytes: budget.peak_bytes,
             kv_cap_bytes: budget.cap_bytes,
@@ -635,6 +913,7 @@ impl CbEngine {
 mod tests {
     use super::*;
     use crate::model::shape::VqSetting;
+    use crate::parallel::cost::DeviceModel;
     use crate::parallel::strategies::StrategyKind;
     use crate::server::engine::ServeEngine;
 
@@ -866,6 +1145,180 @@ mod tests {
         assert_eq!(r.completed, 2);
         assert!(r.kv_peak_bytes <= cap, "{} > {cap}", r.kv_peak_bytes);
         assert_eq!(r.kv_evictions, 0);
+    }
+
+    #[test]
+    fn chunk_budget_at_or_above_prompts_reproduces_unchunked_stream() {
+        // the regression anchor: a budget >= the longest prompt — and the
+        // disabled default — must yield the unchunked scheduler's event
+        // stream bit for bit (every prompt fits its admission chunk, so
+        // the classic monopolizing path runs unchanged)
+        let base = CbConfig { max_batch: 4, decode_tokens: 16, ..CbConfig::default() };
+        let mut unchunked = astra_engine(base.clone());
+        let ra = unchunked.serve_poisson(&mut Rng::new(11), 12.0, 40.0);
+        for chunk in [1024usize, 1500, usize::MAX / 2] {
+            let mut chunked =
+                astra_engine(CbConfig { prefill_chunk_tokens: chunk, ..base.clone() });
+            let rb = chunked.serve_poisson(&mut Rng::new(11), 12.0, 40.0);
+            assert_eq!(ra.events, rb.events, "chunk={chunk}");
+            assert_eq!(ra.completed, rb.completed, "chunk={chunk}");
+            assert_eq!(rb.prefill_chunks, 0, "chunk={chunk}");
+            assert_eq!(ra.ttft.len(), rb.ttft.len(), "chunk={chunk}");
+            assert_eq!(ra.queue_wait.len(), rb.queue_wait.len(), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunk_events_tile_prompts_and_interleave_with_decode() {
+        let cfg = CbConfig {
+            max_slots: 4,
+            max_batch: 2,
+            decode_tokens: 8,
+            prefill_chunk_tokens: 192,
+            ..CbConfig::default()
+        };
+        let mut cb = astra_engine(cfg);
+        let r = cb.serve_stream(saturating(12), 1e4);
+        assert_eq!(r.completed, 12);
+        assert!(r.prefill_chunks > 0, "{r:?}");
+        // per request: admission chunk [0, 192) then fused chunks tiling
+        // the rest of the 1024-token prompt contiguously, in order
+        let mut progress: std::collections::BTreeMap<u64, usize> = Default::default();
+        let mut saw_decode = false;
+        let mut chunk_after_decode = false;
+        for e in &r.events {
+            match e {
+                CbEvent::PrefillChunk { id, lo, hi } => {
+                    let p = progress.entry(*id).or_insert(0);
+                    assert_eq!(*lo, *p, "request {id}: chunk out of order");
+                    assert!(hi > lo, "request {id}: empty chunk");
+                    assert!(hi - lo <= 192, "request {id}: chunk over budget");
+                    *p = *hi;
+                    if saw_decode {
+                        chunk_after_decode = true;
+                    }
+                }
+                CbEvent::Decode { .. } => saw_decode = true,
+                _ => {}
+            }
+        }
+        assert_eq!(progress.len(), 12);
+        for (id, p) in &progress {
+            assert_eq!(*p, 1024, "request {id}: prompt not fully chunked");
+        }
+        assert!(chunk_after_decode, "chunks never interleaved with decode");
+        // every request still decodes its full budget after its last chunk
+        let steps: usize = r
+            .events
+            .iter()
+            .map(|e| match e {
+                CbEvent::Decode { ids } => ids.len(),
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(steps, 12 * 8);
+    }
+
+    #[test]
+    fn evicted_requests_report_ttft_and_queue_wait_once() {
+        // regression (eviction-thrash trace): re-admission used to push a
+        // second, larger TTFT sample measured to the re-prefill, and to
+        // re-add a queue wait spanning in-service time. Now TTFT is
+        // recorded once — original arrival to the first token ever emitted
+        // — and queue wait sums only the actual queueing episodes.
+        let base =
+            CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 512, ..CbConfig::default() };
+        let probe = CbEngine::new(
+            TransformerShape::paper_encoder(128),
+            Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+            SimParams::paper_encoder(),
+            BandwidthTrace::constant(100.0, 1e9),
+            base.clone(),
+        );
+        let cap = 2 * probe.kv_projection(128);
+        let mut engine = CbEngine::new(
+            probe.shape,
+            probe.strategy,
+            probe.params.clone(),
+            probe.trace.clone(),
+            CbConfig { kv_cap_bytes: cap, ..base },
+        );
+        let arrivals: Vec<Request> =
+            (0..4u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 128 }).collect();
+        let r = engine.serve_stream(arrivals, 1e4);
+        assert!(r.kv_evictions > 0, "thrash trace must evict: {r:?}");
+        assert_eq!(r.completed, 4);
+        // one TTFT and one queue-wait sample per request, no duplicates
+        assert_eq!(r.ttft.len(), 4, "{r:?}");
+        assert_eq!(r.queue_wait.len(), 4);
+        // first-token latency can never exceed the full latency
+        assert!(r.ttft.max() <= r.latency.max() + 1e-12);
+        // all four arrived at 0 and were admitted immediately, so queue
+        // wait is exactly the post-eviction requeue time: zero for the
+        // never-evicted oldest, positive but below wall latency for the
+        // evicted (in-service time no longer counts as waiting)
+        assert!(r.queue_wait.min() < 1e-12, "someone was never evicted: {r:?}");
+        assert!(r.queue_wait.max() > 0.0);
+        assert!(r.queue_wait.max() < r.latency.max());
+    }
+
+    #[test]
+    fn chunked_prefill_cuts_decode_stalls_at_throughput_parity() {
+        // the tentpole acceptance bar, long prompts (T=1024) + short
+        // decode: mixing bounded prefill chunks into decode iterations must
+        // cut the p95 inter-token stall of in-flight decode slots while
+        // completed throughput stays within 5%. Launch/sync overheads use a
+        // graph-captured-runtime calibration (per-chunk overheads at the
+        // paper 1660Ti's 0.2 ms/launch would swamp the fusion win).
+        let device =
+            DeviceModel { per_layer_overhead_s: 1e-5, ..DeviceModel::paper_1660ti() };
+        let params = SimParams { device, stage_latency_s: 5e-5 };
+        let base = CbConfig {
+            max_slots: 8,
+            // small admission batches so completions stagger and there are
+            // always in-flight decoders for a prefill to stall
+            max_batch: 2,
+            decode_tokens: 32,
+            ..CbConfig::default()
+        };
+        let mk = |cfg: CbConfig| {
+            CbEngine::new(
+                TransformerShape::paper_encoder(1024),
+                Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+                params.clone(),
+                BandwidthTrace::constant(100.0, 1e9),
+                cfg,
+            )
+        };
+        let chunked_cfg = CbConfig { prefill_chunk_tokens: 512, ..base.clone() };
+
+        // ITL contrast under heavy open-loop load (~0.8x capacity: slots
+        // stay busy and admissions constantly interleave with decode)
+        let mut r_mono = mk(base.clone()).serve_poisson(&mut Rng::new(17), 16.0, 30.0);
+        let mut r_chunk = mk(chunked_cfg.clone()).serve_poisson(&mut Rng::new(17), 16.0, 30.0);
+        assert!(r_chunk.prefill_chunks > 0);
+        assert_eq!(r_mono.prefill_chunks, 0);
+        assert!(r_mono.itl.len() > 1000, "{}", r_mono.itl.len());
+        assert!(r_chunk.itl.len() > 1000, "{}", r_chunk.itl.len());
+        let (p_mono, p_chunk) = (r_mono.itl.p95(), r_chunk.itl.p95());
+        assert!(p_chunk < 0.9 * p_mono, "chunked p95 ITL {p_chunk} vs monopolizing {p_mono}");
+        assert!(
+            r_chunk.completed as f64 >= 0.95 * r_mono.completed as f64,
+            "chunked {} vs monopolizing {}",
+            r_chunk.completed,
+            r_mono.completed
+        );
+
+        // completed-throughput parity at full saturation
+        let s_mono = mk(base).serve_stream(saturating(4000), 30.0);
+        let s_chunk = mk(chunked_cfg).serve_stream(saturating(4000), 30.0);
+        assert!(s_mono.completed > 50, "{}", s_mono.completed);
+        assert!(
+            s_chunk.completed as f64 >= 0.95 * s_mono.completed as f64,
+            "chunked {} vs monopolizing {}",
+            s_chunk.completed,
+            s_mono.completed
+        );
     }
 
     #[test]

@@ -197,6 +197,36 @@ mod tests {
     }
 
     #[test]
+    fn fused_chunk_iteration_prices_like_its_schedule() {
+        // the chunked-prefill scheduler evaluates fused iterations through
+        // `evaluate_on_trace` (the chunk token count is explicit in the
+        // schedule, so no batch scaling applies); on a constant trace that
+        // must agree with the static evaluation, and a chunk-free fused
+        // iteration must price exactly like the batched decode step the
+        // unchunked scheduler uses — the bit-identity anchor
+        let p = SimParams::paper_encoder();
+        let s = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4);
+        let shape = shape();
+        let tr = BandwidthTrace::constant(100.0, 1e9);
+        let fused = s.fused_iteration_schedule(&shape, 128, 512, 8, 1024);
+        let a = evaluate(&fused, &p, 100.0);
+        let b = evaluate_on_trace(&fused, &p, &tr, 3.0);
+        assert!((a.total() - b.total()).abs() < 1e-9);
+        assert!((a.comm_s - b.comm_s).abs() < 1e-9);
+        let nochunk = s.fused_iteration_schedule(&shape, 0, 0, 8, 1024);
+        let step = s.decode_step_schedule(&shape, 1024);
+        let x = evaluate_on_trace(&nochunk, &p, &tr, 3.0);
+        let y = evaluate_on_trace_batched(&step, &p, &tr, 3.0, 8);
+        assert_eq!(x.compute_s, y.compute_s);
+        assert_eq!(x.comm_s, y.comm_s);
+        // piggybacked decode makes the fused iteration dearer than the
+        // bare chunk, but far cheaper than chunk + separate decode step
+        let bare = evaluate(&s.prefill_chunk_schedule(&shape, 128, 512), &p, 100.0);
+        assert!(a.total() > bare.total());
+        assert!(a.total() < bare.total() + y.total());
+    }
+
+    #[test]
     fn accumulate_sums_componentwise() {
         let mut acc = Breakdown::default();
         acc.accumulate(&Breakdown { compute_s: 1.0, comm_s: 2.0 });

@@ -9,9 +9,25 @@
 //! ```
 //! Each case is warmed up, then timed for a target wall budget; reports
 //! mean / p50 / p95 per iteration and iterations/sec.
+//!
+//! # Deterministic bench metrics + the CI regression gate
+//!
+//! Wall-clock numbers are useless as a CI gate (shared runners jitter by
+//! 2x), so the serving benches also expose a `--json` mode that emits
+//! *modeled* metrics — virtual-clock p50/p95/TTFT/throughput on
+//! fixed-seed traces, bit-reproducible on any machine — via
+//! [`MetricSet`]. `astra bench-gate` ([`gate_cli`]) compares such a file
+//! against a checked-in baseline and fails when any metric regresses by
+//! more than the tolerance (latencies up, throughputs down; count and
+//! checksum pins must match exactly). A baseline
+//! containing `"bootstrap": true` accepts the current numbers (first run
+//! pins them: download the workflow artifact and commit it).
 
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Context, Result};
+
+use super::json::{self, Json};
 use super::stats::Summary;
 
 pub struct Bench {
@@ -78,6 +94,138 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Named deterministic metrics collected by a bench's `--json` mode.
+#[derive(Debug, Default)]
+pub struct MetricSet {
+    group: String,
+    metrics: Vec<(String, f64)>,
+}
+
+impl MetricSet {
+    pub fn new(group: &str) -> MetricSet {
+        MetricSet { group: group.to_string(), metrics: Vec::new() }
+    }
+
+    /// Record `scenario/metric = value` (keys are emitted sorted, so the
+    /// JSON file diffs stably across runs).
+    pub fn push(&mut self, scenario: &str, metric: &str, value: f64) {
+        self.metrics.push((format!("{scenario}/{metric}"), value));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("group", json::s(&self.group)),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics.iter().map(|(k, v)| (k.clone(), json::num(*v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the metric file (the workflow artifact the gate consumes).
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing bench metrics to {path}"))?;
+        println!("wrote {} deterministic metrics to {path}", self.metrics.len());
+        Ok(())
+    }
+}
+
+/// Is a larger value better for this metric? Throughput-like metrics
+/// regress downward; everything else (latencies, TTFT, ITL) upward.
+fn higher_is_better(name: &str) -> bool {
+    ["throughput", "goodput"].iter().any(|k| name.contains(k))
+}
+
+/// Integer-valued determinism pins — completion/step/event counts and the
+/// generation checksum. These carry no cross-platform float noise, and any
+/// drift in either direction is exactly what they exist to catch, so the
+/// gate holds them to equality rather than the directional tolerance.
+fn exact_pin(name: &str) -> bool {
+    ["checksum", "completed", "chunks", "events", "steps"].iter().any(|k| name.contains(k))
+}
+
+/// Compare a current metric file against a baseline; returns the list of
+/// regressions beyond `tolerance` (fractional, e.g. 0.02 = 2%; exact-pin
+/// metrics must match exactly). Metrics missing from the baseline are
+/// reported as regressions too — a silently dropped scenario must not pass
+/// the gate. A baseline with `"bootstrap": true` matches nothing and
+/// returns no regressions.
+pub fn compare_metrics(baseline: &Json, current: &Json, tolerance: f64) -> Result<Vec<String>> {
+    if baseline.opt("bootstrap").is_some() {
+        println!(
+            "baseline is a bootstrap placeholder: accepting current metrics \
+             (pin them by committing the workflow artifact as the baseline)"
+        );
+        return Ok(Vec::new());
+    }
+    let base = baseline.get("metrics")?.as_obj()?;
+    let cur = current.get("metrics")?.as_obj()?;
+    let mut regressions = Vec::new();
+    for (name, bv) in base {
+        let b = bv.as_f64()?;
+        let Some(cv) = cur.get(name) else {
+            regressions.push(format!("{name}: missing from current run (baseline {b})"));
+            continue;
+        };
+        let c = cv.as_f64()?;
+        let worse = if exact_pin(name) {
+            c != b
+        } else if higher_is_better(name) {
+            c < b * (1.0 - tolerance) - 1e-12
+        } else {
+            c > b * (1.0 + tolerance) + 1e-12
+        };
+        if worse {
+            let pct = if b.abs() > 1e-12 { (c - b) / b * 100.0 } else { f64::INFINITY };
+            regressions.push(format!("{name}: {b} -> {c} ({pct:+.2}%)"));
+        }
+    }
+    Ok(regressions)
+}
+
+/// `astra bench-gate --baseline FILE --current FILE [--tolerance 0.02]` —
+/// the CI regression gate over deterministic bench metrics: exits non-zero
+/// listing every regressed metric.
+pub fn gate_cli(args: &super::cli::Args) -> Result<()> {
+    let baseline_path =
+        args.get("baseline").context("--baseline FILE is required")?.to_string();
+    let current_path = args.get("current").context("--current FILE is required")?.to_string();
+    let tolerance = args.f64_or("tolerance", 0.02)?;
+    let baseline = Json::parse(
+        &std::fs::read_to_string(&baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?,
+    )?;
+    let current = Json::parse(
+        &std::fs::read_to_string(&current_path)
+            .with_context(|| format!("reading current metrics {current_path}"))?,
+    )?;
+    let regressions = compare_metrics(&baseline, &current, tolerance)?;
+    let total = baseline.opt("metrics").map(|m| m.as_obj().map(|o| o.len()).unwrap_or(0));
+    println!(
+        "bench-gate: {} vs {} (tolerance {:.1}%): {} of {} metrics regressed",
+        current_path,
+        baseline_path,
+        tolerance * 100.0,
+        regressions.len(),
+        total.unwrap_or(0),
+    );
+    for r in &regressions {
+        println!("  REGRESSED {r}");
+    }
+    if !regressions.is_empty() {
+        bail!("{} bench metrics regressed beyond {:.1}%", regressions.len(), tolerance * 100.0);
+    }
+    println!("bench-gate: ok");
+    Ok(())
+}
+
 pub fn fmt_time(secs: f64) -> String {
     if secs.is_nan() {
         "n/a".into()
@@ -123,5 +271,93 @@ mod tests {
             acc
         });
         b.finish();
+    }
+
+    fn metric_json(pairs: &[(&str, f64)]) -> Json {
+        let mut m = MetricSet::new("test");
+        for (k, v) in pairs {
+            let (s, name) = k.split_once('/').unwrap();
+            m.push(s, name, *v);
+        }
+        Json::parse(&m.to_json().to_string()).unwrap()
+    }
+
+    #[test]
+    fn metric_set_roundtrips_through_json() {
+        let j = metric_json(&[("cb8/p95", 0.125), ("cb8/throughput", 31.5)]);
+        assert_eq!(j.get("group").unwrap().as_str().unwrap(), "test");
+        let m = j.get("metrics").unwrap().as_obj().unwrap();
+        assert_eq!(m["cb8/p95"].as_f64().unwrap(), 0.125);
+        assert_eq!(m["cb8/throughput"].as_f64().unwrap(), 31.5);
+    }
+
+    #[test]
+    fn gate_fails_on_injected_five_percent_latency_regression() {
+        // the acceptance check for the CI gate: a 5% modeled-latency bump
+        // must trip the default 2% tolerance; a 1% wobble must not
+        let base = metric_json(&[("serve/p95", 0.200), ("serve/throughput", 30.0)]);
+        let ok = metric_json(&[("serve/p95", 0.202), ("serve/throughput", 29.9)]);
+        assert!(compare_metrics(&base, &ok, 0.02).unwrap().is_empty());
+        let regressed = metric_json(&[("serve/p95", 0.210), ("serve/throughput", 30.0)]);
+        let r = compare_metrics(&base, &regressed, 0.02).unwrap();
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].contains("serve/p95"), "{r:?}");
+        // throughput regresses in the opposite direction
+        let slow = metric_json(&[("serve/p95", 0.200), ("serve/throughput", 28.0)]);
+        let r = compare_metrics(&base, &slow, 0.02).unwrap();
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].contains("throughput"), "{r:?}");
+        // improvements never trip the gate
+        let better = metric_json(&[("serve/p95", 0.150), ("serve/throughput", 40.0)]);
+        assert!(compare_metrics(&base, &better, 0.02).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gate_holds_determinism_pins_to_exact_equality() {
+        // checksums and counts are identity pins: sub-tolerance drift in
+        // EITHER direction must fail (a 2% window would wave through most
+        // numeric drift the generation checksum exists to catch)
+        let base = metric_json(&[
+            ("live/generation_checksum", 5_000_000.0),
+            ("live/completed", 30.0),
+            ("serve/p95", 0.2),
+        ]);
+        let same = metric_json(&[
+            ("live/generation_checksum", 5_000_000.0),
+            ("live/completed", 30.0),
+            ("serve/p95", 0.2),
+        ]);
+        assert!(compare_metrics(&base, &same, 0.02).unwrap().is_empty());
+        for drifted in [4_999_999.0, 5_000_001.0] {
+            let cur = metric_json(&[
+                ("live/generation_checksum", drifted),
+                ("live/completed", 30.0),
+                ("serve/p95", 0.2),
+            ]);
+            let r = compare_metrics(&base, &cur, 0.02).unwrap();
+            assert_eq!(r.len(), 1, "{r:?}");
+            assert!(r[0].contains("checksum"), "{r:?}");
+        }
+        // a completion-count change trips it too, even an "improvement"
+        let cur = metric_json(&[
+            ("live/generation_checksum", 5_000_000.0),
+            ("live/completed", 31.0),
+            ("serve/p95", 0.2),
+        ]);
+        let r = compare_metrics(&base, &cur, 0.02).unwrap();
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].contains("completed"), "{r:?}");
+    }
+
+    #[test]
+    fn gate_flags_missing_metrics_and_accepts_bootstrap() {
+        let base = metric_json(&[("serve/p95", 0.2), ("serve/ttft_p50", 0.05)]);
+        let cur = metric_json(&[("serve/p95", 0.2)]);
+        let r = compare_metrics(&base, &cur, 0.02).unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(r[0].contains("ttft_p50") && r[0].contains("missing"), "{r:?}");
+        // a bootstrap placeholder matches nothing and passes everything
+        let boot = Json::parse(r#"{"bootstrap": true}"#).unwrap();
+        assert!(compare_metrics(&boot, &cur, 0.02).unwrap().is_empty());
     }
 }

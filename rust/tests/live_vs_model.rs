@@ -115,6 +115,62 @@ fn live_and_model_agree_on_three_fixed_seed_traces() {
 }
 
 #[test]
+fn live_and_model_agree_with_chunked_prefill() {
+    // chunked prefill (PrefillChunk events, deferred live replay via
+    // DecodeSession::replay_range) must keep the differential exact on
+    // fixed-seed traces — including under KV pressure, where prefilling
+    // slots are evicted mid-replay and rebuilt from scratch
+    let cluster = tiny_cluster(2, 5);
+    let seq = cluster.artifact.meta.seq_len;
+    let base = CbConfig {
+        max_slots: 4,
+        max_batch: 4,
+        decode_tokens: 6,
+        prefill_chunk_tokens: 5,
+        ..CbConfig::default()
+    };
+    let capped = {
+        let probe = live_engine(&cluster, base.clone(), params(), trace());
+        CbConfig { kv_cap_bytes: 2 * probe.kv_projection(seq), ..base.clone() }
+    };
+    let traces: [(u64, f64, &CbConfig); 3] =
+        [(44, 6.0, &base), (55, 40.0, &base), (66, 25.0, &capped)];
+    for (seed, rate, cfg) in traces {
+        let arrivals = live_arrivals(&mut Rng::new(seed), rate, 4.0, seq);
+        assert!(arrivals.len() > 2, "seed {seed} produced {} arrivals", arrivals.len());
+        let (m, live) = run_pair(&cluster, cfg, &arrivals, 1e4);
+        let label = format!("chunked seed {seed} rate {rate}");
+        assert_agree(&m, &live, &label);
+        assert_eq!(m.prefill_chunks, live.report.prefill_chunks, "{label}");
+        assert!(m.prefill_chunks > 0, "{label}: no chunks on prompts > budget");
+        assert!(
+            m.events.iter().any(|e| matches!(e, CbEvent::PrefillChunk { .. })),
+            "{label}"
+        );
+        assert!(m.completed > 0, "{label}");
+        // real full-length generations for every completion
+        let full = live
+            .generations
+            .iter()
+            .filter(|(_, toks)| toks.len() == cfg.decode_tokens)
+            .count();
+        assert_eq!(full, m.completed, "{label}");
+    }
+
+    // chunking must not change what any request decodes — only when:
+    // the same trace unchunked yields identical (sorted) generations
+    let arrivals = live_arrivals(&mut Rng::new(44), 6.0, 4.0, seq);
+    let (_, live_chunked) = run_pair(&cluster, &base, &arrivals, 1e4);
+    let unchunked = CbConfig { prefill_chunk_tokens: 0, ..base };
+    let (_, live_plain) = run_pair(&cluster, &unchunked, &arrivals, 1e4);
+    let mut a = live_chunked.generations.clone();
+    let mut b = live_plain.generations.clone();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b, "chunked replay changed greedy generations");
+}
+
+#[test]
 fn kv_capped_run_admits_later_but_loses_no_one() {
     // the cap reshapes the schedule (different decision stream, deferred
     // admissions) without dropping feasible work — and the live path

@@ -2,12 +2,16 @@
 //! image has no proptest crate) over coordinator/VQ/comm invariants.
 //! Each property runs across many random cases with distinct seeds.
 
+use std::collections::BTreeMap;
+
 use astra::comm::collective::{allgather, allreduce};
 use astra::comm::message::Message;
 use astra::comm::trace::BandwidthTrace;
 use astra::coordinator::TokenPartition;
 use astra::model::shape::{ceil_log2, TransformerShape, VqSetting};
 use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::scheduler::{CbConfig, CbEngine, CbEvent};
+use astra::server::Request;
 use astra::sim::latency::{
     evaluate, evaluate_batched, evaluate_on_trace, evaluate_on_trace_batched, SimParams,
 };
@@ -190,6 +194,94 @@ fn prop_batch1_equals_unbatched_evaluation() {
         let db = evaluate_on_trace_batched(&step, &params, &trace, t0, 1);
         assert_eq!(da.compute_s, db.compute_s, "{label}");
         assert_eq!(da.comm_s, db.comm_s, "{label}");
+    }
+}
+
+#[test]
+fn prop_chunked_prefill_covers_prompts_and_anchors_to_unchunked() {
+    // over random traces and configs:
+    //  (1) per admission episode, a request's chunk events tile
+    //      [0, prompt_len) contiguously and in order, each within the
+    //      per-iteration budget, and nothing decodes or completes before
+    //      its prompt is fully prefilled;
+    //  (2) a chunk budget >= the longest prompt reproduces the unchunked
+    //      scheduler's event stream exactly.
+    let mut rng = Rng::new(1100);
+    for case in 0..25 {
+        let n = 2 + rng.below(4);
+        let t = n * (8 + rng.below(64));
+        let shape = TransformerShape::paper_encoder(t);
+        let strategy = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, n);
+        let chunk = 1 + rng.below(t);
+        let cfg = CbConfig {
+            max_slots: 2 + rng.below(6),
+            max_batch: 1 + rng.below(4),
+            max_wait_s: 0.0,
+            decode_tokens: 1 + rng.below(12),
+            prefill_chunk_tokens: chunk,
+            ..CbConfig::default()
+        };
+        let mut arrivals = Vec::new();
+        let mut at = 0.0;
+        let mut tokens: BTreeMap<u64, usize> = BTreeMap::new();
+        for id in 1..=(4 + rng.below(20)) as u64 {
+            at += rng.exp(5.0 + rng.f64() * 20.0);
+            let toks = 1 + rng.below(t);
+            tokens.insert(id, toks);
+            arrivals.push(Request { id, arrival_s: at, tokens: toks });
+        }
+        let mk = |cfg: CbConfig| {
+            CbEngine::new(
+                shape,
+                strategy,
+                SimParams::paper_encoder(),
+                BandwidthTrace::constant(100.0, 1e9),
+                cfg,
+            )
+        };
+        let r = mk(cfg.clone()).serve_stream(arrivals.clone(), 1e5);
+        let label = format!("case {case}: chunk={chunk} t={t}");
+        // walk the event stream tracking chunk progress per slot episode
+        let mut progress: BTreeMap<u64, usize> = BTreeMap::new();
+        let prefilled = |progress: &BTreeMap<u64, usize>, id: &u64| {
+            tokens[id] <= chunk || progress.get(id) == Some(&tokens[id])
+        };
+        for e in &r.events {
+            match e {
+                CbEvent::Admit { ids } => {
+                    for id in ids {
+                        progress.insert(*id, 0);
+                    }
+                }
+                CbEvent::PrefillChunk { id, lo, hi } => {
+                    assert!(tokens[id] > chunk, "{label}: short prompt emitted a chunk");
+                    assert_eq!(progress[id], *lo, "{label}: request {id} chunk out of order");
+                    assert!(hi > lo && *hi <= tokens[id], "{label}: bad range [{lo},{hi})");
+                    assert!(hi - lo <= chunk, "{label}: chunk over budget");
+                    progress.insert(*id, *hi);
+                }
+                CbEvent::Decode { ids } => {
+                    for id in ids {
+                        assert!(prefilled(&progress, id), "{label}: {id} decoded mid-prefill");
+                    }
+                }
+                CbEvent::Complete { id } => {
+                    assert!(prefilled(&progress, id), "{label}: {id} completed mid-prefill");
+                }
+                CbEvent::Evict { id } => {
+                    progress.remove(id); // recompute: next episode restarts
+                }
+                CbEvent::Reject { .. } => {}
+            }
+        }
+        // (2) the regression anchor on the same trace
+        let big = t + rng.below(100);
+        let anchored = mk(CbConfig { prefill_chunk_tokens: big, ..cfg.clone() })
+            .serve_stream(arrivals.clone(), 1e5);
+        let plain = mk(CbConfig { prefill_chunk_tokens: 0, ..cfg })
+            .serve_stream(arrivals, 1e5);
+        assert_eq!(anchored.events, plain.events, "{label}: anchor diverged at budget {big}");
+        assert_eq!(anchored.prefill_chunks, 0, "{label}");
     }
 }
 
