@@ -44,13 +44,40 @@ fn emit_json(out: &str) {
     let markov = BandwidthTrace::markovian(&mut markov_rng, 20.0, 100.0, 9, 1.0, 60.0);
     let base = CbConfig::default();
     let chunked = CbConfig { prefill_chunk_tokens: 256, ..CbConfig::default() };
+    // radix prefix reuse: 4 prompt streams over saturating identical-length
+    // requests, so most admissions attach to shared blocks
+    let prefixed = CbConfig {
+        prefix_cache: true,
+        prompt_groups: 4,
+        kv_block_tokens: 64,
+        seed: 11,
+        prompt_vocab: 512,
+        ..CbConfig::default()
+    };
+    // bandwidth-priced swap preemption: a cap around two full budgets with
+    // long decode growth forces evictions, and the fast host link makes
+    // the round trip beat recompute
+    let swap = {
+        let probe = engine(
+            const100.clone(),
+            CbConfig { decode_tokens: 512, ..CbConfig::default() },
+        );
+        CbConfig {
+            decode_tokens: 512,
+            kv_cap_bytes: 2 * probe.kv_projection(1024) + probe.kv_step_bytes(),
+            swap_bandwidth_mbps: 1e5,
+            ..CbConfig::default()
+        }
+    };
     let cases: Vec<(&str, BandwidthTrace, CbConfig, Load)> = vec![
         ("fifo1_const100_sat", const100.clone(), base.clone().batch1(), Load::Saturating(2000)),
         ("cb8_const100_sat", const100.clone(), base.clone(), Load::Saturating(2000)),
         ("cb8_markov_sat", markov, base.clone(), Load::Saturating(2000)),
         ("cb8_const100_poisson8", const100.clone(), base, Load::Poisson(8.0)),
         ("cb8_chunk256_sat", const100.clone(), chunked.clone(), Load::Saturating(2000)),
-        ("cb8_chunk256_poisson8", const100, chunked, Load::Poisson(8.0)),
+        ("cb8_chunk256_poisson8", const100.clone(), chunked, Load::Poisson(8.0)),
+        ("cb8_prefix_g4_sat", const100.clone(), prefixed, Load::Saturating(2000)),
+        ("cb8_swap_d512_sat", const100, swap, Load::Saturating(200)),
     ];
     for (name, trace, cfg, load) in cases {
         let mut e = engine(trace, cfg);
@@ -65,6 +92,8 @@ fn emit_json(out: &str) {
         m.push(name, "ttft_p50", r.ttft.p50());
         m.push(name, "itl_p95", r.itl.p95());
         m.push(name, "prefill_chunks", r.prefill_chunks as f64);
+        m.push(name, "prefix_hit_rate", r.prefix_hit_rate());
+        m.push(name, "swap_bytes", r.swap_bytes as f64);
     }
     m.write(out).expect("writing bench metrics");
 }

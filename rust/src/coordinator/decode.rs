@@ -36,6 +36,15 @@ pub struct DecodeSession<'a> {
     /// allocation, so the KV accounting the admission gate sees is the
     /// whole live footprint.
     pending_prompt: Vec<usize>,
+    /// positional-locality mode (prefix-cache serving): which prompt rows
+    /// are full precision depends only on a token's absolute position
+    /// inside the artifact's full window — NOT on this prompt's total
+    /// length — so K/V rows are a pure function of the token-id prefix and
+    /// block-aligned prefixes can be copied between sessions bit for bit
+    /// ([`Self::export_rows`] / [`Self::import_rows`]). Accounting uses
+    /// [`crate::model::kv_cache_bytes_astra_positional`]. Off (the
+    /// default) preserves the classic prompt-scaled partition exactly.
+    positional: bool,
 }
 
 /// Scale the cluster's token partition down to a `t`-token prompt: each
@@ -74,7 +83,7 @@ impl<'a> DecodeSession<'a> {
     /// `new` with an explicit per-slot cache budget: the session allocates
     /// `s_max` KV rows and can generate `s_max - prompt.len()` tokens.
     /// Continuous-batching slots size this to prompt + decode budget so
-    /// KV-pressure admission (`server::scheduler::KvBudget`) sees the true
+    /// KV-pressure admission (`crate::kv::pool::KvPool`) sees the true
     /// per-slot footprint.
     pub fn with_budget(
         cluster: &'a Cluster,
@@ -98,6 +107,34 @@ impl<'a> DecodeSession<'a> {
     ) -> Result<DecodeSession<'a>> {
         let mut sess = Self::alloc(cluster, prompt, s_max)?;
         sess.pending_prompt = prompt.to_vec();
+        Ok(sess)
+    }
+
+    /// [`Self::deferred`] in positional-locality mode — the prefix-cache
+    /// serving path: rows may arrive as imported shared blocks
+    /// ([`Self::import_rows`]) followed by [`Self::replay_range`] chunks
+    /// of the uncovered suffix.
+    pub fn deferred_positional(
+        cluster: &'a Cluster,
+        prompt: &[usize],
+        s_max: usize,
+    ) -> Result<DecodeSession<'a>> {
+        let mut sess = Self::deferred(cluster, prompt, s_max)?;
+        sess.positional = true;
+        Ok(sess)
+    }
+
+    /// [`Self::with_budget`] in positional-locality mode (full replay at
+    /// construction) — the donor side of block sharing, and the reference
+    /// a prefix-attached session must match bit for bit.
+    pub fn with_budget_positional(
+        cluster: &'a Cluster,
+        prompt: &[usize],
+        s_max: usize,
+    ) -> Result<DecodeSession<'a>> {
+        let mut sess = Self::alloc(cluster, prompt, s_max)?;
+        sess.positional = true;
+        sess.fill_from_prompt(prompt)?;
         Ok(sess)
     }
 
@@ -136,7 +173,29 @@ impl<'a> DecodeSession<'a> {
             generated: Vec::new(),
             prompt_tail: *prompt.last().expect("prompt checked non-empty"),
             pending_prompt: Vec::new(),
+            positional: false,
         })
+    }
+
+    /// The contiguous range of absolute positions whose rows the tail
+    /// device holds in full precision. Classic mode scales the cluster's
+    /// token partition to this prompt's length; positional mode pins the
+    /// tail device's share of the artifact's FULL window (`seq_len / N`
+    /// plus the remainder), so the answer for any position is the same in
+    /// every session — the property that makes block rows shareable.
+    /// Positional locality assumes the default even partition; a
+    /// heterogeneous `--token-split` affects only which rows are exact,
+    /// never correctness, and the accounting stays self-consistent.
+    fn local_range(&self) -> (usize, usize) {
+        let n = self.cluster.partition.n_devices();
+        if self.positional {
+            let seq = self.cluster.artifact.meta.seq_len.max(1);
+            let local = seq / n + seq % n;
+            (seq - local, local)
+        } else {
+            let part = prompt_partition(&self.cluster.partition, self.prompt_len);
+            (part.start(n - 1), part.sizes[n - 1])
+        }
     }
 
     /// Replay the prefill from the tail device's perspective, writing KV
@@ -145,9 +204,7 @@ impl<'a> DecodeSession<'a> {
     fn fill_from_prompt(&mut self, prompt: &[usize]) -> Result<()> {
         let meta = &self.cluster.artifact.meta;
         let t = prompt.len();
-        let n = self.cluster.partition.n_devices();
-        let part = prompt_partition(&self.cluster.partition, t);
-        let tail = n - 1;
+        let (local_start, local_len) = self.local_range();
         let ids = Tensor::from_vec(&[t, 1], prompt.iter().map(|&v| v as f32).collect())?;
         let mut h = self.cluster.embed(&ids)?; // [T, D] global stream
         let bias = native::causal_bias(t);
@@ -156,10 +213,9 @@ impl<'a> DecodeSession<'a> {
             // the tail device sees: local rows exact, remote rows quantized
             let xhat = self.cluster.artifact.codebooks[li].roundtrip(&h)?;
             let mut mixed = xhat.clone();
-            let start = part.start(tail);
-            for i in 0..part.sizes[tail] {
-                let src = h.row(start + i).to_vec();
-                mixed.row_mut(start + i).copy_from_slice(&src);
+            for g in local_start..(local_start + local_len).min(t) {
+                let src = h.row(g).to_vec();
+                mixed.row_mut(g).copy_from_slice(&src);
             }
             self.write_kv_rows(li, &mixed, blk, meta.n_heads)?;
             // advance the *global* stream exactly (all devices in lockstep);
@@ -231,10 +287,7 @@ impl<'a> DecodeSession<'a> {
             bail!("bad chunk range [{lo}, {hi}) for a {}-token prompt", self.prompt_len);
         }
         let hh = meta.n_heads;
-        let n = self.cluster.partition.n_devices();
-        let part = prompt_partition(&self.cluster.partition, self.prompt_len);
-        let tail = n - 1;
-        let (local_start, local_len) = (part.start(tail), part.sizes[tail]);
+        let (local_start, local_len) = self.local_range();
         // recompute the exact stream over the visible prefix [0, hi)
         let ids = Tensor::from_vec(
             &[hi, 1],
@@ -345,13 +398,26 @@ impl<'a> DecodeSession<'a> {
         }
     }
 
+    /// The Appendix-G accounting function active for this session:
+    /// classic prompt-scaled locality, or the positional variant when
+    /// block sharing is on (prefix differences of which are block bytes).
+    fn accounting_fn(
+        &self,
+    ) -> fn(&crate::model::TransformerShape, usize, usize, usize, usize, usize, usize) -> usize {
+        if self.positional {
+            crate::model::kv_cache_bytes_astra_positional
+        } else {
+            crate::model::kv_cache_bytes_astra_live
+        }
+    }
+
     /// Appendix G memory accounting for the cache's *current* occupancy:
     /// mixed-precision prompt rows (only those already replayed, so a
     /// deferred session's footprint grows chunk by chunk) plus
     /// full-precision generated rows.
     pub fn cache_bytes_mixed(&self) -> usize {
         let meta = &self.cluster.artifact.meta;
-        crate::model::kv_cache_bytes_astra_live(
+        self.accounting_fn()(
             &self.accounting_shape(),
             self.len.min(self.prompt_len),
             self.len.saturating_sub(self.prompt_len),
@@ -367,7 +433,7 @@ impl<'a> DecodeSession<'a> {
     /// per-slot ceiling).
     pub fn cache_bytes_budget(&self) -> usize {
         let meta = &self.cluster.artifact.meta;
-        crate::model::kv_cache_bytes_astra_live(
+        self.accounting_fn()(
             &self.accounting_shape(),
             self.prompt_len,
             self.s_max - self.prompt_len,
@@ -376,6 +442,99 @@ impl<'a> DecodeSession<'a> {
             meta.groups,
             meta.codebook_size,
         )
+    }
+
+    /// Bytes of the first `tokens` prompt rows under this session's
+    /// accounting — what a shared, block-covered prefix is worth. The live
+    /// backend subtracts this from [`Self::cache_bytes_mixed`] when the
+    /// rows are physically backed by the shared block store, so shared
+    /// bytes are counted once across sessions.
+    pub fn prefix_bytes(&self, tokens: usize) -> usize {
+        let meta = &self.cluster.artifact.meta;
+        self.accounting_fn()(
+            &self.accounting_shape(),
+            tokens.min(self.prompt_len),
+            0,
+            4,
+            self.cluster.partition.n_devices(),
+            meta.groups,
+            meta.codebook_size,
+        )
+    }
+
+    /// Copy the K/V rows of cache positions `[lo, hi)` out of every layer
+    /// — the contribution of one finished KV block to the shared store.
+    /// Returns one `(k_rows, v_rows)` pair per layer, each flattened
+    /// `[heads x (hi - lo) x dh]`.
+    pub fn export_rows(&self, lo: usize, hi: usize) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        if lo >= hi || hi > self.len {
+            bail!("export_rows: bad range [{lo}, {hi}) over {} replayed rows", self.len);
+        }
+        let meta = &self.cluster.artifact.meta;
+        let hh = meta.n_heads;
+        let dh = meta.d_model / hh;
+        let mut out = Vec::with_capacity(meta.n_layers);
+        for li in 0..meta.n_layers {
+            let mut k = Vec::with_capacity(hh * (hi - lo) * dh);
+            let mut v = Vec::with_capacity(hh * (hi - lo) * dh);
+            for head in 0..hh {
+                for i in lo..hi {
+                    for j in 0..dh {
+                        k.push(self.k_cache[li].data[(head * self.s_max + i) * dh + j]);
+                        v.push(self.v_cache[li].data[(head * self.s_max + i) * dh + j]);
+                    }
+                }
+            }
+            out.push((k, v));
+        }
+        Ok(out)
+    }
+
+    /// Write previously exported rows into positions `[lo, hi)` — the
+    /// attach side of prefix sharing. Blocks must arrive contiguously
+    /// (`lo` equals the rows already present), before any replay of the
+    /// suffix. Because positional locality makes the rows a pure function
+    /// of the token-id prefix, an import followed by suffix-only
+    /// [`Self::replay_range`] is bit-identical to a full replay.
+    pub fn import_rows(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        rows: &[(Vec<f32>, Vec<f32>)],
+    ) -> Result<()> {
+        let meta = &self.cluster.artifact.meta;
+        if lo != self.len {
+            bail!("import_rows: blocks must be contiguous (have {} rows, got lo={lo})", self.len);
+        }
+        if lo >= hi || hi > self.prompt_len {
+            bail!("import_rows: bad range [{lo}, {hi}) for a {}-token prompt", self.prompt_len);
+        }
+        if rows.len() != meta.n_layers {
+            bail!("import_rows: {} layers of rows for a {}-layer model", rows.len(), meta.n_layers);
+        }
+        let hh = meta.n_heads;
+        let dh = meta.d_model / hh;
+        let want = hh * (hi - lo) * dh;
+        for (li, (k, v)) in rows.iter().enumerate() {
+            if k.len() != want || v.len() != want {
+                bail!("import_rows: layer {li} holds {} floats, expected {want}", k.len());
+            }
+            let mut idx = 0usize;
+            for head in 0..hh {
+                for i in lo..hi {
+                    for j in 0..dh {
+                        self.k_cache[li].data[(head * self.s_max + i) * dh + j] = k[idx];
+                        self.v_cache[li].data[(head * self.s_max + i) * dh + j] = v[idx];
+                        idx += 1;
+                    }
+                }
+            }
+        }
+        self.len = hi;
+        if self.len == self.prompt_len {
+            self.pending_prompt = Vec::new(); // fully covered: nothing left to replay
+        }
+        Ok(())
     }
 }
 
@@ -585,6 +744,90 @@ mod tests {
         // replay complete: buffers freed, further chunks rejected
         assert!(sess.replay_range(6, 7).is_err());
         assert!(sess.step().unwrap() < vocab);
+    }
+
+    #[test]
+    fn positional_block_import_plus_suffix_replay_is_bit_identical_to_full_replay() {
+        // the prefix-cache correctness anchor: export block-aligned rows
+        // from a donor, import them into a fresh session, replay only the
+        // uncovered suffix — the raw cache floats must equal a full
+        // positional replay, and greedy decode must be identical. This is
+        // what makes attaching to shared blocks semantically free.
+        let cluster = tiny_cluster();
+        let vocab = cluster.artifact.meta.vocab_size;
+        let prompt: Vec<usize> = (0..13).map(|i| (i * 7 + 2) % vocab).collect();
+        let block = 4usize; // 3 full blocks cover [0, 12); token 12 is the suffix
+        let mut donor = DecodeSession::with_budget_positional(&cluster, &prompt, 13 + 4).unwrap();
+        let mut attached = DecodeSession::deferred_positional(&cluster, &prompt, 13 + 4).unwrap();
+        assert!(attached.step().is_err(), "no decode before the prompt is complete");
+        for k in 0..3 {
+            let rows = donor.export_rows(k * block, (k + 1) * block).unwrap();
+            attached.import_rows(k * block, (k + 1) * block, &rows).unwrap();
+        }
+        assert_eq!(attached.len, 12);
+        // covered prefix is cheaper than the full prompt under accounting
+        assert!(attached.cache_bytes_mixed() < donor.cache_bytes_mixed());
+        assert_eq!(attached.prefix_bytes(12), attached.cache_bytes_mixed());
+        attached.replay_range(12, 13).unwrap();
+        assert_eq!(attached.cache_bytes_mixed(), donor.cache_bytes_mixed());
+        for li in 0..cluster.artifact.meta.n_layers {
+            assert_eq!(attached.k_cache[li].data, donor.k_cache[li].data, "K layer {li}");
+            assert_eq!(attached.v_cache[li].data, donor.v_cache[li].data, "V layer {li}");
+        }
+        let a: Vec<usize> = (0..4).map(|_| donor.step().unwrap()).collect();
+        let b: Vec<usize> = (0..4).map(|_| attached.step().unwrap()).collect();
+        assert_eq!(a, b, "prefix attach changed greedy decode");
+    }
+
+    #[test]
+    fn positional_rows_are_prefix_pure_across_prompt_lengths() {
+        // the reason positional mode exists: the same leading token ids
+        // must produce the same K/V rows whatever the prompt's total
+        // length. Classic (prompt-scaled) locality does NOT have this
+        // property, which is why blocks are only shared in positional mode.
+        let cluster = tiny_cluster();
+        let vocab = cluster.artifact.meta.vocab_size;
+        let long: Vec<usize> = (0..12).map(|i| (i * 5 + 3) % vocab).collect();
+        let short = long[..8].to_vec();
+        let a = DecodeSession::with_budget_positional(&cluster, &long, 16).unwrap();
+        let b = DecodeSession::with_budget_positional(&cluster, &short, 16).unwrap();
+        let ra = a.export_rows(0, 8).unwrap();
+        let rb = b.export_rows(0, 8).unwrap();
+        assert_eq!(ra, rb, "shared 8-token prefix must yield identical rows");
+        // accounting agrees with the positional Appendix-G function
+        let meta = &cluster.artifact.meta;
+        let want = crate::model::kv_cache_bytes_astra_positional(
+            &a.accounting_shape(),
+            12,
+            0,
+            4,
+            cluster.partition.n_devices(),
+            meta.groups,
+            meta.codebook_size,
+        );
+        assert_eq!(a.cache_bytes_mixed(), want);
+    }
+
+    #[test]
+    fn import_rows_enforces_contiguity_shape_and_bounds() {
+        let cluster = tiny_cluster();
+        let prompt = [1usize, 2, 3, 4, 5, 6, 7, 8];
+        let donor = DecodeSession::with_budget_positional(&cluster, &prompt, 12).unwrap();
+        let rows = donor.export_rows(0, 4).unwrap();
+        let mut sess = DecodeSession::deferred_positional(&cluster, &prompt, 12).unwrap();
+        assert!(sess.import_rows(4, 8, &donor.export_rows(4, 8).unwrap()).is_err(), "gap");
+        assert!(sess.import_rows(0, 0, &rows).is_err(), "empty");
+        assert!(sess.import_rows(0, 9, &rows).is_err(), "past the prompt");
+        assert!(sess.import_rows(0, 3, &rows).is_err(), "row-count mismatch");
+        sess.import_rows(0, 4, &rows).unwrap();
+        assert_eq!(sess.len, 4);
+        // replay continues from the imported edge only
+        assert!(sess.replay_range(0, 4).is_err());
+        sess.replay_range(4, 8).unwrap();
+        assert!(sess.step().is_ok());
+        // export refuses rows that were never written
+        assert!(donor.export_rows(7, 8).is_ok());
+        assert!(donor.export_rows(8, 9).is_err(), "past replayed rows");
     }
 
     #[test]

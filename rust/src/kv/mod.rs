@@ -1,0 +1,38 @@
+//! Block-based KV memory management for the serving scheduler.
+//!
+//! Three pieces, composed by [`crate::server::scheduler::CbEngine`]:
+//!
+//! * [`pool`] — a refcounted pool of fixed-token-count KV *blocks* plus
+//!   per-slot private bytes. Block bytes are defined as prefix differences
+//!   of the Appendix-G accounting function, so summing a slot's blocks and
+//!   private remainder telescopes to exactly the bytes the old `KvBudget`
+//!   charged — with sharing disabled the pool IS the old byte arithmetic,
+//!   which is how every flag-off path reproduces the pre-pool event
+//!   streams bit for bit.
+//! * [`prefix`] — a radix tree over token-id prompt prefixes at block
+//!   granularity. A request whose prompt shares a block-aligned prefix
+//!   with a resident or recently-freed cache attaches to those blocks
+//!   (refcount++) and only replays the uncovered suffix; completed slots
+//!   leave their blocks behind at refcount 0 ("recently freed"), evicted
+//!   lazily under capacity pressure, LRU by subtree.
+//! * [`swap`] — bandwidth-priced swap preemption: when KV pressure evicts
+//!   a decoding slot, the policy compares the modeled recompute time
+//!   (re-prefill the prompt + regenerate the tokens produced so far)
+//!   against moving the cache over a host link at a configured bandwidth
+//!   ([`crate::comm::link`]-style pricing: latency + bytes/bandwidth), and
+//!   swaps instead of dropping when the transfer is cheaper.
+//!
+//! Shared-prefix *content* correctness lives in
+//! [`crate::coordinator::decode::DecodeSession`]: in positional-locality
+//! mode the mixed-precision row selection depends only on a token's
+//! absolute position (not the prompt's total length), so a block's K/V
+//! rows are a pure function of the token-id prefix and can be copied
+//! between sessions bit for bit.
+
+pub mod pool;
+pub mod prefix;
+pub mod swap;
+
+pub use pool::KvPool;
+pub use prefix::RadixTree;
+pub use swap::SwapPolicy;

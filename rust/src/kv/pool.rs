@@ -1,0 +1,300 @@
+//! Refcounted block pool over the serving scheduler's KV cap.
+//!
+//! The pool tracks three byte classes against one device cap:
+//!
+//! * **private** — per-slot bytes not covered by any shared block (the
+//!   partial tail of a prompt, rows replayed but not yet block-aligned,
+//!   and full-precision generated rows);
+//! * **block** — ready shared blocks referenced by at least one slot
+//!   (counted once however many slots attach);
+//! * **cached** — ready blocks whose refcount dropped to zero. They stay
+//!   resident (a later request sharing the prefix re-attaches for free)
+//!   but are reclaimable on demand, LRU-first.
+//!
+//! A block's bytes are supplied by the caller as the Appendix-G prefix
+//! difference `bytes([0, hi)) - bytes([0, lo))`, so `private + block +
+//! cached` telescopes to exactly the bytes the flat per-slot accounting
+//! would charge — block bookkeeping changes *what is shared*, never *how
+//! much a token costs*. With sharing disabled no blocks exist and the pool
+//! degenerates to the old `KvBudget` counters (same `fits`, same peak).
+//!
+//! Blocks are created **unready** (their rows still replaying in the
+//! creator slot; bytes counted in the creator's private share) and marked
+//! ready once the rows exist — only ready blocks are attachable, and an
+//! unready block whose creator is evicted is dropped, never cached.
+
+use std::collections::BTreeMap;
+
+/// One shared KV block: `block_tokens` prompt rows at absolute positions
+/// `[lo, hi)`, bytes priced by the Appendix-G prefix difference.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub lo: usize,
+    pub hi: usize,
+    pub bytes: usize,
+    pub refs: usize,
+    /// rows replayed and registered with the backend; only ready blocks
+    /// are attachable or cacheable
+    pub ready: bool,
+    /// logical tick of the last attach/detach — LRU reclaim order
+    pub last_use: u64,
+}
+
+/// The pool: byte classes + the block slab. See the module docs.
+#[derive(Debug, Default)]
+pub struct KvPool {
+    /// device cap in bytes (0 = unlimited, every `fits` succeeds)
+    pub cap_bytes: usize,
+    private_bytes: usize,
+    block_bytes: usize,
+    cached_bytes: usize,
+    /// high-water mark of resident bytes (private + block + cached)
+    pub peak_bytes: usize,
+    blocks: BTreeMap<u64, Block>,
+    next_id: u64,
+    tick: u64,
+}
+
+impl KvPool {
+    pub fn new(cap_bytes: usize) -> KvPool {
+        KvPool { cap_bytes, ..KvPool::default() }
+    }
+
+    /// Bytes currently resident on the device (all three classes).
+    pub fn resident_bytes(&self) -> usize {
+        self.private_bytes + self.block_bytes + self.cached_bytes
+    }
+
+    /// Bytes that cannot be reclaimed without evicting a slot (private +
+    /// referenced blocks) — the basis for admission and growth decisions,
+    /// since cached blocks can always be dropped to make room.
+    pub fn pinned_bytes(&self) -> usize {
+        self.private_bytes + self.block_bytes
+    }
+
+    pub fn private_bytes(&self) -> usize {
+        self.private_bytes
+    }
+
+    pub fn cached_bytes(&self) -> usize {
+        self.cached_bytes
+    }
+
+    /// Would `bytes` more fit under the cap, assuming every cached block
+    /// can be reclaimed first? With no blocks this is exactly the old
+    /// `KvBudget::fits`.
+    pub fn fits(&self, bytes: usize) -> bool {
+        self.cap_bytes == 0 || self.pinned_bytes() + bytes <= self.cap_bytes
+    }
+
+    /// Does `bytes` more fit *right now*, without reclaiming anything?
+    pub fn fits_resident(&self, bytes: usize) -> bool {
+        self.cap_bytes == 0 || self.resident_bytes() + bytes <= self.cap_bytes
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_bytes = self.peak_bytes.max(self.resident_bytes());
+    }
+
+    pub fn acquire_private(&mut self, bytes: usize) {
+        self.private_bytes += bytes;
+        self.note_peak();
+    }
+
+    pub fn release_private(&mut self, bytes: usize) {
+        self.private_bytes = self.private_bytes.saturating_sub(bytes);
+    }
+
+    /// Create an unready block (rows still replaying in the creator slot;
+    /// its bytes remain in the creator's private share until
+    /// [`Self::mark_ready`]). The creator holds the initial reference.
+    pub fn create_block(&mut self, lo: usize, hi: usize, bytes: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.tick += 1;
+        self.blocks.insert(
+            id,
+            Block { lo, hi, bytes, refs: 1, ready: false, last_use: self.tick },
+        );
+        id
+    }
+
+    pub fn block(&self, id: u64) -> Option<&Block> {
+        self.blocks.get(&id)
+    }
+
+    /// Is this block attachable (rows registered with the backend)?
+    pub fn block_ready(&self, id: u64) -> bool {
+        self.blocks.get(&id).map(|b| b.ready).unwrap_or(false)
+    }
+
+    /// The creator's rows for this block now exist: move its bytes from
+    /// the creator's private share into the shared block class. The caller
+    /// must shrink the creator slot's private tally by the same amount.
+    pub fn mark_ready(&mut self, id: u64) -> usize {
+        let b = self.blocks.get_mut(&id).expect("mark_ready: unknown block");
+        assert!(!b.ready, "block {id} marked ready twice");
+        b.ready = true;
+        let bytes = b.bytes;
+        self.private_bytes = self.private_bytes.saturating_sub(bytes);
+        self.block_bytes += bytes;
+        self.note_peak();
+        bytes
+    }
+
+    /// Attach one more slot to a ready block.
+    pub fn ref_block(&mut self, id: u64) {
+        self.tick += 1;
+        let tick = self.tick;
+        let b = self.blocks.get_mut(&id).expect("ref_block: unknown block");
+        assert!(b.ready, "attaching to unready block {id}");
+        if b.refs == 0 {
+            // resurrect from the cached class: bytes stay resident
+            self.cached_bytes = self.cached_bytes.saturating_sub(b.bytes);
+            self.block_bytes += b.bytes;
+        }
+        b.refs += 1;
+        b.last_use = tick;
+    }
+
+    /// Detach a slot. A ready block at refcount 0 stays resident as
+    /// *cached* (the "recently-freed" reuse window) until reclaimed.
+    pub fn unref_block(&mut self, id: u64) {
+        self.tick += 1;
+        let tick = self.tick;
+        let b = self.blocks.get_mut(&id).expect("unref_block: unknown block");
+        assert!(b.refs > 0, "unref of unreferenced block {id}");
+        b.refs -= 1;
+        b.last_use = tick;
+        if b.refs == 0 {
+            self.block_bytes = self.block_bytes.saturating_sub(b.bytes);
+            self.cached_bytes += b.bytes;
+        }
+    }
+
+    /// Drop an unready block whose creator was evicted mid-prefill (its
+    /// bytes were never moved out of the creator's private share, which
+    /// the eviction releases separately).
+    pub fn drop_unready(&mut self, id: u64) {
+        let b = self.blocks.remove(&id).expect("drop_unready: unknown block");
+        assert!(!b.ready && b.refs <= 1, "drop_unready on a shared/ready block {id}");
+    }
+
+    /// Reclaim a cached (refcount-0, ready) block chosen by the caller —
+    /// typically from [`Self::lru_cached`] — removing its bytes from the
+    /// device.
+    pub fn drop_cached(&mut self, id: u64) -> usize {
+        let b = self.blocks.remove(&id).expect("drop_cached: unknown block");
+        assert!(b.ready && b.refs == 0, "drop_cached on a referenced block {id}");
+        self.cached_bytes = self.cached_bytes.saturating_sub(b.bytes);
+        b.bytes
+    }
+
+    /// The least-recently-used cached block (refcount 0, ready) — the next
+    /// reclaim victim. Ties break on the smaller id, so reclaim order is
+    /// deterministic.
+    pub fn lru_cached(&self) -> Option<u64> {
+        self.blocks
+            .iter()
+            .filter(|(_, b)| b.ready && b.refs == 0)
+            .min_by_key(|(id, b)| (b.last_use, **id))
+            .map(|(id, _)| *id)
+    }
+
+    /// Number of live block records (ready or not) — leak checks.
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// True when no slot holds any reference and no private bytes remain
+    /// (cached blocks may still be resident).
+    pub fn quiescent(&self) -> bool {
+        self.private_bytes == 0 && self.blocks.values().all(|b| b.refs == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn private_only_pool_matches_old_kvbudget_arithmetic() {
+        // with no blocks the pool is the old KvBudget: fits/peak identical
+        let mut p = KvPool::new(1000);
+        assert!(p.fits(1000));
+        p.acquire_private(600);
+        assert!(p.fits(400));
+        assert!(!p.fits(401));
+        p.acquire_private(300);
+        assert_eq!(p.resident_bytes(), 900);
+        assert_eq!(p.peak_bytes, 900);
+        p.release_private(600);
+        assert_eq!(p.resident_bytes(), 300);
+        assert_eq!(p.peak_bytes, 900);
+        // cap 0 disables the gate
+        let q = KvPool::new(0);
+        assert!(q.fits(usize::MAX / 2));
+    }
+
+    #[test]
+    fn block_lifecycle_moves_bytes_between_classes() {
+        let mut p = KvPool::new(0);
+        // creator replays 100 bytes of rows, 60 of which form one block
+        p.acquire_private(100);
+        let b = p.create_block(0, 4, 60);
+        assert!(!p.block_ready(b));
+        assert_eq!(p.resident_bytes(), 100);
+        p.mark_ready(b);
+        assert_eq!(p.private_bytes(), 40);
+        assert_eq!(p.pinned_bytes(), 100);
+        assert_eq!(p.resident_bytes(), 100); // telescoping: nothing moved
+        // a second slot attaches: shared bytes counted once
+        p.ref_block(b);
+        assert_eq!(p.resident_bytes(), 100);
+        // both detach: block becomes cached, still resident
+        p.unref_block(b);
+        p.unref_block(b);
+        assert_eq!(p.cached_bytes(), 60);
+        assert_eq!(p.pinned_bytes(), 40);
+        assert!(p.quiescent() || p.private_bytes() == 40);
+        // re-attach resurrects it
+        p.ref_block(b);
+        assert_eq!(p.cached_bytes(), 0);
+        p.unref_block(b);
+        // reclaim drops the bytes
+        assert_eq!(p.lru_cached(), Some(b));
+        assert_eq!(p.drop_cached(b), 60);
+        assert_eq!(p.resident_bytes(), 40);
+        assert_eq!(p.block_count(), 0);
+    }
+
+    #[test]
+    fn lru_prefers_oldest_cached_block() {
+        let mut p = KvPool::new(0);
+        let a = p.create_block(0, 4, 10);
+        let b = p.create_block(4, 8, 10);
+        p.mark_ready(a);
+        p.mark_ready(b);
+        p.unref_block(a);
+        p.unref_block(b);
+        // a was released first -> older last_use -> first victim
+        assert_eq!(p.lru_cached(), Some(a));
+        // touching a (re-attach + detach) makes b the victim
+        p.ref_block(a);
+        p.unref_block(a);
+        assert_eq!(p.lru_cached(), Some(b));
+    }
+
+    #[test]
+    fn unready_blocks_are_dropped_not_cached() {
+        let mut p = KvPool::new(0);
+        p.acquire_private(50);
+        let b = p.create_block(0, 4, 30);
+        // creator evicted mid-prefill: rows never registered
+        p.drop_unready(b);
+        p.release_private(50);
+        assert_eq!(p.resident_bytes(), 0);
+        assert_eq!(p.block_count(), 0);
+        assert!(p.lru_cached().is_none());
+    }
+}

@@ -1,0 +1,248 @@
+//! Radix tree over token-id prompt prefixes at KV-block granularity.
+//!
+//! Each edge is one *full block* of `block_tokens` token ids; a node
+//! carries the pool block holding that range's KV rows. A prompt's
+//! shareable prefix is the deepest chain of **ready** blocks matching its
+//! leading token ids — partial tail blocks are never shared, so attachment
+//! is always block-aligned and the uncovered suffix replays through the
+//! ordinary chunked-prefill path.
+//!
+//! Reference counting lives in [`super::pool::KvPool`]; the tree only maps
+//! token content to block ids. The invariant that makes subtree reclaim
+//! safe: every slot that attaches references *all* blocks on its covered
+//! path, so a refcount-0 block can never have a referenced descendant —
+//! reclaiming a cached block may therefore drop its whole subtree.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+struct Node {
+    parent: usize,
+    /// the edge key from the parent (this node's block of token ids)
+    key: Vec<usize>,
+    block: u64,
+    children: BTreeMap<Vec<usize>, usize>,
+}
+
+/// The tree. Node 0 is the synthetic root (no block).
+#[derive(Debug)]
+pub struct RadixTree {
+    pub block_tokens: usize,
+    nodes: Vec<Option<Node>>,
+    by_block: BTreeMap<u64, usize>,
+    free: Vec<usize>,
+}
+
+impl RadixTree {
+    pub fn new(block_tokens: usize) -> RadixTree {
+        let root = Node {
+            parent: usize::MAX,
+            key: Vec::new(),
+            block: u64::MAX,
+            children: BTreeMap::new(),
+        };
+        RadixTree {
+            block_tokens: block_tokens.max(1),
+            nodes: vec![Some(root)],
+            by_block: BTreeMap::new(),
+            free: Vec::new(),
+        }
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("dangling node index")
+    }
+
+    /// Longest chain of ready blocks matching `prompt`'s leading full
+    /// blocks. Returns the block ids in root-to-leaf order plus whether
+    /// the walk ended at a *missing* child (true: the caller may extend
+    /// the path with newly created blocks) or at an existing-but-unready
+    /// child (false: another slot is still replaying those rows — neither
+    /// attach nor create past it).
+    pub fn lookup(&self, prompt: &[usize], is_ready: &dyn Fn(u64) -> bool) -> (Vec<u64>, bool) {
+        let b = self.block_tokens;
+        let mut out = Vec::new();
+        let mut ni = 0usize;
+        for k in 0..prompt.len() / b {
+            let key = &prompt[k * b..(k + 1) * b];
+            match self.node(ni).children.get(key) {
+                Some(&ci) => {
+                    let block = self.node(ci).block;
+                    if is_ready(block) {
+                        out.push(block);
+                        ni = ci;
+                    } else {
+                        return (out, false);
+                    }
+                }
+                None => return (out, true),
+            }
+        }
+        (out, true)
+    }
+
+    /// Extend the path for `prompt` past its first `from_blocks` blocks
+    /// (which must already exist — the chain [`Self::lookup`] just
+    /// returned), creating one block per remaining full block via
+    /// `create(lo, hi)`. Stops early if it meets an existing child (a
+    /// concurrent creator owns that range). Returns the created ids in
+    /// order.
+    pub fn extend(
+        &mut self,
+        prompt: &[usize],
+        from_blocks: usize,
+        create: &mut dyn FnMut(usize, usize) -> u64,
+    ) -> Vec<u64> {
+        let b = self.block_tokens;
+        let mut ni = 0usize;
+        for k in 0..from_blocks {
+            let key = prompt[k * b..(k + 1) * b].to_vec();
+            ni = *self
+                .node(ni)
+                .children
+                .get(&key)
+                .expect("extend: covered path vanished between lookup and extend");
+        }
+        let mut created = Vec::new();
+        for k in from_blocks..prompt.len() / b {
+            let key = prompt[k * b..(k + 1) * b].to_vec();
+            if self.node(ni).children.contains_key(&key) {
+                break; // someone else is already replaying this range
+            }
+            let block = create(k * b, (k + 1) * b);
+            let child = Node { parent: ni, key: key.clone(), block, children: BTreeMap::new() };
+            let ci = match self.free.pop() {
+                Some(slot) => {
+                    self.nodes[slot] = Some(child);
+                    slot
+                }
+                None => {
+                    self.nodes.push(Some(child));
+                    self.nodes.len() - 1
+                }
+            };
+            self.nodes[ni].as_mut().unwrap().children.insert(key, ci);
+            self.by_block.insert(block, ci);
+            created.push(block);
+            ni = ci;
+        }
+        created
+    }
+
+    /// Remove the node carrying `block` and its whole subtree, returning
+    /// every removed block id (root-first). Safe to call only when no
+    /// removed block is referenced — guaranteed by the attach-whole-path
+    /// invariant whenever the root of the removal is refcount-0.
+    pub fn remove_subtree(&mut self, block: u64) -> Vec<u64> {
+        let Some(&start) = self.by_block.get(&block) else {
+            return Vec::new();
+        };
+        // detach from the parent
+        let (parent, key) = {
+            let n = self.node(start);
+            (n.parent, n.key.clone())
+        };
+        if parent != usize::MAX {
+            self.nodes[parent].as_mut().unwrap().children.remove(&key);
+        }
+        // DFS-collect the subtree
+        let mut out = Vec::new();
+        let mut stack = vec![start];
+        while let Some(i) = stack.pop() {
+            let n = self.nodes[i].take().expect("subtree node already freed");
+            stack.extend(n.children.values().copied());
+            self.by_block.remove(&n.block);
+            out.push(n.block);
+            self.free.push(i);
+        }
+        out
+    }
+
+    /// Number of blocks currently indexed (leak checks).
+    pub fn block_count(&self) -> usize {
+        self.by_block.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn always(_: u64) -> bool {
+        true
+    }
+
+    #[test]
+    fn lookup_matches_block_aligned_prefixes_only() {
+        let mut t = RadixTree::new(4);
+        let prompt: Vec<usize> = (0..10).collect(); // 2 full blocks + tail 2
+        let mut next = 0u64;
+        let created = t.extend(&prompt, 0, &mut |_, _| {
+            next += 1;
+            next
+        });
+        assert_eq!(created, vec![1, 2]); // the 2-token tail makes no block
+        assert_eq!(t.block_count(), 2);
+        // identical prompt: full coverage
+        let (hit, ext) = t.lookup(&prompt, &always);
+        assert_eq!(hit, vec![1, 2]);
+        assert!(ext);
+        // shares only the first block
+        let other: Vec<usize> = (0..4).chain(100..106).collect();
+        let (hit, ext) = t.lookup(&other, &always);
+        assert_eq!(hit, vec![1]);
+        assert!(ext, "missing child leaves the path extendable");
+        // shorter than a block: nothing to share
+        let (hit, _) = t.lookup(&prompt[..3], &always);
+        assert!(hit.is_empty());
+    }
+
+    #[test]
+    fn unready_blocks_stop_both_attach_and_extend() {
+        let mut t = RadixTree::new(2);
+        let prompt = vec![7usize, 8, 9, 10];
+        let mut next = 10u64;
+        t.extend(&prompt, 0, &mut |_, _| {
+            next += 1;
+            next
+        });
+        // first block ready, second still replaying
+        let ready = |b: u64| b == 11;
+        let (hit, ext) = t.lookup(&prompt, &ready);
+        assert_eq!(hit, vec![11]);
+        assert!(!ext, "existing unready child must not be extendable");
+        // extend from the covered depth stops at the existing child
+        let created = t.extend(&prompt, 1, &mut |_, _| unreachable!("must not create"));
+        assert!(created.is_empty());
+    }
+
+    #[test]
+    fn remove_subtree_cascades_and_frees_slots() {
+        let mut t = RadixTree::new(2);
+        let a = vec![1usize, 2, 3, 4, 5, 6];
+        let b = vec![1usize, 2, 3, 4, 9, 9];
+        let mut next = 0u64;
+        let mut mk = |_: usize, _: usize| {
+            next += 1;
+            next
+        };
+        t.extend(&a, 0, &mut mk); // blocks 1,2,3
+        let (hit, _) = t.lookup(&b, &always);
+        t.extend(&b, hit.len(), &mut mk); // block 4 under block 2
+        assert_eq!(t.block_count(), 4);
+        // removing block 2 takes its two children (3 and 4) with it
+        let mut removed = t.remove_subtree(2);
+        removed.sort();
+        assert_eq!(removed, vec![2, 3, 4]);
+        assert_eq!(t.block_count(), 1);
+        // block 1 still matches; the removed range is re-creatable
+        let (hit, ext) = t.lookup(&a, &always);
+        assert_eq!(hit, vec![1]);
+        assert!(ext);
+        let created = t.extend(&a, 1, &mut mk);
+        assert_eq!(created.len(), 2);
+        assert_eq!(t.block_count(), 3);
+        // removing an unknown block is a no-op
+        assert!(t.remove_subtree(999).is_empty());
+    }
+}

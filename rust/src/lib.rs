@@ -32,7 +32,7 @@
 //!   decode token per slot, launches/sync/floor once per iteration), with
 //!   `chunk_tokens >= max prompt` reproducing the unchunked event stream
 //!   bit for bit. Admission is gated on Appendix-G mixed-KV memory
-//!   ([`server::scheduler::KvBudget`]): slots grow chunk by chunk during
+//!   ([`kv::pool::KvPool`]): slots grow chunk by chunk during
 //!   prefill and two full-precision rows per generated token, and under
 //!   pressure the newest slots are evicted back to the queue for
 //!   recompute. The same scheduler loop drives two backends through
@@ -48,6 +48,22 @@
 //!   original arrival, eviction-safe), inter-token latency, queue depth,
 //!   censored requests, goodput under an SLO, and KV
 //!   peak/eviction/violation counters.
+//! * [`kv`] is the block-based KV memory subsystem under the scheduler:
+//!   [`kv::pool::KvPool`] accounts refcounted fixed-token blocks whose
+//!   bytes are Appendix-G prefix differences (telescoping to exactly the
+//!   flat per-slot bytes, so every sharing-off path reproduces the
+//!   pre-pool event streams bit for bit); [`kv::prefix::RadixTree`] maps
+//!   block-aligned token-id prefixes to resident or recently-freed blocks
+//!   so a request sharing a prompt prefix attaches (`CbEvent::PrefixHit`)
+//!   and replays only the uncovered suffix (suffix-only replay is
+//!   bit-identical to full replay — positional locality in
+//!   [`coordinator::decode::DecodeSession`] makes K/V rows a pure
+//!   function of the token-id prefix); and [`kv::swap::SwapPolicy`]
+//!   prices evictions over a host link (latency + bytes/bandwidth, the
+//!   same arithmetic as [`comm::link`]) and swaps a victim's cache out
+//!   (`CbEvent::SwapOut`/`SwapIn`, decode progress preserved) whenever
+//!   the round trip beats the modeled recompute (re-prefill + regenerate)
+//!   — recompute-style preemption remains the fallback and the default.
 //! * [`parallel`] implements the baselines — Tensor Parallelism
 //!   (Megatron-LM), Sequence Parallelism (Voltage), Block Parallelism
 //!   (DeTransformer, BP+AG / BP+SP) — as per-block communication/compute
@@ -63,6 +79,7 @@
 pub mod comm;
 pub mod config;
 pub mod coordinator;
+pub mod kv;
 pub mod model;
 pub mod parallel;
 pub mod runtime;

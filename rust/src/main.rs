@@ -15,8 +15,15 @@ use anyhow::Result;
 use astra::util::cli::Args;
 
 fn main() -> Result<()> {
-    let args =
-        Args::from_env(&["help", "verbose", "native", "no-pjrt", "live", "assert-invariants"])?;
+    let args = Args::from_env(&[
+        "help",
+        "verbose",
+        "native",
+        "no-pjrt",
+        "live",
+        "assert-invariants",
+        "prefix-cache",
+    ])?;
     if args.flag("help") || args.positional.is_empty() {
         print_help();
         return Ok(());
@@ -56,6 +63,21 @@ SUBCOMMANDS
              --chunk-tokens C (Sarathi-style chunked prefill: mix at most
              C prompt tokens per iteration into the decode steps instead
              of monopolizing the cluster; 0 = off)
+             --prefix-cache: radix-tree prefix reuse over block-based KV —
+             a request sharing a block-aligned prompt prefix with a
+             resident or recently-freed cache attaches to those blocks
+             and replays only the suffix (PrefixHit events, hit-rate
+             report)  --kv-block-tokens B (tokens per shared block)
+             --prompt-groups G (map request ids onto G prompt streams so
+             prompts actually share prefixes; 0 = all-unique)
+             --swap-bandwidth-mbps M: swap-style preemption — a
+             KV-pressure victim's cache moves to host memory over an
+             M-Mbps link instead of recomputing, whenever the priced
+             round trip beats the modeled recompute (SwapOut/SwapIn
+             events; needs --kv-cap)
+             --decode-jitter J: seeded per-request decode budgets in
+             decode-tokens +/- J, so same-length waves stop completing
+             in lockstep
              --live: drive real DecodeSessions (variable-length prompts,
              mixed-precision KV caches, greedy generations) through the
              same slot scheduler; uses --artifacts DIR when a decoder

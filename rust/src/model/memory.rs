@@ -46,10 +46,47 @@ pub fn kv_token_bytes_full(shape: &TransformerShape, elem_bytes: usize) -> usize
     2 * shape.n_layers * shape.d_model * elem_bytes
 }
 
+/// Positional-locality variant of the Appendix-G mixed cache, used by the
+/// block-based KV pool (`crate::kv`) when prefix sharing is enabled.
+///
+/// The classic accounting ([`kv_cache_bytes_astra_live`]) decides which
+/// tokens are full precision by scaling the token partition to the
+/// prompt's *total length* — two prompts of different lengths that share
+/// leading token ids therefore hold *different* bytes (and different
+/// rows) for the same positions, which makes their caches unshareable.
+/// Here locality is a pure function of a token's absolute position: the
+/// tail device owns the last `seq_len / N + seq_len % N` positions of the
+/// artifact's full window, and a prompt of `prompt_len` tokens holds in
+/// full precision exactly the positions it occupies inside that window.
+/// Block bytes become prefix differences of this function, identical for
+/// every prompt sharing the prefix. At `prompt_len == seq_len` it equals
+/// [`kv_cache_bytes_astra`] exactly.
+pub fn kv_cache_bytes_astra_positional(
+    shape: &TransformerShape,
+    prompt_len: usize,
+    generated: usize,
+    elem_bytes: usize,
+    n_devices: usize,
+    groups: usize,
+    k: usize,
+) -> usize {
+    let n = n_devices.max(1);
+    let seq = shape.seq_len.max(1);
+    let local_window = seq / n + seq % n;
+    let local_start = seq - local_window;
+    let local_tokens = prompt_len.saturating_sub(local_start);
+    let remote_tokens = prompt_len - local_tokens;
+    let local = local_tokens * shape.n_layers * shape.d_model * elem_bytes;
+    let nonlocal_bits = remote_tokens * shape.n_layers * groups * ceil_log2(k);
+    2 * (local + nonlocal_bits.div_ceil(8))
+        + generated * kv_token_bytes_full(shape, elem_bytes)
+}
+
 /// Memory held by a live decode slot: the Appendix-G mixed cache over the
 /// `prompt_len` prefill tokens plus `generated` decode tokens appended in
 /// full precision on the tail device. This is the quantity the serving
-/// scheduler's `KvBudget` admission gate tracks per slot.
+/// scheduler's KV admission gate (`crate::kv::pool::KvPool`) tracks per
+/// slot when prefix sharing is off.
 pub fn kv_cache_bytes_astra_live(
     shape: &TransformerShape,
     prompt_len: usize,
@@ -143,6 +180,51 @@ mod tests {
             kv_cache_bytes_astra_live(&shape, 7, 5, 4, 2, 4, 16),
             base + 5 * per_tok
         );
+    }
+
+    #[test]
+    fn positional_accounting_matches_classic_at_full_length_and_telescopes() {
+        let shape = TransformerShape {
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 16,
+            elem_bytes: 4,
+        };
+        for n in [1usize, 2, 3, 4] {
+            // at the full window the two accountings agree exactly
+            assert_eq!(
+                kv_cache_bytes_astra_positional(&shape, 16, 0, 4, n, 4, 16),
+                kv_cache_bytes_astra(&shape, 16, 4, n, 4, 16),
+                "n={n}"
+            );
+            // prefix-difference block bytes telescope to the total, so the
+            // pool's block + private sum equals the flat accounting
+            let total = kv_cache_bytes_astra_positional(&shape, 13, 0, 4, n, 4, 16);
+            let mut sum = 0usize;
+            for (lo, hi) in [(0usize, 4usize), (4, 8), (8, 12), (12, 13)] {
+                sum += kv_cache_bytes_astra_positional(&shape, hi, 0, 4, n, 4, 16)
+                    - kv_cache_bytes_astra_positional(&shape, lo, 0, 4, n, 4, 16);
+            }
+            assert_eq!(sum, total, "n={n}");
+            // monotone in prompt length; generated rows append full rows
+            let mut prev = 0;
+            for t in 0..=16 {
+                let b = kv_cache_bytes_astra_positional(&shape, t, 0, 4, n, 4, 16);
+                assert!(b >= prev, "n={n} t={t}");
+                prev = b;
+            }
+            assert_eq!(
+                kv_cache_bytes_astra_positional(&shape, 7, 3, 4, n, 4, 16),
+                kv_cache_bytes_astra_positional(&shape, 7, 0, 4, n, 4, 16)
+                    + 3 * kv_token_bytes_full(&shape, 4)
+            );
+        }
+        // a short prompt outside the tail window holds only quantized rows
+        let short = kv_cache_bytes_astra_positional(&shape, 4, 0, 4, 4, 4, 16);
+        let bits = 4 * shape.n_layers * 4 * 4; // 4 tok * 2 L * G=4 * log2(16)
+        assert_eq!(short, 2 * (bits / 8));
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod native;
 pub mod shape;
 
 pub use memory::{
-    codebook_bytes, kv_cache_bytes_astra, kv_cache_bytes_astra_live, kv_cache_bytes_full,
-    kv_token_bytes_full,
+    codebook_bytes, kv_cache_bytes_astra, kv_cache_bytes_astra_live,
+    kv_cache_bytes_astra_positional, kv_cache_bytes_full, kv_token_bytes_full,
 };
 pub use shape::TransformerShape;

@@ -81,8 +81,9 @@ impl Batcher {
     /// are popped front-to-back (FIFO — no reordering around a blocked
     /// head) and the batch stops at the first request `fits` rejects. The
     /// continuous-batching scheduler uses this for the KV-pressure gate,
-    /// where `fits` checks the request's projected cache bytes against the
-    /// remaining [`super::scheduler::KvBudget`].
+    /// where `fits` checks the request's projected cache bytes (net of any
+    /// shared-prefix blocks) against the remaining room in the
+    /// [`crate::kv::pool::KvPool`].
     pub fn next_batch_filtered(
         &mut self,
         now: f64,

@@ -189,6 +189,14 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         window_s: 10.0,
         kv_cap_bytes: args.usize_or("kv-cap", 0)?,
         prefill_chunk_tokens: args.usize_or("chunk-tokens", 0)?,
+        prefix_cache: args.flag("prefix-cache"),
+        kv_block_tokens: args.usize_or("kv-block-tokens", 16)?,
+        swap_bandwidth_mbps: args.f64_or("swap-bandwidth-mbps", 0.0)?,
+        decode_jitter: args.usize_or("decode-jitter", 0)?,
+        prompt_groups: args.usize_or("prompt-groups", 0)?,
+        seed,
+        prompt_vocab: 256,
+        ..CbConfig::default()
     };
 
     println!(
@@ -232,6 +240,25 @@ pub fn serve_cb(args: &Args) -> Result<()> {
                 r.itl.p50() * 1e3,
                 r.itl.p95() * 1e3,
                 r.prefill_chunks
+            );
+        }
+        if cfg.prefix_cache {
+            println!(
+                "prefix    {} hits, {:.1}% of admitted prompt tokens shared, \
+                 ~{:.1} GFLOP recompute saved",
+                r.prefix_hits,
+                r.prefix_hit_rate() * 100.0,
+                r.recompute_flops_saved / 1e9
+            );
+        }
+        if cfg.swap_bandwidth_mbps > 0.0 && cfg.kv_cap_bytes > 0 {
+            println!(
+                "swap      {} out / {} in, {:.1} KiB over the host link \
+                 ({} recompute evictions)",
+                r.swap_outs,
+                r.swap_ins,
+                r.swap_bytes as f64 / 1024.0,
+                r.kv_evictions
             );
         }
         println!("goodput   {:.2}/s within SLO", r.goodput);
@@ -289,6 +316,13 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         window_s: 10.0,
         kv_cap_bytes: args.usize_or("kv-cap", 0)?,
         prefill_chunk_tokens: args.usize_or("chunk-tokens", 0)?,
+        prefix_cache: args.flag("prefix-cache"),
+        kv_block_tokens: args.usize_or("kv-block-tokens", 4)?,
+        swap_bandwidth_mbps: args.f64_or("swap-bandwidth-mbps", 0.0)?,
+        decode_jitter: args.usize_or("decode-jitter", 0)?,
+        prompt_groups: args.usize_or("prompt-groups", 0)?,
+        // seed + prompt_vocab are pinned to the cluster by `live_engine`
+        ..CbConfig::default()
     };
     let mut rng = Rng::new(cluster.config.seed);
     let arrivals =
@@ -296,6 +330,10 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
     let n_arrivals = arrivals.len();
     let params = SimParams::paper_encoder();
     let trace = BandwidthTrace::constant(cluster.config.bandwidth_mbps, 1e9);
+    // the decode budget each request is owed (jitter-aware, seed-pinned) —
+    // the "full generations" invariant checks against this per id
+    let probe =
+        crate::server::live::live_engine(&cluster, cfg.clone(), params.clone(), trace.clone());
     let wall0 = Instant::now();
     let live =
         crate::server::live::serve_live(&cluster, cfg.clone(), params, trace, arrivals, horizon)?;
@@ -338,6 +376,24 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
             r.kv_peak_bytes, r.kv_cap_bytes, r.kv_evictions, r.kv_violations
         );
     }
+    if cfg.prefix_cache {
+        println!(
+            "prefix cache: {} hits, {} prompt tokens shared = {:.1}% of admitted \
+             ({} block tokens, {} groups)",
+            r.prefix_hits,
+            r.prefix_hit_tokens,
+            r.prefix_hit_rate() * 100.0,
+            cfg.kv_block_tokens,
+            cfg.prompt_groups
+        );
+    }
+    if cfg.swap_bandwidth_mbps > 0.0 && cfg.kv_cap_bytes > 0 {
+        println!(
+            "swap preemption: {} out / {} in, {} bytes over the {} Mbps host link, \
+             {} recompute evictions",
+            r.swap_outs, r.swap_ins, r.swap_bytes, cfg.swap_bandwidth_mbps, r.kv_evictions
+        );
+    }
     if let Some((id, toks)) = live.generations.iter().find(|(_, t)| !t.is_empty()) {
         let k = toks.len().min(8);
         println!("sample generation (request {id}): {:?}", &toks[..k]);
@@ -350,7 +406,7 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
     let partial = live
         .generations
         .iter()
-        .filter(|(_, t)| t.len() != cfg.decode_tokens)
+        .filter(|(id, t)| t.len() != probe.decode_budget(*id))
         .count();
     let admitted: std::collections::BTreeSet<u64> = r
         .events

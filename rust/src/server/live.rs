@@ -21,6 +21,23 @@
 //! streams — the differential harness in `tests/live_vs_model.rs` pins
 //! that, and [`LiveBackend::kv_bytes`] lets it check that the *actual*
 //! session memory never exceeds the configured cap.
+//!
+//! # Prefix sharing and swap, live
+//!
+//! Under `CbConfig::prefix_cache` the backend keeps a *block store*: when
+//! the scheduler marks a slot's prompt block ready
+//! ([`DecodeBackend::register_block`]) the real K/V rows are copied out of
+//! the session, so they outlive it; an admission carrying a
+//! [`PrefixAttach`](super::scheduler::PrefixAttach) imports those rows
+//! into a fresh positional-locality session
+//! ([`DecodeSession::import_rows`]) and replays only the uncovered suffix
+//! — bit-identical to a full replay, so generations are independent of
+//! sharing. [`DecodeBackend::swap_out`] moves a whole session into a
+//! host-tier map (decode progress preserved) and
+//! [`DecodeBackend::swap_in`] restores it; the scheduler prices the
+//! transfers. [`LiveBackend::kv_bytes`] counts shared rows once: the
+//! store's blocks plus each session's bytes beyond its store-backed
+//! prefix.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -37,7 +54,7 @@ use crate::sim::latency::SimParams;
 use crate::util::rng::Rng;
 
 use super::batcher::Request;
-use super::scheduler::{CbConfig, CbEngine, CbReport, DecodeBackend};
+use super::scheduler::{CbConfig, CbEngine, CbReport, DecodeBackend, PrefixAttach};
 
 /// Deterministic synthetic prompt for request `id`: `tokens` ids drawn
 /// from a stream forked from (seed, id), so repeated runs — and the model
@@ -45,6 +62,19 @@ use super::scheduler::{CbConfig, CbEngine, CbReport, DecodeBackend};
 pub fn synth_prompt(seed: u64, id: u64, tokens: usize, vocab: usize) -> Vec<usize> {
     let mut rng = Rng::new(seed ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15));
     (0..tokens).map(|_| rng.below(vocab)).collect()
+}
+
+/// The prompt-content stream a request draws from: its own id, or its
+/// group (`id % prompt_groups`) when grouped workloads are on — requests
+/// in one group then share leading token ids, the prefix-cache workload.
+/// Used identically by the scheduler's radix lookups and this backend's
+/// sessions, so both sides see one workload.
+pub fn prompt_stream_key(prompt_groups: usize, id: u64) -> u64 {
+    if prompt_groups > 0 {
+        id % prompt_groups as u64
+    } else {
+        id
+    }
 }
 
 /// Poisson arrivals with variable-length prompts uniform in
@@ -66,13 +96,38 @@ pub fn live_arrivals(rng: &mut Rng, rate: f64, horizon_s: f64, seq_len: usize) -
     out
 }
 
-/// The live execution backend: one [`DecodeSession`] per in-flight slot.
+/// K/V rows of one shared block, copied out of their creator session so
+/// attachments survive it.
+struct StoredBlock {
+    lo: usize,
+    hi: usize,
+    /// accounting size (Appendix-G prefix difference), as priced by the
+    /// scheduler's pool
+    bytes: usize,
+    /// per-layer (k_rows, v_rows), the [`DecodeSession::export_rows`] form
+    layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// The live execution backend: one [`DecodeSession`] per in-flight slot,
+/// plus the shared block store and the swap host tier.
 pub struct LiveBackend<'a> {
     cluster: &'a Cluster,
     sessions: BTreeMap<u64, DecodeSession<'a>>,
     /// generated token ids of finished requests (empty for prefill-only)
     pub generations: BTreeMap<u64, Vec<usize>>,
     prompt_seed: u64,
+    /// prompt-content classes (0 = every id its own stream)
+    prompt_groups: usize,
+    /// positional-locality sessions + block store active (prefix cache)
+    positional: bool,
+    store: BTreeMap<u64, StoredBlock>,
+    store_bytes: usize,
+    /// per-session tokens whose rows are backed by the store (attached
+    /// prefix, growing past each of the creator's registered blocks) —
+    /// subtracted from the session's bytes so shared rows count once
+    blocked: BTreeMap<u64, usize>,
+    /// swapped-out sessions, decode progress intact
+    swapped: BTreeMap<u64, DecodeSession<'a>>,
     /// measured host seconds spent in real prefill + decode compute
     pub host_compute_s: f64,
     /// real single-token decode steps executed
@@ -86,22 +141,68 @@ impl<'a> LiveBackend<'a> {
             sessions: BTreeMap::new(),
             generations: BTreeMap::new(),
             prompt_seed,
+            prompt_groups: 0,
+            positional: false,
+            store: BTreeMap::new(),
+            store_bytes: 0,
+            blocked: BTreeMap::new(),
+            swapped: BTreeMap::new(),
             host_compute_s: 0.0,
             steps: 0,
         }
     }
 
-    /// Actual Appendix-G bytes the in-flight sessions hold right now
-    /// (prompt rows mixed-precision + generated rows full-precision).
-    /// This must track the scheduler's per-slot accounting exactly — the
-    /// loop counts a `kv_violations` whenever it exceeds the cap.
+    /// Configure the backend from the serving config: the prompt streams
+    /// must match what the scheduler's radix lookups derive, and prefix
+    /// caching switches sessions to positional locality.
+    pub fn for_config(cluster: &'a Cluster, cfg: &CbConfig) -> LiveBackend<'a> {
+        let mut b = LiveBackend::new(cluster, cfg.seed);
+        b.prompt_groups = cfg.prompt_groups;
+        b.positional = cfg.prefix_cache && cfg.decode_tokens > 0;
+        b
+    }
+
+    fn prompt(&self, id: u64, tokens: usize) -> Vec<usize> {
+        let meta = &self.cluster.artifact.meta;
+        synth_prompt(
+            self.prompt_seed,
+            prompt_stream_key(self.prompt_groups, id),
+            tokens,
+            meta.vocab_size,
+        )
+    }
+
+    /// Actual Appendix-G bytes held right now: the shared block store plus
+    /// every in-flight session's bytes beyond its store-backed prefix
+    /// (shared rows count once however many sessions attach). Swapped-out
+    /// sessions live in host memory and do not count. This must track the
+    /// scheduler's pool accounting exactly — the loop counts a
+    /// `kv_violations` whenever it exceeds the cap.
     pub fn kv_bytes(&self) -> usize {
-        self.sessions.values().map(|s| s.cache_bytes_mixed()).sum()
+        self.store_bytes
+            + self
+                .sessions
+                .iter()
+                .map(|(id, s)| {
+                    let blocked = self.blocked.get(id).copied().unwrap_or(0);
+                    s.cache_bytes_mixed().saturating_sub(s.prefix_bytes(blocked))
+                })
+                .sum::<usize>()
     }
 
     /// In-flight sessions (censored work at the end of a run).
     pub fn in_flight(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Blocks currently held in the shared store (diagnostics).
+    pub fn stored_blocks(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Sessions parked in the swap host tier (diagnostics).
+    pub fn swapped_out(&self) -> usize {
+        self.swapped.len()
     }
 }
 
@@ -109,14 +210,16 @@ impl DecodeBackend for LiveBackend<'_> {
     fn admit(
         &mut self,
         batch: &[Request],
-        decode_tokens: usize,
+        decode_budgets: &[usize],
         prefill_limit: usize,
+        prefixes: &[PrefixAttach],
     ) -> Result<()> {
-        if decode_tokens == 0 {
-            return Ok(()); // prefill-only: nothing to hold between events
-        }
         let meta = &self.cluster.artifact.meta;
-        for req in batch {
+        for (i, req) in batch.iter().enumerate() {
+            let budget = decode_budgets[i];
+            if budget == 0 {
+                continue; // prefill-only: nothing to hold between events
+            }
             if req.tokens == 0 || req.tokens > meta.seq_len {
                 bail!(
                     "live request {} has {} prompt tokens; artifact supports 1..={}",
@@ -125,18 +228,42 @@ impl DecodeBackend for LiveBackend<'_> {
                     meta.seq_len
                 );
             }
-            let prompt = synth_prompt(self.prompt_seed, req.id, req.tokens, meta.vocab_size);
+            let prompt = self.prompt(req.id, req.tokens);
             let t0 = Instant::now();
-            let sess = if prefill_limit >= req.tokens {
+            let sess = if self.positional {
+                // prefix-cache path: positional-locality session; covered
+                // blocks import real rows from the store, then only the
+                // uncovered suffix replays (bit-identical to full replay)
+                let pre = &prefixes[i];
+                let mut sess =
+                    DecodeSession::deferred_positional(self.cluster, &prompt, req.tokens + budget)
+                        .with_context(|| format!("admitting request {}", req.id))?;
+                for &b in &pre.blocks {
+                    let blk = self
+                        .store
+                        .get(&b)
+                        .with_context(|| format!("attach to unknown block {b}"))?;
+                    sess.import_rows(blk.lo, blk.hi, &blk.layers)
+                        .with_context(|| format!("importing block {b} for request {}", req.id))?;
+                }
+                let first = (req.tokens - pre.tokens).min(prefill_limit);
+                if first > 0 {
+                    sess.replay_range(pre.tokens, pre.tokens + first).with_context(|| {
+                        format!("admission suffix of request {}", req.id)
+                    })?;
+                }
+                self.blocked.insert(req.id, pre.tokens);
+                sess
+            } else if prefill_limit >= req.tokens {
                 // classic path: the whole prompt replays at admission
-                DecodeSession::with_budget(self.cluster, &prompt, req.tokens + decode_tokens)
+                DecodeSession::with_budget(self.cluster, &prompt, req.tokens + budget)
                     .with_context(|| format!("admitting request {}", req.id))?
             } else {
                 // chunked path: replay only the admission chunk; the rest
                 // arrives through prefill_chunk calls as the scheduler
                 // fuses it into decode iterations
                 let mut sess =
-                    DecodeSession::deferred(self.cluster, &prompt, req.tokens + decode_tokens)
+                    DecodeSession::deferred(self.cluster, &prompt, req.tokens + budget)
                         .with_context(|| format!("admitting request {}", req.id))?;
                 sess.replay_range(0, prefill_limit)
                     .with_context(|| format!("admission chunk of request {}", req.id))?;
@@ -159,6 +286,59 @@ impl DecodeBackend for LiveBackend<'_> {
         Ok(())
     }
 
+    fn register_block(
+        &mut self,
+        session: u64,
+        block: u64,
+        lo: usize,
+        hi: usize,
+        bytes: usize,
+    ) -> Result<()> {
+        let sess = self
+            .sessions
+            .get(&session)
+            .with_context(|| format!("registering block {block} from unknown session {session}"))?;
+        let layers = sess
+            .export_rows(lo, hi)
+            .with_context(|| format!("exporting block {block} rows from session {session}"))?;
+        self.store.insert(block, StoredBlock { lo, hi, bytes, layers });
+        self.store_bytes += bytes;
+        // the creator's own rows are store-backed from here on
+        let blocked = self.blocked.entry(session).or_insert(0);
+        *blocked = (*blocked).max(hi);
+        Ok(())
+    }
+
+    fn drop_block(&mut self, block: u64) -> Result<()> {
+        let blk = self
+            .store
+            .remove(&block)
+            .with_context(|| format!("dropping unknown block {block}"))?;
+        self.store_bytes = self.store_bytes.saturating_sub(blk.bytes);
+        Ok(())
+    }
+
+    fn swap_out(&mut self, id: u64) -> Result<()> {
+        let sess = self
+            .sessions
+            .remove(&id)
+            .with_context(|| format!("swapping out unknown slot {id}"))?;
+        self.blocked.remove(&id);
+        self.swapped.insert(id, sess);
+        Ok(())
+    }
+
+    fn swap_in(&mut self, id: u64) -> Result<()> {
+        let sess = self
+            .swapped
+            .remove(&id)
+            .with_context(|| format!("swapping in request {id} that is not in the host tier"))?;
+        // restored sessions are fully private: their rows are their own
+        self.blocked.insert(id, 0);
+        self.sessions.insert(id, sess);
+        Ok(())
+    }
+
     fn step(&mut self, ids: &[u64]) -> Result<()> {
         let t0 = Instant::now();
         for &id in ids {
@@ -174,14 +354,18 @@ impl DecodeBackend for LiveBackend<'_> {
     }
 
     fn complete(&mut self, id: u64) -> Result<()> {
-        // prefill-only requests never opened a session; record them empty
+        // prefill-only requests never opened a session; record them empty.
+        // The session goes away but any rows it registered live on in the
+        // block store — the "recently freed" prefix reuse window.
         let generated = self.sessions.remove(&id).map(|s| s.generated).unwrap_or_default();
+        self.blocked.remove(&id);
         self.generations.insert(id, generated);
         Ok(())
     }
 
     fn evict(&mut self, id: u64) -> Result<()> {
         // recompute-style preemption: drop the cache; re-admission rebuilds
+        self.blocked.remove(&id);
         self.sessions
             .remove(&id)
             .map(drop)
@@ -208,10 +392,14 @@ pub struct LiveReport {
 
 /// The cost-model engine whose clock drives a live cluster: shape,
 /// ASTRA strategy, and device count mirror the artifact meta, so modeled
-/// KV projections line up with what the sessions actually allocate.
+/// KV projections line up with what the sessions actually allocate. The
+/// workload-content knobs (`seed`, `prompt_vocab`) are pinned to the
+/// cluster so the engine's radix-tree lookups and decode-jitter draws see
+/// exactly the prompts and budgets the live sessions will — whichever
+/// backend runs, the decisions match.
 pub fn live_engine(
     cluster: &Cluster,
-    cfg: CbConfig,
+    mut cfg: CbConfig,
     params: SimParams,
     trace: BandwidthTrace,
 ) -> CbEngine {
@@ -228,6 +416,8 @@ pub fn live_engine(
         StrategyKind::Astra { vq: VqSetting::new(meta.groups, meta.codebook_size) },
         cluster.partition.n_devices(),
     );
+    cfg.seed = cluster.config.seed;
+    cfg.prompt_vocab = meta.vocab_size;
     CbEngine::new(shape, strategy, params, trace, cfg)
 }
 
@@ -244,8 +434,8 @@ pub fn serve_live(
     if !cluster.artifact.meta.causal {
         bail!("live continuous batching requires a decoder (causal) artifact");
     }
-    let mut engine = live_engine(cluster, cfg, params, trace);
-    let mut backend = LiveBackend::new(cluster, cluster.config.seed);
+    let mut engine = live_engine(cluster, cfg.clone(), params, trace);
+    let mut backend = LiveBackend::for_config(cluster, &engine.cfg);
     let report = engine.serve_stream_with(&mut backend, arrivals, horizon_s)?;
     Ok(LiveReport {
         report,

@@ -8,7 +8,12 @@
 //!    with batched prefill, interleaved batched decode steps, Sarathi-style
 //!    chunked piggybacked prefill (`CbConfig::prefill_chunk_tokens`: prompt
 //!    chunks fused into decode iterations instead of monopolizing the
-//!    cluster), and KV-pressure admission ([`scheduler::KvBudget`]).
+//!    cluster), and KV-pressure admission over the block pool
+//!    ([`crate::kv`]) — with `CbConfig::prefix_cache`, radix-tree prefix
+//!    reuse attaches shared block-aligned prompt prefixes and replays only
+//!    suffixes; with `CbConfig::swap_bandwidth_mbps`, preemption swaps
+//!    victims over a priced host link instead of recomputing whenever the
+//!    transfer is cheaper.
 //!  * [`live`] — the same scheduler loop driving *real*
 //!    [`crate::coordinator::decode::DecodeSession`]s through a
 //!    [`scheduler::DecodeBackend`]: actual tensors, mixed-precision KV
@@ -26,5 +31,6 @@ pub use batcher::{Batcher, Request};
 pub use engine::{ServeEngine, ServeReport};
 pub use live::{serve_live, LiveBackend, LiveReport};
 pub use scheduler::{
-    CbConfig, CbEngine, CbEvent, CbReport, DecodeBackend, KvBudget, ModelBackend, SlotState,
+    CbConfig, CbEngine, CbEvent, CbReport, DecodeBackend, KvBudget, ModelBackend, PrefixAttach,
+    SlotState,
 };

@@ -59,24 +59,64 @@
 //! rejected outright, so admission always makes progress. Requests that
 //! can never fit are counted in `CbReport::kv_rejected`.
 //!
+//! # Block pool, prefix reuse, and swap preemption
+//!
+//! With `CbConfig::prefix_cache`, KV accounting moves from flat per-slot
+//! bytes onto the block pool ([`crate::kv`]): prompts are split into
+//! `kv_block_tokens`-token blocks whose bytes are Appendix-G prefix
+//! differences (telescoping to exactly the flat bytes, so sharing-off
+//! reproduces the old streams bit for bit), and a radix tree over
+//! token-id prefixes lets a request whose prompt shares a block-aligned
+//! prefix with a resident or recently-freed cache *attach* to those
+//! blocks ([`CbEvent::PrefixHit`]): admission charges only the uncovered
+//! suffix, the prefill replays only the suffix (chunked through the same
+//! machinery, [`CbEvent::PrefillChunk`] events starting at the covered
+//! edge), and completed slots leave their blocks cached at refcount 0
+//! until capacity pressure reclaims them LRU-first. Prompt token ids are
+//! derived deterministically from `(seed, prompt_groups)` — the same
+//! stream the live backend feeds its sessions — so both backends agree on
+//! every hit.
+//!
+//! With `CbConfig::swap_bandwidth_mbps > 0`, each KV-pressure eviction of
+//! a decoding slot is priced: moving the cache out and back over a host
+//! link at that bandwidth ([`crate::kv::swap::SwapPolicy`], the
+//! [`crate::comm::link`] transfer arithmetic) versus re-prefilling the
+//! prompt and regenerating every token produced so far. The cheaper side
+//! wins, per eviction: [`CbEvent::SwapOut`] preserves decode progress and
+//! [`CbEvent::SwapIn`] restores it at readmission (transfer time charged
+//! on the virtual clock); recompute ([`CbEvent::Evict`]) stays the
+//! fallback and the flag-off behavior.
+//!
+//! `CbConfig::decode_jitter` breaks same-length lockstep: each request's
+//! decode budget is sampled once, deterministically from `(seed, id)`, in
+//! `decode_tokens ± jitter`, so saturating waves stop completing in the
+//! same iteration and staggered completion paths get exercised.
+//!
 //! The engine reports tail latency (p50/p95/p99), time-to-first-token,
 //! queue depth over time, goodput under an SLO, both horizon- and
 //! completion-based throughput with censored (unfinished) requests
-//! accounted separately, KV peak/eviction counters, and the full decision
-//! event stream.
+//! accounted separately, KV peak/eviction counters, prefix hit-rate and
+//! swap traffic, and the full decision event stream.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::comm::trace::BandwidthTrace;
-use crate::model::{kv_cache_bytes_astra_live, kv_cache_bytes_full, TransformerShape};
+use crate::kv::pool::KvPool;
+use crate::kv::prefix::RadixTree;
+use crate::kv::swap::SwapPolicy;
+use crate::model::{
+    kv_cache_bytes_astra_live, kv_cache_bytes_astra_positional, kv_cache_bytes_full,
+    TransformerShape,
+};
 use crate::parallel::strategies::{Strategy, StrategyKind};
 use crate::sim::latency::{evaluate_on_trace, evaluate_on_trace_batched, Breakdown, SimParams};
 use crate::util::rng::Rng;
 use crate::util::stats::{Summary, WindowedCounter};
 
 use super::batcher::{Batcher, Request};
+use super::live::{prompt_stream_key, synth_prompt};
 
 /// Continuous-batching policy knobs.
 #[derive(Debug, Clone)]
@@ -103,6 +143,39 @@ pub struct CbConfig {
     /// that classic path, so any budget >= the longest prompt reproduces
     /// the unchunked scheduler's event stream bit for bit.
     pub prefill_chunk_tokens: usize,
+    /// radix-tree prefix sharing over block-aligned prompt prefixes
+    /// (`--prefix-cache`). Off (the default) keeps the flat per-slot
+    /// accounting and reproduces the pre-pool event streams bit for bit.
+    /// Requires `decode_tokens > 0` (prefill-only slots hold no sessions
+    /// to share); ignored otherwise.
+    pub prefix_cache: bool,
+    /// tokens per shared KV block (`--kv-block-tokens`); sharing is
+    /// block-aligned, so a block size above the longest prompt makes
+    /// sharing impossible and reproduces the prefix-off stream exactly
+    pub kv_block_tokens: usize,
+    /// host-link bandwidth for swap-style preemption, Mbps
+    /// (`--swap-bandwidth-mbps`). 0 (default) disables swapping: every
+    /// KV-pressure eviction recomputes, as before. With a cap and a
+    /// bandwidth set, each eviction swaps iff the round-trip transfer
+    /// beats the modeled recompute.
+    pub swap_bandwidth_mbps: f64,
+    /// one-way host-link latency per swap transfer, seconds
+    pub swap_latency_s: f64,
+    /// ± tokens of seeded per-request decode-budget jitter
+    /// (`--decode-jitter`); 0 keeps every budget at `decode_tokens`
+    pub decode_jitter: usize,
+    /// prompt-content classes for the synthetic workload
+    /// (`--prompt-groups`): ids map to `id % prompt_groups`, so requests
+    /// in one group share leading token ids (the prefix-cache workload).
+    /// 0 (default) gives every request its own stream — the historical
+    /// behavior.
+    pub prompt_groups: usize,
+    /// seed for prompt-content derivation and decode jitter; live runs
+    /// pin this to the cluster seed so both backends see one workload
+    pub seed: u64,
+    /// vocabulary for model-only prompt derivation; live runs pin this to
+    /// the artifact's vocab
+    pub prompt_vocab: usize,
 }
 
 impl Default for CbConfig {
@@ -116,6 +189,14 @@ impl Default for CbConfig {
             window_s: 10.0,
             kv_cap_bytes: 0,
             prefill_chunk_tokens: 0,
+            prefix_cache: false,
+            kv_block_tokens: 16,
+            swap_bandwidth_mbps: 0.0,
+            swap_latency_s: 0.0005,
+            decode_jitter: 0,
+            prompt_groups: 0,
+            seed: 0,
+            prompt_vocab: 64,
         }
     }
 }
@@ -147,13 +228,30 @@ pub enum CbEvent {
     /// a prefill chunk advanced slot `id`'s prompt rows `[lo, hi)` through
     /// the model, fused into the surrounding iteration. Emitted only for
     /// prompts longer than the chunk budget; per admission episode the
-    /// chunk events of a slot tile `[0, prompt_len)` contiguously in order.
+    /// chunk events of a slot tile `[covered, prompt_len)` contiguously in
+    /// order (`covered == 0` without a prefix hit).
     PrefillChunk { id: u64, lo: usize, hi: usize },
+    /// request `id`'s prompt attached to shared KV blocks covering its
+    /// first `tokens` positions (block-aligned): only the suffix replays,
+    /// only the suffix footprint is charged
+    PrefixHit { id: u64, tokens: usize },
+    /// KV pressure moved slot `id`'s cache to the host tier instead of
+    /// dropping it — the bandwidth-priced transfer beat recompute; decode
+    /// progress is preserved for [`CbEvent::SwapIn`]
+    SwapOut { id: u64 },
+    /// a previously swapped request re-entered a slot by transferring its
+    /// cache back (charged at the host-link bandwidth), resuming decode
+    /// where it left off
+    SwapIn { id: u64 },
 }
 
-/// Admission gate over Appendix-G mixed-KV memory: the bytes held by all
-/// in-flight slots must fit a device cap. `cap_bytes == 0` disables the
-/// gate (every request fits).
+/// LEGACY flat admission gate over Appendix-G mixed-KV memory — the
+/// pre-block-pool accounting, kept for API compatibility and as the
+/// reference semantics the pool must reduce to: the serving engine now
+/// tracks bytes through [`crate::kv::pool::KvPool`], whose
+/// private-plus-block classes telescope to exactly these counters
+/// whenever prefix sharing is off. `cap_bytes == 0` disables the gate
+/// (every request fits).
 #[derive(Debug, Clone, Default)]
 pub struct KvBudget {
     pub cap_bytes: usize,
@@ -181,20 +279,37 @@ impl KvBudget {
     }
 }
 
+/// Shared-prefix attachment delivered with an admission: the request's
+/// first `tokens` prompt positions are covered by the listed ready blocks
+/// (root-to-leaf, contiguous, block-aligned). Empty when the prompt shares
+/// nothing — or prefix caching is off.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixAttach {
+    pub tokens: usize,
+    pub blocks: Vec<u64>,
+}
+
 /// Execution backend driven by the scheduler loop. All methods mirror a
 /// decision the loop already recorded as a [`CbEvent`]; a backend performs
-/// the corresponding real work (or nothing, for the cost model).
+/// the corresponding real work (or nothing, for the cost model). The
+/// block/swap methods default to no-ops so cost-model backends stay
+/// trivial.
 pub trait DecodeBackend {
     /// A batch was admitted: start real work (live: open a `DecodeSession`
-    /// per request, sized prompt + decode budget, and replay the first
-    /// `min(prompt, prefill_limit)` prompt rows). `prefill_limit` is
-    /// `usize::MAX` when chunking is off (whole prompts replay here); the
-    /// remainder of a longer prompt arrives through [`Self::prefill_chunk`].
+    /// per request, sized prompt + its decode budget, import the shared
+    /// blocks listed in `prefixes[i]`, and replay the first
+    /// `min(uncovered suffix, prefill_limit)` prompt rows).
+    /// `prefill_limit` is `usize::MAX` when chunking is off (whole
+    /// suffixes replay here); the remainder of a longer suffix arrives
+    /// through [`Self::prefill_chunk`]. `decode_budgets` and `prefixes`
+    /// parallel `batch`. Swapped-in requests are NOT part of `batch`; they
+    /// arrive through [`Self::swap_in`].
     fn admit(
         &mut self,
         batch: &[Request],
-        decode_tokens: usize,
+        decode_budgets: &[usize],
         prefill_limit: usize,
+        prefixes: &[PrefixAttach],
     ) -> Result<()>;
     /// Replay prompt rows `[lo, hi)` of slot `id` into its cache — one
     /// chunk the scheduler fused into a decode iteration.
@@ -206,8 +321,37 @@ pub trait DecodeBackend {
     /// The slot was evicted back to the queue; drop its state (it will be
     /// rebuilt from scratch on re-admission).
     fn evict(&mut self, id: u64) -> Result<()>;
-    /// Actual bytes currently held by in-flight slots (0 if untracked);
-    /// the loop counts a `kv_violations` whenever this exceeds the cap.
+    /// Slot `session`'s prompt rows `[lo, hi)` are complete and now back a
+    /// shared block: copy them into the block store so later attachments
+    /// survive the creator (live copies real K/V rows; `bytes` is the
+    /// block's accounting size).
+    fn register_block(
+        &mut self,
+        _session: u64,
+        _block: u64,
+        _lo: usize,
+        _hi: usize,
+        _bytes: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
+    /// A cached block was reclaimed for capacity; drop its stored rows.
+    fn drop_block(&mut self, _block: u64) -> Result<()> {
+        Ok(())
+    }
+    /// KV pressure chose swap over recompute: move the slot's state to the
+    /// host tier, preserving decode progress.
+    fn swap_out(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    /// A swapped request re-entered a slot: restore its state from the
+    /// host tier.
+    fn swap_in(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    /// Actual bytes currently held by in-flight slots plus the shared
+    /// block store (0 if untracked); the loop counts a `kv_violations`
+    /// whenever this exceeds the cap.
     fn kv_bytes_in_flight(&self) -> usize;
 }
 
@@ -218,8 +362,9 @@ impl DecodeBackend for ModelBackend {
     fn admit(
         &mut self,
         _batch: &[Request],
-        _decode_tokens: usize,
+        _decode_budgets: &[usize],
         _prefill_limit: usize,
+        _prefixes: &[PrefixAttach],
     ) -> Result<()> {
         Ok(())
     }
@@ -293,11 +438,26 @@ pub struct CbReport {
     pub kv_peak_bytes: usize,
     /// the configured cap (0 = unlimited)
     pub kv_cap_bytes: usize,
-    /// KV-pressure evictions (slots requeued mid-decode)
+    /// KV-pressure evictions resolved by recompute (slots requeued
+    /// mid-decode and rebuilt from scratch)
     pub kv_evictions: usize,
     /// iterations where the backend's *actual* in-flight bytes exceeded
     /// the cap — must be zero; asserted by the live tests
     pub kv_violations: usize,
+    /// admissions that attached to >= 1 shared block
+    pub prefix_hits: usize,
+    /// prompt tokens served from shared blocks instead of replay
+    pub prefix_hit_tokens: usize,
+    /// prompt tokens across all (re)admissions — the hit-rate denominator
+    pub admitted_prompt_tokens: usize,
+    /// modeled prefill FLOPs the covered tokens did not recompute
+    pub recompute_flops_saved: f64,
+    /// KV-pressure evictions resolved by swapping to the host tier
+    pub swap_outs: usize,
+    /// swapped requests restored into slots
+    pub swap_ins: usize,
+    /// bytes moved over the host link, out plus in
+    pub swap_bytes: usize,
 }
 
 impl CbReport {
@@ -308,6 +468,16 @@ impl CbReport {
         }
         self.queue_depth.iter().map(|&(_, d)| d as f64).sum::<f64>()
             / self.queue_depth.len() as f64
+    }
+
+    /// Fraction of admitted prompt tokens served from shared KV blocks
+    /// (0 when prefix caching is off or nothing was admitted).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.admitted_prompt_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.admitted_prompt_tokens as f64
+        }
     }
 }
 
@@ -357,7 +527,7 @@ pub enum SlotState {
 }
 
 /// One in-flight request occupying a decode slot.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 struct Slot {
     id: u64,
     arrival_s: f64,
@@ -365,13 +535,43 @@ struct Slot {
     tokens: usize,
     remaining: usize,
     generated: usize,
-    /// modeled mixed-KV bytes currently held (grows per chunk during
-    /// chunked prefill, then two full-precision rows per decode step)
+    /// modeled mixed-KV bytes this slot holds PRIVATELY — replayed prompt
+    /// rows not yet backing a ready shared block, plus two full-precision
+    /// rows per decode step. Without prefix caching no blocks exist and
+    /// this is the slot's whole footprint, exactly the old accounting.
     kv_bytes: usize,
-    /// virtual time of admission (eviction picks the newest slot)
-    admitted_at: f64,
+    /// monotone admission sequence number for this episode — eviction
+    /// picks the largest, which makes "newest" stable under readmission
+    /// (a readmitted slot counts as newest by its CURRENT admission, and
+    /// same-batch ties resolve in queue order instead of by raw id)
+    admit_seq: u64,
+    /// per-request decode budget (== `decode_tokens` unless jittered)
+    budget: usize,
+    /// ready shared blocks this slot holds references on (attached at
+    /// admission plus own blocks whose rows finished replaying)
+    blocks: Vec<u64>,
+    /// own created blocks still waiting for their rows `(block, lo, hi)`,
+    /// ascending; flushed into `blocks` as replay crosses `hi`
+    pending: Vec<(u64, usize, usize)>,
     state: SlotState,
     /// virtual time this slot last completed a decode step (ITL tracking)
+    last_token_at: f64,
+}
+
+/// Progress preserved for a swapped-out request until readmission.
+#[derive(Debug, Clone, Copy)]
+struct SwapEntry {
+    tokens: usize,
+    generated: usize,
+    remaining: usize,
+    budget: usize,
+    /// occupancy transferred out — charged again on the way back in, and
+    /// re-acquired as private bytes at readmission
+    bytes: usize,
+    /// when the slot last emitted a token: preserved so the inter-token
+    /// gap spanning the host-tier dwell (swap-out, queueing, swap-in) is
+    /// counted by the ITL stall metric — swap keeps the generation stream
+    /// alive, so the user-visible gap between token k and k+1 includes it
     last_token_at: f64,
 }
 
@@ -388,18 +588,84 @@ struct ReqStats {
     ttft_recorded: bool,
 }
 
-/// Index of the newest slot (latest admission, ties broken by larger id) —
-/// the KV-pressure eviction victim. The oldest slot is never chosen while
-/// another exists, which keeps preemption livelock-free.
+/// Index of the newest slot — the KV-pressure eviction victim. "Newest"
+/// is the largest `admit_seq` (current-episode admission order), NOT the
+/// (admitted_at, id) pair used before: under readmission several slots
+/// share an `admitted_at` and the id tiebreak ranked a fresh high-id
+/// request "newer" than a just-readmitted low-id one, so victim selection
+/// thrashed the wrong slot. The sequence number is unique and monotone, so
+/// ordering is stable: the most recently (re)admitted slot is always the
+/// victim, and the oldest resident slot is never chosen while another
+/// exists — preemption stays livelock-free.
 fn newest_slot_index(slots: &[Slot]) -> usize {
     let mut best = 0;
     for (i, s) in slots.iter().enumerate().skip(1) {
-        let b = &slots[best];
-        if s.admitted_at > b.admitted_at || (s.admitted_at == b.admitted_at && s.id > b.id) {
+        if s.admit_seq > slots[best].admit_seq {
             best = i;
         }
     }
     best
+}
+
+/// Move a slot's own blocks whose rows are now replayed (`hi <=
+/// replayed`) from pending to ready: the pool shifts their bytes out of
+/// the slot's private share, and the backend copies the rows into the
+/// shared store so attachments survive the creator.
+fn flush_ready_blocks<B: DecodeBackend + ?Sized>(
+    slot: &mut Slot,
+    replayed: usize,
+    pool: &mut KvPool,
+    backend: &mut B,
+) -> Result<()> {
+    while let Some(&(block, lo, hi)) = slot.pending.first() {
+        if hi > replayed {
+            break;
+        }
+        let bytes = pool.mark_ready(block);
+        slot.kv_bytes = slot.kv_bytes.saturating_sub(bytes);
+        backend.register_block(slot.id, block, lo, hi, bytes)?;
+        slot.pending.remove(0);
+        slot.blocks.push(block);
+    }
+    Ok(())
+}
+
+/// Deterministic prompt lookup with per-stream caching: `synth_prompt`
+/// over a keyed stream is prefix-stable (its first `n` draws are the same
+/// whatever length is requested), so one growing buffer per stream key
+/// serves every request length — the admission filter would otherwise
+/// re-derive O(prompt) token ids per queued candidate on every iteration.
+fn cached_prompt<'c>(
+    cache: &'c mut BTreeMap<u64, Vec<usize>>,
+    cfg: &CbConfig,
+    id: u64,
+    tokens: usize,
+) -> &'c [usize] {
+    let key = prompt_stream_key(cfg.prompt_groups, id);
+    let entry = cache.entry(key).or_default();
+    if entry.len() < tokens {
+        *entry = synth_prompt(cfg.seed, key, tokens, cfg.prompt_vocab.max(2));
+    }
+    &entry[..tokens]
+}
+
+/// Reclaim cached (refcount-0) blocks, LRU subtree at a time, until
+/// `need` more bytes fit resident under the cap (or nothing cacheable is
+/// left). The backend drops its stored rows for every reclaimed block.
+fn reclaim_cached<B: DecodeBackend + ?Sized>(
+    pool: &mut KvPool,
+    tree: &mut RadixTree,
+    backend: &mut B,
+    need: usize,
+) -> Result<()> {
+    while !pool.fits_resident(need) {
+        let Some(victim) = pool.lru_cached() else { break };
+        for block in tree.remove_subtree(victim) {
+            pool.drop_cached(block);
+            backend.drop_block(block)?;
+        }
+    }
+    Ok(())
 }
 
 /// Continuous-batching serving engine over the cost-model clock.
@@ -456,6 +722,105 @@ impl CbEngine {
         self.kv_slot_bytes(1, 1) - self.kv_slot_bytes(1, 0)
     }
 
+    /// [`Self::kv_slot_bytes`] under positional locality — the accounting
+    /// the block pool prices blocks with (prefix differences of this are
+    /// identical for every prompt sharing the positions).
+    pub fn kv_slot_bytes_positional(&self, prompt_tokens: usize, generated: usize) -> usize {
+        match self.strategy.kind {
+            StrategyKind::Astra { vq } => kv_cache_bytes_astra_positional(
+                &self.shape,
+                prompt_tokens,
+                generated,
+                self.shape.elem_bytes,
+                self.strategy.n_devices,
+                vq.groups,
+                vq.codebook_size,
+            ),
+            _ => kv_cache_bytes_full(
+                &self.shape,
+                prompt_tokens + generated,
+                self.shape.elem_bytes,
+            ),
+        }
+    }
+
+    /// Bytes of the first `replayed` prompt rows under the accounting
+    /// active for this run (positional with the prefix cache, classic
+    /// without — where the two coincide for every flag-off decision).
+    /// Prefill-only workloads ignore the prefix cache entirely, including
+    /// its accounting.
+    fn slot_prompt_bytes(&self, replayed: usize) -> usize {
+        if self.cfg.prefix_cache && self.cfg.decode_tokens > 0 {
+            self.kv_slot_bytes_positional(replayed, 0)
+        } else {
+            self.kv_slot_bytes(replayed, 0)
+        }
+    }
+
+    /// Accounting size of KV block `[lo, hi)` — the Appendix-G prefix
+    /// difference, so a slot's blocks plus its private remainder
+    /// telescope to exactly its flat footprint.
+    fn block_bytes_range(&self, lo: usize, hi: usize) -> usize {
+        self.slot_prompt_bytes(hi) - self.slot_prompt_bytes(lo)
+    }
+
+    /// The decode budget request `id` will receive: `decode_tokens`, or a
+    /// deterministic sample in `decode_tokens ± decode_jitter` drawn from
+    /// `(seed, id)` — the same everywhere the request is priced, admitted,
+    /// or re-admitted, on either backend.
+    pub fn decode_budget(&self, id: u64) -> usize {
+        let d = self.cfg.decode_tokens;
+        if d == 0 || self.cfg.decode_jitter == 0 {
+            return d;
+        }
+        let j = self.cfg.decode_jitter.min(d - 1);
+        let mut rng = Rng::new(
+            self.cfg.seed ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0xa076_1d64_78bd_642f,
+        );
+        d - j + rng.below(2 * j + 1)
+    }
+
+    /// Bytes request `id` will hold once `budget` decode tokens are
+    /// generated — the admission gate's per-request ceiling under the
+    /// active accounting.
+    pub fn projection_for(&self, prompt_tokens: usize, budget: usize) -> usize {
+        self.slot_prompt_bytes(prompt_tokens) + budget * self.kv_step_bytes()
+    }
+
+    /// Deterministic prompt token ids for request `id` — the SAME stream
+    /// the live backend feeds its sessions (`synth_prompt` over the
+    /// grouped key), so both backends agree on every radix-tree match.
+    pub fn prompt_for(&self, id: u64, tokens: usize) -> Vec<usize> {
+        synth_prompt(
+            self.cfg.seed,
+            prompt_stream_key(self.cfg.prompt_groups, id),
+            tokens,
+            self.cfg.prompt_vocab.max(2),
+        )
+    }
+
+    /// Modeled cost of recovering an evicted slot by recompute: re-prefill
+    /// the prompt, then regenerate every token produced so far — the
+    /// alternative the swap policy prices transfers against.
+    fn recompute_cost_s(&self, tokens: usize, generated: usize, now: f64) -> f64 {
+        let mut pshape = self.shape;
+        pshape.seq_len = tokens.max(1);
+        let prefill =
+            evaluate_on_trace(&self.strategy.schedule(&pshape), &self.params, &self.trace, now)
+                .total();
+        if generated == 0 {
+            return prefill;
+        }
+        let step = evaluate_on_trace(
+            &self.strategy.decode_step_schedule(&self.shape, tokens + generated),
+            &self.params,
+            &self.trace,
+            now,
+        )
+        .total();
+        prefill + generated as f64 * step
+    }
+
     /// Plan one iteration's chunk batch: `(slot index, tokens)` pairs in
     /// admission order (FIFO across prefilling slots, sharing the
     /// per-iteration token budget), plus the modeled KV growth the whole
@@ -467,13 +832,10 @@ impl CbEngine {
         let mut order: Vec<usize> = (0..slots.len())
             .filter(|&i| matches!(slots[i].state, SlotState::Prefilling { .. }))
             .collect();
-        order.sort_by(|&a, &b| {
-            slots[a]
-                .admitted_at
-                .partial_cmp(&slots[b].admitted_at)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(slots[a].id.cmp(&slots[b].id))
-        });
+        // FIFO by current-episode admission order (the unique sequence
+        // number; equals the old (admitted_at, id) order except across
+        // readmissions, where queue order is the stable choice)
+        order.sort_by_key(|&i| slots[i].admit_seq);
         let mut plan = Vec::new();
         let mut left = chunk_budget;
         let mut growth = 0usize;
@@ -484,7 +846,8 @@ impl CbEngine {
             if let SlotState::Prefilling { next_token, total } = slots[i].state {
                 let take = (total - next_token).min(left);
                 left -= take;
-                growth += self.kv_slot_bytes(next_token + take, 0) - slots[i].kv_bytes;
+                growth += self.slot_prompt_bytes(next_token + take)
+                    - self.slot_prompt_bytes(next_token);
                 plan.push((i, take));
             }
         }
@@ -524,10 +887,21 @@ impl CbEngine {
         } else {
             usize::MAX
         };
+        // prefix sharing and swap both need live decode slots; prefill-only
+        // workloads hold no state between events, so both are off there
+        let prefix_on = self.cfg.prefix_cache && self.cfg.decode_tokens > 0;
+        let block_tokens = self.cfg.kv_block_tokens.max(1);
+        let swap_policy = SwapPolicy::new(self.cfg.swap_bandwidth_mbps, self.cfg.swap_latency_s);
+        let swap_on =
+            swap_policy.enabled() && self.cfg.kv_cap_bytes > 0 && self.cfg.decode_tokens > 0;
         let mut batcher = Batcher::new(self.cfg.max_batch.max(1), self.cfg.max_wait_s);
         let mut slots: Vec<Slot> = Vec::new();
         let mut pending = arrivals.into_iter().peekable();
-        let mut budget = KvBudget::new(self.cfg.kv_cap_bytes);
+        let mut pool = KvPool::new(self.cfg.kv_cap_bytes);
+        let mut tree = RadixTree::new(block_tokens);
+        let mut prompt_cache: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        let mut swapped: BTreeMap<u64, SwapEntry> = BTreeMap::new();
+        let mut next_seq = 0u64;
         let mut events: Vec<CbEvent> = Vec::new();
         let mut stats: BTreeMap<u64, ReqStats> = BTreeMap::new();
 
@@ -544,6 +918,13 @@ impl CbEngine {
         let mut kv_evictions = 0usize;
         let mut kv_violations = 0usize;
         let mut prefill_chunks = 0usize;
+        let mut prefix_hits = 0usize;
+        let mut prefix_hit_tokens = 0usize;
+        let mut admitted_prompt_tokens = 0usize;
+        let mut recompute_flops_saved = 0.0f64;
+        let mut swap_outs = 0usize;
+        let mut swap_ins = 0usize;
+        let mut swap_bytes = 0usize;
 
         while now < horizon_s {
             // pull arrivals into the queue
@@ -556,11 +937,16 @@ impl CbEngine {
             }
 
             // a request whose full KV budget exceeds the cap can never be
-            // served; drop it rather than head-of-line-block forever
-            if budget.cap_bytes > 0 {
+            // served; drop it rather than head-of-line-block forever.
+            // (Swapped requests already fit once and return at known size.)
+            if pool.cap_bytes > 0 {
                 loop {
                     let oversized = match batcher.front() {
-                        Some(r) => self.kv_projection(r.tokens) > budget.cap_bytes,
+                        Some(r) => {
+                            !swapped.contains_key(&r.id)
+                                && self.projection_for(r.tokens, self.decode_budget(r.id))
+                                    > pool.cap_bytes
+                        }
                         None => false,
                     };
                     if !oversized {
@@ -573,26 +959,60 @@ impl CbEngine {
             }
 
             // ---- admission: batched prefill into free slots, gated on
-            //      the KV budget at prefill footprint (optimistic — decode
-            //      growth is handled by eviction below) ----
+            //      the KV pool at prefill footprint (optimistic — decode
+            //      growth is handled by eviction below). A prefix hit is
+            //      charged net of its covered blocks; a swapped request
+            //      returns at its preserved size. ----
             let free = max_slots.saturating_sub(slots.len());
             // an idle cluster never waits on the fill deadline
             let force = slots.is_empty();
             let batch = if free > 0 {
                 let mut pending_bytes = 0usize;
+                // cached (refcount-0) blocks this batch is about to
+                // re-reference: attaching pins their bytes again, so they
+                // stop being reclaimable and must be charged to the
+                // admission check — once per block, however many batch
+                // members share it
+                let mut resurrected: std::collections::BTreeSet<u64> =
+                    std::collections::BTreeSet::new();
                 batcher.next_batch_filtered(now, force, free, |r| {
+                    if let Some(e) = swapped.get(&r.id) {
+                        if pool.fits(pending_bytes + e.bytes) {
+                            pending_bytes += e.bytes;
+                            return true;
+                        }
+                        return false;
+                    }
                     // a request that can never fit must not be admitted on
                     // its (smaller) prefill footprint — it would grow past
                     // the cap with no evictable peer. It blocks here until
                     // it reaches the head, where the reject pass drops it.
-                    if budget.cap_bytes > 0
-                        && self.kv_projection(r.tokens) > budget.cap_bytes
+                    if pool.cap_bytes > 0
+                        && self.projection_for(r.tokens, self.decode_budget(r.id))
+                            > pool.cap_bytes
                     {
                         return false;
                     }
-                    let need = self.kv_slot_bytes(r.tokens, 0);
-                    if budget.fits(pending_bytes + need) {
-                        pending_bytes += need;
+                    let (hit, repin) = if prefix_on {
+                        let prompt = cached_prompt(&mut prompt_cache, &self.cfg, r.id, r.tokens);
+                        let (hit, _) = tree.lookup(prompt, &|b| pool.block_ready(b));
+                        let repin: usize = hit
+                            .iter()
+                            .filter(|b| !resurrected.contains(*b))
+                            .filter_map(|&b| pool.block(b))
+                            .filter(|blk| blk.refs == 0)
+                            .map(|blk| blk.bytes)
+                            .sum();
+                        (hit, repin)
+                    } else {
+                        (Vec::new(), 0)
+                    };
+                    let covered = hit.len() * block_tokens;
+                    let need =
+                        self.slot_prompt_bytes(r.tokens) - self.slot_prompt_bytes(covered);
+                    if pool.fits(pending_bytes + repin + need) {
+                        pending_bytes += repin + need;
+                        resurrected.extend(hit);
                         true
                     } else {
                         false
@@ -603,32 +1023,139 @@ impl CbEngine {
             };
             if !batch.is_empty() {
                 queue_depth.push((now, batcher.len()));
-                let b = batch.len();
-                // the admission iteration replays each request's *first
-                // chunk* — the whole prompt when it fits the budget (the
-                // classic monopolizing path) — priced by the longest first
-                // chunk in the batch
-                let mut pshape = self.shape;
-                pshape.seq_len = batch
-                    .iter()
-                    .map(|r| r.tokens.min(chunk_budget))
-                    .max()
-                    .unwrap_or(1)
-                    .max(1);
-                let prefill = self.strategy.schedule(&pshape);
-                let bd = evaluate_on_trace_batched(&prefill, &self.params, &self.trace, now, b);
-                model_time.accumulate(&bd);
-                let done = now + bd.total();
-                events.push(CbEvent::Admit { ids: batch.iter().map(|r| r.id).collect() });
+                // resolve every batch member: swapped requests return via
+                // the host link; fresh requests attach to shared blocks
+                // (refcounts claimed here) and create the blocks their own
+                // replay will back
+                struct FreshMeta {
+                    req: Request,
+                    budget: usize,
+                    covered: usize,
+                    attach: Vec<u64>,
+                    pending: Vec<(u64, usize, usize)>,
+                    /// suffix rows the admission iteration replays
+                    first: usize,
+                }
+                let mut fresh: Vec<FreshMeta> = Vec::new();
+                let mut swapped_in: Vec<(Request, SwapEntry)> = Vec::new();
+                // (id, is_swap, covered) in batch order, for events/stats
+                let mut order: Vec<(u64, bool, usize)> = Vec::new();
                 for req in &batch {
-                    let first = req.tokens.min(chunk_budget);
-                    if first < req.tokens {
-                        events.push(CbEvent::PrefillChunk { id: req.id, lo: 0, hi: first });
+                    if let Some(e) = swapped.remove(&req.id) {
+                        order.push((req.id, true, 0));
+                        swapped_in.push((req.clone(), e));
+                        continue;
+                    }
+                    let budget = self.decode_budget(req.id);
+                    let (attach, covered, pend) = if prefix_on {
+                        let prompt =
+                            cached_prompt(&mut prompt_cache, &self.cfg, req.id, req.tokens);
+                        let (hit, extendable) =
+                            tree.lookup(prompt, &|b| pool.block_ready(b));
+                        for &b in &hit {
+                            pool.ref_block(b);
+                        }
+                        let covered = hit.len() * block_tokens;
+                        let pend: Vec<(u64, usize, usize)> = if extendable {
+                            tree.extend(prompt, hit.len(), &mut |lo, hi| {
+                                pool.create_block(lo, hi, self.block_bytes_range(lo, hi))
+                            })
+                            .into_iter()
+                            .enumerate()
+                            .map(|(k, b)| {
+                                (
+                                    b,
+                                    covered + k * block_tokens,
+                                    covered + (k + 1) * block_tokens,
+                                )
+                            })
+                            .collect()
+                        } else {
+                            Vec::new()
+                        };
+                        (hit, covered, pend)
+                    } else {
+                        (Vec::new(), 0, Vec::new())
+                    };
+                    let first = (req.tokens - covered).min(chunk_budget);
+                    order.push((req.id, false, covered));
+                    fresh.push(FreshMeta {
+                        req: req.clone(),
+                        budget,
+                        covered,
+                        attach,
+                        pending: pend,
+                        first,
+                    });
+                }
+
+                events.push(CbEvent::Admit { ids: batch.iter().map(|r| r.id).collect() });
+                for &(id, is_swap, covered) in &order {
+                    if is_swap {
+                        events.push(CbEvent::SwapIn { id });
+                    } else if covered > 0 {
+                        events.push(CbEvent::PrefixHit { id, tokens: covered });
+                        prefix_hits += 1;
+                        prefix_hit_tokens += covered;
+                        // modeled prefill FLOPs the attach avoided: the
+                        // covered rows advanced through every layer
+                        recompute_flops_saved += self.shape.n_layers as f64
+                            * self.shape.chunk_block_flops(covered, covered, covered);
+                    }
+                }
+                for m in &fresh {
+                    admitted_prompt_tokens += m.req.tokens;
+                    if m.covered + m.first < m.req.tokens {
+                        events.push(CbEvent::PrefillChunk {
+                            id: m.req.id,
+                            lo: m.covered,
+                            hi: m.covered + m.first,
+                        });
                         prefill_chunks += 1;
                     }
                 }
-                backend.admit(&batch, self.cfg.decode_tokens, chunk_budget)?;
-                for req in &batch {
+
+                // price the iteration: a batched prefill over the fresh
+                // requests' first (suffix) chunks — the classic batched
+                // path, bit for bit, when nothing attached — plus the
+                // swap-in transfers over the host link
+                let mut iter_bd = Breakdown::default();
+                let priced: Vec<&FreshMeta> = fresh.iter().filter(|m| m.first > 0).collect();
+                if !priced.is_empty() {
+                    let b = priced.len();
+                    let max_first = priced.iter().map(|m| m.first).max().unwrap().max(1);
+                    let bd = if priced.iter().all(|m| m.covered == 0) {
+                        let mut pshape = self.shape;
+                        pshape.seq_len = max_first;
+                        let prefill = self.strategy.schedule(&pshape);
+                        evaluate_on_trace_batched(&prefill, &self.params, &self.trace, now, b)
+                    } else {
+                        // suffix-only pricing: covered tokens are never
+                        // recomputed; the chunk schedule charges the new
+                        // rows attending over the covered context
+                        let ctx = priced.iter().map(|m| m.covered + m.first).max().unwrap();
+                        let sched =
+                            self.strategy.prefill_chunk_schedule(&self.shape, max_first, ctx);
+                        evaluate_on_trace_batched(&sched, &self.params, &self.trace, now, b)
+                    };
+                    iter_bd.accumulate(&bd);
+                }
+                if !swapped_in.is_empty() {
+                    let bytes: usize = swapped_in.iter().map(|(_, e)| e.bytes).sum();
+                    iter_bd.comm_s += swap_policy.transfer_s(bytes);
+                }
+                model_time.accumulate(&iter_bd);
+                let done = now + iter_bd.total();
+
+                let fresh_reqs: Vec<Request> = fresh.iter().map(|m| m.req.clone()).collect();
+                let fresh_budgets: Vec<usize> = fresh.iter().map(|m| m.budget).collect();
+                let fresh_prefixes: Vec<PrefixAttach> = fresh
+                    .iter()
+                    .map(|m| PrefixAttach { tokens: m.covered, blocks: m.attach.clone() })
+                    .collect();
+                backend.admit(&fresh_reqs, &fresh_budgets, chunk_budget, &fresh_prefixes)?;
+
+                for (req, &(_, is_swap, covered)) in batch.iter().zip(order.iter()) {
                     let st = stats.entry(req.id).or_insert(ReqStats {
                         queued_since: req.arrival_s,
                         queue_wait_s: 0.0,
@@ -637,11 +1164,16 @@ impl CbEngine {
                     st.queue_wait_s += now - st.queued_since;
                     st.queued_since = now; // in service: not queueing
                     // classic path: the first token's latency is known at
-                    // prefill end. Chunked slots record TTFT at their first
-                    // decode step instead, and an evicted-then-readmitted
-                    // request keeps the TTFT of the first token it ever
-                    // emitted rather than overwriting it here.
-                    if req.tokens <= chunk_budget && done <= horizon_s && !st.ttft_recorded {
+                    // prefill end (the uncovered suffix fits the budget).
+                    // Chunked slots record TTFT at their first decode step
+                    // instead, and an evicted-then-readmitted request keeps
+                    // the TTFT of the first token it ever emitted rather
+                    // than overwriting it here.
+                    if !is_swap
+                        && req.tokens - covered <= chunk_budget
+                        && done <= horizon_s
+                        && !st.ttft_recorded
+                    {
                         st.ttft_recorded = true;
                         ttft.add(done - req.arrival_s);
                     }
@@ -663,28 +1195,82 @@ impl CbEngine {
                         }
                     }
                 } else {
-                    for req in &batch {
-                        let first = req.tokens.min(chunk_budget);
-                        let kv_bytes = self.kv_slot_bytes(first, 0);
-                        budget.acquire(kv_bytes);
-                        slots.push(Slot {
-                            id: req.id,
-                            arrival_s: req.arrival_s,
-                            tokens: req.tokens,
-                            remaining: self.cfg.decode_tokens,
-                            generated: 0,
-                            kv_bytes,
-                            admitted_at: now,
-                            state: if first < req.tokens {
-                                SlotState::Prefilling { next_token: first, total: req.tokens }
-                            } else {
-                                SlotState::Decoding
-                            },
-                            last_token_at: now,
-                        });
+                    // make room (reclaim cached blocks) for everything this
+                    // admission acquires, then seat the slots
+                    let new_private: usize = fresh
+                        .iter()
+                        .map(|m| {
+                            self.slot_prompt_bytes(m.covered + m.first)
+                                - self.slot_prompt_bytes(m.covered)
+                        })
+                        .sum::<usize>()
+                        + swapped_in.iter().map(|(_, e)| e.bytes).sum::<usize>();
+                    reclaim_cached(&mut pool, &mut tree, backend, new_private)?;
+                    // seat slots in BATCH order, so admission sequence
+                    // numbers agree with the Admit event's id order — the
+                    // victim-selection invariant ("newest = most recently
+                    // admitted per the event stream") must hold for mixed
+                    // fresh/swapped batches too
+                    let mut fresh_iter = fresh.into_iter();
+                    let mut swap_iter = swapped_in.into_iter();
+                    for &(_, is_swap, _) in &order {
+                        next_seq += 1;
+                        if is_swap {
+                            let (req, e) =
+                                swap_iter.next().expect("order/swapped lists diverged");
+                            backend.swap_in(req.id)?;
+                            swap_ins += 1;
+                            swap_bytes += e.bytes;
+                            pool.acquire_private(e.bytes);
+                            slots.push(Slot {
+                                id: req.id,
+                                arrival_s: req.arrival_s,
+                                tokens: e.tokens,
+                                remaining: e.remaining,
+                                generated: e.generated,
+                                kv_bytes: e.bytes,
+                                admit_seq: next_seq,
+                                budget: e.budget,
+                                blocks: Vec::new(),
+                                pending: Vec::new(),
+                                state: SlotState::Decoding,
+                                // preserved across the host tier: the next
+                                // inter-token gap includes the swap dwell
+                                last_token_at: e.last_token_at,
+                            });
+                        } else {
+                            let m = fresh_iter.next().expect("order/fresh lists diverged");
+                            let replayed0 = m.covered + m.first;
+                            let kv_bytes = self.slot_prompt_bytes(replayed0)
+                                - self.slot_prompt_bytes(m.covered);
+                            pool.acquire_private(kv_bytes);
+                            let mut slot = Slot {
+                                id: m.req.id,
+                                arrival_s: m.req.arrival_s,
+                                tokens: m.req.tokens,
+                                remaining: m.budget,
+                                generated: 0,
+                                kv_bytes,
+                                admit_seq: next_seq,
+                                budget: m.budget,
+                                blocks: m.attach,
+                                pending: m.pending,
+                                state: if replayed0 < m.req.tokens {
+                                    SlotState::Prefilling {
+                                        next_token: replayed0,
+                                        total: m.req.tokens,
+                                    }
+                                } else {
+                                    SlotState::Decoding
+                                },
+                                last_token_at: now,
+                            };
+                            flush_ready_blocks(&mut slot, replayed0, &mut pool, backend)?;
+                            slots.push(slot);
+                        }
                     }
                 }
-                if budget.cap_bytes > 0 && backend.kv_bytes_in_flight() > budget.cap_bytes {
+                if pool.cap_bytes > 0 && backend.kv_bytes_in_flight() > pool.cap_bytes {
                     kv_violations += 1;
                 }
                 now = done;
@@ -695,22 +1281,64 @@ impl CbEngine {
             if !slots.is_empty() {
                 // KV pressure: this iteration grows every decoding slot by
                 // one token's full-precision rows and every planned
-                // prefilling slot by its chunk's mixed rows; evict newest
+                // prefilling slot by its chunk's mixed rows; preempt newest
                 // slots back to the queue until the growth fits the cap. A
                 // lone slot always fits (over-cap requests were rejected at
-                // admission).
-                let plan = if budget.cap_bytes > 0 {
+                // admission). Each victim is resolved by the swap policy:
+                // move its cache over the host link when the round trip
+                // beats the modeled recompute, else drop it (recompute).
+                let mut swap_out_s = 0.0f64;
+                let plan = if pool.cap_bytes > 0 {
                     loop {
                         let (plan, growth) = self.plan_chunks(&slots, chunk_budget);
-                        if slots.len() <= 1 || budget.used_bytes + growth <= budget.cap_bytes {
+                        if slots.len() <= 1 || pool.fits(growth) {
+                            // cached blocks yield before anything new lands
+                            reclaim_cached(&mut pool, &mut tree, backend, growth)?;
                             break plan;
                         }
                         let i = newest_slot_index(&slots);
                         let s = slots.remove(i);
-                        budget.release(s.kv_bytes);
-                        backend.evict(s.id)?;
-                        events.push(CbEvent::Evict { id: s.id });
-                        kv_evictions += 1;
+                        let occupancy =
+                            self.slot_prompt_bytes(s.tokens) + s.generated * self.kv_step_bytes();
+                        let swap_this = swap_on
+                            && s.state == SlotState::Decoding
+                            && swap_policy.swap_beats_recompute(
+                                occupancy,
+                                self.recompute_cost_s(s.tokens, s.generated, now),
+                            );
+                        pool.release_private(s.kv_bytes);
+                        for &b in &s.blocks {
+                            pool.unref_block(b);
+                        }
+                        // own blocks whose rows never finished replaying
+                        // are dropped outright (nothing backs them)
+                        if let Some(&(first_pending, _, _)) = s.pending.first() {
+                            for b in tree.remove_subtree(first_pending) {
+                                pool.drop_unready(b);
+                            }
+                        }
+                        if swap_this {
+                            backend.swap_out(s.id)?;
+                            events.push(CbEvent::SwapOut { id: s.id });
+                            swap_outs += 1;
+                            swap_bytes += occupancy;
+                            swap_out_s += swap_policy.transfer_s(occupancy);
+                            swapped.insert(
+                                s.id,
+                                SwapEntry {
+                                    tokens: s.tokens,
+                                    generated: s.generated,
+                                    remaining: s.remaining,
+                                    budget: s.budget,
+                                    bytes: occupancy,
+                                    last_token_at: s.last_token_at,
+                                },
+                            );
+                        } else {
+                            backend.evict(s.id)?;
+                            events.push(CbEvent::Evict { id: s.id });
+                            kv_evictions += 1;
+                        }
                         if let Some(st) = stats.get_mut(&s.id) {
                             st.queued_since = now; // queueing again
                         }
@@ -761,7 +1389,10 @@ impl CbEngine {
                     evaluate_on_trace(&fused, &self.params, &self.trace, now)
                 };
                 model_time.accumulate(&bd);
-                let done = now + bd.total();
+                // swap-out transfers ride this iteration's clock (and its
+                // comm accounting) — the host link is priced, not free
+                model_time.comm_s += swap_out_s;
+                let done = now + bd.total() + swap_out_s;
                 if done > horizon_s {
                     // the iteration straddles the horizon: nothing advances
                     now = done;
@@ -784,14 +1415,18 @@ impl CbEngine {
                     });
                     prefill_chunks += 1;
                     backend.prefill_chunk(slots[i].id, next_token, next_token + take)?;
-                    let grown = self.kv_slot_bytes(next_token + take, 0);
-                    budget.acquire(grown - slots[i].kv_bytes);
-                    slots[i].kv_bytes = grown;
+                    let delta = self.slot_prompt_bytes(next_token + take)
+                        - self.slot_prompt_bytes(next_token);
+                    pool.acquire_private(delta);
+                    slots[i].kv_bytes += delta;
                     slots[i].state = if next_token + take == total {
                         SlotState::Decoding
                     } else {
                         SlotState::Prefilling { next_token: next_token + take, total }
                     };
+                    // rows past a block boundary back the slot's own
+                    // blocks now: publish them to the shared store
+                    flush_ready_blocks(&mut slots[i], next_token + take, &mut pool, backend)?;
                 }
                 if b > 0 {
                     backend.step(&decode_ids)?;
@@ -822,12 +1457,18 @@ impl CbEngine {
                         itl.add(now - slots[i].last_token_at);
                     }
                     slots[i].last_token_at = now;
-                    let grown = self.kv_slot_bytes(slots[i].tokens, slots[i].generated);
-                    budget.acquire(grown - slots[i].kv_bytes);
-                    slots[i].kv_bytes = grown;
+                    let step_bytes = self.kv_step_bytes();
+                    pool.acquire_private(step_bytes);
+                    slots[i].kv_bytes += step_bytes;
                     if slots[i].remaining == 0 {
                         let s = slots.swap_remove(i);
-                        budget.release(s.kv_bytes);
+                        pool.release_private(s.kv_bytes);
+                        // the slot's shared blocks stay resident at
+                        // refcount 0 — the "recently freed" prefix a later
+                        // request can attach to without any replay
+                        for &b in &s.blocks {
+                            pool.unref_block(b);
+                        }
                         backend.complete(s.id)?;
                         events.push(CbEvent::Complete { id: s.id });
                         tally.record(s.arrival_s, now);
@@ -837,7 +1478,7 @@ impl CbEngine {
                         i += 1;
                     }
                 }
-                if budget.cap_bytes > 0 && backend.kv_bytes_in_flight() > budget.cap_bytes {
+                if pool.cap_bytes > 0 && backend.kv_bytes_in_flight() > pool.cap_bytes {
                     kv_violations += 1;
                 }
                 continue;
@@ -901,10 +1542,17 @@ impl CbEngine {
             events,
             prefill_chunks,
             model_time,
-            kv_peak_bytes: budget.peak_bytes,
-            kv_cap_bytes: budget.cap_bytes,
+            kv_peak_bytes: pool.peak_bytes,
+            kv_cap_bytes: pool.cap_bytes,
             kv_evictions,
             kv_violations,
+            prefix_hits,
+            prefix_hit_tokens,
+            admitted_prompt_tokens,
+            recompute_flops_saved,
+            swap_outs,
+            swap_ins,
+            swap_bytes,
         })
     }
 }
@@ -1319,6 +1967,318 @@ mod tests {
             s_chunk.completed,
             s_mono.completed
         );
+    }
+
+    fn mk_slot(id: u64, admit_seq: u64) -> Slot {
+        Slot {
+            id,
+            arrival_s: 0.0,
+            tokens: 8,
+            remaining: 1,
+            generated: 0,
+            kv_bytes: 0,
+            admit_seq,
+            budget: 1,
+            blocks: Vec::new(),
+            pending: Vec::new(),
+            state: SlotState::Decoding,
+            last_token_at: 0.0,
+        }
+    }
+
+    #[test]
+    fn newest_slot_is_latest_admission_not_largest_id() {
+        // regression (eviction victim selection): after an eviction wave
+        // requeues [3, 2] and both readmit in one batch, id 3 holds the
+        // earlier admission sequence. The victim must be id 2 — the most
+        // recently readmitted slot — where the old (admitted_at, id)
+        // tiebreak picked id 3 because the batch shared one timestamp.
+        let slots = vec![mk_slot(0, 0), mk_slot(1, 1), mk_slot(3, 4), mk_slot(2, 5)];
+        assert_eq!(newest_slot_index(&slots), 3, "index of id 2 (seq 5)");
+        // unique sequences: order of insertion never matters
+        let slots = vec![mk_slot(2, 5), mk_slot(3, 4), mk_slot(0, 0)];
+        assert_eq!(newest_slot_index(&slots), 0);
+    }
+
+    #[test]
+    fn eviction_victims_follow_current_episode_admission_order() {
+        // the spec the admit_seq fix enforces, checked over the whole
+        // eviction-thrash event stream: every preemption victim is the most
+        // recently (re)admitted slot still in flight — replaying the event
+        // stream with an admission-ordered shadow list must always evict
+        // its tail element, never the oldest
+        let base =
+            CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 512, ..CbConfig::default() };
+        let probe = CbEngine::new(
+            TransformerShape::paper_encoder(128),
+            Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+            SimParams::paper_encoder(),
+            BandwidthTrace::constant(100.0, 1e9),
+            base.clone(),
+        );
+        let cap = 2 * probe.kv_projection(128);
+        let mut engine = CbEngine::new(
+            probe.shape,
+            probe.strategy,
+            probe.params.clone(),
+            probe.trace.clone(),
+            CbConfig { kv_cap_bytes: cap, ..base },
+        );
+        let arrivals: Vec<Request> =
+            (0..4u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 128 }).collect();
+        let r = engine.serve_stream(arrivals, 1e4);
+        assert!(r.kv_evictions > 0, "thrash trace must evict: {r:?}");
+        assert_eq!(r.completed, 4);
+        let mut in_flight: Vec<u64> = Vec::new(); // admission order, oldest first
+        for e in &r.events {
+            match e {
+                CbEvent::Admit { ids } => in_flight.extend(ids.iter().copied()),
+                CbEvent::Evict { id } | CbEvent::SwapOut { id } => {
+                    assert!(in_flight.len() > 1, "a lone slot must never be evicted");
+                    assert_eq!(
+                        in_flight.last(),
+                        Some(id),
+                        "victim {id} is not the most recently admitted of {in_flight:?}"
+                    );
+                    in_flight.pop();
+                }
+                CbEvent::Complete { id } => in_flight.retain(|x| x != id),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_cache_with_oversized_blocks_reproduces_baseline_stream() {
+        // sharing anchor: a block size above every prompt makes attachment
+        // impossible, and full-length prompts make positional accounting
+        // coincide with the classic bytes — so --prefix-cache with such
+        // blocks must reproduce the prefix-off event stream bit for bit,
+        // capped or not
+        let base = CbConfig { max_batch: 4, decode_tokens: 16, ..CbConfig::default() };
+        let probe = astra_engine(base.clone());
+        let cap = 2 * probe.kv_projection(1024) + probe.kv_step_bytes();
+        for kv_cap_bytes in [0usize, cap] {
+            let off = CbConfig { kv_cap_bytes, ..base.clone() };
+            let on = CbConfig {
+                prefix_cache: true,
+                kv_block_tokens: 2048,
+                prompt_groups: 1,
+                seed: 9,
+                ..off.clone()
+            };
+            let ra = astra_engine(off).serve_poisson(&mut Rng::new(13), 12.0, 40.0);
+            let rb = astra_engine(on).serve_poisson(&mut Rng::new(13), 12.0, 40.0);
+            assert_eq!(ra.events, rb.events, "cap={kv_cap_bytes}");
+            assert_eq!(ra.completed, rb.completed, "cap={kv_cap_bytes}");
+            assert_eq!(rb.prefix_hits, 0, "cap={kv_cap_bytes}");
+            assert_eq!(ra.kv_peak_bytes, rb.kv_peak_bytes, "cap={kv_cap_bytes}");
+        }
+    }
+
+    #[test]
+    fn prefix_cache_attaches_shared_prompts_and_charges_suffix_only() {
+        // one prompt group: every request shares the whole (block-aligned)
+        // prompt. After the first creator replays, later admissions attach
+        // to resident or recently-freed blocks — PrefixHit events, high
+        // token hit rate, and a lower byte peak than the unshared run
+        let base = CbConfig {
+            max_slots: 8,
+            max_batch: 4,
+            decode_tokens: 8,
+            ..CbConfig::default()
+        };
+        let shared = CbConfig {
+            prefix_cache: true,
+            kv_block_tokens: 64,
+            prompt_groups: 1,
+            seed: 5,
+            ..base.clone()
+        };
+        let r_plain = astra_engine(base).serve_stream(saturating(24), 1e4);
+        let mut cb = astra_engine(shared);
+        let r = cb.serve_stream(saturating(24), 1e4);
+        assert_eq!(r.completed, 24, "{r:?}");
+        assert!(r.prefix_hits > 0, "{r:?}");
+        assert!(r.events.iter().any(|e| matches!(e, CbEvent::PrefixHit { .. })));
+        // block-aligned coverage, counted against admitted prompt tokens
+        assert_eq!(r.prefix_hit_tokens % 64, 0);
+        assert_eq!(r.admitted_prompt_tokens, 24 * 1024);
+        assert!(r.prefix_hit_rate() > 0.5, "hit rate {}", r.prefix_hit_rate());
+        assert!(r.recompute_flops_saved > 0.0);
+        // identical prompts shared once: resident peak far below unshared
+        assert!(
+            r.kv_peak_bytes < r_plain.kv_peak_bytes,
+            "{} !< {}",
+            r.kv_peak_bytes,
+            r_plain.kv_peak_bytes
+        );
+        // a fully covered admission replays nothing and still completes:
+        // its slot decodes the full budget (steps counted per id)
+        let steps: usize = r
+            .events
+            .iter()
+            .map(|e| match e {
+                CbEvent::Decode { ids } => ids.len(),
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(steps, 24 * 8);
+    }
+
+    #[test]
+    fn negligible_swap_bandwidth_reproduces_recompute_stream() {
+        // the swap decision prices the transfer; at ~0 bandwidth it can
+        // never beat recompute, so the stream must equal the swap-off run
+        // bit for bit and no Swap events may appear
+        let base =
+            CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 512, ..CbConfig::default() };
+        let probe = CbEngine::new(
+            TransformerShape::paper_encoder(128),
+            Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+            SimParams::paper_encoder(),
+            BandwidthTrace::constant(100.0, 1e9),
+            base.clone(),
+        );
+        let cap = 2 * probe.kv_projection(128);
+        let mk = |swap_mbps: f64| {
+            CbEngine::new(
+                probe.shape,
+                probe.strategy,
+                probe.params.clone(),
+                probe.trace.clone(),
+                CbConfig {
+                    kv_cap_bytes: cap,
+                    swap_bandwidth_mbps: swap_mbps,
+                    ..base.clone()
+                },
+            )
+        };
+        let arrivals: Vec<Request> =
+            (0..4u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 128 }).collect();
+        let r_off = mk(0.0).serve_stream(arrivals.clone(), 1e4);
+        let r_slow = mk(1e-6).serve_stream(arrivals, 1e4);
+        assert!(r_off.kv_evictions > 0);
+        assert_eq!(r_off.events, r_slow.events);
+        assert_eq!(r_slow.swap_outs, 0);
+        assert_eq!(r_slow.swap_bytes, 0);
+        assert!(!r_slow.events.iter().any(|e| matches!(e, CbEvent::SwapOut { .. })));
+    }
+
+    #[test]
+    fn fast_host_link_swaps_and_preserves_decode_progress() {
+        // with a fast host link the round trip beats re-prefill +
+        // regeneration, so pressure victims swap: SwapOut/SwapIn events,
+        // byte traffic, and — the point of swapping — total decode steps
+        // equal the exact budget (recompute restarts waste steps)
+        let base =
+            CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 512, ..CbConfig::default() };
+        let probe = CbEngine::new(
+            TransformerShape::paper_encoder(128),
+            Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+            SimParams::paper_encoder(),
+            BandwidthTrace::constant(100.0, 1e9),
+            base.clone(),
+        );
+        let cap = 2 * probe.kv_projection(128);
+        let mk = |swap_mbps: f64| {
+            CbEngine::new(
+                probe.shape,
+                probe.strategy,
+                probe.params.clone(),
+                probe.trace.clone(),
+                CbConfig {
+                    kv_cap_bytes: cap,
+                    swap_bandwidth_mbps: swap_mbps,
+                    ..base.clone()
+                },
+            )
+        };
+        let arrivals: Vec<Request> =
+            (0..4u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 128 }).collect();
+        let steps_of = |r: &CbReport| -> usize {
+            r.events
+                .iter()
+                .map(|e| match e {
+                    CbEvent::Decode { ids } => ids.len(),
+                    _ => 0,
+                })
+                .sum()
+        };
+        let r_swap = mk(1e6).serve_stream(arrivals.clone(), 1e5);
+        let r_recompute = mk(0.0).serve_stream(arrivals, 1e5);
+        assert_eq!(r_swap.completed, 4, "{r_swap:?}");
+        assert!(r_swap.swap_outs > 0, "{r_swap:?}");
+        assert_eq!(r_swap.swap_outs, r_swap.swap_ins, "everything swapped back in");
+        assert!(r_swap.swap_bytes > 0);
+        assert!(r_swap.events.iter().any(|e| matches!(e, CbEvent::SwapOut { .. })));
+        assert!(r_swap.events.iter().any(|e| matches!(e, CbEvent::SwapIn { .. })));
+        // progress preserved: exactly budget steps per request
+        assert_eq!(steps_of(&r_swap), 4 * 512);
+        // recompute thrash regenerates: strictly more raw decode steps
+        assert!(r_recompute.kv_evictions > 0);
+        assert!(steps_of(&r_recompute) > 4 * 512, "{}", steps_of(&r_recompute));
+    }
+
+    #[test]
+    fn decode_jitter_staggers_completions_within_bounds() {
+        let base = CbConfig {
+            max_slots: 8,
+            max_batch: 8,
+            decode_tokens: 64,
+            decode_jitter: 16,
+            seed: 21,
+            ..CbConfig::default()
+        };
+        let probe = astra_engine(base.clone());
+        // budgets are deterministic in (seed, id) and stay inside ± jitter
+        let mut distinct = std::collections::BTreeSet::new();
+        for id in 0..64u64 {
+            let b = probe.decode_budget(id);
+            assert!((48..=80).contains(&b), "id {id}: budget {b}");
+            assert_eq!(b, probe.decode_budget(id), "id {id}: not deterministic");
+            distinct.insert(b);
+        }
+        assert!(distinct.len() > 4, "jitter produced only {distinct:?}");
+        // a same-length wave no longer completes in lockstep: per-request
+        // decode step counts differ, and completions spread over several
+        // distinct iterations rather than one tail burst
+        let mut cb = astra_engine(base.clone());
+        let r = cb.serve_stream(saturating(8), 1e4);
+        assert_eq!(r.completed, 8);
+        let mut steps: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut completes_after_decodes: Vec<usize> = Vec::new();
+        let mut decodes = 0usize;
+        for e in &r.events {
+            match e {
+                CbEvent::Decode { ids } => {
+                    decodes += 1;
+                    for id in ids {
+                        *steps.entry(*id).or_insert(0) += 1;
+                    }
+                }
+                CbEvent::Complete { id } => {
+                    completes_after_decodes.push(decodes);
+                    assert_eq!(steps[id], cb.decode_budget(*id), "request {id}");
+                }
+                _ => {}
+            }
+        }
+        let spread: std::collections::BTreeSet<usize> =
+            completes_after_decodes.iter().copied().collect();
+        assert!(spread.len() > 1, "jittered wave still completed in lockstep");
+        // the jitter-off control: every budget identical, one tail burst
+        let mut plain = astra_engine(CbConfig { decode_jitter: 0, ..base });
+        let rp = plain.serve_stream(saturating(8), 1e4);
+        let plain_steps: usize = rp
+            .events
+            .iter()
+            .map(|e| match e {
+                CbEvent::Decode { ids } => ids.len(),
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(plain_steps, 8 * 64);
     }
 
     #[test]

@@ -137,10 +137,11 @@ impl MetricSet {
     }
 }
 
-/// Is a larger value better for this metric? Throughput-like metrics
-/// regress downward; everything else (latencies, TTFT, ITL) upward.
+/// Is a larger value better for this metric? Throughput-like metrics and
+/// cache hit rates regress downward; everything else (latencies, TTFT,
+/// ITL, swap traffic) upward.
 fn higher_is_better(name: &str) -> bool {
-    ["throughput", "goodput"].iter().any(|k| name.contains(k))
+    ["throughput", "goodput", "hit_rate"].iter().any(|k| name.contains(k))
 }
 
 /// Integer-valued determinism pins — completion/step/event counts and the
@@ -310,6 +311,19 @@ mod tests {
         // improvements never trip the gate
         let better = metric_json(&[("serve/p95", 0.150), ("serve/throughput", 40.0)]);
         assert!(compare_metrics(&base, &better, 0.02).unwrap().is_empty());
+        // prefix hit rate regresses downward (like throughput); swap
+        // traffic regresses upward (like a latency)
+        let kv = metric_json(&[("serve/prefix_hit_rate", 0.8), ("serve/swap_bytes", 1000.0)]);
+        let worse = metric_json(&[("serve/prefix_hit_rate", 0.7), ("serve/swap_bytes", 1000.0)]);
+        let r = compare_metrics(&kv, &worse, 0.02).unwrap();
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].contains("hit_rate"), "{r:?}");
+        let bloated = metric_json(&[("serve/prefix_hit_rate", 0.8), ("serve/swap_bytes", 1100.0)]);
+        let r = compare_metrics(&kv, &bloated, 0.02).unwrap();
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].contains("swap_bytes"), "{r:?}");
+        let improved = metric_json(&[("serve/prefix_hit_rate", 0.9), ("serve/swap_bytes", 500.0)]);
+        assert!(compare_metrics(&kv, &improved, 0.02).unwrap().is_empty());
     }
 
     #[test]

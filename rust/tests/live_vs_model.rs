@@ -66,6 +66,11 @@ fn assert_agree(m: &CbReport, live: &LiveReport, label: &str) {
     assert_eq!(m.kv_rejected, live.report.kv_rejected, "{label}");
     assert_eq!(m.kv_evictions, live.report.kv_evictions, "{label}");
     assert_eq!(m.kv_peak_bytes, live.report.kv_peak_bytes, "{label}");
+    assert_eq!(m.prefix_hits, live.report.prefix_hits, "{label}");
+    assert_eq!(m.prefix_hit_tokens, live.report.prefix_hit_tokens, "{label}");
+    assert_eq!(m.swap_outs, live.report.swap_outs, "{label}");
+    assert_eq!(m.swap_ins, live.report.swap_ins, "{label}");
+    assert_eq!(m.swap_bytes, live.report.swap_bytes, "{label}");
     // the live sessions' real memory never contradicted the model's gate
     assert_eq!(live.report.kv_violations, 0, "{label}");
 }
@@ -168,6 +173,139 @@ fn live_and_model_agree_with_chunked_prefill() {
     a.sort();
     b.sort();
     assert_eq!(a, b, "chunked replay changed greedy generations");
+}
+
+#[test]
+fn live_and_model_agree_on_shared_prefix_traces() {
+    // the prefix-cache differential: grouped prompts share block-aligned
+    // prefixes, the model's radix decisions (PrefixHit, suffix-only
+    // replay, block-store registration/reclaim) must be executed exactly
+    // by the live backend on fixed-seed traces — plain, chunked, and
+    // KV-capped — and the dedup'd live bytes must never contradict the
+    // pool's gate
+    let cluster = tiny_cluster(2, 13);
+    let seq = cluster.artifact.meta.seq_len;
+    let base = CbConfig {
+        max_slots: 4,
+        max_batch: 4,
+        decode_tokens: 6,
+        prefix_cache: true,
+        kv_block_tokens: 4,
+        prompt_groups: 2,
+        ..CbConfig::default()
+    };
+    let chunked = CbConfig { prefill_chunk_tokens: 5, ..base.clone() };
+    let capped = {
+        let probe = live_engine(&cluster, base.clone(), params(), trace());
+        CbConfig { kv_cap_bytes: 2 * probe.kv_projection(seq), ..base.clone() }
+    };
+    for (seed, rate, cfg) in
+        [(101u64, 8.0, &base), (102, 30.0, &chunked), (103, 25.0, &capped)]
+    {
+        let arrivals = live_arrivals(&mut Rng::new(seed), rate, 4.0, seq);
+        assert!(arrivals.len() > 3, "seed {seed} produced {} arrivals", arrivals.len());
+        let (m, live) = run_pair(&cluster, cfg, &arrivals, 1e4);
+        let label = format!("prefix seed {seed} rate {rate}");
+        assert_agree(&m, &live, &label);
+        assert!(m.prefix_hits > 0, "{label}: grouped prompts never shared a block");
+        assert!(
+            m.events.iter().any(|e| matches!(e, CbEvent::PrefixHit { .. })),
+            "{label}"
+        );
+        // hits are block-aligned and bounded by what was admitted
+        assert_eq!(m.prefix_hit_tokens % 4, 0, "{label}");
+        assert!(m.prefix_hit_rate() > 0.0, "{label}");
+        assert!(m.prefix_hit_rate() <= 1.0, "{label}");
+        assert!(m.completed > 0, "{label}");
+        // real full-length generations for every completion
+        let full = live
+            .generations
+            .iter()
+            .filter(|(_, toks)| toks.len() == cfg.decode_tokens)
+            .count();
+        assert_eq!(full, m.completed, "{label}");
+    }
+
+    // suffix-only replay must not change a single generated token. The
+    // control keeps positional locality (the prefix-cache row-selection
+    // rule) but disables sharing via an oversized block, so every prompt
+    // replays in full: same cache contents per request, different
+    // schedule, identical generations. (A prefix-OFF run is NOT a valid
+    // control — classic locality scales with prompt length and holds
+    // different rows in full precision, legitimately changing logits.)
+    let arrivals = live_arrivals(&mut Rng::new(101), 8.0, 4.0, seq);
+    let (_, live_on) = run_pair(&cluster, &base, &arrivals, 1e4);
+    let nohits = CbConfig { kv_block_tokens: seq + 1, ..base.clone() };
+    let (m_nohits, live_nohits) = run_pair(&cluster, &nohits, &arrivals, 1e4);
+    assert_eq!(m_nohits.prefix_hits, 0, "oversized blocks must never share");
+    let mut a = live_on.generations.clone();
+    let mut b = live_nohits.generations.clone();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b, "prefix attach changed greedy generations");
+    // and the cached run is reproducible bit for bit
+    let (_, live_again) = run_pair(&cluster, &base, &arrivals, 1e4);
+    assert_eq!(live_again.report.events, live_on.report.events);
+    assert_eq!(live_again.generations, live_on.generations);
+}
+
+#[test]
+fn live_and_model_agree_on_swap_thrash_trace() {
+    // the swap differential: a tight cap + long decode budgets force
+    // preemption every few iterations, and a fast host link makes the
+    // priced transfer beat recompute — sessions move to the host tier and
+    // back (SwapOut/SwapIn events) with decode progress preserved, on
+    // both backends identically
+    let cluster = tiny_cluster(2, 17);
+    let seq = cluster.artifact.meta.seq_len;
+    let base = CbConfig {
+        max_slots: 4,
+        max_batch: 4,
+        decode_tokens: 3 * seq,
+        swap_bandwidth_mbps: 1e5,
+        swap_latency_s: 1e-4,
+        ..CbConfig::default()
+    };
+    let probe = live_engine(&cluster, base.clone(), params(), trace());
+    let capped = CbConfig { kv_cap_bytes: 2 * probe.kv_projection(seq), ..base.clone() };
+    let arrivals: Vec<Request> =
+        (1..=4u64).map(|id| Request { id, arrival_s: 0.0, tokens: seq }).collect();
+    let (m, live) = run_pair(&cluster, &capped, &arrivals, 1e5);
+    assert_agree(&m, &live, "swap thrash");
+    assert!(m.swap_outs > 0, "pressure must swap on the fast link: {m:?}");
+    assert_eq!(m.swap_outs, m.swap_ins, "everything swapped back in: {m:?}");
+    assert!(m.swap_bytes > 0);
+    assert!(m.events.iter().any(|e| matches!(e, CbEvent::SwapOut { .. })));
+    assert!(m.events.iter().any(|e| matches!(e, CbEvent::SwapIn { .. })));
+    assert_eq!(m.completed, 4, "{m:?}");
+    // swap preserves decode progress: every request generates its full
+    // budget, and the token sequences equal the recompute-preemption run
+    // (greedy decode is deterministic either way)
+    for (id, toks) in &live.generations {
+        assert_eq!(toks.len(), 3 * seq, "request {id}");
+    }
+    let recompute = CbConfig { swap_bandwidth_mbps: 0.0, ..capped.clone() };
+    let (m_rec, live_rec) = run_pair(&cluster, &recompute, &arrivals, 1e5);
+    assert!(m_rec.kv_evictions > 0, "recompute control must evict: {m_rec:?}");
+    assert_eq!(m_rec.swap_outs, 0);
+    let mut a = live.generations.clone();
+    let mut b = live_rec.generations.clone();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b, "swap changed what a request decodes");
+    // the swapped schedule wastes no decode work: it takes exactly the
+    // budget in steps, while recompute regenerates evicted progress
+    let steps = |r: &CbReport| -> usize {
+        r.events
+            .iter()
+            .map(|e| match e {
+                CbEvent::Decode { ids } => ids.len(),
+                _ => 0,
+            })
+            .sum()
+    };
+    assert_eq!(steps(&m), 4 * 3 * seq, "{m:?}");
+    assert!(steps(&m_rec) > 4 * 3 * seq, "{}", steps(&m_rec));
 }
 
 #[test]
