@@ -11,6 +11,7 @@
 use astra::comm::trace::BandwidthTrace;
 use astra::model::shape::{TransformerShape, VqSetting};
 use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::policy::PolicyKind;
 use astra::server::scheduler::{CbConfig, CbEngine};
 use astra::server::Request;
 use astra::sim::latency::SimParams;
@@ -69,6 +70,17 @@ fn emit_json(out: &str) {
             ..CbConfig::default()
         }
     };
+    // two-class mixed trace (odd ids carry a tight 1.5 s deadline, even
+    // ids are effectively deadline-free): emitted twice, FIFO vs the
+    // slo-class policy, so the per-class attainment/p95 keys pin both the
+    // baseline behavior and the policy's win
+    let two_classes = vec![1e9, 1.5];
+    let classed_fifo = CbConfig { classes: two_classes.clone(), ..CbConfig::default() };
+    let classed_slo = CbConfig {
+        policy: PolicyKind::SloClass,
+        classes: two_classes,
+        ..CbConfig::default()
+    };
     let cases: Vec<(&str, BandwidthTrace, CbConfig, Load)> = vec![
         ("fifo1_const100_sat", const100.clone(), base.clone().batch1(), Load::Saturating(2000)),
         ("cb8_const100_sat", const100.clone(), base.clone(), Load::Saturating(2000)),
@@ -77,7 +89,9 @@ fn emit_json(out: &str) {
         ("cb8_chunk256_sat", const100.clone(), chunked.clone(), Load::Saturating(2000)),
         ("cb8_chunk256_poisson8", const100.clone(), chunked, Load::Poisson(8.0)),
         ("cb8_prefix_g4_sat", const100.clone(), prefixed, Load::Saturating(2000)),
-        ("cb8_swap_d512_sat", const100, swap, Load::Saturating(200)),
+        ("cb8_swap_d512_sat", const100.clone(), swap, Load::Saturating(200)),
+        ("cb8_classes2_fifo_sat", const100.clone(), classed_fifo, Load::Saturating(200)),
+        ("cb8_classes2_slo_sat", const100, classed_slo, Load::Saturating(200)),
     ];
     for (name, trace, cfg, load) in cases {
         let mut e = engine(trace, cfg);
@@ -94,6 +108,12 @@ fn emit_json(out: &str) {
         m.push(name, "prefill_chunks", r.prefill_chunks as f64);
         m.push(name, "prefix_hit_rate", r.prefix_hit_rate());
         m.push(name, "swap_bytes", r.swap_bytes as f64);
+        // per-class SLO metrics (classed scenarios only): attainment
+        // regresses downward in the gate, latencies upward
+        for c in &mut r.classes {
+            m.push(name, &format!("class{}_slo_attainment", c.class), c.slo_attainment());
+            m.push(name, &format!("class{}_p95", c.class), c.latency.p95());
+        }
     }
     m.write(out).expect("writing bench metrics");
 }

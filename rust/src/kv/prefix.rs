@@ -81,6 +81,28 @@ impl RadixTree {
         (out, true)
     }
 
+    /// Number of leading `prompt` tokens covered by ready blocks — the
+    /// same walk as [`Self::lookup`] without materializing the block
+    /// list. This is the coverage query admission-ordering policies rank
+    /// candidates by (`server/policy`), called once per queued request
+    /// per scheduling decision, so it must stay allocation-free.
+    pub fn covered_tokens(&self, prompt: &[usize], is_ready: &dyn Fn(u64) -> bool) -> usize {
+        let b = self.block_tokens;
+        let mut ni = 0usize;
+        let mut covered = 0usize;
+        for k in 0..prompt.len() / b {
+            let key = &prompt[k * b..(k + 1) * b];
+            match self.node(ni).children.get(key) {
+                Some(&ci) if is_ready(self.node(ci).block) => {
+                    covered += b;
+                    ni = ci;
+                }
+                _ => return covered,
+            }
+        }
+        covered
+    }
+
     /// Extend the path for `prompt` past its first `from_blocks` blocks
     /// (which must already exist — the chain [`Self::lookup`] just
     /// returned), creating one block per remaining full block via
@@ -195,6 +217,31 @@ mod tests {
         // shorter than a block: nothing to share
         let (hit, _) = t.lookup(&prompt[..3], &always);
         assert!(hit.is_empty());
+    }
+
+    #[test]
+    fn covered_tokens_agrees_with_lookup() {
+        let mut t = RadixTree::new(4);
+        let prompt: Vec<usize> = (0..10).collect();
+        let mut next = 0u64;
+        t.extend(&prompt, 0, &mut |_, _| {
+            next += 1;
+            next
+        });
+        for probe in [
+            prompt.clone(),
+            prompt[..3].to_vec(),
+            (0..4).chain(100..106).collect::<Vec<usize>>(),
+            (50..60).collect::<Vec<usize>>(),
+        ] {
+            let (hit, _) = t.lookup(&probe, &always);
+            assert_eq!(t.covered_tokens(&probe, &always), hit.len() * 4, "{probe:?}");
+        }
+        // readiness gates coverage exactly like lookup
+        let first_only = |b: u64| b == 1;
+        let (hit, _) = t.lookup(&prompt, &first_only);
+        assert_eq!(t.covered_tokens(&prompt, &first_only), hit.len() * 4);
+        assert_eq!(t.covered_tokens(&prompt, &first_only), 4);
     }
 
     #[test]

@@ -43,10 +43,27 @@
 //!   [`coordinator::decode::DecodeSession::replay_range`]), greedy
 //!   generations — behind `astra serve-cb --live`.
 //!   `tests/live_vs_model.rs` is the differential harness pinning both
-//!   backends to identical decision streams, chunked or not. Reports cover
+//!   backends to identical decision streams, chunked or not. Every
+//!   *discretionary* decision — which eligible request is admitted next,
+//!   which slot a preemption evicts, whether to evict proactively to
+//!   protect an SLO — is delegated to a pluggable
+//!   [`server::policy::SchedPolicy`] (`CbConfig::policy` / `--policy`)
+//!   over immutable queue/slot snapshots: [`server::policy::Fifo`] (the
+//!   default, reproducing the pre-policy event streams bit for bit),
+//!   [`server::policy::PrefixAware`] (admissions ordered by radix-tree
+//!   covered-prefix length with an aging bound so cold requests cannot
+//!   starve), and [`server::policy::SloClass`] (priority classes with
+//!   per-class deadlines via `CbConfig::classes` / `--classes`:
+//!   highest-class-first admission, lowest-class-first victims, classes
+//!   preemption-exempt inside their deadline budget, and a proactive
+//!   hook trading an already-blown low-class SLO for a salvageable
+//!   high-class one). Mechanism never moves: the clock, KV pool, and
+//!   backends stay in the loop, so any policy preserves the
+//!   live-vs-model differential by construction. Reports cover
 //!   p50/p95/p99 latency, TTFT (recorded once per request from its
 //!   original arrival, eviction-safe), inter-token latency, queue depth,
-//!   censored requests, goodput under an SLO, and KV
+//!   censored requests, goodput under an SLO, per-class
+//!   latency/attainment/goodput breakdowns, and KV
 //!   peak/eviction/violation counters.
 //! * [`kv`] is the block-based KV memory subsystem under the scheduler:
 //!   [`kv::pool::KvPool`] accounts refcounted fixed-token blocks whose

@@ -78,6 +78,20 @@ SUBCOMMANDS
              --decode-jitter J: seeded per-request decode budgets in
              decode-tokens +/- J, so same-length waves stop completing
              in lockstep
+             --policy fifo|prefix-aware|slo-class: the scheduling-policy
+             layer — who is admitted next, who loses a slot under KV
+             pressure, whether to preempt proactively for SLOs. fifo
+             (default) reproduces the pre-policy event streams bit for
+             bit; prefix-aware orders eligible admissions by radix-tree
+             covered-prefix length (aging-bounded, needs --prefix-cache
+             to matter); slo-class schedules priority classes
+             --classes d0,d1,...: per-class latency deadlines in seconds
+             (higher class index = higher priority; ids map round-robin;
+             <=0 = no deadline). Adds per-class attainment/p95/goodput
+             report rows under any policy, and implies --policy
+             slo-class unless one is given
+             --age-bound S: seconds of queueing per aging step for the
+             reordering policies (starvation bound; default 0.5)
              --live: drive real DecodeSessions (variable-length prompts,
              mixed-precision KV caches, greedy generations) through the
              same slot scheduler; uses --artifacts DIR when a decoder

@@ -72,18 +72,27 @@ impl Batcher {
 
     /// `next_batch` additionally capped at `cap` requests — the continuous
     /// batching admission path, where the cap is the number of free decode
-    /// slots. The full/deadline trigger still looks at the whole queue.
+    /// slots.
     pub fn next_batch_capped(&mut self, now: f64, force: bool, cap: usize) -> Vec<Request> {
         self.next_batch_filtered(now, force, cap, |_| true)
     }
 
     /// `next_batch_capped` with a per-request admission predicate: requests
-    /// are popped front-to-back (FIFO — no reordering around a blocked
-    /// head) and the batch stops at the first request `fits` rejects. The
-    /// continuous-batching scheduler uses this for the KV-pressure gate,
-    /// where `fits` checks the request's projected cache bytes (net of any
-    /// shared-prefix blocks) against the remaining room in the
+    /// are taken front-to-back (FIFO — no reordering around a blocked
+    /// head) and the batch stops at the first request `fits` rejects.
+    /// The continuous-batching scheduler uses this for the KV-pressure
+    /// gate, where `fits` checks the request's projected cache bytes (net
+    /// of any shared-prefix blocks) against the remaining room in the
     /// [`crate::kv::pool::KvPool`].
+    ///
+    /// The full/deadline trigger is evaluated over the *eligible* set —
+    /// the admissible FIFO prefix, up to `max_batch` — not the raw queue:
+    /// an ineligible head can no longer fire an empty batch, and
+    /// ineligible requests inflating the queue length no longer fire an
+    /// undersized batch before the fill deadline. (With a trivial `fits`
+    /// the eligible set *is* the queue head, so the trigger is unchanged.)
+    /// `cap` (free slots) limits how much of a triggered batch is handed
+    /// out, never whether a batch's worth of work is deemed waiting.
     pub fn next_batch_filtered(
         &mut self,
         now: f64,
@@ -94,23 +103,79 @@ impl Batcher {
         if self.queue.is_empty() || cap == 0 {
             return Vec::new();
         }
-        let oldest_wait = now - self.queue.front().unwrap().arrival_s;
-        if self.queue.len() >= self.max_batch || oldest_wait >= self.max_wait_s || force {
-            let take = self.queue.len().min(self.max_batch).min(cap);
-            let mut out = Vec::with_capacity(take);
-            while out.len() < take {
-                let admissible = match self.queue.front() {
-                    Some(r) => fits(r),
-                    None => false,
-                };
-                if !admissible {
-                    break;
-                }
-                out.push(self.queue.pop_front().unwrap());
+        // eligible prefix, assessed in place (nothing pops unless the
+        // trigger fires)
+        let mut eligible = 0usize;
+        for r in self.queue.iter().take(self.max_batch) {
+            if !fits(r) {
+                break;
             }
-            return out;
+            eligible += 1;
+        }
+        if eligible == 0 {
+            return Vec::new();
+        }
+        let oldest_wait = now - self.queue.front().unwrap().arrival_s;
+        if eligible >= self.max_batch || oldest_wait >= self.max_wait_s || force {
+            return (0..eligible.min(cap)).map(|_| self.queue.pop_front().unwrap()).collect();
         }
         Vec::new()
+    }
+
+    /// Policy-ordered batch formation for reordering
+    /// [`crate::server::policy::SchedPolicy`]s: `order` lists queue
+    /// positions (front = 0) most-preferred first, and requests `fits`
+    /// rejects are *skipped*, not head-blocking. The full/deadline
+    /// trigger is evaluated over the eligible picks exactly like
+    /// [`Self::next_batch_filtered`] (the deadline clock runs from the
+    /// oldest eligible pick), and `cap` truncates the handed-out batch.
+    /// Returns the admitted requests in pick order — the order slots are
+    /// seated and `Admit` ids are recorded.
+    pub fn next_batch_ordered(
+        &mut self,
+        now: f64,
+        force: bool,
+        cap: usize,
+        order: &[usize],
+        mut fits: impl FnMut(&Request) -> bool,
+    ) -> Vec<Request> {
+        if self.queue.is_empty() || cap == 0 {
+            return Vec::new();
+        }
+        let mut picks: Vec<usize> = Vec::new();
+        let mut oldest = f64::INFINITY;
+        for &qi in order {
+            if picks.len() >= self.max_batch {
+                break;
+            }
+            let Some(r) = self.queue.get(qi) else { continue };
+            if fits(r) {
+                picks.push(qi);
+                oldest = oldest.min(r.arrival_s);
+            }
+        }
+        if picks.is_empty() {
+            return Vec::new();
+        }
+        if picks.len() >= self.max_batch || now - oldest >= self.max_wait_s || force {
+            picks.truncate(cap);
+            // remove back-to-front so earlier indices stay valid, then
+            // restore pick order
+            let mut by_index: Vec<(usize, usize)> =
+                picks.iter().enumerate().map(|(pos, &qi)| (qi, pos)).collect();
+            by_index.sort_unstable();
+            let mut out: Vec<Option<Request>> = vec![None; picks.len()];
+            for &(qi, pos) in by_index.iter().rev() {
+                out[pos] = self.queue.remove(qi);
+            }
+            return out.into_iter().map(|r| r.expect("ordered pick vanished")).collect();
+        }
+        Vec::new()
+    }
+
+    /// Iterate the queued requests in FIFO order (policy snapshots).
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.queue.iter()
     }
 
     /// The request at the head of the queue, if any.
@@ -183,6 +248,57 @@ mod tests {
         assert_eq!(b.front().map(|r| r.id), Some(2));
         assert_eq!(b.pop_front().map(|r| r.id), Some(2));
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn ineligible_requests_no_longer_fire_empty_or_undersized_batches() {
+        // regression (trigger/eligibility consistency): the full and
+        // deadline triggers used to inspect the whole queue even though
+        // admission stops at the first misfit, so an ineligible head
+        // fired an "empty batch" and misfits behind an eligible head
+        // inflated the count into firing an undersized batch early.
+        let mut b = Batcher::new(2, 10.0);
+        for i in 1..=3 {
+            b.push(req(i, 0.0));
+        }
+        // ineligible head: no trigger at all (previously the len >= 2
+        // full trigger fired and produced an empty batch)
+        assert!(b.next_batch_filtered(0.0, false, 4, |r| r.id != 1).is_empty());
+        assert_eq!(b.len(), 3);
+        // eligible head, misfit at 2: eligible set is [1] — below the
+        // fill target and inside the deadline, so nothing fires yet...
+        assert!(b.next_batch_filtered(0.0, false, 4, |r| r.id != 2).is_empty());
+        assert_eq!(b.len(), 3);
+        // ...until the deadline passes, when the eligible prefix goes out
+        let batch = b.next_batch_filtered(10.0, false, 4, |r| r.id != 2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(b.front().map(|r| r.id), Some(2));
+        // a fully eligible queue still full-triggers immediately
+        let batch = b.next_batch_filtered(0.0, false, 4, |_| true);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn ordered_batches_skip_misfits_and_keep_pick_order() {
+        let mut b = Batcher::new(3, 10.0);
+        for i in 0..4 {
+            b.push(req(i, 0.0));
+        }
+        // policy prefers 3, 1, 0, 2; request 1 does not fit and is
+        // skipped (not head-blocking); force admits the rest in pick
+        // order capped at 2
+        let batch = b.next_batch_ordered(0.0, true, 2, &[3, 1, 0, 2], |r| r.id != 1);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 0]);
+        assert_eq!(b.len(), 2);
+        // remaining queue keeps FIFO order
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        // trigger discipline matches the filtered path: nothing fires
+        // below the fill target before the deadline...
+        assert!(b.next_batch_ordered(0.0, false, 4, &[0, 1], |_| true).is_empty());
+        // ...and the deadline clock runs from the oldest eligible pick
+        let batch = b.next_batch_ordered(10.0, false, 4, &[1, 0], |_| true);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 1]);
+        assert!(b.is_empty());
     }
 
     #[test]

@@ -10,7 +10,8 @@ use crate::config::{shape_preset, vq_preset, RunConfig};
 use crate::coordinator::Cluster;
 use crate::model::shape::VqSetting;
 use crate::parallel::strategies::{Strategy, StrategyKind};
-use crate::server::scheduler::{CbConfig, CbEngine, CbEvent};
+use crate::server::policy::{parse_policy, PolicyKind};
+use crate::server::scheduler::{CbConfig, CbEngine, CbEvent, CbReport};
 use crate::sim::latency::{evaluate, SimParams};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
@@ -124,6 +125,39 @@ pub fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the scheduling-policy flags shared by the model and live
+/// serve-cb paths: `--policy fifo|prefix-aware|slo-class`, `--classes
+/// d0,d1,...` (per-class deadlines, seconds; higher class index = higher
+/// priority; ids map round-robin), `--age-bound S` (reordering aging
+/// step). Setting `--classes` without `--policy` implies `slo-class`.
+fn policy_from_args(args: &Args) -> Result<(PolicyKind, Vec<f64>, f64)> {
+    let classes = args.f64_list_or("classes", &[])?;
+    let policy = match args.get("policy") {
+        Some(p) => parse_policy(p)?,
+        None if !classes.is_empty() => PolicyKind::SloClass,
+        None => PolicyKind::Fifo,
+    };
+    Ok((policy, classes, args.f64_or("age-bound", 0.5)?))
+}
+
+/// Per-class report rows (printed only when classes are configured).
+fn print_class_rows(r: &mut CbReport) {
+    let horizon = r.horizon_s;
+    for c in &mut r.classes {
+        println!(
+            "class {}  (deadline {:>6.2} s): completed {:>5}  censored {:>5}  \
+             attainment {:>5.1}%  p95 {:>8.1} ms  goodput {:.2}/s",
+            c.class,
+            c.deadline_s,
+            c.completed,
+            c.censored,
+            c.slo_attainment() * 100.0,
+            c.latency.p95() * 1e3,
+            c.goodput(horizon),
+        );
+    }
+}
+
 /// Parse `--strategy` (+ `--nb`, `--vq`) into a [`StrategyKind`].
 fn strategy_kind_from_args(args: &Args) -> Result<StrategyKind> {
     Ok(match args.get_or("strategy", "astra").as_str() {
@@ -180,6 +214,7 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown trace `{other}` (constant|markov)"),
     };
+    let (policy, classes, age_bound_s) = policy_from_args(args)?;
     let cfg = CbConfig {
         max_slots: args.usize_or("slots", 8)?,
         max_batch: args.usize_or("max-batch", 8)?,
@@ -196,6 +231,9 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         prompt_groups: args.usize_or("prompt-groups", 0)?,
         seed,
         prompt_vocab: 256,
+        policy,
+        classes,
+        age_bound_s,
         ..CbConfig::default()
     };
 
@@ -211,11 +249,12 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         let mut rng = Rng::new(seed);
         let mut r = engine.serve_poisson(&mut rng, rate, horizon);
         println!(
-            "-- {mode} (slots={}, batch<={}, {} decode tokens, SLO {:.1} s{}) --",
+            "-- {mode} (slots={}, batch<={}, {} decode tokens, SLO {:.1} s, policy {:?}{}) --",
             cfg.max_slots,
             cfg.max_batch,
             cfg.decode_tokens,
             cfg.slo_s,
+            cfg.policy,
             if cfg.prefill_chunk_tokens > 0 {
                 format!(", chunked prefill @{} tokens", cfg.prefill_chunk_tokens)
             } else {
@@ -262,6 +301,10 @@ pub fn serve_cb(args: &Args) -> Result<()> {
             );
         }
         println!("goodput   {:.2}/s within SLO", r.goodput);
+        if r.slo_preemptions > 0 {
+            println!("SLO preemptions {}", r.slo_preemptions);
+        }
+        print_class_rows(&mut r);
         rows.push((mode, r.completed));
     }
     if let [(_, fifo), (_, cb)] = rows[..] {
@@ -307,6 +350,7 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
     let meta = cluster.artifact.meta.clone();
     let rate = args.f64_or("rate", 8.0)?;
     let horizon = args.f64_or("horizon", 30.0)?;
+    let (policy, classes, age_bound_s) = policy_from_args(args)?;
     let cfg = CbConfig {
         max_slots: args.usize_or("slots", 4)?,
         max_batch: args.usize_or("max-batch", 4)?,
@@ -321,6 +365,9 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         swap_bandwidth_mbps: args.f64_or("swap-bandwidth-mbps", 0.0)?,
         decode_jitter: args.usize_or("decode-jitter", 0)?,
         prompt_groups: args.usize_or("prompt-groups", 0)?,
+        policy,
+        classes,
+        age_bound_s,
         // seed + prompt_vocab are pinned to the cluster by `live_engine`
         ..CbConfig::default()
     };
@@ -393,6 +440,10 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
              {} recompute evictions",
             r.swap_outs, r.swap_ins, r.swap_bytes, cfg.swap_bandwidth_mbps, r.kv_evictions
         );
+    }
+    if cfg.policy != PolicyKind::Fifo || !cfg.classes.is_empty() {
+        println!("scheduling policy {:?}: {} SLO preemptions", cfg.policy, r.slo_preemptions);
+        print_class_rows(&mut r);
     }
     if let Some((id, toks)) = live.generations.iter().find(|(_, t)| !t.is_empty()) {
         let k = toks.len().min(8);

@@ -128,6 +128,12 @@ pub struct LiveBackend<'a> {
     blocked: BTreeMap<u64, usize>,
     /// swapped-out sessions, decode progress intact
     swapped: BTreeMap<u64, DecodeSession<'a>>,
+    /// priority class per in-flight request (`CbConfig::class_of`,
+    /// plumbed through [`DecodeBackend::admit`]; pruned on complete and
+    /// evict, so it is bounded by the active set) — the QoS tag a real
+    /// deployment would key placement on; the scheduler has already made
+    /// every class-driven decision by the time it reaches this backend
+    pub classes: BTreeMap<u64, usize>,
     /// measured host seconds spent in real prefill + decode compute
     pub host_compute_s: f64,
     /// real single-token decode steps executed
@@ -147,6 +153,7 @@ impl<'a> LiveBackend<'a> {
             store_bytes: 0,
             blocked: BTreeMap::new(),
             swapped: BTreeMap::new(),
+            classes: BTreeMap::new(),
             host_compute_s: 0.0,
             steps: 0,
         }
@@ -211,12 +218,14 @@ impl DecodeBackend for LiveBackend<'_> {
         &mut self,
         batch: &[Request],
         decode_budgets: &[usize],
+        classes: &[usize],
         prefill_limit: usize,
         prefixes: &[PrefixAttach],
     ) -> Result<()> {
         let meta = &self.cluster.artifact.meta;
         for (i, req) in batch.iter().enumerate() {
             let budget = decode_budgets[i];
+            self.classes.insert(req.id, classes.get(i).copied().unwrap_or(0));
             if budget == 0 {
                 continue; // prefill-only: nothing to hold between events
             }
@@ -359,13 +368,16 @@ impl DecodeBackend for LiveBackend<'_> {
         // block store — the "recently freed" prefix reuse window.
         let generated = self.sessions.remove(&id).map(|s| s.generated).unwrap_or_default();
         self.blocked.remove(&id);
+        self.classes.remove(&id);
         self.generations.insert(id, generated);
         Ok(())
     }
 
     fn evict(&mut self, id: u64) -> Result<()> {
         // recompute-style preemption: drop the cache; re-admission rebuilds
+        // (including the class tag, which admit re-inserts)
         self.blocked.remove(&id);
+        self.classes.remove(&id);
         self.sessions
             .remove(&id)
             .map(drop)
@@ -568,6 +580,41 @@ mod tests {
         let again = run(&chunked);
         assert_eq!(again.report.events, chunky.report.events);
         assert_eq!(again.generations, chunky.generations);
+    }
+
+    #[test]
+    fn class_tags_track_in_flight_sessions() {
+        // the class plumbed through DecodeBackend::admit must tag exactly
+        // the in-flight sessions with the scheduler's own class mapping,
+        // and be pruned once a request completes
+        let cluster = tiny_cluster(11);
+        let cfg = CbConfig {
+            max_slots: 2,
+            max_batch: 2,
+            decode_tokens: 4,
+            classes: vec![1.0, 5.0],
+            ..CbConfig::default()
+        };
+        let params = SimParams::paper_encoder();
+        let trace = BandwidthTrace::constant(100.0, 1e9);
+        // a horizon that ends mid-flight: the admitted sessions stay
+        // resident (censored), tags intact
+        let mut engine = live_engine(&cluster, cfg.clone(), params.clone(), trace.clone());
+        let mut backend = LiveBackend::for_config(&cluster, &engine.cfg);
+        let r = engine.serve_stream_with(&mut backend, burst(4, 16), 1e-6).unwrap();
+        assert_eq!(r.completed, 0);
+        assert!(backend.in_flight() > 0);
+        assert_eq!(backend.classes.len(), backend.in_flight());
+        for (id, class) in &backend.classes {
+            assert_eq!(*class, engine.cfg.class_of(*id), "request {id}");
+        }
+        // a drained run prunes every tag with the sessions
+        let mut engine = live_engine(&cluster, cfg, params, trace);
+        let mut backend = LiveBackend::for_config(&cluster, &engine.cfg);
+        let r = engine.serve_stream_with(&mut backend, burst(4, 16), 1e4).unwrap();
+        assert_eq!(r.completed, 4);
+        assert_eq!(backend.in_flight(), 0);
+        assert!(backend.classes.is_empty());
     }
 
     #[test]

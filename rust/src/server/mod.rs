@@ -13,24 +13,32 @@
 //!    reuse attaches shared block-aligned prompt prefixes and replays only
 //!    suffixes; with `CbConfig::swap_bandwidth_mbps`, preemption swaps
 //!    victims over a priced host link instead of recomputing whenever the
-//!    transfer is cheaper.
+//!    transfer is cheaper. Every discretionary *decision* — admission
+//!    order, preemption victim, proactive SLO eviction — is delegated to
+//!    a pluggable [`policy::SchedPolicy`] (`--policy`): FIFO (default,
+//!    bit-for-bit the pre-policy streams), prefix-aware admission
+//!    ordering, or SLO priority classes with per-class deadlines
+//!    (`CbConfig::classes` / `--classes`) and per-class report breakdowns.
 //!  * [`live`] — the same scheduler loop driving *real*
 //!    [`crate::coordinator::decode::DecodeSession`]s through a
 //!    [`scheduler::DecodeBackend`]: actual tensors, mixed-precision KV
 //!    caches, greedy generations (`astra serve-cb --live`). The
 //!    differential harness `tests/live_vs_model.rs` pins that live and
-//!    cost-model runs make identical scheduling decisions.
+//!    cost-model runs make identical scheduling decisions — under every
+//!    policy, since decisions are made once in the shared loop.
 
 pub mod batcher;
 pub mod cli;
 pub mod engine;
 pub mod live;
+pub mod policy;
 pub mod scheduler;
 
 pub use batcher::{Batcher, Request};
 pub use engine::{ServeEngine, ServeReport};
 pub use live::{serve_live, LiveBackend, LiveReport};
+pub use policy::{PolicyKind, Preemption, SchedPolicy};
 pub use scheduler::{
-    CbConfig, CbEngine, CbEvent, CbReport, DecodeBackend, KvBudget, ModelBackend, PrefixAttach,
-    SlotState,
+    CbConfig, CbEngine, CbEvent, CbReport, ClassReport, DecodeBackend, KvBudget, ModelBackend,
+    PrefixAttach, SlotState,
 };

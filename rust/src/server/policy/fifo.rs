@@ -1,0 +1,73 @@
+//! The default policy: classic FIFO admission, newest-slot eviction.
+
+use super::{newest_by_admit_seq, AdmissionCandidate, SchedPolicy, SlotView};
+
+/// First-in-first-out admission with head-blocking (nothing jumps a
+/// request the KV gate rejects) and most-recently-admitted victim
+/// selection — exactly the decisions the scheduler hard-coded before the
+/// policy layer existed. With the default flags this reproduces the
+/// pre-refactor event streams bit for bit; under a KV cap the streams
+/// can differ only through the (deliberate) batcher trigger fix, which
+/// now measures the fill/deadline trigger over the eligible set instead
+/// of the raw queue. The regression the victim rule encodes: "newest"
+/// is the largest per-episode `admit_seq`, never an `(admitted_at, id)`
+/// tiebreak, so same-batch readmissions rank by their *current* admission.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn admission_order(&self, _now: f64, queue: &[AdmissionCandidate]) -> Vec<usize> {
+        (0..queue.len()).collect()
+    }
+
+    fn victim(&self, _now: f64, slots: &[SlotView]) -> usize {
+        newest_by_admit_seq(slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::slot_view;
+    use super::*;
+
+    #[test]
+    fn victim_is_latest_admission_not_largest_id() {
+        // regression (eviction victim selection): after an eviction wave
+        // requeues [3, 2] and both readmit in one batch, id 3 holds the
+        // earlier admission sequence. The victim must be id 2 — the most
+        // recently readmitted slot — where the old (admitted_at, id)
+        // tiebreak picked id 3 because the batch shared one timestamp.
+        let slots = vec![
+            slot_view(0, 0, 0, 0.0),
+            slot_view(1, 1, 0, 0.0),
+            slot_view(3, 4, 0, 0.0),
+            slot_view(2, 5, 0, 0.0),
+        ];
+        assert_eq!(Fifo.victim(0.0, &slots), 3, "index of id 2 (seq 5)");
+        // unique sequences: order of insertion never matters
+        let slots = vec![slot_view(2, 5, 0, 0.0), slot_view(3, 4, 0, 0.0), slot_view(0, 0, 0, 0.0)];
+        assert_eq!(Fifo.victim(0.0, &slots), 0);
+    }
+
+    #[test]
+    fn admission_order_is_identity() {
+        let q: Vec<AdmissionCandidate> = (0..4)
+            .map(|i| AdmissionCandidate {
+                id: i as u64,
+                arrival_s: 0.0,
+                queued_since: 0.0,
+                tokens: 8,
+                class: 0,
+                deadline_s: 0.0,
+                covered_tokens: 64 * (i % 2), // coverage must not matter
+            })
+            .collect();
+        assert_eq!(Fifo.admission_order(5.0, &q), vec![0, 1, 2, 3]);
+        assert!(!Fifo.reorders());
+        assert!(!Fifo.preempts());
+    }
+}

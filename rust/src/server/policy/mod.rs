@@ -1,0 +1,266 @@
+//! Pluggable scheduling policies for the continuous-batching engine.
+//!
+//! The scheduler loop ([`crate::server::scheduler::CbEngine::serve_stream_with`])
+//! owns all *mechanism* — the virtual clock, the KV pool, chunked prefill,
+//! swap pricing, the event stream, the backends. A [`SchedPolicy`] owns
+//! three *decisions* and nothing else:
+//!
+//!  1. **admission ordering** — which eligible queued request the
+//!     [`crate::server::batcher::Batcher`] hands a free slot next
+//!     ([`SchedPolicy::admission_order`]);
+//!  2. **victim selection** — which in-flight slot a KV-pressure
+//!     preemption evicts ([`SchedPolicy::victim`], replacing the old
+//!     hard-coded newest-slot rule);
+//!  3. **proactive preemption** — an optional per-iteration hook that may
+//!     evict a slot *before* any memory pressure, to protect the SLOs of
+//!     higher-priority queued work ([`SchedPolicy::preempt`]).
+//!
+//! # Contract: decisions only
+//!
+//! A policy never touches the clock, the KV pool, or a
+//! [`crate::server::scheduler::DecodeBackend`] — it sees immutable
+//! snapshots ([`AdmissionCandidate`], [`SlotView`]) plus the current
+//! virtual time, and returns indices into them. Everything a policy reads
+//! is derived identically on the cost-model and live backends (classes
+//! from `(id, CbConfig::classes)`, prefix coverage from the shared radix
+//! tree, waits from the shared virtual clock), so any policy keeps the
+//! live-vs-model differential exact by construction: the decisions are
+//! made once, in the shared loop, and both backends execute them.
+//!
+//! # Shipped policies
+//!
+//! * [`Fifo`] — the default, and the reference semantics: admission is
+//!   the classic head-blocking FIFO walk and the eviction victim is the
+//!   most recently (re)admitted slot. With `policy` left at its default
+//!   the engine reproduces the pre-policy-layer event streams **bit for
+//!   bit** (anchored by `tests/proptests.rs`).
+//! * [`PrefixAware`] — orders eligible admissions by radix-tree covered
+//!   prefix length (longest first), so cache-warm requests reach slots
+//!   while their blocks are still resident; an aging boost bounds how
+//!   long a cold request can be bypassed.
+//! * [`SloClass`] — requests carry a priority class and a per-class
+//!   latency deadline (`CbConfig::classes` / `--classes`): admissions are
+//!   ordered highest class first (aging-bounded), KV-pressure victims are
+//!   drawn lowest-class-first (then per-episode-admission-newest), a
+//!   class is preemption-exempt while still within its deadline budget,
+//!   and the proactive hook evicts a past-deadline lower-class slot when
+//!   a higher-class request that can still meet its deadline is waiting
+//!   with no free slot.
+
+use anyhow::{bail, Result};
+
+mod fifo;
+mod prefix_aware;
+mod slo;
+
+pub use fifo::Fifo;
+pub use prefix_aware::PrefixAware;
+pub use slo::SloClass;
+
+/// Which [`SchedPolicy`] the engine builds (`CbConfig::policy`,
+/// `--policy`). `Fifo` is the default and the bit-for-bit baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    #[default]
+    Fifo,
+    PrefixAware,
+    SloClass,
+}
+
+/// Parse a `--policy` value.
+pub fn parse_policy(s: &str) -> Result<PolicyKind> {
+    Ok(match s {
+        "fifo" => PolicyKind::Fifo,
+        "prefix-aware" | "prefix" => PolicyKind::PrefixAware,
+        "slo-class" | "slo" => PolicyKind::SloClass,
+        other => bail!("unknown policy `{other}` (fifo|prefix-aware|slo-class)"),
+    })
+}
+
+/// Immutable snapshot of one queued request, in queue order — what a
+/// policy may read when ordering admissions or deciding to preempt.
+#[derive(Debug, Clone)]
+pub struct AdmissionCandidate {
+    pub id: u64,
+    /// original arrival — what class deadlines are measured against
+    pub arrival_s: f64,
+    /// when the current queueing episode began (arrival, or the last
+    /// eviction) — what admission aging is measured against: an evicted
+    /// request re-earns its boost, so a preemption victim cannot
+    /// instantly outrank the higher-priority request it was evicted for
+    pub queued_since: f64,
+    /// prompt length
+    pub tokens: usize,
+    /// priority class (`CbConfig::class_of`; 0 when no classes are set)
+    pub class: usize,
+    /// the class latency deadline, seconds (<= 0: none)
+    pub deadline_s: f64,
+    /// leading prompt tokens covered by ready shared KV blocks
+    /// ([`crate::kv::prefix::RadixTree::covered_tokens`]; 0 with the
+    /// prefix cache off)
+    pub covered_tokens: usize,
+}
+
+impl AdmissionCandidate {
+    /// Still inside its class deadline budget (measured from the
+    /// original arrival, like [`SlotView::within_deadline`]). No
+    /// deadline means the budget never runs out.
+    pub fn within_deadline(&self, now: f64) -> bool {
+        self.deadline_s <= 0.0 || now - self.arrival_s <= self.deadline_s
+    }
+}
+
+/// Immutable snapshot of one in-flight slot.
+#[derive(Debug, Clone)]
+pub struct SlotView {
+    pub id: u64,
+    /// original arrival of the occupying request
+    pub arrival_s: f64,
+    /// priority class and its deadline (<= 0: none)
+    pub class: usize,
+    pub deadline_s: f64,
+    /// unique per-episode admission sequence number — larger = more
+    /// recently (re)admitted
+    pub admit_seq: u64,
+}
+
+impl SlotView {
+    /// Still inside its class deadline budget — preemption-exempt under
+    /// [`SloClass`]. No deadline means the budget never runs out.
+    pub fn within_deadline(&self, now: f64) -> bool {
+        self.deadline_s <= 0.0 || now - self.arrival_s <= self.deadline_s
+    }
+}
+
+/// One proactive preemption decision: evict `victim` (an index into the
+/// slot snapshot) to open room for `beneficiary` (an index into the
+/// candidate snapshot). Naming the beneficiary keeps the contract clean:
+/// the policy judges *who deserves the slot*, and the loop verifies the
+/// mechanism — that evicting the victim actually opens enough room for
+/// that beneficiary's admission — refusing decisions that could only
+/// churn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Preemption {
+    pub victim: usize,
+    pub beneficiary: usize,
+}
+
+/// A scheduling policy: pure decision logic over queue/slot snapshots.
+/// See the module docs for the contract; every method must be a
+/// deterministic function of its arguments.
+pub trait SchedPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Whether admission uses [`Self::admission_order`] with misfit
+    /// *skipping* instead of the classic head-blocking FIFO walk. False
+    /// (the default) keeps the walk — and the event stream — identical
+    /// to the pre-policy scheduler.
+    fn reorders(&self) -> bool {
+        false
+    }
+
+    /// Whether [`Self::preempt`] can ever return victims; lets the loop
+    /// skip snapshot construction entirely for policies that never do.
+    fn preempts(&self) -> bool {
+        false
+    }
+
+    /// Whether [`Self::admission_order`] reads
+    /// [`AdmissionCandidate::covered_tokens`]; the loop skips the
+    /// per-candidate radix-tree coverage walk for policies that don't.
+    fn uses_coverage(&self) -> bool {
+        false
+    }
+
+    /// Preferred admission order: indices into `queue` (which is in FIFO
+    /// queue order), most-preferred first. Must be a permutation of
+    /// `0..queue.len()`. Only consulted when [`Self::reorders`] is true.
+    fn admission_order(&self, _now: f64, queue: &[AdmissionCandidate]) -> Vec<usize> {
+        (0..queue.len()).collect()
+    }
+
+    /// KV-pressure eviction victim: an index into `slots` (`slots` is
+    /// never empty when this is called, and the loop never calls it with
+    /// a lone slot).
+    fn victim(&self, now: f64, slots: &[SlotView]) -> usize;
+
+    /// Proactive preemption: victim/beneficiary pairs to act on this
+    /// iteration to protect SLOs. Called only when every slot is
+    /// occupied and the queue is non-empty; the loop executes a pair
+    /// only if the eviction would actually open room for the named
+    /// beneficiary. Default: never.
+    fn preempt(
+        &self,
+        _now: f64,
+        _queue: &[AdmissionCandidate],
+        _slots: &[SlotView],
+    ) -> Vec<Preemption> {
+        Vec::new()
+    }
+}
+
+/// Integer aging boost: one step per `age_bound_s` spent in the current
+/// queueing episode. Reordering policies add this (scaled) to their score
+/// so a bypassed request's rank grows without bound while it waits — the
+/// starvation bound. Episode-based on purpose: requests that never reach
+/// a slot age monotonically, while an evicted slot re-earns its boost
+/// from zero. `<= 0` disables aging. Deterministic: IEEE division +
+/// truncation.
+pub(crate) fn age_boost(now: f64, queued_since: f64, age_bound_s: f64) -> i64 {
+    if age_bound_s <= 0.0 {
+        return 0;
+    }
+    ((now - queued_since).max(0.0) / age_bound_s) as i64
+}
+
+/// Index of the most recently (re)admitted slot — the shared default
+/// victim rule (first maximum, exactly the pre-policy `newest_slot_index`
+/// semantics; `admit_seq` is unique so ties cannot arise in practice).
+pub(crate) fn newest_by_admit_seq(slots: &[SlotView]) -> usize {
+    let mut best = 0;
+    for (i, s) in slots.iter().enumerate().skip(1) {
+        if s.admit_seq > slots[best].admit_seq {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+pub(crate) fn slot_view(id: u64, admit_seq: u64, class: usize, arrival_s: f64) -> SlotView {
+    SlotView { id, arrival_s, class, deadline_s: 0.0, admit_seq }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_policy_names() {
+        assert_eq!(parse_policy("fifo").unwrap(), PolicyKind::Fifo);
+        assert_eq!(parse_policy("prefix-aware").unwrap(), PolicyKind::PrefixAware);
+        assert_eq!(parse_policy("slo-class").unwrap(), PolicyKind::SloClass);
+        assert!(parse_policy("lifo").is_err());
+        assert_eq!(PolicyKind::default(), PolicyKind::Fifo);
+    }
+
+    #[test]
+    fn age_boost_steps_and_disables() {
+        assert_eq!(age_boost(0.0, 0.0, 0.5), 0);
+        assert_eq!(age_boost(0.49, 0.0, 0.5), 0);
+        assert_eq!(age_boost(0.5, 0.0, 0.5), 1);
+        assert_eq!(age_boost(2.6, 0.0, 0.5), 5);
+        // arrival in the future clamps to zero, disabled bound is zero
+        assert_eq!(age_boost(0.0, 1.0, 0.5), 0);
+        assert_eq!(age_boost(100.0, 0.0, 0.0), 0);
+    }
+
+    #[test]
+    fn newest_is_first_max_by_admit_seq() {
+        let slots =
+            vec![slot_view(0, 0, 0, 0.0), slot_view(3, 4, 0, 0.0), slot_view(2, 5, 0, 0.0)];
+        assert_eq!(newest_by_admit_seq(&slots), 2);
+        let slots = vec![slot_view(2, 5, 0, 0.0), slot_view(3, 4, 0, 0.0)];
+        assert_eq!(newest_by_admit_seq(&slots), 0);
+    }
+}

@@ -1,0 +1,208 @@
+//! SLO / priority-class scheduling over `CbConfig::classes`.
+
+use std::cmp::Reverse;
+
+use super::{age_boost, AdmissionCandidate, Preemption, SchedPolicy, SlotView};
+
+/// Priority-class policy: every request carries a class (derived as
+/// `id % classes.len()`, identically on both backends) and each class a
+/// latency deadline (`CbConfig::classes[class]`). **Higher class index =
+/// higher priority**; the deadline is the class's SLO.
+///
+/// * **Admission** is ordered highest class first (FIFO within a class),
+///   with the same aging bound as [`super::PrefixAware`]: one effective
+///   class level per `age_bound_s` spent in the current queueing
+///   episode, so a low-class request bypassed by a steady high-class
+///   stream outranks it after `Δclass * age_bound_s` of waiting —
+///   bounded bypass, no starvation.
+/// * **Victims** under KV pressure are chosen lowest-class-first, ties
+///   broken per-episode-admission-newest (the FIFO rule within the
+///   class). Two exemptions apply, in order: the *longest-resident* slot
+///   (smallest `admit_seq`) is never the victim while another exists —
+///   the FIFO progress guarantee, without which a low-class slot could
+///   be re-evicted forever under sustained high-class pressure, since
+///   class rank would otherwise trump seniority every time it re-enters
+///   — and a slot still *within its deadline budget* is preferred-exempt:
+///   victims come from the already-late slots first, falling back to the
+///   same ordering over the rest only when every candidate is exempt
+///   (pressure must still evict someone).
+/// * **Proactive preemption** ([`SchedPolicy::preempt`]): when every
+///   slot is occupied and a queued request of a strictly higher class
+///   can still meet its deadline, the lowest-class in-flight slot that
+///   has already blown its own deadline is evicted to make room — at
+///   most one slot per iteration. Exempt (within-budget) slots are never
+///   proactively preempted, so the hook only ever trades a blown SLO for
+///   a salvageable one. Each decision names its beneficiary
+///   ([`Preemption`]), and the loop enforces feasibility before
+///   executing it: it never preempts for a request the KV cap could
+///   never admit, nor when evicting the victim would not open enough
+///   room for that named beneficiary's admission — the policy decides,
+///   mechanism verifies.
+#[derive(Debug, Clone, Copy)]
+pub struct SloClass {
+    /// seconds of sojourn per one effective class level of aging
+    /// (`CbConfig::age_bound_s`; <= 0 disables aging)
+    pub age_bound_s: f64,
+}
+
+impl SloClass {
+    fn score(&self, now: f64, c: &AdmissionCandidate) -> i64 {
+        c.class as i64 + age_boost(now, c.queued_since, self.age_bound_s)
+    }
+}
+
+impl SchedPolicy for SloClass {
+    fn name(&self) -> &'static str {
+        "slo-class"
+    }
+
+    fn reorders(&self) -> bool {
+        true
+    }
+
+    fn preempts(&self) -> bool {
+        true
+    }
+
+    fn admission_order(&self, now: f64, queue: &[AdmissionCandidate]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..queue.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.score(now, &queue[b]).cmp(&self.score(now, &queue[a])).then(a.cmp(&b))
+        });
+        idx
+    }
+
+    fn victim(&self, now: f64, slots: &[SlotView]) -> usize {
+        // seniority exemption: the longest-resident slot is never chosen
+        // while another exists (the loop never calls this with a lone
+        // slot), so the oldest resident always completes — the progress
+        // guarantee that keeps class-ranked eviction starvation-free
+        let oldest = (0..slots.len())
+            .min_by_key(|&i| slots[i].admit_seq)
+            .expect("victim called with no slots");
+        let eligible: Vec<usize> = (0..slots.len()).filter(|&i| i != oldest).collect();
+        let late: Vec<usize> =
+            eligible.iter().copied().filter(|&i| !slots[i].within_deadline(now)).collect();
+        let pool = if late.is_empty() { eligible } else { late };
+        pool.into_iter()
+            .min_by_key(|&i| (slots[i].class, Reverse(slots[i].admit_seq)))
+            .unwrap_or(oldest)
+    }
+
+    fn preempt(
+        &self,
+        now: f64,
+        queue: &[AdmissionCandidate],
+        slots: &[SlotView],
+    ) -> Vec<Preemption> {
+        // the beneficiary: the highest-class queued request that can
+        // still meet its deadline (FIFO within the class — the same
+        // request class-ordered admission would seat first); the only
+        // kind of work worth evicting for
+        let Some((beneficiary, best)) = queue
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.within_deadline(now))
+            .min_by_key(|&(i, c)| (Reverse(c.class), i))
+        else {
+            return Vec::new();
+        };
+        // same seniority exemption as `victim`: the longest-resident
+        // slot is never proactively preempted, so sustained high-class
+        // arrivals cannot re-evict one low-class request forever
+        let oldest = (0..slots.len()).min_by_key(|&i| slots[i].admit_seq);
+        (0..slots.len())
+            .filter(|&i| Some(i) != oldest)
+            .filter(|&i| slots[i].class < best.class && !slots[i].within_deadline(now))
+            .min_by_key(|&i| (slots[i].class, Reverse(slots[i].admit_seq)))
+            .map(|victim| Preemption { victim, beneficiary })
+            .into_iter()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(id: u64, arrival_s: f64, class: usize, deadline_s: f64) -> AdmissionCandidate {
+        AdmissionCandidate {
+            id,
+            arrival_s,
+            queued_since: arrival_s,
+            tokens: 64,
+            class,
+            deadline_s,
+            covered_tokens: 0,
+        }
+    }
+
+    fn slot(id: u64, seq: u64, class: usize, arrival_s: f64, deadline_s: f64) -> SlotView {
+        SlotView { id, arrival_s, class, deadline_s, admit_seq: seq }
+    }
+
+    #[test]
+    fn admission_orders_high_class_first_fifo_within() {
+        let p = SloClass { age_bound_s: 0.0 };
+        let q = vec![cand(1, 0.0, 0, 8.0), cand(2, 0.0, 1, 0.5), cand(3, 0.0, 0, 8.0),
+            cand(4, 0.0, 1, 0.5)];
+        assert_eq!(p.admission_order(0.1, &q), vec![1, 3, 0, 2]);
+        assert!(p.reorders() && p.preempts());
+    }
+
+    #[test]
+    fn aging_lifts_a_bypassed_low_class_request() {
+        let p = SloClass { age_bound_s: 0.5 };
+        // low-class request queued at 0, fresh high-class at 1.0
+        let q = vec![cand(1, 0.0, 0, 8.0), cand(2, 1.0, 1, 0.5)];
+        // at 1.0 the low request has aged 2 levels: 0+2 > 1+0
+        assert_eq!(p.admission_order(1.0, &q), vec![0, 1]);
+        // young low request stays behind
+        let q = vec![cand(1, 0.9, 0, 8.0), cand(2, 1.0, 1, 0.5)];
+        assert_eq!(p.admission_order(1.0, &q), vec![1, 0]);
+    }
+
+    #[test]
+    fn victims_are_lowest_class_first_newest_within_class_oldest_never() {
+        let p = SloClass { age_bound_s: 0.5 };
+        // all past deadline: lowest class loses, newest within the class
+        // (the seniority-exempt oldest is a different slot here)
+        let slots = vec![
+            slot(1, 1, 1, 0.0, 0.1),
+            slot(2, 2, 0, 0.0, 0.1),
+            slot(3, 3, 0, 0.0, 0.1),
+        ];
+        assert_eq!(p.victim(1.0, &slots), 2, "newest of the lowest class");
+        // the longest-resident slot is never the victim, even when it is
+        // the only late one: the within-budget low-class slot loses
+        // instead (progress guarantee trumps deadline exemption)
+        let slots = vec![slot(1, 1, 1, 0.0, 0.1), slot(2, 2, 0, 0.0, 100.0)];
+        assert_eq!(p.victim(1.0, &slots), 1);
+        // everyone exempt: fall back to lowest class, newest, still
+        // sparing the oldest
+        let slots = vec![slot(1, 1, 1, 0.0, 100.0), slot(2, 2, 0, 0.0, 100.0)];
+        assert_eq!(p.victim(1.0, &slots), 1);
+    }
+
+    #[test]
+    fn preempt_trades_a_blown_slo_for_a_salvageable_one() {
+        let p = SloClass { age_bound_s: 0.0 };
+        // queued high-class request still inside its deadline
+        let q = vec![cand(9, 0.9, 1, 0.5)];
+        // slot 0: low class, past deadline, not the longest-resident ->
+        // the victim, named for the queued beneficiary; slot 1 is the
+        // seniority-exempt oldest
+        let slots = vec![slot(1, 2, 0, 0.0, 0.2), slot(2, 1, 0, 0.0, 100.0)];
+        assert_eq!(p.preempt(1.0, &q, &slots), vec![Preemption { victim: 0, beneficiary: 0 }]);
+        // no preemption once the queued request has blown its own SLO
+        let q_late = vec![cand(9, 0.0, 1, 0.5)];
+        assert!(p.preempt(1.0, &q_late, &slots).is_empty());
+        // no preemption of an equal or higher class
+        let q_low = vec![cand(9, 0.9, 0, 0.5)];
+        assert!(p.preempt(1.0, &q_low, &slots).is_empty());
+        // the longest-resident slot is never proactively preempted, even
+        // when it is the only late lower-class one
+        let slots = vec![slot(1, 1, 0, 0.0, 0.2), slot(2, 2, 0, 0.0, 100.0)];
+        assert!(p.preempt(1.0, &q, &slots).is_empty());
+    }
+}

@@ -1,0 +1,696 @@
+//! Continuous-batching serve scheduler.
+//!
+//! Replaces the batch-1 FIFO loop for load testing: requests are admitted
+//! into `max_slots` in-flight decode slots (vLLM/Orca-style continuous
+//! batching), prefill batches are formed by the [`Batcher`]'s deadline/fill
+//! logic, and each scheduler iteration either
+//!
+//!  * runs one *batched prefill* for newly admitted requests — compute and
+//!    wire bits scale with the batch, kernel launches and collective sync
+//!    stages are paid once ([`crate::parallel::cost::Phase::for_batch`]) — or
+//!  * runs one *batched decode step* advancing every active slot by one
+//!    token — single-token decode is memory-bound (one streaming pass over
+//!    the weights), so co-scheduled slots share that floor almost for free.
+//!
+//! The module is split by responsibility: this file holds the
+//! configuration, events, the backend trait, and the engine's cost
+//! helpers; `loop.rs` is the scheduling loop itself
+//! ([`CbEngine::serve_stream_with`]); `slots.rs` the in-flight slot
+//! state; `report.rs` the outcome accounting. Decision *policy* lives
+//! one level up in [`crate::server::policy`].
+//!
+//! # Scheduling policy
+//!
+//! Every discretionary decision — who is admitted next, who loses a slot
+//! under KV pressure, whether to preempt proactively for SLOs — is
+//! delegated to a [`crate::server::policy::SchedPolicy`]
+//! (`CbConfig::policy` / `--policy`). The policy sees immutable
+//! queue/slot snapshots and the virtual time, and returns indices:
+//! mechanism (clock, KV pool, chunking, swap pricing, backends) stays in
+//! the loop, so any policy preserves the live-vs-model differential by
+//! construction. The default [`crate::server::policy::Fifo`] reproduces
+//! the pre-policy-layer event streams bit for bit;
+//! [`crate::server::policy::PrefixAware`] reorders admissions by
+//! radix-tree prefix coverage (aging-bounded);
+//! [`crate::server::policy::SloClass`] schedules priority classes with
+//! per-class deadlines (`CbConfig::classes` / `--classes`: admission
+//! highest-class-first, victims lowest-class-first then newest, classes
+//! preemption-exempt while within their deadline budget, plus a
+//! proactive hook that evicts a past-deadline lower-class slot when a
+//! salvageable higher-class request is waiting). With classes configured
+//! the report carries per-class latency/attainment/goodput breakdowns
+//! ([`ClassReport`]) whatever the policy — so `Fifo` vs `SloClass` SLO
+//! attainment is directly comparable on one trace.
+//!
+//! # Chunked piggybacked prefill
+//!
+//! With `CbConfig::prefill_chunk_tokens > 0`, a prompt longer than the
+//! budget no longer monopolizes the cluster for its full prefill. Its
+//! admission iteration replays only the first `prefill_chunk_tokens` rows;
+//! the slot then sits in [`SlotState::Prefilling`] and each subsequent
+//! iteration *fuses* one chunk batch — up to the budget of prompt tokens,
+//! shared FIFO across all prefilling slots — with the decode step advancing
+//! the in-flight decoding slots
+//! ([`crate::parallel::strategies::Strategy::fused_iteration_schedule`]:
+//! FLOPs and wire bits are paid for the chunk tokens plus one token per
+//! decode slot, launches/sync/memory-floor once per iteration). Every chunk
+//! is recorded as a [`CbEvent::PrefillChunk`]; TTFT for a chunked request
+//! fires on its first decode step after the last chunk. Prompts that fit
+//! inside the budget take the classic monopolizing path (their "first
+//! chunk" is the whole prompt), so `prefill_chunk_tokens >= max prompt` —
+//! and `prefill_chunk_tokens == 0`, the disabled default — reproduce the
+//! unchunked scheduler's event stream bit for bit; `tests/proptests.rs`
+//! pins that anchor. Prefill-only workloads (`decode_tokens == 0`) have no
+//! decode iterations to piggyback on and always take the classic path.
+//!
+//! # Backends
+//!
+//! The loop owns every scheduling decision and all *timing* (the cost
+//! model's virtual clock); per-slot execution is delegated to a
+//! [`DecodeBackend`]. [`ModelBackend`] is the pure cost-model run;
+//! [`crate::server::live::LiveBackend`] drives real
+//! [`crate::coordinator::decode::DecodeSession`]s — actual tensors,
+//! mixed-precision KV caches, greedy decode. Because both backends share
+//! this loop, their decision streams ([`CbEvent`]) must be identical on
+//! the same trace; `tests/live_vs_model.rs` asserts exactly that.
+//!
+//! # KV-pressure admission
+//!
+//! With `CbConfig::kv_cap_bytes > 0`, a [`KvBudget`] gates admission on
+//! Appendix-G mixed-KV memory ([`crate::model::kv_cache_bytes_astra_live`]):
+//! a request is admitted only when its prefill cache fits the cap next to
+//! every in-flight slot; otherwise it queues (FIFO — nothing jumps a
+//! blocked head — unless a reordering policy is active). Slots grow by
+//! two full-precision rows per generated token, so pressure can build
+//! *during* decode; before a step would overflow the cap, slots are
+//! preempted back to the queue, the victim chosen by the policy
+//! (recompute-style preemption — their requests re-prefill later, and
+//! their queue/TTFT waits are recorded again on re-admission). Under the
+//! default policy the victim is the most recently admitted slot and the
+//! oldest is never evicted; requests whose full budget can never fit are
+//! rejected outright under every policy, so admission always makes
+//! progress. Requests that can never fit are counted in
+//! `CbReport::kv_rejected`.
+//!
+//! # Block pool, prefix reuse, and swap preemption
+//!
+//! With `CbConfig::prefix_cache`, KV accounting moves from flat per-slot
+//! bytes onto the block pool ([`crate::kv`]): prompts are split into
+//! `kv_block_tokens`-token blocks whose bytes are Appendix-G prefix
+//! differences (telescoping to exactly the flat bytes, so sharing-off
+//! reproduces the old streams bit for bit), and a radix tree over
+//! token-id prefixes lets a request whose prompt shares a block-aligned
+//! prefix with a resident or recently-freed cache *attach* to those
+//! blocks ([`CbEvent::PrefixHit`]): admission charges only the uncovered
+//! suffix, the prefill replays only the suffix (chunked through the same
+//! machinery, [`CbEvent::PrefillChunk`] events starting at the covered
+//! edge), and completed slots leave their blocks cached at refcount 0
+//! until capacity pressure reclaims them LRU-first. Prompt token ids are
+//! derived deterministically from `(seed, prompt_groups)` — the same
+//! stream the live backend feeds its sessions — so both backends agree on
+//! every hit.
+//!
+//! With `CbConfig::swap_bandwidth_mbps > 0`, each KV-pressure eviction of
+//! a decoding slot is priced: moving the cache out and back over a host
+//! link at that bandwidth ([`crate::kv::swap::SwapPolicy`], the
+//! [`crate::comm::link`] transfer arithmetic) versus re-prefilling the
+//! prompt and regenerating every token produced so far. The cheaper side
+//! wins, per eviction: [`CbEvent::SwapOut`] preserves decode progress and
+//! [`CbEvent::SwapIn`] restores it at readmission (transfer time charged
+//! on the virtual clock); recompute ([`CbEvent::Evict`]) stays the
+//! fallback and the flag-off behavior.
+//!
+//! `CbConfig::decode_jitter` breaks same-length lockstep: each request's
+//! decode budget is sampled once, deterministically from `(seed, id)`, in
+//! `decode_tokens ± jitter`, so saturating waves stop completing in the
+//! same iteration and staggered completion paths get exercised.
+//!
+//! The engine reports tail latency (p50/p95/p99), time-to-first-token,
+//! queue depth over time, goodput under an SLO, both horizon- and
+//! completion-based throughput with censored (unfinished) requests
+//! accounted separately, KV peak/eviction counters, prefix hit-rate and
+//! swap traffic, per-class breakdowns, and the full decision event stream.
+
+mod report;
+#[path = "loop.rs"]
+mod serve_loop;
+mod slots;
+#[cfg(test)]
+#[path = "tests.rs"]
+mod tests;
+
+pub use report::{CbReport, ClassReport};
+pub use slots::SlotState;
+
+use anyhow::Result;
+
+use crate::comm::trace::BandwidthTrace;
+use crate::model::{
+    kv_cache_bytes_astra_live, kv_cache_bytes_astra_positional, kv_cache_bytes_full,
+    TransformerShape,
+};
+use crate::parallel::strategies::{Strategy, StrategyKind};
+use crate::sim::latency::{evaluate_on_trace, SimParams};
+use crate::util::rng::Rng;
+
+use super::batcher::Request;
+use super::live::{prompt_stream_key, synth_prompt};
+use super::policy::{Fifo, PolicyKind, PrefixAware, SchedPolicy, SloClass};
+use slots::Slot;
+
+/// Continuous-batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct CbConfig {
+    /// in-flight decode slots (1 degenerates to the batch-1 FIFO baseline)
+    pub max_slots: usize,
+    /// prefill admission batch cap (the batcher's fill target)
+    pub max_batch: usize,
+    /// batcher deadline: admit a partial batch once the oldest queued
+    /// request has waited this long
+    pub max_wait_s: f64,
+    /// tokens generated per request after prefill (0 = prefill-only)
+    pub decode_tokens: usize,
+    /// end-to-end latency SLO for goodput (<= 0 disables the SLO filter)
+    pub slo_s: f64,
+    /// completion-bar window (Fig 6 style)
+    pub window_s: f64,
+    /// mixed-KV memory cap for the admission gate, bytes (0 = unlimited)
+    pub kv_cap_bytes: usize,
+    /// Sarathi-style chunked prefill: per-iteration prompt-token budget
+    /// mixed into decode iterations, shared across prefilling slots. 0
+    /// disables chunking (a prompt prefills whole at its admission — the
+    /// monopolizing baseline). Prompts no longer than the budget also take
+    /// that classic path, so any budget >= the longest prompt reproduces
+    /// the unchunked scheduler's event stream bit for bit.
+    pub prefill_chunk_tokens: usize,
+    /// radix-tree prefix sharing over block-aligned prompt prefixes
+    /// (`--prefix-cache`). Off (the default) keeps the flat per-slot
+    /// accounting and reproduces the pre-pool event streams bit for bit.
+    /// Requires `decode_tokens > 0` (prefill-only slots hold no sessions
+    /// to share); ignored otherwise.
+    pub prefix_cache: bool,
+    /// tokens per shared KV block (`--kv-block-tokens`); sharing is
+    /// block-aligned, so a block size above the longest prompt makes
+    /// sharing impossible and reproduces the prefix-off stream exactly
+    pub kv_block_tokens: usize,
+    /// host-link bandwidth for swap-style preemption, Mbps
+    /// (`--swap-bandwidth-mbps`). 0 (default) disables swapping: every
+    /// KV-pressure eviction recomputes, as before. With a cap and a
+    /// bandwidth set, each eviction swaps iff the round-trip transfer
+    /// beats the modeled recompute.
+    pub swap_bandwidth_mbps: f64,
+    /// one-way host-link latency per swap transfer, seconds
+    pub swap_latency_s: f64,
+    /// ± tokens of seeded per-request decode-budget jitter
+    /// (`--decode-jitter`); 0 keeps every budget at `decode_tokens`
+    pub decode_jitter: usize,
+    /// prompt-content classes for the synthetic workload
+    /// (`--prompt-groups`): ids map to `id % prompt_groups`, so requests
+    /// in one group share leading token ids (the prefix-cache workload).
+    /// 0 (default) gives every request its own stream — the historical
+    /// behavior.
+    pub prompt_groups: usize,
+    /// seed for prompt-content derivation and decode jitter; live runs
+    /// pin this to the cluster seed so both backends see one workload
+    pub seed: u64,
+    /// vocabulary for model-only prompt derivation; live runs pin this to
+    /// the artifact's vocab
+    pub prompt_vocab: usize,
+    /// which [`SchedPolicy`] makes the admission-order / victim /
+    /// proactive-preemption decisions (`--policy`). The default
+    /// [`PolicyKind::Fifo`] reproduces the pre-policy event streams bit
+    /// for bit.
+    pub policy: PolicyKind,
+    /// per-class latency deadlines, seconds (`--classes d0,d1,...`).
+    /// Empty (default) disables class accounting. Request ids map onto
+    /// classes round-robin (`id % classes.len()`), identically on both
+    /// backends; **a higher class index is a higher priority**, and
+    /// `classes[k] <= 0` means class `k` has no deadline. Setting
+    /// classes alone only adds per-class report breakdowns — scheduling
+    /// changes only under [`PolicyKind::SloClass`].
+    pub classes: Vec<f64>,
+    /// seconds of sojourn per aging step for the reordering policies
+    /// (`--age-bound`): one KV block of effective coverage under
+    /// [`PrefixAware`], one class level under [`SloClass`] — the bound
+    /// that keeps reordering starvation-free. <= 0 disables aging.
+    pub age_bound_s: f64,
+}
+
+impl Default for CbConfig {
+    fn default() -> CbConfig {
+        CbConfig {
+            max_slots: 8,
+            max_batch: 8,
+            max_wait_s: 0.02,
+            decode_tokens: 64,
+            slo_s: 0.0,
+            window_s: 10.0,
+            kv_cap_bytes: 0,
+            prefill_chunk_tokens: 0,
+            prefix_cache: false,
+            kv_block_tokens: 16,
+            swap_bandwidth_mbps: 0.0,
+            swap_latency_s: 0.0005,
+            decode_jitter: 0,
+            prompt_groups: 0,
+            seed: 0,
+            prompt_vocab: 64,
+            policy: PolicyKind::Fifo,
+            classes: Vec::new(),
+            age_bound_s: 0.5,
+        }
+    }
+}
+
+impl CbConfig {
+    /// The batch-1 FIFO baseline (the paper's Fig-6 setting) with the same
+    /// workload shape — for apples-to-apples comparisons.
+    pub fn batch1(self) -> CbConfig {
+        CbConfig { max_slots: 1, max_batch: 1, ..self }
+    }
+
+    /// The priority class request `id` belongs to: round-robin over the
+    /// configured classes, 0 when none are set. Derived from the id alone
+    /// so the cost-model and live backends always agree.
+    pub fn class_of(&self, id: u64) -> usize {
+        if self.classes.is_empty() {
+            0
+        } else {
+            (id % self.classes.len() as u64) as usize
+        }
+    }
+
+    /// Class `class`'s latency deadline (<= 0 or unconfigured: none).
+    pub fn class_deadline(&self, class: usize) -> f64 {
+        self.classes.get(class).copied().unwrap_or(0.0)
+    }
+
+    /// Build the configured [`SchedPolicy`].
+    pub fn make_policy(&self) -> Box<dyn SchedPolicy> {
+        match self.policy {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::PrefixAware => Box::new(PrefixAware {
+                block_tokens: self.kv_block_tokens.max(1),
+                age_bound_s: self.age_bound_s,
+            }),
+            PolicyKind::SloClass => Box::new(SloClass { age_bound_s: self.age_bound_s }),
+        }
+    }
+}
+
+/// One scheduling decision. The stream of events is the scheduler's
+/// complete decision record; the live-vs-model differential harness
+/// (`tests/live_vs_model.rs`) asserts two backends produce identical
+/// streams on the same fixed-seed trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CbEvent {
+    /// batched prefill admitted these request ids into slots (policy
+    /// admission order; queue order under the default FIFO policy)
+    Admit { ids: Vec<u64> },
+    /// one batched decode step advanced these in-flight slots by a token
+    Decode { ids: Vec<u64> },
+    /// request finished (decode budget exhausted, or prefill-only done)
+    Complete { id: u64 },
+    /// slot evicted back to the queue — KV pressure or an SLO preemption
+    /// — and will re-prefill
+    Evict { id: u64 },
+    /// request whose full KV budget can never fit the cap; dropped
+    Reject { id: u64 },
+    /// a prefill chunk advanced slot `id`'s prompt rows `[lo, hi)` through
+    /// the model, fused into the surrounding iteration. Emitted only for
+    /// prompts longer than the chunk budget; per admission episode the
+    /// chunk events of a slot tile `[covered, prompt_len)` contiguously in
+    /// order (`covered == 0` without a prefix hit).
+    PrefillChunk { id: u64, lo: usize, hi: usize },
+    /// request `id`'s prompt attached to shared KV blocks covering its
+    /// first `tokens` positions (block-aligned): only the suffix replays,
+    /// only the suffix footprint is charged
+    PrefixHit { id: u64, tokens: usize },
+    /// preemption moved slot `id`'s cache to the host tier instead of
+    /// dropping it — the bandwidth-priced transfer beat recompute; decode
+    /// progress is preserved for [`CbEvent::SwapIn`]
+    SwapOut { id: u64 },
+    /// a previously swapped request re-entered a slot by transferring its
+    /// cache back (charged at the host-link bandwidth), resuming decode
+    /// where it left off
+    SwapIn { id: u64 },
+}
+
+/// LEGACY flat admission gate over Appendix-G mixed-KV memory — the
+/// pre-block-pool accounting, kept for API compatibility and as the
+/// reference semantics the pool must reduce to: the serving engine now
+/// tracks bytes through [`crate::kv::pool::KvPool`], whose
+/// private-plus-block classes telescope to exactly these counters
+/// whenever prefix sharing is off. `cap_bytes == 0` disables the gate
+/// (every request fits).
+#[derive(Debug, Clone, Default)]
+pub struct KvBudget {
+    pub cap_bytes: usize,
+    pub used_bytes: usize,
+    pub peak_bytes: usize,
+}
+
+impl KvBudget {
+    pub fn new(cap_bytes: usize) -> KvBudget {
+        KvBudget { cap_bytes, used_bytes: 0, peak_bytes: 0 }
+    }
+
+    /// Would `bytes` more fit under the cap?
+    pub fn fits(&self, bytes: usize) -> bool {
+        self.cap_bytes == 0 || self.used_bytes + bytes <= self.cap_bytes
+    }
+
+    pub fn acquire(&mut self, bytes: usize) {
+        self.used_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+    }
+
+    pub fn release(&mut self, bytes: usize) {
+        self.used_bytes = self.used_bytes.saturating_sub(bytes);
+    }
+}
+
+/// Shared-prefix attachment delivered with an admission: the request's
+/// first `tokens` prompt positions are covered by the listed ready blocks
+/// (root-to-leaf, contiguous, block-aligned). Empty when the prompt shares
+/// nothing — or prefix caching is off.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixAttach {
+    pub tokens: usize,
+    pub blocks: Vec<u64>,
+}
+
+/// Execution backend driven by the scheduler loop. All methods mirror a
+/// decision the loop already recorded as a [`CbEvent`]; a backend performs
+/// the corresponding real work (or nothing, for the cost model). The
+/// block/swap methods default to no-ops so cost-model backends stay
+/// trivial.
+pub trait DecodeBackend {
+    /// A batch was admitted: start real work (live: open a `DecodeSession`
+    /// per request, sized prompt + its decode budget, import the shared
+    /// blocks listed in `prefixes[i]`, and replay the first
+    /// `min(uncovered suffix, prefill_limit)` prompt rows).
+    /// `prefill_limit` is `usize::MAX` when chunking is off (whole
+    /// suffixes replay here); the remainder of a longer suffix arrives
+    /// through [`Self::prefill_chunk`]. `decode_budgets` and `prefixes`
+    /// parallel `batch`, as does `classes` — the request's priority class
+    /// (`CbConfig::class_of`), advisory for execution (the loop already
+    /// made every class-driven decision) but plumbed through so real
+    /// backends can tag sessions for QoS accounting or placement.
+    /// Swapped-in requests are NOT part of `batch`; they arrive through
+    /// [`Self::swap_in`].
+    fn admit(
+        &mut self,
+        batch: &[Request],
+        decode_budgets: &[usize],
+        classes: &[usize],
+        prefill_limit: usize,
+        prefixes: &[PrefixAttach],
+    ) -> Result<()>;
+    /// Replay prompt rows `[lo, hi)` of slot `id` into its cache — one
+    /// chunk the scheduler fused into a decode iteration.
+    fn prefill_chunk(&mut self, id: u64, lo: usize, hi: usize) -> Result<()>;
+    /// One co-scheduled decode step advancing every listed slot by a token.
+    fn step(&mut self, ids: &[u64]) -> Result<()>;
+    /// The request finished; release its state and collect output.
+    fn complete(&mut self, id: u64) -> Result<()>;
+    /// The slot was evicted back to the queue; drop its state (it will be
+    /// rebuilt from scratch on re-admission).
+    fn evict(&mut self, id: u64) -> Result<()>;
+    /// Slot `session`'s prompt rows `[lo, hi)` are complete and now back a
+    /// shared block: copy them into the block store so later attachments
+    /// survive the creator (live copies real K/V rows; `bytes` is the
+    /// block's accounting size).
+    fn register_block(
+        &mut self,
+        _session: u64,
+        _block: u64,
+        _lo: usize,
+        _hi: usize,
+        _bytes: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
+    /// A cached block was reclaimed for capacity; drop its stored rows.
+    fn drop_block(&mut self, _block: u64) -> Result<()> {
+        Ok(())
+    }
+    /// Preemption chose swap over recompute: move the slot's state to the
+    /// host tier, preserving decode progress.
+    fn swap_out(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    /// A swapped request re-entered a slot: restore its state from the
+    /// host tier.
+    fn swap_in(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    /// Actual bytes currently held by in-flight slots plus the shared
+    /// block store (0 if untracked); the loop counts a `kv_violations`
+    /// whenever this exceeds the cap.
+    fn kv_bytes_in_flight(&self) -> usize;
+}
+
+/// Cost-model-only backend: the event stream *is* the run.
+pub struct ModelBackend;
+
+impl DecodeBackend for ModelBackend {
+    fn admit(
+        &mut self,
+        _batch: &[Request],
+        _decode_budgets: &[usize],
+        _classes: &[usize],
+        _prefill_limit: usize,
+        _prefixes: &[PrefixAttach],
+    ) -> Result<()> {
+        Ok(())
+    }
+    fn prefill_chunk(&mut self, _id: u64, _lo: usize, _hi: usize) -> Result<()> {
+        Ok(())
+    }
+    fn step(&mut self, _ids: &[u64]) -> Result<()> {
+        Ok(())
+    }
+    fn complete(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    fn evict(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    fn kv_bytes_in_flight(&self) -> usize {
+        0
+    }
+}
+
+/// Continuous-batching serving engine over the cost-model clock.
+pub struct CbEngine {
+    pub shape: TransformerShape,
+    pub strategy: Strategy,
+    pub params: SimParams,
+    pub trace: BandwidthTrace,
+    pub cfg: CbConfig,
+}
+
+impl CbEngine {
+    pub fn new(
+        shape: TransformerShape,
+        strategy: Strategy,
+        params: SimParams,
+        trace: BandwidthTrace,
+        cfg: CbConfig,
+    ) -> CbEngine {
+        CbEngine { shape, strategy, params, trace, cfg }
+    }
+
+    /// Modeled mixed-KV bytes a slot holds after `generated` decode tokens
+    /// on a `prompt_tokens` prompt. ASTRA strategies hold the Appendix-G
+    /// mixed cache; everything else holds full precision.
+    pub fn kv_slot_bytes(&self, prompt_tokens: usize, generated: usize) -> usize {
+        match self.strategy.kind {
+            StrategyKind::Astra { vq } => kv_cache_bytes_astra_live(
+                &self.shape,
+                prompt_tokens,
+                generated,
+                self.shape.elem_bytes,
+                self.strategy.n_devices,
+                vq.groups,
+                vq.codebook_size,
+            ),
+            _ => kv_cache_bytes_full(
+                &self.shape,
+                prompt_tokens + generated,
+                self.shape.elem_bytes,
+            ),
+        }
+    }
+
+    /// Bytes a slot will hold once its decode budget is exhausted — the
+    /// admission gate's per-request ceiling (requests above the cap are
+    /// rejected outright: they could never complete).
+    pub fn kv_projection(&self, prompt_tokens: usize) -> usize {
+        self.kv_slot_bytes(prompt_tokens, self.cfg.decode_tokens)
+    }
+
+    /// Per-token cache growth during decode (full-precision K+V rows).
+    pub fn kv_step_bytes(&self) -> usize {
+        self.kv_slot_bytes(1, 1) - self.kv_slot_bytes(1, 0)
+    }
+
+    /// [`Self::kv_slot_bytes`] under positional locality — the accounting
+    /// the block pool prices blocks with (prefix differences of this are
+    /// identical for every prompt sharing the positions).
+    pub fn kv_slot_bytes_positional(&self, prompt_tokens: usize, generated: usize) -> usize {
+        match self.strategy.kind {
+            StrategyKind::Astra { vq } => kv_cache_bytes_astra_positional(
+                &self.shape,
+                prompt_tokens,
+                generated,
+                self.shape.elem_bytes,
+                self.strategy.n_devices,
+                vq.groups,
+                vq.codebook_size,
+            ),
+            _ => kv_cache_bytes_full(
+                &self.shape,
+                prompt_tokens + generated,
+                self.shape.elem_bytes,
+            ),
+        }
+    }
+
+    /// Bytes of the first `replayed` prompt rows under the accounting
+    /// active for this run (positional with the prefix cache, classic
+    /// without — where the two coincide for every flag-off decision).
+    /// Prefill-only workloads ignore the prefix cache entirely, including
+    /// its accounting.
+    fn slot_prompt_bytes(&self, replayed: usize) -> usize {
+        if self.cfg.prefix_cache && self.cfg.decode_tokens > 0 {
+            self.kv_slot_bytes_positional(replayed, 0)
+        } else {
+            self.kv_slot_bytes(replayed, 0)
+        }
+    }
+
+    /// Accounting size of KV block `[lo, hi)` — the Appendix-G prefix
+    /// difference, so a slot's blocks plus its private remainder
+    /// telescope to exactly its flat footprint.
+    fn block_bytes_range(&self, lo: usize, hi: usize) -> usize {
+        self.slot_prompt_bytes(hi) - self.slot_prompt_bytes(lo)
+    }
+
+    /// The decode budget request `id` will receive: `decode_tokens`, or a
+    /// deterministic sample in `decode_tokens ± decode_jitter` drawn from
+    /// `(seed, id)` — the same everywhere the request is priced, admitted,
+    /// or re-admitted, on either backend.
+    pub fn decode_budget(&self, id: u64) -> usize {
+        let d = self.cfg.decode_tokens;
+        if d == 0 || self.cfg.decode_jitter == 0 {
+            return d;
+        }
+        let j = self.cfg.decode_jitter.min(d - 1);
+        let mut rng = Rng::new(
+            self.cfg.seed ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0xa076_1d64_78bd_642f,
+        );
+        d - j + rng.below(2 * j + 1)
+    }
+
+    /// Bytes request `id` will hold once `budget` decode tokens are
+    /// generated — the admission gate's per-request ceiling under the
+    /// active accounting.
+    pub fn projection_for(&self, prompt_tokens: usize, budget: usize) -> usize {
+        self.slot_prompt_bytes(prompt_tokens) + budget * self.kv_step_bytes()
+    }
+
+    /// The admission gate's oversize rule, the ONE definition shared by
+    /// the head reject pass, the preempt-candidate filter, and the
+    /// admission fits walk: a request whose full projected footprint
+    /// exceeds `cap` can never be served (`cap == 0` disables the gate).
+    /// Callers exempt swapped-out requests themselves — those already
+    /// fit once and return at a known preserved size.
+    pub(crate) fn never_fits(&self, id: u64, tokens: usize, cap: usize) -> bool {
+        cap > 0 && self.projection_for(tokens, self.decode_budget(id)) > cap
+    }
+
+    /// Deterministic prompt token ids for request `id` — the SAME stream
+    /// the live backend feeds its sessions (`synth_prompt` over the
+    /// grouped key), so both backends agree on every radix-tree match.
+    pub fn prompt_for(&self, id: u64, tokens: usize) -> Vec<usize> {
+        synth_prompt(
+            self.cfg.seed,
+            prompt_stream_key(self.cfg.prompt_groups, id),
+            tokens,
+            self.cfg.prompt_vocab.max(2),
+        )
+    }
+
+    /// Modeled cost of recovering an evicted slot by recompute: re-prefill
+    /// the prompt, then regenerate every token produced so far — the
+    /// alternative the swap policy prices transfers against.
+    fn recompute_cost_s(&self, tokens: usize, generated: usize, now: f64) -> f64 {
+        let mut pshape = self.shape;
+        pshape.seq_len = tokens.max(1);
+        let prefill =
+            evaluate_on_trace(&self.strategy.schedule(&pshape), &self.params, &self.trace, now)
+                .total();
+        if generated == 0 {
+            return prefill;
+        }
+        let step = evaluate_on_trace(
+            &self.strategy.decode_step_schedule(&self.shape, tokens + generated),
+            &self.params,
+            &self.trace,
+            now,
+        )
+        .total();
+        prefill + generated as f64 * step
+    }
+
+    /// Plan one iteration's chunk batch: `(slot index, tokens)` pairs in
+    /// admission order (FIFO across prefilling slots, sharing the
+    /// per-iteration token budget), plus the modeled KV growth the whole
+    /// iteration causes — planned chunk rows for prefilling slots and one
+    /// decode token's full-precision rows per decoding slot. With chunking
+    /// disabled there are no prefilling slots, so the plan is empty and the
+    /// growth reduces to the old `slots * kv_step_bytes()` check.
+    fn plan_chunks(&self, slots: &[Slot], chunk_budget: usize) -> (Vec<(usize, usize)>, usize) {
+        let mut order: Vec<usize> = (0..slots.len())
+            .filter(|&i| matches!(slots[i].state, SlotState::Prefilling { .. }))
+            .collect();
+        // FIFO by current-episode admission order (the unique sequence
+        // number; equals the old (admitted_at, id) order except across
+        // readmissions, where queue order is the stable choice)
+        order.sort_by_key(|&i| slots[i].admit_seq);
+        let mut plan = Vec::new();
+        let mut left = chunk_budget;
+        let mut growth = 0usize;
+        for i in order {
+            if left == 0 {
+                break;
+            }
+            if let SlotState::Prefilling { next_token, total } = slots[i].state {
+                let take = (total - next_token).min(left);
+                left -= take;
+                growth += self.slot_prompt_bytes(next_token + take)
+                    - self.slot_prompt_bytes(next_token);
+                plan.push((i, take));
+            }
+        }
+        let decoding = slots.iter().filter(|s| s.state == SlotState::Decoding).count();
+        growth += decoding * self.kv_step_bytes();
+        (plan, growth)
+    }
+
+    /// Serve an open-loop Poisson stream at `rate` req/s for `horizon_s`.
+    pub fn serve_poisson(&mut self, rng: &mut Rng, rate: f64, horizon_s: f64) -> CbReport {
+        let arrivals =
+            super::batcher::poisson_arrivals(rng, rate, horizon_s, self.shape.seq_len);
+        self.serve_stream(arrivals, horizon_s)
+    }
+
+    /// Serve a fixed arrival list under continuous batching on the cost
+    /// model alone.
+    pub fn serve_stream(&mut self, arrivals: Vec<Request>, horizon_s: f64) -> CbReport {
+        self.serve_stream_with(&mut ModelBackend, arrivals, horizon_s)
+            .expect("the cost-model backend is infallible")
+    }
+}

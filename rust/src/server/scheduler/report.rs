@@ -1,0 +1,217 @@
+//! Outcome accounting for a continuous-batching run: the report struct,
+//! the shared completion tally, and per-priority-class breakdowns.
+
+use crate::sim::latency::Breakdown;
+use crate::util::stats::{Summary, WindowedCounter};
+
+use super::CbEvent;
+
+/// Per-priority-class outcome breakdown (populated when
+/// `CbConfig::classes` is non-empty, whatever the active policy — so a
+/// FIFO run and an SLO-class run report directly comparable attainment
+/// on the same trace).
+#[derive(Debug)]
+pub struct ClassReport {
+    /// class index (== position in `CbConfig::classes`; higher = higher
+    /// priority)
+    pub class: usize,
+    /// the class latency deadline, seconds (<= 0: none)
+    pub deadline_s: f64,
+    pub completed: usize,
+    /// admitted or queued inside the horizon but not completed by it
+    pub censored: usize,
+    /// completions whose end-to-end latency met the class deadline
+    pub within_deadline: usize,
+    /// end-to-end latency of this class's completed requests
+    pub latency: Summary,
+}
+
+impl ClassReport {
+    pub(crate) fn new(class: usize, deadline_s: f64) -> ClassReport {
+        ClassReport {
+            class,
+            deadline_s,
+            completed: 0,
+            censored: 0,
+            within_deadline: 0,
+            latency: Summary::new(),
+        }
+    }
+
+    /// Fraction of this class's completions that met its deadline
+    /// (0 when nothing completed; 1 when the class has no deadline).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.within_deadline as f64 / self.completed as f64
+        }
+    }
+
+    /// Within-deadline completions per second over the run horizon.
+    pub fn goodput(&self, horizon_s: f64) -> f64 {
+        if horizon_s > 0.0 {
+            self.within_deadline as f64 / horizon_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Completion bookkeeping shared by the prefill-only and decode paths —
+/// one point of truth for what "a request finished at `done`" updates,
+/// including the per-class tallies.
+pub(crate) struct CompletionTally {
+    pub(crate) completed: usize,
+    pub(crate) within_slo: usize,
+    pub(crate) last_completion: f64,
+    pub(crate) slo: f64,
+    pub(crate) latency: Summary,
+    pub(crate) windows: WindowedCounter,
+    pub(crate) classes: Vec<ClassReport>,
+}
+
+impl CompletionTally {
+    pub(crate) fn new(slo: f64, window_s: f64, class_deadlines: &[f64]) -> CompletionTally {
+        CompletionTally {
+            completed: 0,
+            within_slo: 0,
+            last_completion: 0.0,
+            slo,
+            latency: Summary::new(),
+            windows: WindowedCounter::new(window_s),
+            classes: class_deadlines
+                .iter()
+                .enumerate()
+                .map(|(k, &d)| ClassReport::new(k, d))
+                .collect(),
+        }
+    }
+
+    pub(crate) fn record(&mut self, arrival_s: f64, done: f64, class: usize) {
+        self.completed += 1;
+        let l = done - arrival_s;
+        self.latency.add(l);
+        self.windows.record(done);
+        self.last_completion = done;
+        if self.slo <= 0.0 || l <= self.slo {
+            self.within_slo += 1;
+        }
+        if let Some(c) = self.classes.get_mut(class) {
+            c.completed += 1;
+            c.latency.add(l);
+            if c.deadline_s <= 0.0 || l <= c.deadline_s {
+                c.within_deadline += 1;
+            }
+        }
+    }
+
+    /// A request of `class` fell past the horizon unfinished.
+    pub(crate) fn censor(&mut self, class: usize) {
+        if let Some(c) = self.classes.get_mut(class) {
+            c.censored += 1;
+        }
+    }
+}
+
+/// Outcome of a continuous-batching serve run.
+#[derive(Debug)]
+pub struct CbReport {
+    pub completed: usize,
+    /// admitted or queued inside the horizon but not completed by it
+    pub censored: usize,
+    /// dropped at admission: full KV budget exceeds the cap
+    pub kv_rejected: usize,
+    pub horizon_s: f64,
+    /// completed / horizon
+    pub throughput: f64,
+    /// completed / time of last completion (unbiased under early-ending
+    /// arrival streams)
+    pub throughput_completion: f64,
+    /// completions per second that met the SLO (equals `throughput` when
+    /// the SLO is disabled)
+    pub goodput: f64,
+    pub slo_s: f64,
+    /// end-to-end latency of completed requests (p50/p95/p99 via Summary)
+    pub latency: Summary,
+    /// time to first token, measured from the request's ORIGINAL arrival to
+    /// the first token it ever produced — recorded once per request, so an
+    /// eviction + re-admission cannot overwrite it. Classic (unchunked)
+    /// requests fire at prefill end; chunked requests fire on the first
+    /// decode step after their last chunk.
+    pub ttft: Summary,
+    /// queue wait per admitted request: the SUM of its queueing episodes
+    /// (arrival -> first admission, plus each eviction -> re-admission) —
+    /// in-service time never counts as waiting
+    pub queue_wait: Summary,
+    /// inter-token latency: gaps between consecutive decode-step
+    /// completions of the same slot within one residency — the in-flight
+    /// decode stall metric chunked prefill improves (a monopolizing prefill
+    /// shows up here as one giant gap for every in-flight slot)
+    pub itl: Summary,
+    /// queue wait accrued by censored requests up to the horizon
+    pub censored_wait: Summary,
+    /// (time, queued requests) samples taken at admission decisions
+    pub queue_depth: Vec<(f64, usize)>,
+    /// completion bars covering the whole horizon
+    pub windows: Vec<usize>,
+    /// the scheduler's full decision stream (admissions, prefill chunks,
+    /// decode steps, completions, evictions, rejections) in order
+    pub events: Vec<CbEvent>,
+    /// prefill-chunk events emitted (0 when chunking is off or every
+    /// prompt fit its admission chunk)
+    pub prefill_chunks: usize,
+    /// summed virtual cost of every evaluated prefill + decode step
+    pub model_time: Breakdown,
+    /// high-water mark of modeled in-flight KV bytes
+    pub kv_peak_bytes: usize,
+    /// the configured cap (0 = unlimited)
+    pub kv_cap_bytes: usize,
+    /// preemptions (KV pressure or SLO) resolved by recompute (slots
+    /// requeued mid-decode and rebuilt from scratch)
+    pub kv_evictions: usize,
+    /// iterations where the backend's *actual* in-flight bytes exceeded
+    /// the cap — must be zero; asserted by the live tests
+    pub kv_violations: usize,
+    /// admissions that attached to >= 1 shared block
+    pub prefix_hits: usize,
+    /// prompt tokens served from shared blocks instead of replay
+    pub prefix_hit_tokens: usize,
+    /// prompt tokens across all (re)admissions — the hit-rate denominator
+    pub admitted_prompt_tokens: usize,
+    /// modeled prefill FLOPs the covered tokens did not recompute
+    pub recompute_flops_saved: f64,
+    /// preemptions resolved by swapping to the host tier
+    pub swap_outs: usize,
+    /// swapped requests restored into slots
+    pub swap_ins: usize,
+    /// bytes moved over the host link, out plus in
+    pub swap_bytes: usize,
+    /// proactive SLO preemptions fired by the policy's per-iteration hook
+    /// (each also counted in `kv_evictions` or `swap_outs` by how it was
+    /// resolved); 0 under policies without the hook
+    pub slo_preemptions: usize,
+    /// per-priority-class breakdowns (empty when `CbConfig::classes` is)
+    pub classes: Vec<ClassReport>,
+}
+
+impl CbReport {
+    /// Mean of the queue-depth samples (0 when nothing was ever queued).
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_depth.is_empty() {
+            return 0.0;
+        }
+        self.queue_depth.iter().map(|&(_, d)| d as f64).sum::<f64>()
+            / self.queue_depth.len() as f64
+    }
+
+    /// Fraction of admitted prompt tokens served from shared KV blocks
+    /// (0 when prefix caching is off or nothing was admitted).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.admitted_prompt_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.admitted_prompt_tokens as f64
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! In-flight slot state for the continuous-batching scheduler: the slot
+//! record itself, its chunked-prefill progress, the host-tier entry a
+//! swapped-out request parks in, and the per-request accounting that must
+//! survive eviction and re-admission.
+
+/// Chunked-prefill progress of an in-flight slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// prompt rows `[0, next_token)` are in the cache; `[next_token,
+    /// total)` still arrive as fused chunks
+    Prefilling { next_token: usize, total: usize },
+    /// prompt fully prefilled; each iteration decodes one token
+    Decoding,
+}
+
+/// One in-flight request occupying a decode slot.
+#[derive(Debug, Clone)]
+pub(crate) struct Slot {
+    pub(crate) id: u64,
+    pub(crate) arrival_s: f64,
+    /// prompt length (the request's `tokens`)
+    pub(crate) tokens: usize,
+    pub(crate) remaining: usize,
+    pub(crate) generated: usize,
+    /// modeled mixed-KV bytes this slot holds PRIVATELY — replayed prompt
+    /// rows not yet backing a ready shared block, plus two full-precision
+    /// rows per decode step. Without prefix caching no blocks exist and
+    /// this is the slot's whole footprint, exactly the old accounting.
+    pub(crate) kv_bytes: usize,
+    /// monotone admission sequence number for this episode — the default
+    /// policy evicts the largest, which makes "newest" stable under
+    /// readmission (a readmitted slot counts as newest by its CURRENT
+    /// admission, and same-batch ties resolve in batch order instead of
+    /// by raw id)
+    pub(crate) admit_seq: u64,
+    /// per-request decode budget (== `decode_tokens` unless jittered)
+    pub(crate) budget: usize,
+    /// ready shared blocks this slot holds references on (attached at
+    /// admission plus own blocks whose rows finished replaying)
+    pub(crate) blocks: Vec<u64>,
+    /// own created blocks still waiting for their rows `(block, lo, hi)`,
+    /// ascending; flushed into `blocks` as replay crosses `hi`
+    pub(crate) pending: Vec<(u64, usize, usize)>,
+    pub(crate) state: SlotState,
+    /// virtual time this slot last completed a decode step (ITL tracking)
+    pub(crate) last_token_at: f64,
+}
+
+/// Progress preserved for a swapped-out request until readmission.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SwapEntry {
+    pub(crate) tokens: usize,
+    pub(crate) generated: usize,
+    pub(crate) remaining: usize,
+    pub(crate) budget: usize,
+    /// occupancy transferred out — charged again on the way back in, and
+    /// re-acquired as private bytes at readmission
+    pub(crate) bytes: usize,
+    /// when the slot last emitted a token: preserved so the inter-token
+    /// gap spanning the host-tier dwell (swap-out, queueing, swap-in) is
+    /// counted by the ITL stall metric — swap keeps the generation stream
+    /// alive, so the user-visible gap between token k and k+1 includes it
+    pub(crate) last_token_at: f64,
+}
+
+/// Per-request accounting that must survive eviction and re-admission:
+/// TTFT is measured once, from the original arrival to the first token the
+/// request ever produced, and queue wait sums every queueing episode
+/// instead of being overwritten when a request re-enters through admission.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ReqStats {
+    /// when the current queueing episode began (arrival, or last eviction)
+    pub(crate) queued_since: f64,
+    /// completed queueing episodes, summed
+    pub(crate) queue_wait_s: f64,
+    pub(crate) ttft_recorded: bool,
+}

@@ -137,11 +137,11 @@ impl MetricSet {
     }
 }
 
-/// Is a larger value better for this metric? Throughput-like metrics and
-/// cache hit rates regress downward; everything else (latencies, TTFT,
-/// ITL, swap traffic) upward.
+/// Is a larger value better for this metric? Throughput-like metrics,
+/// cache hit rates, and SLO attainment regress downward; everything else
+/// (latencies, TTFT, ITL, swap traffic) upward.
 fn higher_is_better(name: &str) -> bool {
-    ["throughput", "goodput", "hit_rate"].iter().any(|k| name.contains(k))
+    ["throughput", "goodput", "hit_rate", "attainment"].iter().any(|k| name.contains(k))
 }
 
 /// Integer-valued determinism pins — completion/step/event counts and the
@@ -324,6 +324,31 @@ mod tests {
         assert!(r[0].contains("swap_bytes"), "{r:?}");
         let improved = metric_json(&[("serve/prefix_hit_rate", 0.9), ("serve/swap_bytes", 500.0)]);
         assert!(compare_metrics(&kv, &improved, 0.02).unwrap().is_empty());
+        // per-class SLO attainment regresses downward (like throughput);
+        // per-class tail latency upward
+        let slo = metric_json(&[
+            ("classes/class1_slo_attainment", 0.9),
+            ("classes/class1_p95", 0.300),
+        ]);
+        let dropped = metric_json(&[
+            ("classes/class1_slo_attainment", 0.8),
+            ("classes/class1_p95", 0.300),
+        ]);
+        let r = compare_metrics(&slo, &dropped, 0.02).unwrap();
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].contains("attainment"), "{r:?}");
+        let slower = metric_json(&[
+            ("classes/class1_slo_attainment", 0.9),
+            ("classes/class1_p95", 0.330),
+        ]);
+        let r = compare_metrics(&slo, &slower, 0.02).unwrap();
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].contains("class1_p95"), "{r:?}");
+        let better = metric_json(&[
+            ("classes/class1_slo_attainment", 1.0),
+            ("classes/class1_p95", 0.200),
+        ]);
+        assert!(compare_metrics(&slo, &better, 0.02).unwrap().is_empty());
     }
 
     #[test]

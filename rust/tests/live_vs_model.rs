@@ -16,6 +16,7 @@ use astra::coordinator::Cluster;
 use astra::model::shape::VqSetting;
 use astra::model::TransformerShape;
 use astra::server::live::{live_arrivals, live_engine, serve_live, LiveReport};
+use astra::server::policy::PolicyKind;
 use astra::server::scheduler::{CbConfig, CbEvent, CbReport, ModelBackend};
 use astra::server::Request;
 use astra::sim::latency::SimParams;
@@ -71,6 +72,8 @@ fn assert_agree(m: &CbReport, live: &LiveReport, label: &str) {
     assert_eq!(m.swap_outs, live.report.swap_outs, "{label}");
     assert_eq!(m.swap_ins, live.report.swap_ins, "{label}");
     assert_eq!(m.swap_bytes, live.report.swap_bytes, "{label}");
+    assert_eq!(m.slo_preemptions, live.report.slo_preemptions, "{label}");
+    assert_eq!(m.classes.len(), live.report.classes.len(), "{label}");
     // the live sessions' real memory never contradicted the model's gate
     assert_eq!(live.report.kv_violations, 0, "{label}");
 }
@@ -306,6 +309,61 @@ fn live_and_model_agree_on_swap_thrash_trace() {
     };
     assert_eq!(steps(&m), 4 * 3 * seq, "{m:?}");
     assert!(steps(&m_rec) > 4 * 3 * seq, "{}", steps(&m_rec));
+}
+
+#[test]
+fn live_and_model_agree_under_all_scheduling_policies() {
+    // the policy layer makes decisions in the shared loop, so every
+    // policy must keep the differential exact: prefix-aware admission
+    // reordering over grouped prompts under a cap, and slo-class
+    // ordering + class-based victim selection + the proactive hook on a
+    // pressure trace — live and cost-model streams identical throughout
+    let cluster = tiny_cluster(2, 21);
+    let seq = cluster.artifact.meta.seq_len;
+    let base = CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 6, ..CbConfig::default() };
+
+    // prefix-aware: warm requests jump cold ones while blocks are hot
+    let aware = {
+        let proto = CbConfig {
+            policy: PolicyKind::PrefixAware,
+            prefix_cache: true,
+            kv_block_tokens: 4,
+            prompt_groups: 2,
+            ..base.clone()
+        };
+        let probe = live_engine(&cluster, proto.clone(), params(), trace());
+        CbConfig { kv_cap_bytes: 2 * probe.kv_projection(seq), ..proto }
+    };
+    let arrivals = live_arrivals(&mut Rng::new(201), 25.0, 4.0, seq);
+    assert!(arrivals.len() > 3, "{}", arrivals.len());
+    let (m, live) = run_pair(&cluster, &aware, &arrivals, 1e4);
+    assert_agree(&m, &live, "prefix-aware policy");
+    assert!(m.completed > 0);
+    assert!(m.prefix_hits > 0, "grouped prompts must share under the reordering policy");
+
+    // slo-class: long decode budgets under a tight cap force victim
+    // selection; the tight high-class deadline arms the proactive hook
+    let slo = {
+        let proto = CbConfig {
+            policy: PolicyKind::SloClass,
+            classes: vec![50.0, 0.3],
+            decode_tokens: 3 * seq,
+            ..base.clone()
+        };
+        let probe = live_engine(&cluster, proto.clone(), params(), trace());
+        CbConfig { kv_cap_bytes: 2 * probe.kv_projection(seq), ..proto }
+    };
+    let burst: Vec<Request> =
+        (1..=6u64).map(|id| Request { id, arrival_s: 0.0, tokens: seq }).collect();
+    let (m, live) = run_pair(&cluster, &slo, &burst, 1e5);
+    assert_agree(&m, &live, "slo-class policy");
+    assert_eq!(m.completed, 6, "{m:?}");
+    assert!(m.kv_evictions + m.swap_outs > 0, "pressure trace must preempt: {m:?}");
+    assert_eq!(m.classes.len(), 2);
+    // real full-length generations for every completion, class-tagged
+    for (id, toks) in &live.generations {
+        assert_eq!(toks.len(), 3 * seq, "request {id}");
+    }
 }
 
 #[test]

@@ -10,6 +10,7 @@ use astra::comm::trace::BandwidthTrace;
 use astra::coordinator::TokenPartition;
 use astra::model::shape::{ceil_log2, TransformerShape, VqSetting};
 use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::policy::PolicyKind;
 use astra::server::scheduler::{CbConfig, CbEngine, CbEvent};
 use astra::server::Request;
 use astra::sim::latency::{
@@ -503,6 +504,145 @@ fn prop_prefix_cache_off_paths_reproduce_baseline_streams() {
         let e = mk(CbConfig { decode_jitter: 0, seed: rng.next_u64(), ..off });
         for id in 0..20u64 {
             assert_eq!(e.decode_budget(id), base.decode_tokens, "{label}: jitter-0 identity");
+        }
+    }
+}
+
+#[test]
+fn prop_fifo_policy_layer_reproduces_baseline_streams() {
+    // the policy-refactor anchors, over random traces and configs
+    // (chunked or not, KV-capped or not):
+    //  (a) configuring classes under the default FIFO policy is pure
+    //      accounting — the event stream is bit-identical to the
+    //      classless run;
+    //  (b) the prefix-aware policy with the prefix cache off and no cap
+    //      degenerates to FIFO exactly (all coverage zero, aging
+    //      monotone in queue order, nothing to skip);
+    //  (c) the slo-class policy with no classes configured and no cap
+    //      likewise reproduces the FIFO stream (single implicit class).
+    let mut rng = Rng::new(4500);
+    for case in 0..12 {
+        let n = 2 + rng.below(4);
+        let t = n * (8 + rng.below(48));
+        let shape = TransformerShape::paper_encoder(t);
+        let strategy = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, n);
+        let cap_slots = rng.below(3); // 0 = uncapped
+        let base = CbConfig {
+            max_slots: 2 + rng.below(4),
+            max_batch: 1 + rng.below(4),
+            decode_tokens: 1 + rng.below(24),
+            prefill_chunk_tokens: if rng.chance(0.5) { 1 + rng.below(t) } else { 0 },
+            ..CbConfig::default()
+        };
+        let mk = |cfg: CbConfig| {
+            CbEngine::new(
+                shape,
+                strategy,
+                SimParams::paper_encoder(),
+                BandwidthTrace::constant(100.0, 1e9),
+                cfg,
+            )
+        };
+        let cap = cap_slots * mk(base.clone()).kv_projection(t);
+        let plain = CbConfig { kv_cap_bytes: cap, ..base.clone() };
+        let arrivals = {
+            let mut arr = Vec::new();
+            let mut at = 0.0;
+            for id in 1..=(6 + rng.below(20)) as u64 {
+                at += rng.exp(10.0);
+                arr.push(Request { id, arrival_s: at, tokens: t });
+            }
+            arr
+        };
+        let label = format!("case {case}: t={t} cap={cap}");
+        let r_plain = mk(plain.clone()).serve_stream(arrivals.clone(), 1e5);
+        // (a) classes are reporting-only under FIFO
+        let r_classed = mk(CbConfig {
+            classes: vec![2.0 + rng.f64(), 0.1 + rng.f64(), 8.0],
+            ..plain.clone()
+        })
+        .serve_stream(arrivals.clone(), 1e5);
+        assert_eq!(r_plain.events, r_classed.events, "{label}: classes-under-fifo anchor");
+        assert_eq!(r_classed.classes.len(), 3, "{label}");
+        assert_eq!(
+            r_classed.classes.iter().map(|c| c.completed).sum::<usize>(),
+            r_classed.completed,
+            "{label}"
+        );
+        // (b) + (c): reordering policies with nothing to reorder on
+        // (and no cap, so nothing is ever skipped) degenerate to FIFO
+        if cap == 0 {
+            let r_aware = mk(CbConfig { policy: PolicyKind::PrefixAware, ..plain.clone() })
+                .serve_stream(arrivals.clone(), 1e5);
+            assert_eq!(r_plain.events, r_aware.events, "{label}: prefix-aware-off anchor");
+            let r_slo = mk(CbConfig { policy: PolicyKind::SloClass, ..plain })
+                .serve_stream(arrivals, 1e5);
+            assert_eq!(r_plain.events, r_slo.events, "{label}: classless slo-class anchor");
+            assert_eq!(r_slo.slo_preemptions, 0, "{label}");
+        }
+    }
+}
+
+#[test]
+fn prop_reordering_policies_never_starve_saturating_traces() {
+    // no-starvation, the aging bound's job: on saturating traces (every
+    // request at t=0, generous horizon) both reordering policies must
+    // complete every admissible request — nothing is bypassed forever,
+    // with or without a KV cap forcing preemption churn
+    let mut rng = Rng::new(4600);
+    for case in 0..10 {
+        let n = 2 + rng.below(3);
+        let t = n * (8 + rng.below(32));
+        let shape = TransformerShape::paper_encoder(t);
+        let strategy = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, n);
+        let total = 6 + rng.below(10);
+        let arrivals: Vec<Request> =
+            (0..total as u64).map(|id| Request { id, arrival_s: 0.0, tokens: t }).collect();
+        let base = CbConfig {
+            max_slots: 2 + rng.below(3),
+            max_batch: 1 + rng.below(4),
+            decode_tokens: 1 + rng.below(16),
+            age_bound_s: 0.05 + rng.f64() * 0.5,
+            ..CbConfig::default()
+        };
+        let mk = |cfg: CbConfig| {
+            CbEngine::new(
+                shape,
+                strategy,
+                SimParams::paper_encoder(),
+                BandwidthTrace::constant(100.0, 1e9),
+                cfg,
+            )
+        };
+        let cap =
+            if rng.chance(0.5) { 2 * mk(base.clone()).kv_projection(t) } else { 0 };
+        let aware = CbConfig {
+            policy: PolicyKind::PrefixAware,
+            prefix_cache: true,
+            kv_block_tokens: 1 + rng.below(t),
+            prompt_groups: 1 + rng.below(3),
+            seed: rng.next_u64(),
+            kv_cap_bytes: cap,
+            ..base.clone()
+        };
+        let slo = CbConfig {
+            policy: PolicyKind::SloClass,
+            classes: vec![5.0 + rng.f64() * 20.0, 0.2 + rng.f64()],
+            kv_cap_bytes: cap,
+            ..base
+        };
+        for (name, cfg) in [("prefix-aware", aware), ("slo-class", slo)] {
+            let r = mk(cfg).serve_stream(arrivals.clone(), 1e6);
+            assert_eq!(
+                r.completed + r.kv_rejected,
+                total,
+                "case {case} ({name}, cap={cap}): starved — {} completed, {} rejected, \
+                 {} censored of {total}",
+                r.completed,
+                r.kv_rejected,
+                r.censored
+            );
+            assert_eq!(r.censored, 0, "case {case} ({name})");
         }
     }
 }
