@@ -11,6 +11,7 @@
 use astra::comm::trace::BandwidthTrace;
 use astra::model::shape::{TransformerShape, VqSetting};
 use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::cluster::{ClusterEngine, RouteKind};
 use astra::server::policy::PolicyKind;
 use astra::server::scheduler::{CbConfig, CbEngine};
 use astra::server::Request;
@@ -91,7 +92,7 @@ fn emit_json(out: &str) {
         ("cb8_prefix_g4_sat", const100.clone(), prefixed, Load::Saturating(2000)),
         ("cb8_swap_d512_sat", const100.clone(), swap, Load::Saturating(200)),
         ("cb8_classes2_fifo_sat", const100.clone(), classed_fifo, Load::Saturating(200)),
-        ("cb8_classes2_slo_sat", const100, classed_slo, Load::Saturating(200)),
+        ("cb8_classes2_slo_sat", const100.clone(), classed_slo, Load::Saturating(200)),
     ];
     for (name, trace, cfg, load) in cases {
         let mut e = engine(trace, cfg);
@@ -114,6 +115,39 @@ fn emit_json(out: &str) {
             m.push(name, &format!("class{}_slo_attainment", c.class), c.slo_attainment());
             m.push(name, &format!("class{}_p95", c.class), c.latency.p95());
         }
+    }
+    // fleet scenarios: 4 actorized replicas under the cluster event loop,
+    // grouped prompts arriving staggered (an all-at-t=0 wave would route
+    // every request before any shadow digest is warm), round-robin vs
+    // prefix-affinity on the same trace — the affinity win shows up as a
+    // higher fleet_hit_rate at the same completion count. 5 prompt groups
+    // over 4 replicas: coprime, so sequential-id round-robin genuinely
+    // sprays each group instead of accidentally clustering it
+    let fleet_cfg = CbConfig {
+        prefix_cache: true,
+        prompt_groups: 5,
+        kv_block_tokens: 64,
+        seed: 11,
+        prompt_vocab: 512,
+        ..CbConfig::default()
+    };
+    let staggered: Vec<Request> = (0..400u64)
+        .map(|i| Request { id: i, arrival_s: i as f64 * 0.02, tokens: 1024 })
+        .collect();
+    let fleet_routes = [
+        ("fleet4_rr_sat", RouteKind::RoundRobin),
+        ("fleet4_affinity_sat", RouteKind::PrefixAffinity),
+    ];
+    for (name, route) in fleet_routes {
+        let engines: Vec<CbEngine> =
+            (0..4).map(|_| engine(const100.clone(), fleet_cfg.clone())).collect();
+        let mut fleet = ClusterEngine::new(engines, route);
+        let r = fleet.serve_stream(staggered.clone(), 60.0).expect("model fleet serve");
+        m.push(name, "completed", r.completed() as f64);
+        m.push(name, "fleet_throughput", r.fleet_throughput());
+        m.push(name, "fleet_p95", r.fleet_p95());
+        m.push(name, "fleet_hit_rate", r.fleet_hit_rate());
+        m.push(name, "load_skew", r.load_skew());
     }
     m.write(out).expect("writing bench metrics");
 }

@@ -64,7 +64,21 @@
 //!   original arrival, eviction-safe), inter-token latency, queue depth,
 //!   censored requests, goodput under an SLO, per-class
 //!   latency/attainment/goodput breakdowns, and KV
-//!   peak/eviction/violation counters.
+//!   peak/eviction/violation counters. The engine itself is *actorized*
+//!   ([`server::scheduler::EngineActor`]): the per-iteration mechanism is
+//!   a `step(backend, now, horizon) -> StepOutcome` state machine that
+//!   reports its next wake time instead of owning the clock, and the
+//!   single-replica serve loop is a trivial driver over it. On top sits
+//!   [`server::cluster`]: N replicas under one deterministic cluster
+//!   event loop (`--replicas N`) that owns the shared virtual clock and
+//!   the global arrival queue, routes each arrival through a pluggable
+//!   [`server::cluster::RoutePolicy`] (round-robin, least-loaded, or
+//!   prefix-affinity scoring per-replica shadow radix digests against
+//!   load skew), aggregates per-replica reports into fleet rollups
+//!   (pooled p95, pooled hit rate, load skew), and can drain a replica
+//!   mid-run — evicting its slots and spilling its queue to the
+//!   survivors without losing a request. A 1-replica fleet reproduces
+//!   the single-engine event stream bit for bit.
 //! * [`kv`] is the block-based KV memory subsystem under the scheduler:
 //!   [`kv::pool::KvPool`] accounts refcounted fixed-token blocks whose
 //!   bytes are Appendix-G prefix differences (telescoping to exactly the

@@ -92,6 +92,18 @@ SUBCOMMANDS
              slo-class unless one is given
              --age-bound S: seconds of queueing per aging step for the
              reordering policies (starvation bound; default 0.5)
+             --slo-preempt-budget K: victims the slo-class proactive
+             preemption hook may evict per iteration (default 1, the
+             historical single-victim behavior)
+             --replicas N: run N engine replicas under one deterministic
+             cluster event loop (fleet mode; works with and without
+             --live). --replicas 1 is exactly the single-engine path
+             --route-policy round-robin|least-loaded|prefix-affinity:
+             which replica each arrival joins (fleet mode; prefix-affinity
+             scores each replica's cached prompt prefix against its load
+             skew over per-replica shadow radix digests)
+             --drain-at S: remove replica 0 at virtual time S — its slots
+             evict, its queue spills to the survivors via the route policy
              --live: drive real DecodeSessions (variable-length prompts,
              mixed-precision KV caches, greedy generations) through the
              same slot scheduler; uses --artifacts DIR when a decoder

@@ -10,6 +10,9 @@ use crate::config::{shape_preset, vq_preset, RunConfig};
 use crate::coordinator::Cluster;
 use crate::model::shape::VqSetting;
 use crate::parallel::strategies::{Strategy, StrategyKind};
+use crate::server::batcher::Request;
+use crate::server::cluster::{parse_route, ClusterEngine, ClusterReport, RouteKind};
+use crate::server::live::{live_engine, LiveBackend};
 use crate::server::policy::{parse_policy, PolicyKind};
 use crate::server::scheduler::{CbConfig, CbEngine, CbEvent, CbReport};
 use crate::sim::latency::{evaluate, SimParams};
@@ -140,6 +143,14 @@ fn policy_from_args(args: &Args) -> Result<(PolicyKind, Vec<f64>, f64)> {
     Ok((policy, classes, args.f64_or("age-bound", 0.5)?))
 }
 
+/// Parse `--route-policy` (fleet request routing; default round-robin).
+fn route_from_args(args: &Args) -> Result<RouteKind> {
+    let name = args.get_or("route-policy", "round-robin");
+    parse_route(&name).with_context(|| {
+        format!("unknown --route-policy `{name}` (round-robin|least-loaded|prefix-affinity)")
+    })
+}
+
 /// Per-class report rows (printed only when classes are configured).
 fn print_class_rows(r: &mut CbReport) {
     let horizon = r.horizon_s;
@@ -234,8 +245,14 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         policy,
         classes,
         age_bound_s,
+        slo_preempt_budget: args.usize_or("slo-preempt-budget", 1)?,
         ..CbConfig::default()
     };
+    let replicas = args.usize_or("replicas", 1)?;
+    if replicas > 1 {
+        let proto = CbEngine::new(shape, strategy, params, trace, cfg);
+        return serve_cb_fleet(args, proto, rate, horizon, seed, replicas);
+    }
 
     println!(
         "== serve-cb: {} on {model} T={tokens} N={n}, {} trace, rate {rate}/s, {horizon} s ==",
@@ -368,12 +385,17 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         policy,
         classes,
         age_bound_s,
+        slo_preempt_budget: args.usize_or("slo-preempt-budget", 1)?,
         // seed + prompt_vocab are pinned to the cluster by `live_engine`
         ..CbConfig::default()
     };
     let mut rng = Rng::new(cluster.config.seed);
     let arrivals =
         crate::server::live::live_arrivals(&mut rng, rate, horizon, meta.seq_len);
+    let replicas = args.usize_or("replicas", 1)?;
+    if replicas > 1 {
+        return serve_cb_live_fleet(args, &cluster, &cfg, arrivals, horizon, replicas);
+    }
     let n_arrivals = arrivals.len();
     let params = SimParams::paper_encoder();
     let trace = BandwidthTrace::constant(cluster.config.bandwidth_mbps, 1e9);
@@ -515,6 +537,170 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
     }
     anyhow::ensure!(failed.is_empty(), "smoke invariants violated: {}", failed.join(", "));
     println!("smoke invariants hold: full generations, zero KV violations, sane TTFT");
+    Ok(())
+}
+
+/// `astra serve-cb --replicas N` on the cost model: N clones of the
+/// configured engine under the deterministic cluster event loop, with
+/// `--route-policy` deciding which replica each arrival joins and
+/// `--drain-at S` optionally removing replica 0 mid-run.
+fn serve_cb_fleet(
+    args: &Args,
+    proto: CbEngine,
+    rate: f64,
+    horizon: f64,
+    seed: u64,
+    replicas: usize,
+) -> Result<()> {
+    let route = route_from_args(args)?;
+    let seq_len = proto.shape.seq_len;
+    let engines: Vec<CbEngine> = (0..replicas).map(|_| proto.clone()).collect();
+    let mut fleet = ClusterEngine::new(engines, route);
+    if args.get("drain-at").is_some() {
+        fleet = fleet.with_drain(0, args.f64_or("drain-at", 0.0)?);
+    }
+    let mut rng = Rng::new(seed);
+    let arrivals = crate::server::batcher::poisson_arrivals(&mut rng, rate, horizon, seq_len);
+    let n_arrivals = arrivals.len();
+    let mut report = fleet.serve_stream(arrivals, horizon)?;
+
+    println!(
+        "== serve-cb fleet: {replicas} replicas, {} routing, rate {rate}/s, {horizon} s ==",
+        route.name(),
+    );
+    println!("arrivals {n_arrivals}");
+    print_fleet_report(&mut report);
+    if args.flag("assert-invariants") {
+        assert_fleet_invariants(&report)?;
+    }
+    Ok(())
+}
+
+/// `astra serve-cb --live --replicas N`: N engine replicas each driving
+/// its own real [`LiveBackend`] (all sharing the loaded cluster's
+/// weights) under the cluster event loop and `--route-policy`.
+fn serve_cb_live_fleet(
+    args: &Args,
+    cluster: &Cluster,
+    cfg: &CbConfig,
+    arrivals: Vec<Request>,
+    horizon: f64,
+    replicas: usize,
+) -> Result<()> {
+    let route = route_from_args(args)?;
+    let params = SimParams::paper_encoder();
+    let trace = BandwidthTrace::constant(cluster.config.bandwidth_mbps, 1e9);
+    let engines: Vec<CbEngine> = (0..replicas)
+        .map(|_| live_engine(cluster, cfg.clone(), params.clone(), trace.clone()))
+        .collect();
+    // the pinned config (seed + prompt_vocab from the cluster), so every
+    // backend derives the same prompt streams as the schedulers
+    let pinned = engines[0].cfg.clone();
+    let mut backends: Vec<LiveBackend> =
+        (0..replicas).map(|_| LiveBackend::for_config(cluster, &pinned)).collect();
+    let mut fleet = ClusterEngine::new(engines, route);
+    if args.get("drain-at").is_some() {
+        fleet = fleet.with_drain(0, args.f64_or("drain-at", 0.0)?);
+    }
+    let n_arrivals = arrivals.len();
+    let wall0 = Instant::now();
+    let mut report = fleet.serve_stream_with(&mut backends, arrivals, horizon)?;
+    let wall = wall0.elapsed().as_secs_f64();
+
+    println!(
+        "\n== serve-cb --live fleet: {replicas} replicas x {} devices, {} routing, {horizon} s ==",
+        cluster.config.n_devices,
+        route.name(),
+    );
+    println!("arrivals {n_arrivals}   wall {wall:.2} s");
+    print_fleet_report(&mut report);
+    let steps: usize = backends.iter().map(|b| b.steps).sum();
+    let host_s: f64 = backends.iter().map(|b| b.host_compute_s).sum();
+    println!("live execution: {steps} real decode steps, host compute {:.1} ms", host_s * 1e3);
+    if args.flag("assert-invariants") {
+        assert_fleet_invariants(&report)?;
+    }
+    Ok(())
+}
+
+/// Per-replica rows plus the fleet rollups shared by the model and live
+/// fleet paths.
+fn print_fleet_report(report: &mut ClusterReport) {
+    let routed = report.routed.clone();
+    let drained = report.drained;
+    for r in &mut report.replicas {
+        let mark = if drained == Some(r.replica) {
+            "  (drained)"
+        } else {
+            ""
+        };
+        println!(
+            "replica {}  routed {:>5}  completed {:>5}  censored {:>4}  p95 {:>8.1} ms  \
+             hit {:>5.1}%{mark}",
+            r.replica,
+            routed[r.replica],
+            r.completed,
+            r.censored,
+            r.latency.p95() * 1e3,
+            r.prefix_hit_rate() * 100.0,
+        );
+    }
+    println!(
+        "fleet      completed {}  censored {}  throughput {:.2}/s  goodput {:.2}/s",
+        report.completed(),
+        report.censored(),
+        report.fleet_throughput(),
+        report.fleet_goodput()
+    );
+    let unrouted = if report.unrouted > 0 {
+        format!("  ({} unrouted)", report.unrouted)
+    } else {
+        String::new()
+    };
+    println!(
+        "fleet      p95 {:.1} ms  hit rate {:.1}%  load skew {:.2}{unrouted}",
+        report.fleet_p95() * 1e3,
+        report.fleet_hit_rate() * 100.0,
+        report.load_skew(),
+    );
+}
+
+/// Fleet smoke invariants (`--assert-invariants`): work completed, every
+/// replica inside its KV cap, and no request completed twice anywhere in
+/// the fleet (the drain/re-route no-loss guarantee).
+fn assert_fleet_invariants(report: &ClusterReport) -> Result<()> {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut dup = 0usize;
+    for e in &report.events {
+        if let CbEvent::Complete { id } = e.event {
+            if !seen.insert(id) {
+                dup += 1;
+            }
+        }
+    }
+    let invariants: Vec<(&str, bool, String)> = vec![
+        (
+            "fleet completed > 0",
+            report.completed() > 0,
+            format!("{} completions across the fleet", report.completed()),
+        ),
+        (
+            "zero kv_violations per replica",
+            report.kv_violations() == 0,
+            format!("{} violations summed over replicas", report.kv_violations()),
+        ),
+        (
+            "no request completed twice",
+            dup == 0,
+            format!("{dup} duplicate completions over {} distinct ids", seen.len()),
+        ),
+    ];
+    let failed: Vec<&str> = invariants.iter().filter(|t| !t.1).map(|t| t.0).collect();
+    println!("\nfleet invariants:");
+    for (name, ok, detail) in &invariants {
+        println!("  [{}] {name}: {detail}", if *ok { "ok" } else { "FAIL" });
+    }
+    anyhow::ensure!(failed.is_empty(), "fleet invariants violated: {}", failed.join(", "));
     Ok(())
 }
 

@@ -1,0 +1,197 @@
+//! Shadow prefix digest: the router's read-only model of what each
+//! replica's radix tree can serve from cache.
+//!
+//! The cluster loop cannot peek inside an [`super::super::CbEngine`]'s
+//! radix tree without entangling routing with the engine's mutable state,
+//! so each replica gets a shadow digest fed by a [`DigestTap`] wrapped
+//! around its backend: every `register_block` / `drop_block` the engine
+//! issues is mirrored here before it reaches the real backend. The digest
+//! then answers the only question routing needs — "how many leading
+//! prompt tokens of this request would replica r serve from shared
+//! blocks?" — from immutable state, keeping [`super::RoutePolicy`] a pure
+//! snapshot-in / decision-out function like `SchedPolicy`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::super::live::prompt_stream_key;
+use super::super::scheduler::{DecodeBackend, PrefixAttach};
+use crate::server::batcher::Request;
+
+/// Per-replica mirror of the shared-block spans the replica's engine has
+/// registered, keyed by prompt stream (the same `prompt_stream_key` the
+/// radix tree and the live backend use, so the digest and the tree agree
+/// on which requests share a prompt).
+#[derive(Debug, Clone, Default)]
+pub struct ShadowDigest {
+    prompt_groups: usize,
+    /// block id -> (stream key, span start) — the reverse index that
+    /// makes `drop_block` O(log n)
+    blocks: BTreeMap<u64, (u64, usize)>,
+    /// stream key -> span start -> (span end, backing block)
+    spans: BTreeMap<u64, BTreeMap<usize, (usize, u64)>>,
+}
+
+impl ShadowDigest {
+    pub fn new(prompt_groups: usize) -> ShadowDigest {
+        ShadowDigest { prompt_groups, ..ShadowDigest::default() }
+    }
+
+    /// Mirror of [`DecodeBackend::register_block`]: slot `session`'s
+    /// prompt rows `[lo, hi)` now back shared block `block`.
+    pub fn register(&mut self, session: u64, block: u64, lo: usize, hi: usize) {
+        let key = prompt_stream_key(self.prompt_groups, session);
+        self.blocks.insert(block, (key, lo));
+        self.spans.entry(key).or_default().insert(lo, (hi, block));
+    }
+
+    /// Mirror of [`DecodeBackend::drop_block`]: the engine reclaimed the
+    /// block, so its span no longer counts as coverage.
+    pub fn drop_block(&mut self, block: u64) {
+        let Some((key, lo)) = self.blocks.remove(&block) else { return };
+        if let Some(stream) = self.spans.get_mut(&key) {
+            // a newer block may have re-registered the same span; only
+            // remove the entry this block still backs
+            if stream.get(&lo).is_some_and(|&(_, b)| b == block) {
+                stream.remove(&lo);
+            }
+            if stream.is_empty() {
+                self.spans.remove(&key);
+            }
+        }
+    }
+
+    /// Leading prompt tokens of request `id` (a `tokens`-token prompt)
+    /// this replica would serve from shared blocks: walk the contiguous
+    /// block-aligned span chain from token 0, exactly as the radix lookup
+    /// attaches root-to-leaf.
+    pub fn covered(&self, id: u64, tokens: usize) -> usize {
+        let key = prompt_stream_key(self.prompt_groups, id);
+        let Some(stream) = self.spans.get(&key) else { return 0 };
+        let mut cov = 0usize;
+        while cov < tokens {
+            match stream.get(&cov) {
+                Some(&(hi, _)) if hi > cov => cov = hi,
+                _ => break,
+            }
+        }
+        cov.min(tokens)
+    }
+
+    /// Forget everything — the replica was drained; its blocks die with it.
+    pub fn clear(&mut self) {
+        self.blocks.clear();
+        self.spans.clear();
+    }
+}
+
+/// Backend wrapper that mirrors block registrations into a replica's
+/// [`ShadowDigest`] before forwarding to the real backend. Every other
+/// method forwards untouched, so a tapped backend is observationally
+/// identical to the bare one — the event streams the differential tests
+/// pin cannot tell the difference.
+pub(crate) struct DigestTap<'a, B: DecodeBackend + ?Sized> {
+    pub(crate) inner: &'a mut B,
+    pub(crate) digest: &'a mut ShadowDigest,
+}
+
+impl<B: DecodeBackend + ?Sized> DecodeBackend for DigestTap<'_, B> {
+    fn admit(
+        &mut self,
+        batch: &[Request],
+        decode_budgets: &[usize],
+        classes: &[usize],
+        prefill_limit: usize,
+        prefixes: &[PrefixAttach],
+    ) -> Result<()> {
+        self.inner.admit(batch, decode_budgets, classes, prefill_limit, prefixes)
+    }
+
+    fn prefill_chunk(&mut self, id: u64, lo: usize, hi: usize) -> Result<()> {
+        self.inner.prefill_chunk(id, lo, hi)
+    }
+
+    fn step(&mut self, ids: &[u64]) -> Result<()> {
+        self.inner.step(ids)
+    }
+
+    fn complete(&mut self, id: u64) -> Result<()> {
+        self.inner.complete(id)
+    }
+
+    fn evict(&mut self, id: u64) -> Result<()> {
+        self.inner.evict(id)
+    }
+
+    fn register_block(
+        &mut self,
+        session: u64,
+        block: u64,
+        lo: usize,
+        hi: usize,
+        bytes: usize,
+    ) -> Result<()> {
+        self.digest.register(session, block, lo, hi);
+        self.inner.register_block(session, block, lo, hi, bytes)
+    }
+
+    fn drop_block(&mut self, block: u64) -> Result<()> {
+        self.digest.drop_block(block);
+        self.inner.drop_block(block)
+    }
+
+    fn swap_out(&mut self, id: u64) -> Result<()> {
+        self.inner.swap_out(id)
+    }
+
+    fn swap_in(&mut self, id: u64) -> Result<()> {
+        self.inner.swap_in(id)
+    }
+
+    fn drop_swapped(&mut self, id: u64) -> Result<()> {
+        self.inner.drop_swapped(id)
+    }
+
+    fn kv_bytes_in_flight(&self) -> usize {
+        self.inner.kv_bytes_in_flight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covered_walks_the_contiguous_span_chain() {
+        // 2 prompt groups: ids 0 and 2 share stream 0, id 1 is stream 1
+        let mut d = ShadowDigest::new(2);
+        d.register(0, 10, 0, 16);
+        d.register(0, 11, 16, 32);
+        // a span past a gap never counts
+        d.register(0, 12, 48, 64);
+        assert_eq!(d.covered(2, 64), 32, "chain stops at the gap");
+        assert_eq!(d.covered(2, 20), 20, "coverage caps at the prompt length");
+        assert_eq!(d.covered(1, 64), 0, "other streams share nothing");
+        d.register(1, 20, 0, 16);
+        assert_eq!(d.covered(1, 64), 16);
+        assert_eq!(d.covered(3, 64), 16, "same stream via id % groups");
+    }
+
+    #[test]
+    fn drop_block_removes_coverage_and_tolerates_reregistration() {
+        let mut d = ShadowDigest::new(0);
+        d.register(7, 10, 0, 16);
+        d.register(7, 11, 16, 32);
+        assert_eq!(d.covered(7, 64), 32);
+        d.drop_block(10);
+        assert_eq!(d.covered(7, 64), 0, "chain must restart at token 0");
+        // re-register the same span under a new block, then drop the old
+        // id again: the new entry must survive
+        d.register(7, 12, 0, 16);
+        d.drop_block(10);
+        assert_eq!(d.covered(7, 64), 32);
+        d.clear();
+        assert_eq!(d.covered(7, 64), 0);
+    }
+}

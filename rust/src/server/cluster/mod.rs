@@ -1,0 +1,356 @@
+//! Multi-replica serving: N actorized continuous-batching engines under
+//! one deterministic cluster event loop.
+//!
+//! The actor contract splits responsibilities sharply:
+//!
+//! * **Engines own mechanism.** Each replica is an
+//!   [`EngineActor`] — admission, chunked prefill, decode, KV pressure,
+//!   swap pricing, and `SchedPolicy` hooks all happen inside
+//!   [`EngineActor::step`], exactly as in a single-replica run. An actor
+//!   never sees the fleet; it reports its next wake time and its events.
+//! * **The cluster loop owns time and admission.** [`ClusterEngine`]
+//!   holds the one virtual clock, the global arrival queue, and the
+//!   replica wake times; every iteration it advances to the earliest
+//!   pending instant (a replica wake, an arrival, a scheduled drain),
+//!   routes due arrivals, and steps every replica whose wake is due — in
+//!   replica-index order, so the interleaved fleet stream is a pure
+//!   function of the trace.
+//! * **Routing sees snapshots only.** The [`RoutePolicy`] is handed
+//!   immutable [`ReplicaView`]s (queue depth, in-flight slots, and — for
+//!   affinity policies — how many prompt tokens the replica's shadow
+//!   [`ShadowDigest`] says it could serve from cache) and returns a
+//!   replica index. It can neither mutate an engine nor observe
+//!   non-deterministic state.
+//!
+//! With one replica the loop degenerates to exactly the single-replica
+//! driver in `scheduler::loop`: same clock jumps, same event stream, bit
+//! for bit — `tests/cluster.rs` and the proptests pin this. Replica
+//! removal ([`ClusterEngine::with_drain`]) tears one replica down
+//! mid-run: its slots are evicted recompute-style, its host swap tier and
+//! shared blocks die with it, and every queued request spills to the
+//! survivors through the same routing policy, carrying its accounting so
+//! no wait or first token is double-counted.
+
+mod digest;
+mod route;
+
+pub use digest::ShadowDigest;
+pub use route::{
+    parse_route, LeastLoaded, PrefixAffinity, ReplicaView, RouteKind, RoundRobin, RoutePolicy,
+};
+
+use anyhow::{ensure, Result};
+
+use digest::DigestTap;
+
+use super::batcher::Request;
+use super::scheduler::{CbEngine, CbEvent, CbReport, DecodeBackend, EngineActor, ModelBackend};
+use crate::util::stats::Summary;
+
+/// One scheduler event tagged with the replica that emitted it. A
+/// single-replica fleet emits the identical `CbEvent` sequence all tagged
+/// `replica: 0`, so existing single-replica fixtures never churn.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaEvent {
+    pub replica: usize,
+    pub event: CbEvent,
+}
+
+/// The multi-replica serve loop: N engines, one clock, one arrival
+/// stream, a pluggable router.
+pub struct ClusterEngine {
+    engines: Vec<CbEngine>,
+    route: RouteKind,
+    /// scheduled mid-run removal: (replica index, virtual time)
+    drain_at: Option<(usize, f64)>,
+}
+
+impl ClusterEngine {
+    pub fn new(engines: Vec<CbEngine>, route: RouteKind) -> ClusterEngine {
+        ClusterEngine { engines, route, drain_at: None }
+    }
+
+    /// Schedule replica `replica` for removal at virtual time `at_s`: its
+    /// in-flight work is evicted, its queue spills to the survivors. The
+    /// drain is skipped if it would leave the fleet empty.
+    pub fn with_drain(mut self, replica: usize, at_s: f64) -> ClusterEngine {
+        self.drain_at = Some((replica, at_s));
+        self
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Serve over the cost model (one [`ModelBackend`] per replica).
+    pub fn serve_stream(
+        &mut self,
+        arrivals: Vec<Request>,
+        horizon_s: f64,
+    ) -> Result<ClusterReport> {
+        let mut backends: Vec<ModelBackend> = self.engines.iter().map(|_| ModelBackend).collect();
+        self.serve_stream_with(&mut backends, arrivals, horizon_s)
+    }
+
+    /// Serve a fixed arrival list over per-replica backends (`backends[i]`
+    /// executes replica `i`'s work). `arrivals` must be sorted by arrival.
+    pub fn serve_stream_with<B: DecodeBackend>(
+        &mut self,
+        backends: &mut [B],
+        arrivals: Vec<Request>,
+        horizon_s: f64,
+    ) -> Result<ClusterReport> {
+        let n = self.engines.len();
+        ensure!(n > 0, "cluster needs at least one replica");
+        ensure!(backends.len() == n, "need one backend per replica");
+        if let Some((victim, _)) = self.drain_at {
+            ensure!(victim < n, "drain target {victim} out of range");
+        }
+        let policy = self.route.make(self.engines[0].cfg.kv_block_tokens.max(1));
+        let affinity = policy.uses_affinity();
+        let mut actors: Vec<EngineActor> = self
+            .engines
+            .iter()
+            .enumerate()
+            .map(|(i, e)| EngineActor::with_replica(e.clone(), i))
+            .collect();
+        let mut digests: Vec<ShadowDigest> = self
+            .engines
+            .iter()
+            .map(|e| ShadowDigest::new(e.cfg.prompt_groups))
+            .collect();
+        let mut alive = vec![true; n];
+        // next wake per replica; None = idle (sleeps until an enqueue)
+        let mut wake: Vec<Option<f64>> = vec![None; n];
+        let mut drain_pending = self.drain_at;
+        let mut pending = arrivals.into_iter().peekable();
+        let mut seq: u64 = 0; // routed-request counter (the RR cursor)
+        let mut routed = vec![0usize; n];
+        let mut events: Vec<ReplicaEvent> = Vec::new();
+        let mut drained: Option<usize> = None;
+
+        loop {
+            // ---- advance the shared clock to the earliest pending instant ----
+            let next_wake = (0..n)
+                .filter(|&i| alive[i])
+                .filter_map(|i| wake[i])
+                .fold(f64::INFINITY, f64::min);
+            let next_arrival = pending.peek().map_or(f64::INFINITY, |r| r.arrival_s);
+            let next_drain = drain_pending.map_or(f64::INFINITY, |(_, at)| at);
+            let now = next_wake.min(next_arrival).min(next_drain);
+            if !now.is_finite() || now >= horizon_s {
+                break;
+            }
+
+            // ---- drain first, so same-instant arrivals route to survivors ----
+            if drain_pending.is_some_and(|(_, at)| at <= now) {
+                let (victim, _) = drain_pending.take().unwrap();
+                // never drain the last live replica — spilled work would
+                // have nowhere to go
+                if alive[victim] && alive.iter().filter(|&&a| a).count() >= 2 {
+                    let mut tap = DigestTap {
+                        inner: &mut backends[victim],
+                        digest: &mut digests[victim],
+                    };
+                    let out = actors[victim].drain(&mut tap, now)?;
+                    for event in out.events {
+                        events.push(ReplicaEvent { replica: victim, event });
+                    }
+                    alive[victim] = false;
+                    wake[victim] = None;
+                    digests[victim].clear();
+                    drained = Some(victim);
+                    // spill the drained queue through the same router
+                    for (req, st) in out.spilled {
+                        let views = replica_views(&actors, &digests, &alive, &req, affinity);
+                        let target = policy.route(seq, now, &req, &views);
+                        seq += 1;
+                        routed[target] += 1;
+                        actors[target].adopt(req, st);
+                        if wake[target].is_none() {
+                            wake[target] = Some(now);
+                        }
+                    }
+                }
+            }
+
+            // ---- route arrivals due at this instant ----
+            while let Some(r) = pending.peek() {
+                if r.arrival_s > now {
+                    break;
+                }
+                let req = pending.next().unwrap();
+                let views = replica_views(&actors, &digests, &alive, &req, affinity);
+                let target = policy.route(seq, now, &req, &views);
+                seq += 1;
+                routed[target] += 1;
+                actors[target].enqueue(req);
+                if wake[target].is_none() {
+                    wake[target] = Some(now);
+                }
+            }
+
+            // ---- step every replica whose wake is due, in index order ----
+            for i in 0..n {
+                if !alive[i] || wake[i].is_none_or(|w| w > now) {
+                    continue;
+                }
+                let mut tap = DigestTap { inner: &mut backends[i], digest: &mut digests[i] };
+                let out = actors[i].step(&mut tap, now, horizon_s)?;
+                for event in out.events {
+                    events.push(ReplicaEvent { replica: i, event });
+                }
+                wake[i] = out.until;
+            }
+        }
+
+        // arrivals the run never reached are censored at the fleet level
+        // (no replica ever owned them, so no per-replica tally moves)
+        let unrouted = pending.filter(|r| r.arrival_s < horizon_s).count();
+
+        let replicas: Vec<CbReport> = actors.into_iter().map(|a| a.finish(horizon_s)).collect();
+        Ok(ClusterReport { replicas, events, horizon_s, routed, drained, unrouted })
+    }
+}
+
+/// Immutable routing snapshots over the live replicas. Coverage lookups
+/// are skipped unless the policy declared it reads them.
+fn replica_views(
+    actors: &[EngineActor],
+    digests: &[ShadowDigest],
+    alive: &[bool],
+    req: &Request,
+    want_coverage: bool,
+) -> Vec<ReplicaView> {
+    actors
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| alive[i])
+        .map(|(i, a)| {
+            let covered_tokens = if want_coverage {
+                digests[i].covered(req.id, req.tokens)
+            } else {
+                0
+            };
+            ReplicaView {
+                replica: i,
+                queued: a.queue_len(),
+                in_flight: a.in_flight(),
+                swapped: a.swapped_out(),
+                covered_tokens,
+            }
+        })
+        .collect()
+}
+
+/// Outcome of a fleet serve run: per-replica reports plus fleet-level
+/// rollups computed on the shared clock.
+#[derive(Debug)]
+pub struct ClusterReport {
+    /// one full [`CbReport`] per replica, index == replica id
+    pub replicas: Vec<CbReport>,
+    /// the interleaved fleet decision stream, in processing order
+    pub events: Vec<ReplicaEvent>,
+    pub horizon_s: f64,
+    /// requests routed to each replica (arrivals + drain spills)
+    pub routed: Vec<usize>,
+    /// the replica removed mid-run, if a scheduled drain executed
+    pub drained: Option<usize>,
+    /// arrivals inside the horizon the run ended before routing — censored
+    /// at the fleet level only (they never reached any replica)
+    pub unrouted: usize,
+}
+
+impl ClusterReport {
+    pub fn completed(&self) -> usize {
+        self.replicas.iter().map(|r| r.completed).sum()
+    }
+
+    /// Fleet censored count: per-replica censored plus never-routed
+    /// arrivals. With one replica this equals the single-engine
+    /// `CbReport::censored` exactly.
+    pub fn censored(&self) -> usize {
+        self.replicas.iter().map(|r| r.censored).sum::<usize>() + self.unrouted
+    }
+
+    pub fn kv_rejected(&self) -> usize {
+        self.replicas.iter().map(|r| r.kv_rejected).sum()
+    }
+
+    pub fn kv_violations(&self) -> usize {
+        self.replicas.iter().map(|r| r.kv_violations).sum()
+    }
+
+    /// Fleet completions per second over the shared horizon.
+    pub fn fleet_throughput(&self) -> f64 {
+        if self.horizon_s > 0.0 {
+            self.completed() as f64 / self.horizon_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fleet within-SLO completions per second (sum of per-replica
+    /// goodput — all replicas share the horizon).
+    pub fn fleet_goodput(&self) -> f64 {
+        self.replicas.iter().map(|r| r.goodput).sum()
+    }
+
+    /// Fleet prefix hit rate: shared-block prompt tokens over all admitted
+    /// prompt tokens, pooled across replicas (NOT a mean of per-replica
+    /// rates, which would overweight idle replicas).
+    pub fn fleet_hit_rate(&self) -> f64 {
+        let denom: usize = self.replicas.iter().map(|r| r.admitted_prompt_tokens).sum();
+        if denom == 0 {
+            return 0.0;
+        }
+        self.replicas.iter().map(|r| r.prefix_hit_tokens).sum::<usize>() as f64 / denom as f64
+    }
+
+    /// Pooled end-to-end latency: the union of every replica's completion
+    /// samples, so fleet percentiles are true order statistics rather
+    /// than averages of per-replica percentiles.
+    pub fn fleet_latency(&self) -> Summary {
+        let mut s = Summary::new();
+        for r in &self.replicas {
+            s.merge(&r.latency);
+        }
+        s
+    }
+
+    pub fn fleet_p95(&self) -> f64 {
+        self.fleet_latency().p95()
+    }
+
+    /// Fleet completion bars on the shared clock: the element-wise sum of
+    /// the per-replica windows. Every replica buckets on the same virtual
+    /// clock with the same window width, so summing aligned bars is exact
+    /// — re-bucketing merged completion timestamps would be, too, but only
+    /// because the clocks agree; summing makes that invariant structural.
+    pub fn fleet_windows(&self) -> Vec<usize> {
+        let len = self.replicas.iter().map(|r| r.windows.len()).max().unwrap_or(0);
+        let mut out = vec![0usize; len];
+        for r in &self.replicas {
+            for (i, &w) in r.windows.iter().enumerate() {
+                out[i] += w;
+            }
+        }
+        out
+    }
+
+    /// Routing imbalance: (max - min) / mean of per-replica routed
+    /// counts; 0 for a perfectly balanced (or empty) fleet.
+    pub fn load_skew(&self) -> f64 {
+        if self.routed.is_empty() {
+            return 0.0;
+        }
+        let max = *self.routed.iter().max().unwrap() as f64;
+        let min = *self.routed.iter().min().unwrap() as f64;
+        let mean = self.routed.iter().sum::<usize>() as f64 / self.routed.len() as f64;
+        if mean == 0.0 {
+            0.0
+        } else {
+            (max - min) / mean
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Fleet routing policies: which replica a newly arrived request joins.
+//!
+//! `RoutePolicy` mirrors the engine-level `SchedPolicy` contract one
+//! level up: the cluster loop hands the policy immutable per-replica
+//! snapshots ([`ReplicaView`]) and a request, and gets back a replica
+//! index — no policy ever touches an engine, a queue, or the clock.
+//! Determinism falls out for free: the views are derived from the
+//! deterministic actors on the shared virtual clock, so the same trace
+//! always routes the same way.
+
+use std::cmp::Reverse;
+
+use crate::server::batcher::Request;
+
+/// Immutable snapshot of one live replica at a routing instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    /// replica index in the fleet
+    pub replica: usize,
+    /// requests waiting in the replica's admission queue
+    pub queued: usize,
+    /// requests seated in decode slots
+    pub in_flight: usize,
+    /// requests parked in the replica's host swap tier (these are also
+    /// counted in `queued` — swapped requests stay in the batcher)
+    pub swapped: usize,
+    /// leading prompt tokens of the request being routed that this
+    /// replica would serve from its shared KV blocks (0 unless the
+    /// policy asked for coverage; see [`RoutePolicy::uses_affinity`])
+    pub covered_tokens: usize,
+}
+
+impl ReplicaView {
+    /// Work the replica already owns: queue depth plus seated slots.
+    pub fn load(&self) -> usize {
+        self.queued + self.in_flight
+    }
+}
+
+/// A fleet routing decision: immutable snapshots in, replica index out.
+pub trait RoutePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Whether [`RoutePolicy::route`] reads `covered_tokens` — when
+    /// false the cluster loop skips the digest lookups entirely.
+    fn uses_affinity(&self) -> bool {
+        false
+    }
+
+    /// Pick the replica for `req`. `seq` counts routed requests (the
+    /// round-robin cursor), `replicas` holds one view per LIVE replica —
+    /// drained replicas never appear, so the returned value must be one
+    /// of the views' `replica` indices, not a raw `seq % fleet_size`.
+    fn route(&self, seq: u64, now: f64, req: &Request, replicas: &[ReplicaView]) -> usize;
+}
+
+/// Rotate over the live replicas in arrival order — the baseline every
+/// smarter policy must beat.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobin;
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&self, seq: u64, _now: f64, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        replicas[(seq % replicas.len() as u64) as usize].replica
+    }
+}
+
+/// Join the shortest queue: minimum `queued + in_flight`, lowest replica
+/// index on ties (deterministic under equal load).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeastLoaded;
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(&self, _seq: u64, _now: f64, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        replicas
+            .iter()
+            .min_by_key(|v| (v.load(), v.replica))
+            .expect("route called with no live replicas")
+            .replica
+    }
+}
+
+/// Prefix-affinity routing: send a request where its prompt prefix is
+/// already cached, unless that replica is overloaded enough that queueing
+/// behind the hot spot costs more than recomputing the prefix elsewhere.
+///
+/// The score trades cached blocks against load skew in commensurate
+/// units: each fully covered block counts +1, each unit of load above the
+/// fleet minimum counts -1. A replica holding the whole prompt but three
+/// requests deeper than the idlest peer only wins while the prompt spans
+/// more than three blocks — hot prefixes concentrate, but bounded by how
+/// much cache value the concentration actually buys.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixAffinity {
+    /// KV block granularity (`CbConfig::kv_block_tokens`): converts
+    /// covered tokens into blocks, the unit a cache hit actually saves
+    pub block_tokens: usize,
+}
+
+impl RoutePolicy for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        "prefix-affinity"
+    }
+
+    fn uses_affinity(&self) -> bool {
+        true
+    }
+
+    fn route(&self, _seq: u64, _now: f64, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        let min_load = replicas.iter().map(ReplicaView::load).min().unwrap_or(0);
+        replicas
+            .iter()
+            .max_by_key(|v| {
+                let blocks = (v.covered_tokens / self.block_tokens.max(1)) as i64;
+                let skew = (v.load() - min_load) as i64;
+                // distinct final key per view (Reverse(replica)) so
+                // max_by_key's last-max rule never decides anything
+                (blocks - skew, Reverse(v.load()), Reverse(v.replica))
+            })
+            .expect("route called with no live replicas")
+            .replica
+    }
+}
+
+/// Parseable routing-policy selector (`--route-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouteKind {
+    #[default]
+    RoundRobin,
+    LeastLoaded,
+    PrefixAffinity,
+}
+
+impl RouteKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouteKind::RoundRobin => "round-robin",
+            RouteKind::LeastLoaded => "least-loaded",
+            RouteKind::PrefixAffinity => "prefix-affinity",
+        }
+    }
+
+    /// Instantiate the policy; `block_tokens` parameterizes affinity
+    /// scoring (ignored by the load-only policies).
+    pub fn make(&self, block_tokens: usize) -> Box<dyn RoutePolicy> {
+        match self {
+            RouteKind::RoundRobin => Box::new(RoundRobin),
+            RouteKind::LeastLoaded => Box::new(LeastLoaded),
+            RouteKind::PrefixAffinity => Box::new(PrefixAffinity { block_tokens }),
+        }
+    }
+}
+
+/// Parse a `--route-policy` value.
+pub fn parse_route(s: &str) -> Option<RouteKind> {
+    match s {
+        "round-robin" | "rr" => Some(RouteKind::RoundRobin),
+        "least-loaded" | "least" => Some(RouteKind::LeastLoaded),
+        "prefix-affinity" | "affinity" => Some(RouteKind::PrefixAffinity),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(replica: usize, queued: usize, in_flight: usize, covered: usize) -> ReplicaView {
+        ReplicaView { replica, queued, in_flight, swapped: 0, covered_tokens: covered }
+    }
+
+    fn req() -> Request {
+        Request { id: 0, arrival_s: 0.0, tokens: 64 }
+    }
+
+    #[test]
+    fn round_robin_rotates_over_live_replicas() {
+        let p = RoundRobin;
+        // replica 1 drained: views are [0, 2, 3]
+        let views = vec![view(0, 0, 0, 0), view(2, 0, 0, 0), view(3, 0, 0, 0)];
+        let picks: Vec<usize> = (0..6).map(|s| p.route(s, 0.0, &req(), &views)).collect();
+        assert_eq!(picks, vec![0, 2, 3, 0, 2, 3]);
+    }
+
+    #[test]
+    fn least_loaded_joins_shortest_queue_lowest_index_on_ties() {
+        let p = LeastLoaded;
+        let views = vec![view(0, 3, 2, 0), view(1, 1, 1, 0), view(2, 0, 2, 0)];
+        assert_eq!(p.route(0, 0.0, &req(), &views), 2);
+        let tied = vec![view(0, 1, 1, 0), view(1, 0, 2, 0)];
+        assert_eq!(p.route(0, 0.0, &req(), &tied), 0);
+    }
+
+    #[test]
+    fn affinity_trades_cached_blocks_against_load_skew() {
+        let p = PrefixAffinity { block_tokens: 16 };
+        // replica 1 holds 2 blocks of the prompt but is 1 deeper: wins
+        let views = vec![view(0, 0, 0, 0), view(1, 1, 0, 32)];
+        assert_eq!(p.route(0, 0.0, &req(), &views), 1);
+        // 2 blocks cached but 3 deeper: the skew outweighs the cache
+        let views = vec![view(0, 0, 0, 0), view(1, 3, 0, 32)];
+        assert_eq!(p.route(0, 0.0, &req(), &views), 0);
+        // cold fleet, equal load: lowest index (no accidental hot spot)
+        let views = vec![view(0, 1, 0, 0), view(1, 1, 0, 0)];
+        assert_eq!(p.route(0, 0.0, &req(), &views), 0);
+        // equal score, unequal load: the lighter replica wins
+        let views = vec![view(0, 2, 0, 16), view(1, 1, 0, 0)];
+        assert_eq!(p.route(0, 0.0, &req(), &views), 1);
+    }
+
+    #[test]
+    fn route_kind_parses_and_makes() {
+        assert_eq!(parse_route("rr"), Some(RouteKind::RoundRobin));
+        assert_eq!(parse_route("least-loaded"), Some(RouteKind::LeastLoaded));
+        assert_eq!(parse_route("affinity"), Some(RouteKind::PrefixAffinity));
+        assert_eq!(parse_route("nope"), None);
+        assert_eq!(RouteKind::default().make(16).name(), "round-robin");
+        assert!(RouteKind::PrefixAffinity.make(16).uses_affinity());
+    }
+}

@@ -348,6 +348,18 @@ impl DecodeBackend for LiveBackend<'_> {
         Ok(())
     }
 
+    fn drop_swapped(&mut self, id: u64) -> Result<()> {
+        // replica drain: the host tier dies with the replica, so the
+        // parked session is discarded outright — the request re-enters a
+        // survivor's queue and rebuilds from scratch on admission there
+        self.swapped
+            .remove(&id)
+            .map(drop)
+            .with_context(|| format!("dropping request {id} that is not in the host tier"))?;
+        self.classes.remove(&id);
+        Ok(())
+    }
+
     fn step(&mut self, ids: &[u64]) -> Result<()> {
         let t0 = Instant::now();
         for &id in ids {

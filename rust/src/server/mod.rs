@@ -26,15 +26,28 @@
 //!    differential harness `tests/live_vs_model.rs` pins that live and
 //!    cost-model runs make identical scheduling decisions — under every
 //!    policy, since decisions are made once in the shared loop.
+//!
+//! Above the single-replica paths, [`cluster`] runs N actorized CB
+//! engines under one deterministic cluster event loop (`--replicas N`):
+//! the loop owns the shared virtual clock and the global arrival queue, a
+//! pluggable [`cluster::RoutePolicy`] (`--route-policy`: round-robin,
+//! least-loaded, prefix-affinity over per-replica shadow digests) decides
+//! which replica each request joins, and a scheduled drain spills a
+//! removed replica's queue to the survivors without losing a request.
 
 pub mod batcher;
 pub mod cli;
+pub mod cluster;
 pub mod engine;
 pub mod live;
 pub mod policy;
 pub mod scheduler;
 
 pub use batcher::{Batcher, Request};
+pub use cluster::{
+    parse_route, ClusterEngine, ClusterReport, ReplicaEvent, ReplicaView, RouteKind, RoutePolicy,
+    ShadowDigest,
+};
 pub use engine::{ServeEngine, ServeReport};
 pub use live::{serve_live, LiveBackend, LiveReport};
 pub use policy::{PolicyKind, Preemption, SchedPolicy};

@@ -27,22 +27,31 @@ use super::{age_boost, AdmissionCandidate, Preemption, SchedPolicy, SlotView};
 ///   same ordering over the rest only when every candidate is exempt
 ///   (pressure must still evict someone).
 /// * **Proactive preemption** ([`SchedPolicy::preempt`]): when every
-///   slot is occupied and a queued request of a strictly higher class
-///   can still meet its deadline, the lowest-class in-flight slot that
-///   has already blown its own deadline is evicted to make room — at
-///   most one slot per iteration. Exempt (within-budget) slots are never
-///   proactively preempted, so the hook only ever trades a blown SLO for
-///   a salvageable one. Each decision names its beneficiary
-///   ([`Preemption`]), and the loop enforces feasibility before
-///   executing it: it never preempts for a request the KV cap could
-///   never admit, nor when evicting the victim would not open enough
-///   room for that named beneficiary's admission — the policy decides,
-///   mechanism verifies.
+///   slot is occupied and queued requests of strictly higher classes can
+///   still meet their deadlines, the lowest-class in-flight slots that
+///   have already blown their own deadlines are evicted to make room —
+///   up to `preempt_budget` victims per iteration
+///   (`--slo-preempt-budget`; the default 1 preserves the historical
+///   one-victim streams bit for bit), each victim paired with its own
+///   named beneficiary: k-th best salvageable queued request against
+///   k-th cheapest blown slot, stopping at the first pair where the
+///   victim's class is not strictly below the beneficiary's. Exempt
+///   (within-budget) slots are never proactively preempted, so the hook
+///   only ever trades blown SLOs for salvageable ones. Each decision
+///   names its beneficiary ([`Preemption`]), and the loop enforces
+///   feasibility before executing it: it never preempts for a request
+///   the KV cap could never admit, nor when evicting the victim would
+///   not open enough room for that named beneficiary's admission — the
+///   policy decides, mechanism verifies.
 #[derive(Debug, Clone, Copy)]
 pub struct SloClass {
     /// seconds of sojourn per one effective class level of aging
     /// (`CbConfig::age_bound_s`; <= 0 disables aging)
     pub age_bound_s: f64,
+    /// victims the proactive hook may name per iteration
+    /// (`CbConfig::slo_preempt_budget`; clamped to >= 1). 1 reproduces
+    /// the single-victim behavior exactly.
+    pub preempt_budget: usize,
 }
 
 impl SloClass {
@@ -95,28 +104,35 @@ impl SchedPolicy for SloClass {
         queue: &[AdmissionCandidate],
         slots: &[SlotView],
     ) -> Vec<Preemption> {
-        // the beneficiary: the highest-class queued request that can
-        // still meet its deadline (FIFO within the class — the same
-        // request class-ordered admission would seat first); the only
-        // kind of work worth evicting for
-        let Some((beneficiary, best)) = queue
-            .iter()
-            .enumerate()
-            .filter(|(_, c)| c.within_deadline(now))
-            .min_by_key(|&(i, c)| (Reverse(c.class), i))
-        else {
-            return Vec::new();
-        };
+        // the beneficiaries: queued requests that can still meet their
+        // deadlines, best first — highest class, FIFO within the class
+        // (the same order class-ordered admission would seat them); the
+        // only kind of work worth evicting for
+        let mut salvageable: Vec<(usize, &AdmissionCandidate)> =
+            queue.iter().enumerate().filter(|(_, c)| c.within_deadline(now)).collect();
+        salvageable.sort_by_key(|&(i, c)| (Reverse(c.class), i));
         // same seniority exemption as `victim`: the longest-resident
         // slot is never proactively preempted, so sustained high-class
-        // arrivals cannot re-evict one low-class request forever
+        // arrivals cannot re-evict one low-class request forever.
+        // Candidate victims are the remaining already-late slots,
+        // cheapest first — lowest class, newest within the class.
         let oldest = (0..slots.len()).min_by_key(|&i| slots[i].admit_seq);
-        (0..slots.len())
+        let mut late: Vec<usize> = (0..slots.len())
             .filter(|&i| Some(i) != oldest)
-            .filter(|&i| slots[i].class < best.class && !slots[i].within_deadline(now))
-            .min_by_key(|&i| (slots[i].class, Reverse(slots[i].admit_seq)))
-            .map(|victim| Preemption { victim, beneficiary })
-            .into_iter()
+            .filter(|&i| !slots[i].within_deadline(now))
+            .collect();
+        late.sort_by_key(|&i| (slots[i].class, Reverse(slots[i].admit_seq)));
+        // pair k-th best beneficiary with k-th cheapest victim, up to the
+        // budget. Beneficiary classes descend and victim classes ascend
+        // along the pairing, so the first pair that fails the
+        // strictly-lower-class test ends it — every later pair fails too.
+        // Budget 1 reproduces the single-victim decision exactly.
+        salvageable
+            .iter()
+            .zip(late.iter())
+            .take(self.preempt_budget.max(1))
+            .take_while(|((_, best), &vi)| slots[vi].class < best.class)
+            .map(|(&(beneficiary, _), &victim)| Preemption { victim, beneficiary })
             .collect()
     }
 }
@@ -143,7 +159,7 @@ mod tests {
 
     #[test]
     fn admission_orders_high_class_first_fifo_within() {
-        let p = SloClass { age_bound_s: 0.0 };
+        let p = SloClass { age_bound_s: 0.0, preempt_budget: 1 };
         let q = vec![cand(1, 0.0, 0, 8.0), cand(2, 0.0, 1, 0.5), cand(3, 0.0, 0, 8.0),
             cand(4, 0.0, 1, 0.5)];
         assert_eq!(p.admission_order(0.1, &q), vec![1, 3, 0, 2]);
@@ -152,7 +168,7 @@ mod tests {
 
     #[test]
     fn aging_lifts_a_bypassed_low_class_request() {
-        let p = SloClass { age_bound_s: 0.5 };
+        let p = SloClass { age_bound_s: 0.5, preempt_budget: 1 };
         // low-class request queued at 0, fresh high-class at 1.0
         let q = vec![cand(1, 0.0, 0, 8.0), cand(2, 1.0, 1, 0.5)];
         // at 1.0 the low request has aged 2 levels: 0+2 > 1+0
@@ -164,7 +180,7 @@ mod tests {
 
     #[test]
     fn victims_are_lowest_class_first_newest_within_class_oldest_never() {
-        let p = SloClass { age_bound_s: 0.5 };
+        let p = SloClass { age_bound_s: 0.5, preempt_budget: 1 };
         // all past deadline: lowest class loses, newest within the class
         // (the seniority-exempt oldest is a different slot here)
         let slots = vec![
@@ -186,7 +202,7 @@ mod tests {
 
     #[test]
     fn preempt_trades_a_blown_slo_for_a_salvageable_one() {
-        let p = SloClass { age_bound_s: 0.0 };
+        let p = SloClass { age_bound_s: 0.0, preempt_budget: 1 };
         // queued high-class request still inside its deadline
         let q = vec![cand(9, 0.9, 1, 0.5)];
         // slot 0: low class, past deadline, not the longest-resident ->
@@ -204,5 +220,40 @@ mod tests {
         // when it is the only late lower-class one
         let slots = vec![slot(1, 1, 0, 0.0, 0.2), slot(2, 2, 0, 0.0, 100.0)];
         assert!(p.preempt(1.0, &q, &slots).is_empty());
+    }
+
+    #[test]
+    fn preempt_budget_pairs_multiple_victims_with_beneficiaries() {
+        // two blown low-class slots (seqs 2 and 3) plus the exempt oldest,
+        // two salvageable high-class queued requests
+        let slots = vec![
+            slot(1, 1, 1, 0.0, 100.0), // oldest: seniority-exempt
+            slot(2, 2, 0, 0.0, 0.2),   // blown, newest of the low class
+            slot(3, 3, 0, 0.0, 0.2),   // blown, newer still
+        ];
+        let q = vec![cand(8, 0.9, 1, 0.5), cand(9, 0.95, 1, 0.5)];
+        // budget 1: identical to the historical single-victim decision —
+        // best beneficiary (FIFO within the class) against the cheapest
+        // victim (newest of the lowest class)
+        let p1 = SloClass { age_bound_s: 0.0, preempt_budget: 1 };
+        assert_eq!(p1.preempt(1.0, &q, &slots), vec![Preemption { victim: 2, beneficiary: 0 }]);
+        // budget 2: both pairs fire, k-th best against k-th cheapest
+        let p2 = SloClass { age_bound_s: 0.0, preempt_budget: 2 };
+        assert_eq!(
+            p2.preempt(1.0, &q, &slots),
+            vec![
+                Preemption { victim: 2, beneficiary: 0 },
+                Preemption { victim: 1, beneficiary: 1 },
+            ]
+        );
+        // the pairing stops at the first class-test failure: with one
+        // low-class beneficiary in second place, only the first pair fires
+        // even under a large budget
+        let q_mixed = vec![cand(8, 0.9, 1, 0.5), cand(9, 0.95, 0, 8.0)];
+        let p4 = SloClass { age_bound_s: 0.0, preempt_budget: 4 };
+        assert_eq!(
+            p4.preempt(1.0, &q_mixed, &slots),
+            vec![Preemption { victim: 2, beneficiary: 0 }]
+        );
     }
 }

@@ -1,999 +1,58 @@
-//! The continuous-batching scheduling loop: admission, fused
-//! chunk+decode iterations, preemption, and the census — every decision
-//! recorded as a [`CbEvent`] and delegated for execution to a
-//! [`DecodeBackend`]. Discretionary choices (admission order, victim
-//! selection, proactive SLO preemption) are made by the configured
-//! [`SchedPolicy`] over immutable snapshots; all mechanism — the virtual
-//! clock, the KV pool, swap pricing — stays here, so both backends see
-//! one decision stream whatever the policy.
-
-use std::collections::{BTreeMap, BTreeSet};
+//! The single-replica driver for the actorized continuous-batching
+//! engine: a trivial event loop that owns the virtual clock and the
+//! arrival stream, pulls arrivals due at each instant into the actor's
+//! queue, and lets [`EngineActor::step`] run the per-iteration mechanism
+//! (admission, fused chunk+decode, preemption, the KV pool, swap
+//! pricing, policy hooks). This reproduces the pre-actor monolithic loop
+//! bit for bit — the same clock jumps, the same event stream — which the
+//! Fifo anchor property tests in `tests/proptests.rs` pin. The
+//! multi-replica analogue of this driver lives in
+//! [`crate::server::cluster`].
 
 use anyhow::Result;
 
-use crate::kv::pool::KvPool;
-use crate::kv::prefix::RadixTree;
-use crate::kv::swap::SwapPolicy;
-use crate::sim::latency::{evaluate_on_trace, evaluate_on_trace_batched, Breakdown};
-use crate::util::stats::Summary;
-
-use super::super::batcher::{Batcher, Request};
-use super::super::live::{prompt_stream_key, synth_prompt};
-use super::super::policy::{AdmissionCandidate, SchedPolicy, SlotView};
-use super::report::CompletionTally;
-use super::slots::{ReqStats, Slot, SlotState, SwapEntry};
-use super::{CbConfig, CbEngine, CbEvent, CbReport, DecodeBackend, PrefixAttach};
-
-/// Move a slot's own blocks whose rows are now replayed (`hi <=
-/// replayed`) from pending to ready: the pool shifts their bytes out of
-/// the slot's private share, and the backend copies the rows into the
-/// shared store so attachments survive the creator.
-fn flush_ready_blocks<B: DecodeBackend + ?Sized>(
-    slot: &mut Slot,
-    replayed: usize,
-    pool: &mut KvPool,
-    backend: &mut B,
-) -> Result<()> {
-    while let Some(&(block, lo, hi)) = slot.pending.first() {
-        if hi > replayed {
-            break;
-        }
-        let bytes = pool.mark_ready(block);
-        slot.kv_bytes = slot.kv_bytes.saturating_sub(bytes);
-        backend.register_block(slot.id, block, lo, hi, bytes)?;
-        slot.pending.remove(0);
-        slot.blocks.push(block);
-    }
-    Ok(())
-}
-
-/// Deterministic prompt lookup with per-stream caching: `synth_prompt`
-/// over a keyed stream is prefix-stable (its first `n` draws are the same
-/// whatever length is requested), so one growing buffer per stream key
-/// serves every request length — the admission filter would otherwise
-/// re-derive O(prompt) token ids per queued candidate on every iteration.
-fn cached_prompt<'c>(
-    cache: &'c mut BTreeMap<u64, Vec<usize>>,
-    cfg: &CbConfig,
-    id: u64,
-    tokens: usize,
-) -> &'c [usize] {
-    let key = prompt_stream_key(cfg.prompt_groups, id);
-    let entry = cache.entry(key).or_default();
-    if entry.len() < tokens {
-        *entry = synth_prompt(cfg.seed, key, tokens, cfg.prompt_vocab.max(2));
-    }
-    &entry[..tokens]
-}
-
-/// Reclaim cached (refcount-0) blocks, LRU subtree at a time, until
-/// `need` more bytes fit resident under the cap (or nothing cacheable is
-/// left). The backend drops its stored rows for every reclaimed block.
-fn reclaim_cached<B: DecodeBackend + ?Sized>(
-    pool: &mut KvPool,
-    tree: &mut RadixTree,
-    backend: &mut B,
-    need: usize,
-) -> Result<()> {
-    while !pool.fits_resident(need) {
-        let Some(victim) = pool.lru_cached() else { break };
-        for block in tree.remove_subtree(victim) {
-            pool.drop_cached(block);
-            backend.drop_block(block)?;
-        }
-    }
-    Ok(())
-}
-
-/// Snapshot the queue for the policy: one [`AdmissionCandidate`] per
-/// queued request in FIFO order, with class and radix-tree prefix
-/// coverage resolved exactly as the admission gate will resolve them.
-/// The coverage walk is skipped (`covered_tokens == 0`) unless
-/// `want_coverage` — it costs O(prompt / block) tree probes per queued
-/// request, and only coverage-ordering policies read it.
-fn candidate_views(
-    engine: &CbEngine,
-    batcher: &Batcher,
-    prompt_cache: &mut BTreeMap<u64, Vec<usize>>,
-    want_coverage: bool,
-    tree: &RadixTree,
-    pool: &KvPool,
-    stats: &BTreeMap<u64, ReqStats>,
-) -> Vec<AdmissionCandidate> {
-    batcher
-        .iter()
-        .map(|r| {
-            let covered = if want_coverage {
-                let prompt = cached_prompt(prompt_cache, &engine.cfg, r.id, r.tokens);
-                tree.covered_tokens(prompt, &|b| pool.block_ready(b))
-            } else {
-                0
-            };
-            let class = engine.cfg.class_of(r.id);
-            AdmissionCandidate {
-                id: r.id,
-                arrival_s: r.arrival_s,
-                queued_since: stats.get(&r.id).map(|s| s.queued_since).unwrap_or(r.arrival_s),
-                tokens: r.tokens,
-                class,
-                deadline_s: engine.cfg.class_deadline(class),
-                covered_tokens: covered,
-            }
-        })
-        .collect()
-}
-
-/// Snapshot the in-flight slots for the policy.
-fn slot_views(cfg: &CbConfig, slots: &[Slot]) -> Vec<SlotView> {
-    slots
-        .iter()
-        .map(|s| {
-            let class = cfg.class_of(s.id);
-            SlotView {
-                id: s.id,
-                arrival_s: s.arrival_s,
-                class,
-                deadline_s: cfg.class_deadline(class),
-                admit_seq: s.admit_seq,
-            }
-        })
-        .collect()
-}
-
-/// Preempt slot `i` back to the queue: the one victim-eviction mechanism,
-/// shared by the KV-pressure loop and the policy's proactive SLO hook.
-/// Resolves the eviction through the swap policy (transfer vs recompute),
-/// releases the slot's pool bytes and block references, notifies the
-/// backend, records the event, and requeues the request.
-#[allow(clippy::too_many_arguments)]
-fn preempt_slot<B: DecodeBackend>(
-    engine: &CbEngine,
-    i: usize,
-    now: f64,
-    swap_on: bool,
-    swap_policy: &SwapPolicy,
-    slots: &mut Vec<Slot>,
-    pool: &mut KvPool,
-    tree: &mut RadixTree,
-    backend: &mut B,
-    batcher: &mut Batcher,
-    swapped: &mut BTreeMap<u64, SwapEntry>,
-    stats: &mut BTreeMap<u64, ReqStats>,
-    events: &mut Vec<CbEvent>,
-    kv_evictions: &mut usize,
-    swap_outs: &mut usize,
-    swap_bytes: &mut usize,
-    swap_out_s: &mut f64,
-) -> Result<()> {
-    let s = slots.remove(i);
-    let occupancy = engine.slot_prompt_bytes(s.tokens) + s.generated * engine.kv_step_bytes();
-    let swap_this = swap_on
-        && s.state == SlotState::Decoding
-        && swap_policy
-            .swap_beats_recompute(occupancy, engine.recompute_cost_s(s.tokens, s.generated, now));
-    pool.release_private(s.kv_bytes);
-    for &b in &s.blocks {
-        pool.unref_block(b);
-    }
-    // own blocks whose rows never finished replaying are dropped outright
-    // (nothing backs them)
-    if let Some(&(first_pending, _, _)) = s.pending.first() {
-        for b in tree.remove_subtree(first_pending) {
-            pool.drop_unready(b);
-        }
-    }
-    if swap_this {
-        backend.swap_out(s.id)?;
-        events.push(CbEvent::SwapOut { id: s.id });
-        *swap_outs += 1;
-        *swap_bytes += occupancy;
-        *swap_out_s += swap_policy.transfer_s(occupancy);
-        swapped.insert(
-            s.id,
-            SwapEntry {
-                tokens: s.tokens,
-                generated: s.generated,
-                remaining: s.remaining,
-                budget: s.budget,
-                bytes: occupancy,
-                last_token_at: s.last_token_at,
-            },
-        );
-    } else {
-        backend.evict(s.id)?;
-        events.push(CbEvent::Evict { id: s.id });
-        *kv_evictions += 1;
-    }
-    if let Some(st) = stats.get_mut(&s.id) {
-        st.queued_since = now; // queueing again
-    }
-    batcher.push(Request { id: s.id, arrival_s: s.arrival_s, tokens: s.tokens });
-    Ok(())
-}
+use super::super::batcher::Request;
+use super::actor::EngineActor;
+use super::{CbEngine, CbReport, DecodeBackend};
 
 impl CbEngine {
     /// Serve a fixed arrival list, delegating per-slot execution to
-    /// `backend` while this loop makes every scheduling decision on the
-    /// cost model's virtual clock. `arrivals` must be sorted by arrival.
+    /// `backend` while the engine actor makes every scheduling decision
+    /// on the cost model's virtual clock. `arrivals` must be sorted by
+    /// arrival.
     pub fn serve_stream_with<B: DecodeBackend>(
         &mut self,
         backend: &mut B,
         arrivals: Vec<Request>,
         horizon_s: f64,
     ) -> Result<CbReport> {
-        let policy = self.cfg.make_policy();
-        let max_slots = self.cfg.max_slots.max(1);
-        // prefill-only workloads have no decode iterations to piggyback
-        // chunks on, so chunking applies only when decode happens
-        let chunk_budget = if self.cfg.prefill_chunk_tokens > 0 && self.cfg.decode_tokens > 0 {
-            self.cfg.prefill_chunk_tokens
-        } else {
-            usize::MAX
-        };
-        // prefix sharing and swap both need live decode slots; prefill-only
-        // workloads hold no state between events, so both are off there
-        let prefix_on = self.cfg.prefix_cache && self.cfg.decode_tokens > 0;
-        let block_tokens = self.cfg.kv_block_tokens.max(1);
-        let swap_policy = SwapPolicy::new(self.cfg.swap_bandwidth_mbps, self.cfg.swap_latency_s);
-        let swap_on =
-            swap_policy.enabled() && self.cfg.kv_cap_bytes > 0 && self.cfg.decode_tokens > 0;
-        let mut batcher = Batcher::new(self.cfg.max_batch.max(1), self.cfg.max_wait_s);
-        let mut slots: Vec<Slot> = Vec::new();
+        let mut actor = EngineActor::new(self.clone());
         let mut pending = arrivals.into_iter().peekable();
-        let mut pool = KvPool::new(self.cfg.kv_cap_bytes);
-        let mut tree = RadixTree::new(block_tokens);
-        let mut prompt_cache: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
-        let mut swapped: BTreeMap<u64, SwapEntry> = BTreeMap::new();
-        let mut next_seq = 0u64;
-        let mut events: Vec<CbEvent> = Vec::new();
-        let mut stats: BTreeMap<u64, ReqStats> = BTreeMap::new();
-
         let mut now = 0.0f64;
-        let mut tally = CompletionTally::new(self.cfg.slo_s, self.cfg.window_s, &self.cfg.classes);
-        let mut ttft = Summary::new();
-        let mut queue_wait = Summary::new();
-        let mut censored_wait = Summary::new();
-        let mut itl = Summary::new();
-        let mut queue_depth: Vec<(f64, usize)> = Vec::new();
-        let mut model_time = Breakdown::default();
-        let mut censored = 0usize;
-        let mut kv_rejected = 0usize;
-        let mut kv_evictions = 0usize;
-        let mut kv_violations = 0usize;
-        let mut prefill_chunks = 0usize;
-        let mut prefix_hits = 0usize;
-        let mut prefix_hit_tokens = 0usize;
-        let mut admitted_prompt_tokens = 0usize;
-        let mut recompute_flops_saved = 0.0f64;
-        let mut swap_outs = 0usize;
-        let mut swap_ins = 0usize;
-        let mut swap_bytes = 0usize;
-        let mut slo_preemptions = 0usize;
-
         while now < horizon_s {
             // pull arrivals into the queue
             while let Some(r) = pending.peek() {
                 if r.arrival_s <= now {
-                    batcher.push(pending.next().unwrap());
+                    actor.enqueue(pending.next().unwrap());
                 } else {
                     break;
                 }
             }
-
-            // a request whose full KV budget exceeds the cap can never be
-            // served; drop it rather than head-of-line-block forever.
-            // (Swapped requests already fit once and return at known size.)
-            if pool.cap_bytes > 0 {
-                loop {
-                    let oversized = match batcher.front() {
-                        Some(r) => {
-                            !swapped.contains_key(&r.id)
-                                && self.never_fits(r.id, r.tokens, pool.cap_bytes)
-                        }
-                        None => false,
-                    };
-                    if !oversized {
-                        break;
-                    }
-                    let r = batcher.pop_front().unwrap();
-                    kv_rejected += 1;
-                    events.push(CbEvent::Reject { id: r.id });
-                }
-            }
-
-            // ---- proactive SLO preemption: with every slot occupied and
-            //      work waiting, the policy may evict (swap-priced) a slot
-            //      to protect a higher-priority queued request's deadline.
-            //      Policies without the hook skip this entirely, keeping
-            //      the default path bit-identical. ----
-            let mut preempt_swap_s = 0.0f64;
-            if policy.preempts() && slots.len() >= max_slots && !batcher.is_empty() {
-                let mut cands = candidate_views(
-                    self,
-                    &batcher,
-                    &mut prompt_cache,
-                    prefix_on && policy.uses_coverage(),
-                    &tree,
-                    &pool,
-                    &stats,
-                );
-                // a request that can never fit the cap is rejected at the
-                // queue head, never preempted for — without this filter an
-                // oversized high-class request behind the head would drive
-                // an evict/re-seat cycle until its deadline lapsed.
-                // (Swapped-out requests already fit once and return at a
-                // known size, like the reject pass treats them.)
-                if pool.cap_bytes > 0 {
-                    cands.retain(|c| {
-                        swapped.contains_key(&c.id)
-                            || !self.never_fits(c.id, c.tokens, pool.cap_bytes)
-                    });
-                }
-                if !cands.is_empty() {
-                    let mut decisions =
-                        policy.preempt(now, &cands, &slot_views(&self.cfg, &slots));
-                    decisions.sort_unstable_by_key(|p| p.victim);
-                    decisions.dedup_by_key(|p| p.victim);
-                    for p in decisions.iter().rev() {
-                        let vi = p.victim;
-                        // a lone slot is never preempted, and stale indices
-                        // (the policy saw a pre-eviction snapshot) are
-                        // skipped
-                        if slots.len() <= 1 || vi >= slots.len() || p.beneficiary >= cands.len()
-                        {
-                            continue;
-                        }
-                        // mechanism-side feasibility: the eviction must
-                        // actually open room for the policy's NAMED
-                        // beneficiary — a fresh prefill, or a swap-in at
-                        // its preserved size — or the freed slot could
-                        // only be re-filled by someone else (or by the
-                        // victim itself): recompute churn with no gain
-                        // for the request the policy evicted for. (Why
-                        // the eviction is worth it is the policy's
-                        // judgment; whether it can work is the loop's.)
-                        // Conservative: counts only the victim's private
-                        // bytes as freed, and coverage only if the policy
-                        // resolved it.
-                        if pool.cap_bytes > 0 {
-                            let c = &cands[p.beneficiary];
-                            let need = match swapped.get(&c.id) {
-                                Some(e) => e.bytes,
-                                None => {
-                                    self.slot_prompt_bytes(c.tokens)
-                                        - self.slot_prompt_bytes(c.covered_tokens)
-                                }
-                            };
-                            if !pool.fits(need.saturating_sub(slots[vi].kv_bytes)) {
-                                continue;
-                            }
-                        }
-                        preempt_slot(
-                            self,
-                            vi,
-                            now,
-                            swap_on,
-                            &swap_policy,
-                            &mut slots,
-                            &mut pool,
-                            &mut tree,
-                            backend,
-                            &mut batcher,
-                            &mut swapped,
-                            &mut stats,
-                            &mut events,
-                            &mut kv_evictions,
-                            &mut swap_outs,
-                            &mut swap_bytes,
-                            &mut preempt_swap_s,
-                        )?;
-                        slo_preemptions += 1;
-                    }
-                }
-            }
-
-            // ---- admission: batched prefill into free slots, gated on
-            //      the KV pool at prefill footprint (optimistic — decode
-            //      growth is handled by eviction below). A prefix hit is
-            //      charged net of its covered blocks; a swapped request
-            //      returns at its preserved size. Reordering policies pick
-            //      the eligible order; the default is the FIFO walk. ----
-            let free = max_slots.saturating_sub(slots.len());
-            // an idle cluster never waits on the fill deadline
-            let force = slots.is_empty();
-            let batch = if free > 0 {
-                // candidate snapshot for reordering policies, BEFORE the
-                // stateful fits walk below mutates its accumulators
-                let order: Option<Vec<usize>> = if policy.reorders() {
-                    let cands = candidate_views(
-                        self,
-                        &batcher,
-                        &mut prompt_cache,
-                        prefix_on && policy.uses_coverage(),
-                        &tree,
-                        &pool,
-                        &stats,
-                    );
-                    Some(policy.admission_order(now, &cands))
-                } else {
-                    None
-                };
-                let mut pending_bytes = 0usize;
-                // cached (refcount-0) blocks this batch is about to
-                // re-reference: attaching pins their bytes again, so they
-                // stop being reclaimable and must be charged to the
-                // admission check — once per block, however many batch
-                // members share it
-                let mut resurrected: BTreeSet<u64> = BTreeSet::new();
-                let mut fits = |r: &Request| {
-                    if let Some(e) = swapped.get(&r.id) {
-                        if pool.fits(pending_bytes + e.bytes) {
-                            pending_bytes += e.bytes;
-                            return true;
-                        }
-                        return false;
-                    }
-                    // a request that can never fit must not be admitted on
-                    // its (smaller) prefill footprint — it would grow past
-                    // the cap with no evictable peer. It blocks here until
-                    // it reaches the head, where the reject pass drops it.
-                    if self.never_fits(r.id, r.tokens, pool.cap_bytes) {
-                        return false;
-                    }
-                    let (hit, repin) = if prefix_on {
-                        let prompt = cached_prompt(&mut prompt_cache, &self.cfg, r.id, r.tokens);
-                        let (hit, _) = tree.lookup(prompt, &|b| pool.block_ready(b));
-                        let repin: usize = hit
-                            .iter()
-                            .filter(|b| !resurrected.contains(*b))
-                            .filter_map(|&b| pool.block(b))
-                            .filter(|blk| blk.refs == 0)
-                            .map(|blk| blk.bytes)
-                            .sum();
-                        (hit, repin)
-                    } else {
-                        (Vec::new(), 0)
-                    };
-                    let covered = hit.len() * block_tokens;
-                    let need =
-                        self.slot_prompt_bytes(r.tokens) - self.slot_prompt_bytes(covered);
-                    if pool.fits(pending_bytes + repin + need) {
-                        pending_bytes += repin + need;
-                        resurrected.extend(hit);
-                        true
-                    } else {
-                        false
-                    }
-                };
-                match order {
-                    Some(ord) => {
-                        batcher.next_batch_ordered(now, force, free, &ord, &mut fits)
-                    }
-                    None => batcher.next_batch_filtered(now, force, free, &mut fits),
-                }
-            } else {
-                Vec::new()
-            };
-            if !batch.is_empty() {
-                queue_depth.push((now, batcher.len()));
-                // resolve every batch member: swapped requests return via
-                // the host link; fresh requests attach to shared blocks
-                // (refcounts claimed here) and create the blocks their own
-                // replay will back
-                struct FreshMeta {
-                    req: Request,
-                    budget: usize,
-                    covered: usize,
-                    attach: Vec<u64>,
-                    pending: Vec<(u64, usize, usize)>,
-                    /// suffix rows the admission iteration replays
-                    first: usize,
-                }
-                let mut fresh: Vec<FreshMeta> = Vec::new();
-                let mut swapped_in: Vec<(Request, SwapEntry)> = Vec::new();
-                // (id, is_swap, covered) in batch order, for events/stats
-                let mut order: Vec<(u64, bool, usize)> = Vec::new();
-                for req in &batch {
-                    if let Some(e) = swapped.remove(&req.id) {
-                        order.push((req.id, true, 0));
-                        swapped_in.push((req.clone(), e));
-                        continue;
-                    }
-                    let budget = self.decode_budget(req.id);
-                    let (attach, covered, pend) = if prefix_on {
-                        let prompt =
-                            cached_prompt(&mut prompt_cache, &self.cfg, req.id, req.tokens);
-                        let (hit, extendable) =
-                            tree.lookup(prompt, &|b| pool.block_ready(b));
-                        for &b in &hit {
-                            pool.ref_block(b);
-                        }
-                        let covered = hit.len() * block_tokens;
-                        let pend: Vec<(u64, usize, usize)> = if extendable {
-                            tree.extend(prompt, hit.len(), &mut |lo, hi| {
-                                pool.create_block(lo, hi, self.block_bytes_range(lo, hi))
-                            })
-                            .into_iter()
-                            .enumerate()
-                            .map(|(k, b)| {
-                                (
-                                    b,
-                                    covered + k * block_tokens,
-                                    covered + (k + 1) * block_tokens,
-                                )
-                            })
-                            .collect()
-                        } else {
-                            Vec::new()
-                        };
-                        (hit, covered, pend)
-                    } else {
-                        (Vec::new(), 0, Vec::new())
-                    };
-                    let first = (req.tokens - covered).min(chunk_budget);
-                    order.push((req.id, false, covered));
-                    fresh.push(FreshMeta {
-                        req: req.clone(),
-                        budget,
-                        covered,
-                        attach,
-                        pending: pend,
-                        first,
-                    });
-                }
-
-                events.push(CbEvent::Admit { ids: batch.iter().map(|r| r.id).collect() });
-                for &(id, is_swap, covered) in &order {
-                    if is_swap {
-                        events.push(CbEvent::SwapIn { id });
-                    } else if covered > 0 {
-                        events.push(CbEvent::PrefixHit { id, tokens: covered });
-                        prefix_hits += 1;
-                        prefix_hit_tokens += covered;
-                        // modeled prefill FLOPs the attach avoided: the
-                        // covered rows advanced through every layer
-                        recompute_flops_saved += self.shape.n_layers as f64
-                            * self.shape.chunk_block_flops(covered, covered, covered);
-                    }
-                }
-                for m in &fresh {
-                    admitted_prompt_tokens += m.req.tokens;
-                    if m.covered + m.first < m.req.tokens {
-                        events.push(CbEvent::PrefillChunk {
-                            id: m.req.id,
-                            lo: m.covered,
-                            hi: m.covered + m.first,
-                        });
-                        prefill_chunks += 1;
-                    }
-                }
-
-                // price the iteration: a batched prefill over the fresh
-                // requests' first (suffix) chunks — the classic batched
-                // path, bit for bit, when nothing attached — plus the
-                // swap transfers over the host link (swap-ins here, any
-                // proactive swap-outs from this iteration's hook)
-                let mut iter_bd = Breakdown::default();
-                let priced: Vec<&FreshMeta> = fresh.iter().filter(|m| m.first > 0).collect();
-                if !priced.is_empty() {
-                    let b = priced.len();
-                    let max_first = priced.iter().map(|m| m.first).max().unwrap().max(1);
-                    let bd = if priced.iter().all(|m| m.covered == 0) {
-                        let mut pshape = self.shape;
-                        pshape.seq_len = max_first;
-                        let prefill = self.strategy.schedule(&pshape);
-                        evaluate_on_trace_batched(&prefill, &self.params, &self.trace, now, b)
-                    } else {
-                        // suffix-only pricing: covered tokens are never
-                        // recomputed; the chunk schedule charges the new
-                        // rows attending over the covered context
-                        let ctx = priced.iter().map(|m| m.covered + m.first).max().unwrap();
-                        let sched =
-                            self.strategy.prefill_chunk_schedule(&self.shape, max_first, ctx);
-                        evaluate_on_trace_batched(&sched, &self.params, &self.trace, now, b)
-                    };
-                    iter_bd.accumulate(&bd);
-                }
-                if !swapped_in.is_empty() {
-                    let bytes: usize = swapped_in.iter().map(|(_, e)| e.bytes).sum();
-                    iter_bd.comm_s += swap_policy.transfer_s(bytes);
-                }
-                // proactive swap-outs from this iteration's SLO hook ride
-                // the admission clock (0 unless the policy preempted)
-                iter_bd.comm_s += preempt_swap_s;
-                model_time.accumulate(&iter_bd);
-                let done = now + iter_bd.total();
-
-                let fresh_reqs: Vec<Request> = fresh.iter().map(|m| m.req.clone()).collect();
-                let fresh_budgets: Vec<usize> = fresh.iter().map(|m| m.budget).collect();
-                let fresh_classes: Vec<usize> =
-                    fresh.iter().map(|m| self.cfg.class_of(m.req.id)).collect();
-                let fresh_prefixes: Vec<PrefixAttach> = fresh
-                    .iter()
-                    .map(|m| PrefixAttach { tokens: m.covered, blocks: m.attach.clone() })
-                    .collect();
-                backend.admit(
-                    &fresh_reqs,
-                    &fresh_budgets,
-                    &fresh_classes,
-                    chunk_budget,
-                    &fresh_prefixes,
-                )?;
-
-                for (req, &(_, is_swap, covered)) in batch.iter().zip(order.iter()) {
-                    let st = stats.entry(req.id).or_insert(ReqStats {
-                        queued_since: req.arrival_s,
-                        queue_wait_s: 0.0,
-                        ttft_recorded: false,
-                    });
-                    st.queue_wait_s += now - st.queued_since;
-                    st.queued_since = now; // in service: not queueing
-                    // classic path: the first token's latency is known at
-                    // prefill end (the uncovered suffix fits the budget).
-                    // Chunked slots record TTFT at their first decode step
-                    // instead, and an evicted-then-readmitted request keeps
-                    // the TTFT of the first token it ever emitted rather
-                    // than overwriting it here.
-                    if !is_swap
-                        && req.tokens - covered <= chunk_budget
-                        && done <= horizon_s
-                        && !st.ttft_recorded
-                    {
-                        st.ttft_recorded = true;
-                        ttft.add(done - req.arrival_s);
-                    }
-                }
-                if self.cfg.decode_tokens == 0 {
-                    // prefill-only workload: requests complete at prefill
-                    // end; past the horizon they are censored, not
-                    // completed, so no Complete event is emitted for them
-                    for req in &batch {
-                        let waited = stats.get(&req.id).map(|s| s.queue_wait_s).unwrap_or(0.0);
-                        queue_wait.add(waited);
-                        if done <= horizon_s {
-                            backend.complete(req.id)?;
-                            events.push(CbEvent::Complete { id: req.id });
-                            tally.record(req.arrival_s, done, self.cfg.class_of(req.id));
-                        } else {
-                            censored += 1;
-                            censored_wait.add(now - req.arrival_s);
-                            tally.censor(self.cfg.class_of(req.id));
-                        }
-                    }
-                } else {
-                    // make room (reclaim cached blocks) for everything this
-                    // admission acquires, then seat the slots
-                    let new_private: usize = fresh
-                        .iter()
-                        .map(|m| {
-                            self.slot_prompt_bytes(m.covered + m.first)
-                                - self.slot_prompt_bytes(m.covered)
-                        })
-                        .sum::<usize>()
-                        + swapped_in.iter().map(|(_, e)| e.bytes).sum::<usize>();
-                    reclaim_cached(&mut pool, &mut tree, backend, new_private)?;
-                    // seat slots in BATCH order, so admission sequence
-                    // numbers agree with the Admit event's id order — the
-                    // victim-selection invariant ("newest = most recently
-                    // admitted per the event stream") must hold for mixed
-                    // fresh/swapped batches too
-                    let mut fresh_iter = fresh.into_iter();
-                    let mut swap_iter = swapped_in.into_iter();
-                    for &(_, is_swap, _) in &order {
-                        next_seq += 1;
-                        if is_swap {
-                            let (req, e) =
-                                swap_iter.next().expect("order/swapped lists diverged");
-                            backend.swap_in(req.id)?;
-                            swap_ins += 1;
-                            swap_bytes += e.bytes;
-                            pool.acquire_private(e.bytes);
-                            slots.push(Slot {
-                                id: req.id,
-                                arrival_s: req.arrival_s,
-                                tokens: e.tokens,
-                                remaining: e.remaining,
-                                generated: e.generated,
-                                kv_bytes: e.bytes,
-                                admit_seq: next_seq,
-                                budget: e.budget,
-                                blocks: Vec::new(),
-                                pending: Vec::new(),
-                                state: SlotState::Decoding,
-                                // preserved across the host tier: the next
-                                // inter-token gap includes the swap dwell
-                                last_token_at: e.last_token_at,
-                            });
-                        } else {
-                            let m = fresh_iter.next().expect("order/fresh lists diverged");
-                            let replayed0 = m.covered + m.first;
-                            let kv_bytes = self.slot_prompt_bytes(replayed0)
-                                - self.slot_prompt_bytes(m.covered);
-                            pool.acquire_private(kv_bytes);
-                            let mut slot = Slot {
-                                id: m.req.id,
-                                arrival_s: m.req.arrival_s,
-                                tokens: m.req.tokens,
-                                remaining: m.budget,
-                                generated: 0,
-                                kv_bytes,
-                                admit_seq: next_seq,
-                                budget: m.budget,
-                                blocks: m.attach,
-                                pending: m.pending,
-                                state: if replayed0 < m.req.tokens {
-                                    SlotState::Prefilling {
-                                        next_token: replayed0,
-                                        total: m.req.tokens,
-                                    }
-                                } else {
-                                    SlotState::Decoding
-                                },
-                                last_token_at: now,
-                            };
-                            flush_ready_blocks(&mut slot, replayed0, &mut pool, backend)?;
-                            slots.push(slot);
-                        }
-                    }
-                }
-                if pool.cap_bytes > 0 && backend.kv_bytes_in_flight() > pool.cap_bytes {
-                    kv_violations += 1;
-                }
-                now = done;
-                continue;
-            }
-
-            // ---- one fused chunk+decode iteration for all active slots ----
-            if !slots.is_empty() {
-                // KV pressure: this iteration grows every decoding slot by
-                // one token's full-precision rows and every planned
-                // prefilling slot by its chunk's mixed rows; preempt slots
-                // back to the queue — the victim chosen by the policy —
-                // until the growth fits the cap. A lone slot always fits
-                // (over-cap requests were rejected at admission). Each
-                // victim is resolved by the swap policy: move its cache
-                // over the host link when the round trip beats the modeled
-                // recompute, else drop it (recompute).
-                let mut swap_out_s = preempt_swap_s;
-                let plan = if pool.cap_bytes > 0 {
-                    loop {
-                        let (plan, growth) = self.plan_chunks(&slots, chunk_budget);
-                        if slots.len() <= 1 || pool.fits(growth) {
-                            // cached blocks yield before anything new lands
-                            reclaim_cached(&mut pool, &mut tree, backend, growth)?;
-                            break plan;
-                        }
-                        let i = policy.victim(now, &slot_views(&self.cfg, &slots));
-                        preempt_slot(
-                            self,
-                            i,
-                            now,
-                            swap_on,
-                            &swap_policy,
-                            &mut slots,
-                            &mut pool,
-                            &mut tree,
-                            backend,
-                            &mut batcher,
-                            &mut swapped,
-                            &mut stats,
-                            &mut events,
-                            &mut kv_evictions,
-                            &mut swap_outs,
-                            &mut swap_bytes,
-                            &mut swap_out_s,
-                        )?;
-                    }
-                } else {
-                    self.plan_chunks(&slots, chunk_budget).0
-                };
-                let decode_ids: Vec<u64> = slots
-                    .iter()
-                    .filter(|s| s.state == SlotState::Decoding)
-                    .map(|s| s.id)
-                    .collect();
-                let b = decode_ids.len();
-                let ctx = slots
-                    .iter()
-                    .filter(|s| s.state == SlotState::Decoding)
-                    .map(|s| s.tokens + s.generated)
-                    .max()
-                    .unwrap_or(0);
-                let bd = if plan.is_empty() {
-                    // no prefilling slots: the classic batched decode step
-                    // (bit-identical pricing to the unchunked scheduler)
-                    let step = self.strategy.decode_step_schedule(&self.shape, ctx);
-                    evaluate_on_trace_batched(&step, &self.params, &self.trace, now, b)
-                } else {
-                    // fuse the chunk batch with the piggybacked decode
-                    let chunk_tokens: usize = plan.iter().map(|&(_, take)| take).sum();
-                    let ctx_prefill = plan
-                        .iter()
-                        .map(|&(i, take)| match slots[i].state {
-                            SlotState::Prefilling { next_token, .. } => next_token + take,
-                            SlotState::Decoding => 0,
-                        })
-                        .max()
-                        .unwrap_or(chunk_tokens);
-                    let fused = self.strategy.fused_iteration_schedule(
-                        &self.shape,
-                        chunk_tokens,
-                        ctx_prefill,
-                        b,
-                        ctx,
-                    );
-                    evaluate_on_trace(&fused, &self.params, &self.trace, now)
-                };
-                model_time.accumulate(&bd);
-                // swap transfers ride this iteration's clock (and its
-                // comm accounting) — the host link is priced, not free
-                model_time.comm_s += swap_out_s;
-                let done = now + bd.total() + swap_out_s;
-                if done > horizon_s {
-                    // the iteration straddles the horizon: nothing advances
-                    now = done;
-                    continue;
-                }
-                now = done;
-                // chunk effects: record and replay the planned chunks, grow
-                // the mixed cache per chunk, release finished prompts into
-                // decode (their first decode step — and TTFT — comes next
-                // iteration, never fused with their own last chunk)
-                for &(i, take) in &plan {
-                    let (next_token, total) = match slots[i].state {
-                        SlotState::Prefilling { next_token, total } => (next_token, total),
-                        SlotState::Decoding => unreachable!("planned a decoding slot"),
-                    };
-                    events.push(CbEvent::PrefillChunk {
-                        id: slots[i].id,
-                        lo: next_token,
-                        hi: next_token + take,
-                    });
-                    prefill_chunks += 1;
-                    backend.prefill_chunk(slots[i].id, next_token, next_token + take)?;
-                    let delta = self.slot_prompt_bytes(next_token + take)
-                        - self.slot_prompt_bytes(next_token);
-                    pool.acquire_private(delta);
-                    slots[i].kv_bytes += delta;
-                    slots[i].state = if next_token + take == total {
-                        SlotState::Decoding
-                    } else {
-                        SlotState::Prefilling { next_token: next_token + take, total }
-                    };
-                    // rows past a block boundary back the slot's own
-                    // blocks now: publish them to the shared store
-                    flush_ready_blocks(&mut slots[i], next_token + take, &mut pool, backend)?;
-                }
-                if b > 0 {
-                    backend.step(&decode_ids)?;
-                    events.push(CbEvent::Decode { ids: decode_ids.clone() });
-                }
-                let mut i = 0;
-                while i < slots.len() {
-                    // only the slots that decoded this iteration advance
-                    // (a slot whose last chunk just landed waits one turn)
-                    if !decode_ids.contains(&slots[i].id) {
-                        i += 1;
-                        continue;
-                    }
-                    slots[i].remaining -= 1;
-                    slots[i].generated += 1;
-                    if slots[i].generated == 1 {
-                        // first token this request ever produced: TTFT for
-                        // chunked slots (classic slots recorded theirs at
-                        // prefill end; the recorded-once guard keeps
-                        // re-admitted evictees at their original value)
-                        if let Some(st) = stats.get_mut(&slots[i].id) {
-                            if !st.ttft_recorded {
-                                st.ttft_recorded = true;
-                                ttft.add(now - slots[i].arrival_s);
-                            }
-                        }
-                    } else {
-                        itl.add(now - slots[i].last_token_at);
-                    }
-                    slots[i].last_token_at = now;
-                    let step_bytes = self.kv_step_bytes();
-                    pool.acquire_private(step_bytes);
-                    slots[i].kv_bytes += step_bytes;
-                    if slots[i].remaining == 0 {
-                        let s = slots.swap_remove(i);
-                        pool.release_private(s.kv_bytes);
-                        // the slot's shared blocks stay resident at
-                        // refcount 0 — the "recently freed" prefix a later
-                        // request can attach to without any replay
-                        for &b in &s.blocks {
-                            pool.unref_block(b);
-                        }
-                        backend.complete(s.id)?;
-                        events.push(CbEvent::Complete { id: s.id });
-                        tally.record(s.arrival_s, now, self.cfg.class_of(s.id));
-                        queue_wait
-                            .add(stats.get(&s.id).map(|st| st.queue_wait_s).unwrap_or(0.0));
-                    } else {
-                        i += 1;
-                    }
-                }
-                if pool.cap_bytes > 0 && backend.kv_bytes_in_flight() > pool.cap_bytes {
-                    kv_violations += 1;
-                }
-                continue;
-            }
-
-            // ---- idle: jump to the next arrival ----
-            // (an idle engine force-admits anything admissible, so the
-            // queue holds at most KV-blocked requests; those wait for
-            // in-flight work that doesn't exist here — meaning the queue
-            // is empty whenever the KV gate is off)
-            match pending.peek().map(|r| r.arrival_s) {
+            match actor.step(backend, now, horizon_s)?.until {
+                // one iteration ran; its finish time is the next step
+                // (it may exceed the horizon — the loop check ends the run)
                 Some(t) => now = t,
-                None => break,
+                // idle: jump to the next arrival
+                None => match pending.peek().map(|r| r.arrival_s) {
+                    Some(t) => now = t,
+                    None => break,
+                },
             }
         }
-
-        // census: everything in flight or queued at the horizon is censored
-        for s in &slots {
-            censored += 1;
-            censored_wait.add((horizon_s - s.arrival_s).max(0.0));
-            tally.censor(self.cfg.class_of(s.id));
-            if let Some(st) = stats.get(&s.id) {
-                queue_wait.add(st.queue_wait_s);
-            }
-        }
-        for req in batcher.drain_all() {
-            censored += 1;
-            censored_wait.add((horizon_s - req.arrival_s).max(0.0));
-            tally.censor(self.cfg.class_of(req.id));
-            // an evicted request waiting for re-admission was still
-            // queueing when the horizon fell: close its open episode
-            if let Some(st) = stats.get(&req.id) {
-                queue_wait.add(st.queue_wait_s + (horizon_s - st.queued_since).max(0.0));
-            }
-        }
+        // arrivals the run never reached are censored, like the queue
         for req in pending {
-            if req.arrival_s < horizon_s {
-                censored += 1;
-                censored_wait.add(horizon_s - req.arrival_s);
-                tally.censor(self.cfg.class_of(req.id));
-            }
+            actor.censor_unrouted(&req, horizon_s);
         }
-
-        Ok(CbReport {
-            completed: tally.completed,
-            censored,
-            kv_rejected,
-            horizon_s,
-            throughput: tally.windows.rate_until(horizon_s),
-            throughput_completion: if tally.last_completion > 0.0 {
-                tally.completed as f64 / tally.last_completion
-            } else {
-                0.0
-            },
-            goodput: tally.within_slo as f64 / horizon_s,
-            slo_s: tally.slo,
-            latency: tally.latency,
-            ttft,
-            queue_wait,
-            itl,
-            censored_wait,
-            queue_depth,
-            windows: tally.windows.bars_until(horizon_s),
-            events,
-            prefill_chunks,
-            model_time,
-            kv_peak_bytes: pool.peak_bytes,
-            kv_cap_bytes: pool.cap_bytes,
-            kv_evictions,
-            kv_violations,
-            prefix_hits,
-            prefix_hit_tokens,
-            admitted_prompt_tokens,
-            recompute_flops_saved,
-            swap_outs,
-            swap_ins,
-            swap_bytes,
-            slo_preemptions,
-            classes: tally.classes,
-        })
+        Ok(actor.finish(horizon_s))
     }
 }

@@ -14,10 +14,14 @@
 //!
 //! The module is split by responsibility: this file holds the
 //! configuration, events, the backend trait, and the engine's cost
-//! helpers; `loop.rs` is the scheduling loop itself
-//! ([`CbEngine::serve_stream_with`]); `slots.rs` the in-flight slot
-//! state; `report.rs` the outcome accounting. Decision *policy* lives
-//! one level up in [`crate::server::policy`].
+//! helpers; `actor.rs` is the actorized per-iteration mechanism
+//! ([`EngineActor::step`] — all run state, one scheduling iteration per
+//! call); `loop.rs` the trivial single-replica driver
+//! ([`CbEngine::serve_stream_with`], bit-for-bit the pre-actor loop);
+//! `slots.rs` the in-flight slot state; `report.rs` the outcome
+//! accounting. Decision *policy* lives one level up in
+//! [`crate::server::policy`]; the multi-replica cluster loop that drives
+//! many actors on one clock lives in [`crate::server::cluster`].
 //!
 //! # Scheduling policy
 //!
@@ -131,6 +135,7 @@
 //! accounted separately, KV peak/eviction counters, prefix hit-rate and
 //! swap traffic, per-class breakdowns, and the full decision event stream.
 
+mod actor;
 mod report;
 #[path = "loop.rs"]
 mod serve_loop;
@@ -139,6 +144,7 @@ mod slots;
 #[path = "tests.rs"]
 mod tests;
 
+pub use actor::{EngineActor, StepOutcome};
 pub use report::{CbReport, ClassReport};
 pub use slots::SlotState;
 
@@ -234,6 +240,13 @@ pub struct CbConfig {
     /// [`PrefixAware`], one class level under [`SloClass`] — the bound
     /// that keeps reordering starvation-free. <= 0 disables aging.
     pub age_bound_s: f64,
+    /// victims the [`SloClass`] proactive hook may preempt per iteration
+    /// (`--slo-preempt-budget`). The default 1 preserves the
+    /// one-victim-per-iteration streams bit for bit; higher budgets pair
+    /// up to that many blown lower-class slots with salvageable
+    /// higher-class queued requests in one pass, draining deep two-class
+    /// queues faster. Ignored by policies without the hook.
+    pub slo_preempt_budget: usize,
 }
 
 impl Default for CbConfig {
@@ -258,6 +271,7 @@ impl Default for CbConfig {
             policy: PolicyKind::Fifo,
             classes: Vec::new(),
             age_bound_s: 0.5,
+            slo_preempt_budget: 1,
         }
     }
 }
@@ -293,7 +307,10 @@ impl CbConfig {
                 block_tokens: self.kv_block_tokens.max(1),
                 age_bound_s: self.age_bound_s,
             }),
-            PolicyKind::SloClass => Box::new(SloClass { age_bound_s: self.age_bound_s }),
+            PolicyKind::SloClass => Box::new(SloClass {
+                age_bound_s: self.age_bound_s,
+                preempt_budget: self.slo_preempt_budget.max(1),
+            }),
         }
     }
 }
@@ -445,6 +462,12 @@ pub trait DecodeBackend {
     fn swap_in(&mut self, _id: u64) -> Result<()> {
         Ok(())
     }
+    /// The replica holding request `id`'s host-tier state is being
+    /// drained from the fleet: drop the parked state (the request is
+    /// still queued and will rebuild from scratch on a survivor).
+    fn drop_swapped(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
     /// Actual bytes currently held by in-flight slots plus the shared
     /// block store (0 if untracked); the loop counts a `kv_violations`
     /// whenever this exceeds the cap.
@@ -482,7 +505,10 @@ impl DecodeBackend for ModelBackend {
     }
 }
 
-/// Continuous-batching serving engine over the cost-model clock.
+/// Continuous-batching serving engine over the cost-model clock: the
+/// immutable half of a run (cost model + config). Cloneable so each
+/// fleet replica's [`EngineActor`] can own its copy.
+#[derive(Debug, Clone)]
 pub struct CbEngine {
     pub shape: TransformerShape,
     pub strategy: Strategy,

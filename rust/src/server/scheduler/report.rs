@@ -193,6 +193,9 @@ pub struct CbReport {
     pub slo_preemptions: usize,
     /// per-priority-class breakdowns (empty when `CbConfig::classes` is)
     pub classes: Vec<ClassReport>,
+    /// fleet replica id this report belongs to (0 for single-replica
+    /// runs — the historical engine is replica 0 of a fleet of one)
+    pub replica: usize,
 }
 
 impl CbReport {

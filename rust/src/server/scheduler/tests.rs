@@ -887,3 +887,50 @@ fn slo_preemption_trades_blown_deadline_for_salvageable_high_class() {
     assert_eq!(r.classes[1].within_deadline, 1);
     assert_eq!(r.classes[0].completed, 2);
 }
+
+#[test]
+fn slo_preempt_budget_frees_slots_for_a_high_class_burst() {
+    // four low-class requests (certainly-blown 0.1 s deadline) fill the
+    // slots; a burst of two high-class requests then arrives. Budget 1
+    // (the default, the historical single-victim hook) frees one slot
+    // per iteration; budget 4 may pair every salvageable beneficiary
+    // with a victim at once. Both serve everyone, both save the burst's
+    // SLOs, and the larger budget never preempts less
+    let mk = |budget: usize| {
+        let cfg = CbConfig {
+            max_slots: 4,
+            max_batch: 4,
+            decode_tokens: 256,
+            policy: PolicyKind::SloClass,
+            classes: vec![0.1, 50.0],
+            slo_preempt_budget: budget,
+            ..CbConfig::default()
+        };
+        let arrivals = vec![
+            Request { id: 0, arrival_s: 0.0, tokens: 1024 },
+            Request { id: 2, arrival_s: 0.0, tokens: 1024 },
+            Request { id: 4, arrival_s: 0.0, tokens: 1024 },
+            Request { id: 6, arrival_s: 0.0, tokens: 1024 },
+            Request { id: 1, arrival_s: 0.05, tokens: 1024 },
+            Request { id: 3, arrival_s: 0.05, tokens: 1024 },
+        ];
+        astra_engine(cfg).serve_stream(arrivals, 1e5)
+    };
+    let b1 = mk(1);
+    let b4 = mk(4);
+    assert_eq!(b1.completed, 6, "{b1:?}");
+    assert_eq!(b4.completed, 6, "{b4:?}");
+    assert!(b1.slo_preemptions > 0, "{b1:?}");
+    assert!(
+        b4.slo_preemptions >= b1.slo_preemptions,
+        "{} < {}",
+        b4.slo_preemptions,
+        b1.slo_preemptions
+    );
+    // the burst met its deadlines under both budgets
+    for r in [&b1, &b4] {
+        assert_eq!(r.classes[1].completed, 2);
+        assert_eq!(r.classes[1].within_deadline, 2);
+        assert_eq!(r.classes[0].completed, 4);
+    }
+}

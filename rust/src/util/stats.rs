@@ -17,6 +17,14 @@ impl Summary {
         self.sorted = false;
     }
 
+    /// Fold another summary's samples into this one — fleet rollups merge
+    /// raw samples so percentiles come from the union, not from averaging
+    /// per-replica percentiles.
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -191,6 +199,25 @@ mod tests {
         assert!((w.rate() - 3.0 / 30.0).abs() < 1e-12);
         assert!((w.rate_until(60.0) - 3.0 / 60.0).abs() < 1e-12);
         assert_eq!(w.rate_until(0.0), 0.0);
+    }
+
+    #[test]
+    fn summary_merge_unions_samples() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for v in [1.0, 2.0] {
+            a.add(v);
+        }
+        for v in [10.0, 20.0] {
+            b.add(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.max(), 20.0);
+        // percentiles come from the union of samples
+        assert_eq!(a.p50(), 10.0);
+        a.merge(&Summary::new());
+        assert_eq!(a.len(), 4);
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Cluster-loop integration tests: the multi-replica event loop must
+//! degenerate to the single engine bit for bit, never lose (or
+//! double-complete) a request across a replica drain, keep the fleet
+//! rollups exact sums of the per-replica reports, and make
+//! prefix-affinity routing actually buy cache hits over round-robin.
+
+use std::collections::BTreeSet;
+
+use astra::comm::trace::BandwidthTrace;
+use astra::model::shape::{TransformerShape, VqSetting};
+use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::batcher::poisson_arrivals;
+use astra::server::cluster::{ClusterEngine, RouteKind};
+use astra::server::scheduler::{CbConfig, CbEngine, CbEvent};
+use astra::server::Request;
+use astra::sim::latency::SimParams;
+use astra::util::rng::Rng;
+
+fn engine(cfg: CbConfig) -> CbEngine {
+    CbEngine::new(
+        TransformerShape::paper_encoder(1024),
+        Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+        SimParams::paper_encoder(),
+        BandwidthTrace::constant(100.0, 1e9),
+        cfg,
+    )
+}
+
+#[test]
+fn single_replica_fleet_reproduces_the_engine_bit_for_bit() {
+    // --replicas 1 must be exactly the single-engine path: same event
+    // stream, same counters, under every routing policy (with a single
+    // live view they all pick replica 0)
+    let cfg = CbConfig {
+        prefix_cache: true,
+        prompt_groups: 4,
+        kv_block_tokens: 64,
+        seed: 11,
+        prompt_vocab: 512,
+        ..CbConfig::default()
+    };
+    let arrivals = poisson_arrivals(&mut Rng::new(42), 8.0, 20.0, 1024);
+    assert!(arrivals.len() > 10, "{}", arrivals.len());
+    let baseline = engine(cfg.clone()).serve_stream(arrivals.clone(), 20.0);
+    assert!(baseline.completed > 0);
+    for route in [RouteKind::RoundRobin, RouteKind::LeastLoaded, RouteKind::PrefixAffinity] {
+        let mut fleet = ClusterEngine::new(vec![engine(cfg.clone())], route);
+        let r = fleet.serve_stream(arrivals.clone(), 20.0).unwrap();
+        assert!(r.events.iter().all(|e| e.replica == 0), "{route:?}");
+        let events: Vec<CbEvent> = r.events.iter().map(|e| e.event.clone()).collect();
+        assert_eq!(events, baseline.events, "{route:?}: event streams diverged");
+        assert_eq!(r.replicas[0].completed, baseline.completed, "{route:?}");
+        assert_eq!(r.censored(), baseline.censored, "{route:?}");
+        assert_eq!(r.replicas[0].kv_rejected, baseline.kv_rejected, "{route:?}");
+        assert_eq!(r.replicas[0].prefix_hits, baseline.prefix_hits, "{route:?}");
+        assert_eq!(r.replicas[0].prefix_hit_tokens, baseline.prefix_hit_tokens, "{route:?}");
+        assert_eq!(r.replicas[0].windows, baseline.windows, "{route:?}");
+        assert_eq!(r.routed, vec![arrivals.len() - r.unrouted], "{route:?}");
+    }
+}
+
+#[test]
+fn drain_spills_to_survivors_without_losing_a_request() {
+    // remove replica 1 just after the fleet seats its first slots: its
+    // in-flight work is evicted recompute-style, its queue spills through
+    // the router, and every request still completes exactly once — on a
+    // survivor
+    let cfg = CbConfig { max_slots: 2, ..CbConfig::default() };
+    let arrivals: Vec<Request> =
+        (0..30u64).map(|id| Request { id, arrival_s: 0.0, tokens: 1024 }).collect();
+    let engines: Vec<CbEngine> = (0..3).map(|_| engine(cfg.clone())).collect();
+    let mut fleet = ClusterEngine::new(engines, RouteKind::RoundRobin).with_drain(1, 1e-6);
+    let r = fleet.serve_stream(arrivals, 1e4).unwrap();
+    assert_eq!(r.drained, Some(1));
+    let mut seen = BTreeSet::new();
+    for e in &r.events {
+        if let CbEvent::Complete { id } = e.event {
+            assert!(seen.insert(id), "request {id} completed twice");
+            assert_ne!(e.replica, 1, "the drained replica completed request {id}");
+        }
+    }
+    assert_eq!(r.completed(), 30, "a request was lost across the drain");
+    assert_eq!(r.replicas[1].completed, 0);
+    let victim_evicts = r
+        .events
+        .iter()
+        .filter(|e| e.replica == 1 && matches!(e.event, CbEvent::Evict { .. }))
+        .count();
+    assert!(victim_evicts > 0, "drain must evict the victim's seated slots");
+    assert_eq!(r.kv_violations(), 0);
+    // the 10 spilled requests are re-routed, so they count twice
+    assert_eq!(r.routed.iter().sum::<usize>(), 30 + 10);
+    assert_eq!(r.unrouted, 0);
+}
+
+#[test]
+fn prefix_affinity_beats_round_robin_on_grouped_prompts() {
+    // the router's acceptance property: on a staggered grouped-prompt
+    // trace that both policies fully complete, prefix-affinity must buy a
+    // strictly higher fleet hit rate than round-robin. 5 prompt groups
+    // over 4 replicas are coprime, so sequential-id round-robin sprays
+    // each group across the whole fleet instead of accidentally
+    // clustering it
+    let cfg = CbConfig {
+        prefix_cache: true,
+        prompt_groups: 5,
+        kv_block_tokens: 64,
+        seed: 11,
+        prompt_vocab: 512,
+        ..CbConfig::default()
+    };
+    let arrivals: Vec<Request> = (0..64u64)
+        .map(|i| Request { id: i, arrival_s: i as f64 * 0.05, tokens: 1024 })
+        .collect();
+    let run = |route: RouteKind| {
+        let engines: Vec<CbEngine> = (0..4).map(|_| engine(cfg.clone())).collect();
+        ClusterEngine::new(engines, route).serve_stream(arrivals.clone(), 1e4).unwrap()
+    };
+    let rr = run(RouteKind::RoundRobin);
+    let aff = run(RouteKind::PrefixAffinity);
+    assert_eq!(rr.completed(), 64);
+    assert_eq!(aff.completed(), 64);
+    assert!(rr.fleet_hit_rate() > 0.0, "grouped prompts never shared under round-robin");
+    assert!(
+        aff.fleet_hit_rate() > rr.fleet_hit_rate(),
+        "affinity {} vs round-robin {}",
+        aff.fleet_hit_rate(),
+        rr.fleet_hit_rate()
+    );
+    // affinity concentrates without starving anyone of the fleet
+    assert!(aff.routed.iter().all(|&c| c > 0), "{:?}", aff.routed);
+}
+
+#[test]
+fn fleet_rollups_are_exact_sums_of_per_replica_reports() {
+    // the windowed-rates regression: fleet bars and throughput aggregate
+    // the per-replica reports on the shared virtual clock — the fleet
+    // throughput IS the sum of per-replica throughputs (disjoint request
+    // sets, one horizon), and the fleet bars ARE the element-wise sum of
+    // the aligned per-replica bars
+    let cfg = CbConfig::default();
+    let arrivals = poisson_arrivals(&mut Rng::new(7), 10.0, 20.0, 1024);
+    let engines: Vec<CbEngine> = (0..2).map(|_| engine(cfg.clone())).collect();
+    let mut fleet = ClusterEngine::new(engines, RouteKind::RoundRobin);
+    let r = fleet.serve_stream(arrivals, 20.0).unwrap();
+    assert!(r.completed() > 0);
+    assert!(r.replicas.iter().all(|rep| rep.completed > 0), "round-robin fed both replicas");
+    let sum: f64 = r.replicas.iter().map(|rep| rep.throughput).sum();
+    assert!((r.fleet_throughput() - sum).abs() < 1e-12, "{} vs {sum}", r.fleet_throughput());
+    let fleet_windows = r.fleet_windows();
+    let len = r.replicas.iter().map(|rep| rep.windows.len()).max().unwrap();
+    assert_eq!(fleet_windows.len(), len);
+    for (i, &w) in fleet_windows.iter().enumerate() {
+        let expect: usize =
+            r.replicas.iter().map(|rep| rep.windows.get(i).copied().unwrap_or(0)).sum();
+        assert_eq!(w, expect, "window {i}");
+    }
+    // pooled percentiles come from the union of completion samples
+    assert!(r.fleet_p95() > 0.0);
+    assert!(r.load_skew() >= 0.0);
+}

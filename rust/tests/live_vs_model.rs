@@ -10,12 +10,15 @@
 //! Runs entirely on an in-memory synthetic decoder bundle — no artifacts,
 //! no PJRT — so it executes everywhere (CI included).
 
+use std::collections::BTreeSet;
+
 use astra::comm::trace::BandwidthTrace;
 use astra::config::RunConfig;
 use astra::coordinator::Cluster;
 use astra::model::shape::VqSetting;
 use astra::model::TransformerShape;
-use astra::server::live::{live_arrivals, live_engine, serve_live, LiveReport};
+use astra::server::cluster::{ClusterEngine, RouteKind};
+use astra::server::live::{live_arrivals, live_engine, serve_live, LiveBackend, LiveReport};
 use astra::server::policy::PolicyKind;
 use astra::server::scheduler::{CbConfig, CbEvent, CbReport, ModelBackend};
 use astra::server::Request;
@@ -364,6 +367,66 @@ fn live_and_model_agree_under_all_scheduling_policies() {
     for (id, toks) in &live.generations {
         assert_eq!(toks.len(), 3 * seq, "request {id}");
     }
+}
+
+#[test]
+fn fleet_live_and_model_agree_across_a_mid_trace_drain() {
+    // the 2-replica differential: one fixed-seed arrival stream routed
+    // across two replicas, replica 0 drained mid-trace (slots evicted,
+    // queue spilled to the survivor through the router) — the live and
+    // cost-model fleets must emit identical replica-tagged decision
+    // streams, and the drain must lose and double-complete nobody
+    let cluster = tiny_cluster(2, 25);
+    let seq = cluster.artifact.meta.seq_len;
+    let cfg = CbConfig {
+        max_slots: 4,
+        max_batch: 4,
+        decode_tokens: 6,
+        prefix_cache: true,
+        kv_block_tokens: 4,
+        prompt_groups: 2,
+        ..CbConfig::default()
+    };
+    let arrivals = live_arrivals(&mut Rng::new(301), 25.0, 4.0, seq);
+    assert!(arrivals.len() > 3, "{}", arrivals.len());
+    let n = arrivals.len();
+    // live_engine pins the trace-shaping knobs (seed, prompt vocab); the
+    // live backends must see the same pinned config
+    let pinned = live_engine(&cluster, cfg.clone(), params(), trace()).cfg;
+    let mk_fleet = || {
+        let engines: Vec<_> =
+            (0..2).map(|_| live_engine(&cluster, cfg.clone(), params(), trace())).collect();
+        ClusterEngine::new(engines, RouteKind::RoundRobin).with_drain(0, 2.0)
+    };
+    let m = mk_fleet().serve_stream(arrivals.clone(), 1e4).unwrap();
+    let mut backends: Vec<LiveBackend> =
+        (0..2).map(|_| LiveBackend::for_config(&cluster, &pinned)).collect();
+    let l = mk_fleet().serve_stream_with(&mut backends, arrivals, 1e4).unwrap();
+    assert_eq!(m.events, l.events, "fleet decision streams diverged");
+    assert_eq!(m.drained, Some(0));
+    assert_eq!(l.drained, Some(0));
+    for (mr, lr) in m.replicas.iter().zip(&l.replicas) {
+        assert_eq!(mr.completed, lr.completed);
+        assert_eq!(mr.censored, lr.censored);
+        assert_eq!(mr.kv_rejected, lr.kv_rejected);
+        assert_eq!(mr.prefix_hits, lr.prefix_hits);
+        assert_eq!(mr.swap_outs, lr.swap_outs);
+        // the survivor's real session memory never contradicted the gate
+        assert_eq!(lr.kv_violations, 0);
+    }
+    // nobody is lost or double-completed across the drain
+    let mut seen = BTreeSet::new();
+    for e in &m.events {
+        if let CbEvent::Complete { id } = e.event {
+            assert!(seen.insert(id), "request {id} completed twice");
+        }
+    }
+    assert_eq!(m.completed(), n, "a request was lost across the drain");
+    assert_eq!(m.censored(), 0);
+    // both replicas actually participated: the victim emitted events
+    // before its removal, the survivor finished the fleet's work
+    assert!(m.events.iter().any(|e| e.replica == 0));
+    assert!(m.replicas[1].completed > 0);
 }
 
 #[test]

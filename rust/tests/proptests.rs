@@ -10,6 +10,7 @@ use astra::comm::trace::BandwidthTrace;
 use astra::coordinator::TokenPartition;
 use astra::model::shape::{ceil_log2, TransformerShape, VqSetting};
 use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::cluster::{ClusterEngine, RouteKind};
 use astra::server::policy::PolicyKind;
 use astra::server::scheduler::{CbConfig, CbEngine, CbEvent};
 use astra::server::Request;
@@ -579,6 +580,70 @@ fn prop_fifo_policy_layer_reproduces_baseline_streams() {
                 .serve_stream(arrivals, 1e5);
             assert_eq!(r_plain.events, r_slo.events, "{label}: classless slo-class anchor");
             assert_eq!(r_slo.slo_preemptions, 0, "{label}");
+        }
+    }
+}
+
+#[test]
+fn prop_single_replica_cluster_reproduces_engine_streams() {
+    // the fleet-refactor anchor, over random traces and configs: a
+    // 1-replica ClusterEngine is the single-engine path exactly — the
+    // same event stream (all tagged replica 0), the same counters —
+    // under every routing policy, with chunked prefill, KV caps, the
+    // prefix cache, and truncating horizons all in play
+    let mut rng = Rng::new(4700);
+    for case in 0..12 {
+        let n = 2 + rng.below(4);
+        let t = n * (8 + rng.below(48));
+        let shape = TransformerShape::paper_encoder(t);
+        let strategy = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, n);
+        let cap_slots = rng.below(3); // 0 = uncapped
+        let base = CbConfig {
+            max_slots: 2 + rng.below(4),
+            max_batch: 1 + rng.below(4),
+            decode_tokens: 1 + rng.below(24),
+            prefill_chunk_tokens: if rng.chance(0.5) { 1 + rng.below(t) } else { 0 },
+            prefix_cache: rng.chance(0.5),
+            kv_block_tokens: 1 + rng.below(t),
+            prompt_groups: rng.below(4),
+            seed: rng.next_u64(),
+            ..CbConfig::default()
+        };
+        let mk = |cfg: CbConfig| {
+            CbEngine::new(
+                shape,
+                strategy,
+                SimParams::paper_encoder(),
+                BandwidthTrace::constant(100.0, 1e9),
+                cfg,
+            )
+        };
+        let cap = cap_slots * mk(base.clone()).kv_projection(t);
+        let cfg = CbConfig { kv_cap_bytes: cap, ..base };
+        let arrivals = {
+            let mut arr = Vec::new();
+            let mut at = 0.0;
+            for id in 1..=(6 + rng.below(20)) as u64 {
+                at += rng.exp(10.0);
+                arr.push(Request { id, arrival_s: at, tokens: t });
+            }
+            arr
+        };
+        // a short horizon exercises the censoring paths too
+        let horizon = 1.0 + rng.f64() * 20.0;
+        let r = mk(cfg.clone()).serve_stream(arrivals.clone(), horizon);
+        let label = format!("case {case}: t={t} cap={cap} horizon={horizon:.2}");
+        for route in [RouteKind::RoundRobin, RouteKind::LeastLoaded, RouteKind::PrefixAffinity] {
+            let mut fleet = ClusterEngine::new(vec![mk(cfg.clone())], route);
+            let f = fleet.serve_stream(arrivals.clone(), horizon).unwrap();
+            assert!(f.events.iter().all(|e| e.replica == 0), "{label} {route:?}");
+            let events: Vec<CbEvent> = f.events.iter().map(|e| e.event.clone()).collect();
+            assert_eq!(events, r.events, "{label} {route:?}: streams diverged");
+            assert_eq!(f.replicas[0].completed, r.completed, "{label} {route:?}");
+            assert_eq!(f.censored(), r.censored, "{label} {route:?}");
+            assert_eq!(f.replicas[0].kv_rejected, r.kv_rejected, "{label} {route:?}");
+            assert_eq!(f.replicas[0].prefix_hits, r.prefix_hits, "{label} {route:?}");
+            assert_eq!(f.replicas[0].windows, r.windows, "{label} {route:?}");
         }
     }
 }
