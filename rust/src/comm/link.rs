@@ -68,6 +68,10 @@ pub struct Delivery {
     /// bytes billed to the link: payload plus every retransmitted copy at
     /// that packet's true size (the final packet may be shorter than MTU)
     pub billed_bytes: usize,
+    /// packets that exhausted the retransmission cap and were abandoned —
+    /// a fully-flapped link fails loudly instead of "delivering" cheaply;
+    /// every gave-up packet is also `delivered: false` at its index
+    pub gave_up: usize,
 }
 
 /// A simulated link with its own RNG stream (loss) and a running clock
@@ -92,7 +96,11 @@ impl SimLink {
     /// Model a send of `bytes` at time `t0`, applying loss.
     ///
     /// With retransmission every packet eventually arrives (each lost copy
-    /// costs one extra packet transfer + latency). Without retransmission,
+    /// costs one extra packet transfer + latency) — unless 64 consecutive
+    /// copies are lost, in which case the sender gives up on that packet:
+    /// it is billed but recorded `delivered: false` and counted in
+    /// `gave_up`, so a fully-flapped link fails visibly instead of
+    /// "succeeding" for the price of 64 copies. Without retransmission,
     /// dropped packets are recorded in `delivered` and the receiver must
     /// cope (for VQ payloads the coordinator substitutes stale codes).
     pub fn send(&self, t0: f64, bytes: usize) -> Delivery {
@@ -102,22 +110,33 @@ impl SimLink {
         let mut delivered = Vec::with_capacity(n_packets);
         let mut extra_packets = 0usize;
         let mut extra_bytes = 0usize;
+        let mut gave_up = 0usize;
         for p in 0..n_packets {
             // the final packet carries only the payload remainder
             let pkt_bytes = if p + 1 == n_packets { bytes - (n_packets - 1) * mtu } else { mtu };
             if self.spec.loss_rate > 0.0 && rng.chance(self.spec.loss_rate) {
                 if self.spec.retransmit {
-                    // geometric number of retries
+                    // geometric number of retries, capped: a link that eats
+                    // 64 copies in a row is dead for this packet, and the
+                    // caller must see the failure (the copies sent are
+                    // still billed — the link burned that bandwidth)
                     let mut tries = 1usize;
+                    let mut capped = false;
                     while rng.chance(self.spec.loss_rate) {
                         tries += 1;
                         if tries > 64 {
+                            capped = true;
                             break;
                         }
                     }
                     extra_packets += tries;
                     extra_bytes += tries * pkt_bytes;
-                    delivered.push(true);
+                    if capped {
+                        gave_up += 1;
+                        delivered.push(false);
+                    } else {
+                        delivered.push(true);
+                    }
                 } else {
                     delivered.push(false);
                 }
@@ -134,6 +153,7 @@ impl SimLink {
             delivered,
             retransmissions: extra_packets,
             billed_bytes: total_bytes,
+            gave_up,
         }
     }
 }
@@ -253,6 +273,29 @@ mod tests {
         let want = bytes as f64 / (1.0 - p);
         // ~40k samples of a geometric: the sample mean sits within 2%
         assert!((mean / want - 1.0).abs() < 0.02, "mean {mean} want {want}");
+    }
+
+    #[test]
+    fn prop_dead_link_gives_up_instead_of_delivering() {
+        // loss_rate 1.0: every draw loses, so every packet hits the retry
+        // cap. The old behavior pushed `delivered: true` after billing 64
+        // copies — a dead link must instead fail every packet explicitly.
+        for seed in 0..20 {
+            let l = SimLink::new(LinkSpec::ideal(100.0).with_loss(1.0, true), seed);
+            let d = l.send(0.0, 15_000); // 10 packets
+            assert_eq!(d.delivered.len(), 10);
+            assert!(d.delivered.iter().all(|&x| !x), "seed {seed}: dead link delivered");
+            assert_eq!(d.gave_up, 10, "seed {seed}");
+            // the 65 copies per packet are still billed: the bandwidth was burned
+            assert_eq!(d.retransmissions, 65 * 10, "seed {seed}");
+            assert_eq!(d.billed_bytes, 15_000 + 65 * 15_000, "seed {seed}");
+        }
+        // sub-1.0 loss with retransmit still delivers everything and never
+        // reports a give-up at moderate loss
+        let l = SimLink::new(LinkSpec::ideal(100.0).with_loss(0.3, true), 9);
+        let d = l.send(0.0, 150_000);
+        assert!(d.delivered.iter().all(|&x| x));
+        assert_eq!(d.gave_up, 0);
     }
 
     #[test]

@@ -20,6 +20,15 @@
 //! Both inputs are deterministic functions of scheduler state, so the
 //! decision stream stays identical between the cost-model and live
 //! backends.
+//!
+//! The host tier does double duty as a *checkpoint* tier under chaos
+//! (`CbConfig::checkpoint_every` / `server/chaos`): every K decode steps a
+//! slot's full occupancy is copied out over this same priced link, and an
+//! unplanned replica kill restores the slot on a survivor from the latest
+//! copy instead of replaying its whole prompt. Fault plans can also
+//! degrade the tier itself — [`SwapPolicy::slowed`] scales bandwidth down
+//! and latency up for the duration of a slowdown window, with factor 1.0
+//! the bit-exact identity.
 
 /// Host-link description for swap transfers.
 #[derive(Debug, Clone, Copy)]
@@ -58,6 +67,16 @@ impl SwapPolicy {
     pub fn swap_beats_recompute(&self, bytes: usize, recompute_s: f64) -> bool {
         self.enabled() && self.round_trip_s(bytes) < recompute_s
     }
+
+    /// The tier under a fault-plan slowdown window: bandwidth divided and
+    /// latency multiplied by `factor`. A factor of 1.0 returns the policy
+    /// bit for bit, so an empty plan cannot perturb any priced decision.
+    pub fn slowed(&self, factor: f64) -> SwapPolicy {
+        if factor == 1.0 {
+            return *self;
+        }
+        SwapPolicy { bandwidth_mbps: self.bandwidth_mbps / factor, latency_s: self.latency_s * factor }
+    }
 }
 
 #[cfg(test)]
@@ -91,5 +110,18 @@ mod tests {
         assert!(!slow.swap_beats_recompute(bytes, 0.050));
         // and a trivial recompute is never worth a transfer
         assert!(!fast.swap_beats_recompute(bytes, 1e-6));
+    }
+
+    #[test]
+    fn slowdown_identity_and_scaling() {
+        let p = SwapPolicy::new(8.0, 0.0005);
+        let same = p.slowed(1.0);
+        assert_eq!(same.bandwidth_mbps.to_bits(), p.bandwidth_mbps.to_bits());
+        assert_eq!(same.latency_s.to_bits(), p.latency_s.to_bits());
+        let slow = p.slowed(4.0);
+        assert!((slow.bandwidth_mbps - 2.0).abs() < 1e-12);
+        assert!((slow.latency_s - 0.002).abs() < 1e-12);
+        // a 4x slowdown makes the same transfer ~4x slower (latency term included)
+        assert!(slow.transfer_s(1_000_000) > 3.9 * p.transfer_s(1_000_000));
     }
 }

@@ -78,7 +78,14 @@
 //!   (pooled p95, pooled hit rate, load skew), and can drain a replica
 //!   mid-run — evicting its slots and spilling its queue to the
 //!   survivors without losing a request. A 1-replica fleet reproduces
-//!   the single-engine event stream bit for bit.
+//!   the single-engine event stream bit for bit. The chaos layer
+//!   ([`server::chaos`] + [`sim::fault::FaultPlan`]) drives the fleet
+//!   through seeded deterministic fault schedules — unplanned replica
+//!   kills (queue and host tier *lost*, in-flight requests restored from
+//!   fleet-held checkpoints or replayed from the prompt), link
+//!   degradation, swap-tier slowdown, arrival bursts — all as events on
+//!   the virtual clock, soaked over many seeds (`astra soak`) against an
+//!   invariant checklist; the empty plan is bit-identical to no plan.
 //! * [`kv`] is the block-based KV memory subsystem under the scheduler:
 //!   [`kv::pool::KvPool`] accounts refcounted fixed-token blocks whose
 //!   bytes are Appendix-G prefix differences (telescoping to exactly the
@@ -95,6 +102,10 @@
 //!   (`CbEvent::SwapOut`/`SwapIn`, decode progress preserved) whenever
 //!   the round trip beats the modeled recompute (re-prefill + regenerate)
 //!   — recompute-style preemption remains the fallback and the default.
+//!   The same priced tier doubles as a *checkpoint* store
+//!   (`CbConfig::checkpoint_every`): decoding slots periodically copy
+//!   their occupancy over the host link, and after a replica kill the
+//!   fleet restores from the latest copy instead of replaying the prompt.
 //! * [`parallel`] implements the baselines — Tensor Parallelism
 //!   (Megatron-LM), Sequence Parallelism (Voltage), Block Parallelism
 //!   (DeTransformer, BP+AG / BP+SP) — as per-block communication/compute

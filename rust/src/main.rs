@@ -31,6 +31,7 @@ fn main() -> Result<()> {
     match args.command()? {
         "serve" => astra::server::cli::serve(&args),
         "serve-cb" => astra::server::cli::serve_cb(&args),
+        "soak" => astra::server::cli::soak(&args),
         "run" => astra::server::cli::run_once(&args),
         "simulate" => astra::server::cli::simulate(&args),
         "calibrate" => astra::server::cli::calibrate(&args),
@@ -104,6 +105,16 @@ SUBCOMMANDS
              skew over per-replica shadow radix digests)
              --drain-at S: remove replica 0 at virtual time S — its slots
              evict, its queue spills to the survivors via the route policy
+             --fault-seed S: seeded deterministic fault plan over the fleet
+             (replica kills mid-decode, link degradation windows, swap-tier
+             slowdown, arrival bursts — all events on the virtual clock;
+             needs --replicas >= 2 for kills). A killed replica's queue and
+             host tier are lost; its in-flight requests re-route and either
+             restore from a fleet-held checkpoint or replay from the prompt
+             --checkpoint-every K: checkpoint each decoding slot's KV to
+             the host tier every K generated tokens, priced over the
+             --swap-bandwidth-mbps link (0 = off; needs swap + decode) —
+             the restore tier the fault path recovers from
              --live: drive real DecodeSessions (variable-length prompts,
              mixed-precision KV caches, greedy generations) through the
              same slot scheduler; uses --artifacts DIR when a decoder
@@ -111,6 +122,14 @@ SUBCOMMANDS
              --assert-invariants: print the live smoke-invariant checklist
              (full generations, zero kv_violations, zero TTFT anomalies);
              failures name the broken invariant before the non-zero exit
+  soak       chaos soak: run --seeds N consecutive seeded fault plans
+             over a --replicas fleet on the cost model and check the
+             invariant checklist on every run (no request lost or
+             double-completed, zero KV violations); a failing seed is a
+             standalone repro via serve-cb --fault-seed S
+             --seeds N --replicas R --fault-seed BASE --rate R --horizon S
+             plus the serve-cb engine flags (--model --slots --kv-cap
+             --swap-bandwidth-mbps --checkpoint-every ...)
   bench-gate deterministic bench-regression gate for CI
              --baseline FILE --current FILE --tolerance 0.02
              fails listing every modeled metric that regressed

@@ -1,0 +1,151 @@
+//! Chaos layer: interpreting a seeded [`FaultPlan`] against the fleet.
+//!
+//! **Module contract: faults are events on the virtual clock; engines
+//! never observe wall time.** A fault plan is pure data drawn once from a
+//! seed ([`crate::sim::fault`]); everything here — collapsing arrival
+//! spans into bursts, checking post-run invariants — is a deterministic
+//! function of that plan and the run's own virtual-clock state. No wall
+//! clock, no ambient randomness: replaying a seed replays the faults,
+//! bit for bit, which is what makes a failing soak seed a *repro*, not
+//! an anecdote.
+//!
+//! The injection sites live in [`super::cluster`] (kills, swap slowdown,
+//! trace degradation are applied by the cluster loop); this module holds
+//! the pieces that are independent of the loop:
+//!
+//! * [`skew_arrivals`] — the arrival-burst transform, applied to the
+//!   arrival list before anything routes;
+//! * [`chaos_invariants`] / [`assert_chaos_invariants`] — the soak
+//!   checklist every seeded plan must pass: no request lost or
+//!   double-completed, no double-rejects, `kv_violations == 0`. (Pool
+//!   refcount quiescence after a kill is enforced *structurally*, by an
+//!   `ensure!` at the kill site — it cannot be observed from a report.)
+
+use anyhow::{ensure, Result};
+
+use super::batcher::Request;
+use super::cluster::ClusterReport;
+use super::scheduler::CbEvent;
+use crate::sim::fault::FaultPlan;
+
+/// Apply the plan's arrival bursts: every arrival originally scheduled
+/// inside a burst window `[at_s, at_s + window_s)` lands at exactly
+/// `at_s` (the first matching burst wins), then the list is re-sorted —
+/// stably, so same-instant arrivals keep their id order — because
+/// overlapping windows can reorder raw arrival times and the cluster
+/// loop requires a sorted stream. With no bursts the list is returned
+/// untouched.
+pub fn skew_arrivals(plan: &FaultPlan, mut arrivals: Vec<Request>) -> Vec<Request> {
+    if plan.bursts.is_empty() {
+        return arrivals;
+    }
+    for r in arrivals.iter_mut() {
+        for b in &plan.bursts {
+            if r.arrival_s >= b.at_s && r.arrival_s < b.at_s + b.window_s {
+                r.arrival_s = b.at_s;
+                break;
+            }
+        }
+    }
+    arrivals.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    arrivals
+}
+
+/// The soak checklist over a finished fleet run that was handed
+/// `n_arrivals` requests: each entry is (invariant name, held, detail).
+/// Holds for *any* fault schedule — including the empty one — which is
+/// what makes it worth soaking over hundreds of seeds.
+pub fn chaos_invariants(n_arrivals: usize, report: &ClusterReport) -> Vec<(&'static str, bool, String)> {
+    let mut completes: Vec<u64> = Vec::new();
+    let mut rejects: Vec<u64> = Vec::new();
+    for e in &report.events {
+        match &e.event {
+            CbEvent::Complete { id } => completes.push(*id),
+            CbEvent::Reject { id } => rejects.push(*id),
+            _ => {}
+        }
+    }
+    let total_completes = completes.len();
+    let total_rejects = rejects.len();
+    completes.sort_unstable();
+    completes.dedup();
+    rejects.sort_unstable();
+    rejects.dedup();
+    let accounted = completes.len() + rejects.len() + report.censored();
+    vec![
+        (
+            "no double-completed request",
+            completes.len() == total_completes,
+            format!("{} Complete events over {} ids", total_completes, completes.len()),
+        ),
+        (
+            "no double-rejected request",
+            rejects.len() == total_rejects,
+            format!("{} Reject events over {} ids", total_rejects, rejects.len()),
+        ),
+        (
+            "no request lost (completed + rejected + censored == arrivals)",
+            accounted == n_arrivals,
+            format!(
+                "{} completed + {} rejected + {} censored == {} of {} arrivals",
+                completes.len(),
+                rejects.len(),
+                report.censored(),
+                accounted,
+                n_arrivals
+            ),
+        ),
+        (
+            "zero kv_violations fleet-wide",
+            report.kv_violations() == 0,
+            format!("{} violations", report.kv_violations()),
+        ),
+    ]
+}
+
+/// [`chaos_invariants`], failing loudly: the error names the first broken
+/// invariant with its detail line.
+pub fn assert_chaos_invariants(n_arrivals: usize, report: &ClusterReport) -> Result<()> {
+    for (name, ok, detail) in chaos_invariants(n_arrivals, report) {
+        ensure!(ok, "chaos invariant broken: {name} ({detail})");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fault::ArrivalBurst;
+
+    fn reqs(times: &[f64]) -> Vec<Request> {
+        times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| Request { id: i as u64, arrival_s: t, tokens: 8 })
+            .collect()
+    }
+
+    #[test]
+    fn bursts_collapse_and_restore_sort_order() {
+        let plan = FaultPlan {
+            bursts: vec![ArrivalBurst { at_s: 1.0, window_s: 0.5 }],
+            ..FaultPlan::default()
+        };
+        let out = skew_arrivals(&plan, reqs(&[0.5, 1.1, 1.2, 1.6, 2.0]));
+        let times: Vec<f64> = out.iter().map(|r| r.arrival_s).collect();
+        assert_eq!(times, vec![0.5, 1.0, 1.0, 1.6, 2.0]);
+        // stable: collapsed arrivals keep their original relative order
+        let ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(out.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn no_bursts_is_identity() {
+        let plan = FaultPlan::empty();
+        let input = reqs(&[0.3, 0.7]);
+        let out = skew_arrivals(&plan, input.clone());
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].arrival_s.to_bits(), input[0].arrival_s.to_bits());
+    }
+}

@@ -15,6 +15,7 @@ use crate::server::cluster::{parse_route, ClusterEngine, ClusterReport, RouteKin
 use crate::server::live::{live_engine, LiveBackend};
 use crate::server::policy::{parse_policy, PolicyKind};
 use crate::server::scheduler::{CbConfig, CbEngine, CbEvent, CbReport};
+use crate::sim::fault::FaultPlan;
 use crate::sim::latency::{evaluate, SimParams};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
@@ -240,6 +241,7 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         swap_bandwidth_mbps: args.f64_or("swap-bandwidth-mbps", 0.0)?,
         decode_jitter: args.usize_or("decode-jitter", 0)?,
         prompt_groups: args.usize_or("prompt-groups", 0)?,
+        checkpoint_every: args.usize_or("checkpoint-every", 0)?,
         seed,
         prompt_vocab: 256,
         policy,
@@ -382,6 +384,7 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         swap_bandwidth_mbps: args.f64_or("swap-bandwidth-mbps", 0.0)?,
         decode_jitter: args.usize_or("decode-jitter", 0)?,
         prompt_groups: args.usize_or("prompt-groups", 0)?,
+        checkpoint_every: args.usize_or("checkpoint-every", 0)?,
         policy,
         classes,
         age_bound_s,
@@ -559,6 +562,10 @@ fn serve_cb_fleet(
     if args.get("drain-at").is_some() {
         fleet = fleet.with_drain(0, args.f64_or("drain-at", 0.0)?);
     }
+    if let Some(fs) = args.get("fault-seed") {
+        let fs: u64 = fs.parse().context("bad --fault-seed")?;
+        fleet = fleet.with_faults(FaultPlan::seeded(fs, replicas, horizon));
+    }
     let mut rng = Rng::new(seed);
     let arrivals = crate::server::batcher::poisson_arrivals(&mut rng, rate, horizon, seq_len);
     let n_arrivals = arrivals.len();
@@ -571,7 +578,7 @@ fn serve_cb_fleet(
     println!("arrivals {n_arrivals}");
     print_fleet_report(&mut report);
     if args.flag("assert-invariants") {
-        assert_fleet_invariants(&report)?;
+        assert_fleet_invariants(n_arrivals, &report)?;
     }
     Ok(())
 }
@@ -602,6 +609,10 @@ fn serve_cb_live_fleet(
     if args.get("drain-at").is_some() {
         fleet = fleet.with_drain(0, args.f64_or("drain-at", 0.0)?);
     }
+    if let Some(fs) = args.get("fault-seed") {
+        let fs: u64 = fs.parse().context("bad --fault-seed")?;
+        fleet = fleet.with_faults(FaultPlan::seeded(fs, replicas, horizon));
+    }
     let n_arrivals = arrivals.len();
     let wall0 = Instant::now();
     let mut report = fleet.serve_stream_with(&mut backends, arrivals, horizon)?;
@@ -618,7 +629,7 @@ fn serve_cb_live_fleet(
     let host_s: f64 = backends.iter().map(|b| b.host_compute_s).sum();
     println!("live execution: {steps} real decode steps, host compute {:.1} ms", host_s * 1e3);
     if args.flag("assert-invariants") {
-        assert_fleet_invariants(&report)?;
+        assert_fleet_invariants(n_arrivals, &report)?;
     }
     Ok(())
 }
@@ -628,9 +639,12 @@ fn serve_cb_live_fleet(
 fn print_fleet_report(report: &mut ClusterReport) {
     let routed = report.routed.clone();
     let drained = report.drained;
+    let killed = report.killed.clone();
     for r in &mut report.replicas {
         let mark = if drained == Some(r.replica) {
             "  (drained)"
+        } else if killed.contains(&r.replica) {
+            "  (killed)"
         } else {
             ""
         };
@@ -663,44 +677,127 @@ fn print_fleet_report(report: &mut ClusterReport) {
         report.fleet_hit_rate() * 100.0,
         report.load_skew(),
     );
+    if !report.killed.is_empty() || report.restored > 0 || report.replayed > 0 {
+        println!(
+            "chaos      killed {:?}  recovered {} from checkpoints, {} replayed from prompt",
+            report.killed, report.restored, report.replayed
+        );
+    }
+    if let Some(victim) = report.drain_skipped {
+        println!(
+            "warning: drain of replica {victim} skipped — it was the last live replica, \
+             so its queue had nowhere to spill"
+        );
+    }
+    for victim in &report.kills_skipped {
+        println!(
+            "warning: kill of replica {victim} skipped — already dead, out of range, \
+             or the last live replica"
+        );
+    }
 }
 
-/// Fleet smoke invariants (`--assert-invariants`): work completed, every
-/// replica inside its KV cap, and no request completed twice anywhere in
-/// the fleet (the drain/re-route no-loss guarantee).
-fn assert_fleet_invariants(report: &ClusterReport) -> Result<()> {
-    let mut seen = std::collections::BTreeSet::new();
-    let mut dup = 0usize;
-    for e in &report.events {
-        if let CbEvent::Complete { id } = e.event {
-            if !seen.insert(id) {
-                dup += 1;
-            }
-        }
-    }
-    let invariants: Vec<(&str, bool, String)> = vec![
-        (
-            "fleet completed > 0",
-            report.completed() > 0,
-            format!("{} completions across the fleet", report.completed()),
-        ),
-        (
-            "zero kv_violations per replica",
-            report.kv_violations() == 0,
-            format!("{} violations summed over replicas", report.kv_violations()),
-        ),
-        (
-            "no request completed twice",
-            dup == 0,
-            format!("{dup} duplicate completions over {} distinct ids", seen.len()),
-        ),
-    ];
+/// Fleet smoke invariants (`--assert-invariants`): work completed, plus
+/// the chaos checklist from [`crate::server::chaos::chaos_invariants`] —
+/// no request lost or double-completed even across drains and kills,
+/// no double-rejects, zero KV violations fleet-wide. The checklist holds
+/// for faultless runs too, so every fleet smoke job exercises it.
+fn assert_fleet_invariants(n_arrivals: usize, report: &ClusterReport) -> Result<()> {
+    let mut invariants: Vec<(&str, bool, String)> = vec![(
+        "fleet completed > 0",
+        report.completed() > 0,
+        format!("{} completions across the fleet", report.completed()),
+    )];
+    invariants.extend(crate::server::chaos::chaos_invariants(n_arrivals, report));
     let failed: Vec<&str> = invariants.iter().filter(|t| !t.1).map(|t| t.0).collect();
     println!("\nfleet invariants:");
     for (name, ok, detail) in &invariants {
         println!("  [{}] {name}: {detail}", if *ok { "ok" } else { "FAIL" });
     }
     anyhow::ensure!(failed.is_empty(), "fleet invariants violated: {}", failed.join(", "));
+    Ok(())
+}
+
+/// `astra soak` — the VOPR-style chaos soak on the cost model: for each
+/// of `--seeds` consecutive fault seeds (base `--fault-seed`, default 0),
+/// build a seeded [`FaultPlan`] over a `--replicas` fleet, run the same
+/// Poisson workload through it, and check the full chaos invariant
+/// checklist. Any violation aborts with the failing seed in the error —
+/// deterministic plans make that seed a standalone repro
+/// (`astra serve-cb --replicas N --fault-seed S --assert-invariants`).
+pub fn soak(args: &Args) -> Result<()> {
+    let seeds = args.usize_or("seeds", 100)?;
+    let replicas = args.usize_or("replicas", 4)?;
+    let model = args.get_or("model", "vit-base");
+    let tokens = args.usize_or("tokens", 1024)?;
+    let n = args.usize_or("devices", 4)?;
+    let bw = args.f64_or("bandwidth", 100.0)?;
+    let rate = args.f64_or("rate", 8.0)?;
+    let horizon = args.f64_or("horizon", 10.0)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let base = args.usize_or("fault-seed", 0)? as u64;
+    let shape = shape_preset(&model, tokens)?;
+    let params = if model == "llama3-8b" {
+        SimParams::paper_llama()
+    } else {
+        SimParams::paper_encoder()
+    };
+    let strategy = Strategy::new(strategy_kind_from_args(args)?, n);
+    let trace = BandwidthTrace::constant(bw, 1e9);
+    let cfg = CbConfig {
+        max_slots: args.usize_or("slots", 8)?,
+        max_batch: args.usize_or("max-batch", 8)?,
+        decode_tokens: args.usize_or("decode-tokens", 16)?,
+        kv_cap_bytes: args.usize_or("kv-cap", 0)?,
+        kv_block_tokens: args.usize_or("kv-block-tokens", 16)?,
+        swap_bandwidth_mbps: args.f64_or("swap-bandwidth-mbps", 0.0)?,
+        checkpoint_every: args.usize_or("checkpoint-every", 0)?,
+        seed,
+        ..CbConfig::default()
+    };
+    let route = route_from_args(args)?;
+    let proto = CbEngine::new(shape, strategy, params, trace, cfg);
+    let seq_len = proto.shape.seq_len;
+
+    println!(
+        "== soak: {seeds} seeds x {replicas} replicas, rate {rate}/s, {horizon} s, \
+         fault seeds {base}..{} ==",
+        base + seeds as u64
+    );
+    let (mut kills, mut restores, mut replays, mut faultless) = (0usize, 0usize, 0usize, 0usize);
+    for s in 0..seeds as u64 {
+        let plan = FaultPlan::seeded(base + s, replicas, horizon);
+        if plan.is_empty() {
+            faultless += 1;
+        }
+        let engines: Vec<CbEngine> = (0..replicas).map(|_| proto.clone()).collect();
+        let mut fleet = ClusterEngine::new(engines, route).with_faults(plan);
+        let mut rng = Rng::new(seed);
+        let arrivals = crate::server::batcher::poisson_arrivals(&mut rng, rate, horizon, seq_len);
+        let n_arrivals = arrivals.len();
+        let report = fleet
+            .serve_stream(arrivals, horizon)
+            .with_context(|| format!("soak run failed at fault seed {}", base + s))?;
+        crate::server::chaos::assert_chaos_invariants(n_arrivals, &report)
+            .with_context(|| format!("soak invariants broken at fault seed {}", base + s))?;
+        kills += report.killed.len();
+        restores += report.restored;
+        replays += report.replayed;
+        if (s + 1) % 25 == 0 {
+            println!(
+                "  {}/{seeds} seeds clean ({kills} kills, {restores} restores, {replays} replays)",
+                s + 1
+            );
+        }
+    }
+    println!(
+        "soak clean: {seeds} seeds, {kills} replica kills survived, \
+         {restores} checkpoint restores, {replays} prompt replays, {faultless} faultless plans"
+    );
+    anyhow::ensure!(
+        kills > 0 || replicas < 2,
+        "soak exercised no kills over {seeds} seeds — widen the seed range"
+    );
     Ok(())
 }
 

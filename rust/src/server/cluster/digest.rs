@@ -153,6 +153,17 @@ impl<B: DecodeBackend + ?Sized> DecodeBackend for DigestTap<'_, B> {
         self.inner.drop_swapped(id)
     }
 
+    fn restore(
+        &mut self,
+        id: u64,
+        tokens: usize,
+        generated: usize,
+        budget: usize,
+        class: usize,
+    ) -> Result<()> {
+        self.inner.restore(id, tokens, generated, budget, class)
+    }
+
     fn kv_bytes_in_flight(&self) -> usize {
         self.inner.kv_bytes_in_flight()
     }

@@ -30,6 +30,18 @@
 //! shared blocks die with it, and every queued request spills to the
 //! survivors through the same routing policy, carrying its accounting so
 //! no wait or first token is double-counted.
+//!
+//! On top of the scheduled drain sits unplanned chaos
+//! ([`ClusterEngine::with_faults`], a [`FaultPlan`] from `sim/fault`):
+//! replica *kills* on the virtual clock lose the victim's queue and host
+//! tier outright — every held request is surrendered as
+//! [`CbEvent::Killed`] and re-routed to a survivor, where it either
+//! restores from the fleet checkpoint store (`CbConfig::checkpoint_every`
+//! copies priced over the swap link, [`CbEvent::Restore`]) or replays
+//! from its prompt; link windows degrade every replica's bandwidth trace
+//! up front; swap windows slow the host tier per step; arrival bursts
+//! collapse arrival spans. The empty plan injects nothing and reproduces
+//! the fault-free stream bit for bit — `tests/chaos.rs` pins this.
 
 mod digest;
 mod route;
@@ -39,12 +51,18 @@ pub use route::{
     parse_route, LeastLoaded, PrefixAffinity, ReplicaView, RouteKind, RoundRobin, RoutePolicy,
 };
 
+use std::collections::BTreeMap;
+
 use anyhow::{ensure, Result};
 
 use digest::DigestTap;
 
 use super::batcher::Request;
-use super::scheduler::{CbEngine, CbEvent, CbReport, DecodeBackend, EngineActor, ModelBackend};
+use super::chaos::skew_arrivals;
+use super::scheduler::{
+    CbEngine, CbEvent, CbReport, CheckpointRecord, DecodeBackend, EngineActor, ModelBackend,
+};
+use crate::sim::fault::FaultPlan;
 use crate::util::stats::Summary;
 
 /// One scheduler event tagged with the replica that emitted it. A
@@ -63,11 +81,13 @@ pub struct ClusterEngine {
     route: RouteKind,
     /// scheduled mid-run removal: (replica index, virtual time)
     drain_at: Option<(usize, f64)>,
+    /// seeded chaos schedule; `None` and the empty plan are identical
+    faults: Option<FaultPlan>,
 }
 
 impl ClusterEngine {
     pub fn new(engines: Vec<CbEngine>, route: RouteKind) -> ClusterEngine {
-        ClusterEngine { engines, route, drain_at: None }
+        ClusterEngine { engines, route, drain_at: None, faults: None }
     }
 
     /// Schedule replica `replica` for removal at virtual time `at_s`: its
@@ -75,6 +95,15 @@ impl ClusterEngine {
     /// drain is skipped if it would leave the fleet empty.
     pub fn with_drain(mut self, replica: usize, at_s: f64) -> ClusterEngine {
         self.drain_at = Some((replica, at_s));
+        self
+    }
+
+    /// Attach a seeded fault plan ([`FaultPlan::seeded`]): replica kills,
+    /// link degradation, swap slowdown, and arrival bursts, all on the
+    /// virtual clock. An empty plan reproduces the fault-free run bit for
+    /// bit.
+    pub fn with_faults(mut self, plan: FaultPlan) -> ClusterEngine {
+        self.faults = Some(plan);
         self
     }
 
@@ -106,6 +135,20 @@ impl ClusterEngine {
         if let Some((victim, _)) = self.drain_at {
             ensure!(victim < n, "drain target {victim} out of range");
         }
+        let plan = self.faults.clone().unwrap_or_default();
+        // clock-skew bursts: collapse arrival spans before anything routes
+        // (a no-op clone-free pass when the plan has no bursts)
+        let arrivals =
+            if plan.bursts.is_empty() { arrivals } else { skew_arrivals(&plan, arrivals) };
+        // link windows degrade every replica's bandwidth trace up front —
+        // the engines are immutable for the run, so the degradation is
+        // applied once here rather than per transfer (no hot-path RNG,
+        // and the actors see an ordinary time-varying trace)
+        if !plan.links.is_empty() {
+            for e in self.engines.iter_mut() {
+                e.trace = plan.degraded_trace(&e.trace, horizon_s);
+            }
+        }
         let policy = self.route.make(self.engines[0].cfg.kv_block_tokens.max(1));
         let affinity = policy.uses_affinity();
         let mut actors: Vec<EngineActor> = self
@@ -128,6 +171,15 @@ impl ClusterEngine {
         let mut routed = vec![0usize; n];
         let mut events: Vec<ReplicaEvent> = Vec::new();
         let mut drained: Option<usize> = None;
+        let mut drain_skipped: Option<usize> = None;
+        // fault-plan state: kills fire in at_s order; checkpoint copies
+        // live at the FLEET level so they survive their replica's death
+        let mut kill_idx = 0usize;
+        let mut killed: Vec<usize> = Vec::new();
+        let mut kills_skipped: Vec<usize> = Vec::new();
+        let mut ckpt_store: BTreeMap<u64, CheckpointRecord> = BTreeMap::new();
+        let mut restored_n = 0usize;
+        let mut replayed_n = 0usize;
 
         loop {
             // ---- advance the shared clock to the earliest pending instant ----
@@ -137,7 +189,9 @@ impl ClusterEngine {
                 .fold(f64::INFINITY, f64::min);
             let next_arrival = pending.peek().map_or(f64::INFINITY, |r| r.arrival_s);
             let next_drain = drain_pending.map_or(f64::INFINITY, |(_, at)| at);
-            let now = next_wake.min(next_arrival).min(next_drain);
+            let next_kill =
+                plan.kills.get(kill_idx).map_or(f64::INFINITY, |k| k.at_s);
+            let now = next_wake.min(next_arrival).min(next_drain).min(next_kill);
             if !now.is_finite() || now >= horizon_s {
                 break;
             }
@@ -171,6 +225,65 @@ impl ClusterEngine {
                             wake[target] = Some(now);
                         }
                     }
+                } else {
+                    // a drain targeting a dead or last-live replica used
+                    // to no-op invisibly (`drained` stayed `None` and the
+                    // CLI reported success); surface the skip instead
+                    drain_skipped = Some(victim);
+                }
+            }
+
+            // ---- unplanned kills due at this instant (after the drain,
+            //      so a same-instant drain's spill never lands on a dying
+            //      replica at this clock tick; arrivals route after both) ----
+            while plan.kills.get(kill_idx).is_some_and(|k| k.at_s <= now) {
+                let victim = plan.kills[kill_idx].replica;
+                kill_idx += 1;
+                // never kill the last live replica — the lost work would
+                // have nowhere to go; an already-dead victim is a no-op.
+                // Both are surfaced, never silent (the drain-skip lesson).
+                if victim >= n || !alive[victim] || alive.iter().filter(|&&a| a).count() < 2 {
+                    kills_skipped.push(victim);
+                    continue;
+                }
+                let mut tap =
+                    DigestTap { inner: &mut backends[victim], digest: &mut digests[victim] };
+                let out = actors[victim].kill(&mut tap, now)?;
+                // structural invariant: a kill must drain the victim's
+                // pool to quiescence — leaked private bytes or block refs
+                // here would silently corrupt fleet KV accounting
+                ensure!(
+                    actors[victim].pool_quiescent(),
+                    "replica {victim}: pool not quiescent after kill"
+                );
+                for event in out.events {
+                    events.push(ReplicaEvent { replica: victim, event });
+                }
+                alive[victim] = false;
+                wake[victim] = None;
+                digests[victim].clear();
+                killed.push(victim);
+                // re-route every lost request: restore from the fleet
+                // checkpoint store when a copy exists, else replay from
+                // the prompt on whatever replica the router picks
+                for (req, st) in out.lost {
+                    let views = replica_views(&actors, &digests, &alive, &req, affinity);
+                    let target = policy.route(seq, now, &req, &views);
+                    seq += 1;
+                    routed[target] += 1;
+                    match ckpt_store.remove(&req.id) {
+                        Some(rec) => {
+                            restored_n += 1;
+                            actors[target].adopt_restored(req, st, &rec);
+                        }
+                        None => {
+                            replayed_n += 1;
+                            actors[target].adopt(req, st);
+                        }
+                    }
+                    if wake[target].is_none() {
+                        wake[target] = Some(now);
+                    }
                 }
             }
 
@@ -195,10 +308,25 @@ impl ClusterEngine {
                 if !alive[i] || wake[i].is_none_or(|w| w > now) {
                     continue;
                 }
+                // swap-tier slowdown windows apply per step at the shared
+                // clock (skipped entirely when the plan has none, keeping
+                // the fault-free path untouched)
+                if !plan.swaps.is_empty() {
+                    actors[i].set_swap_slowdown(plan.swap_slowdown(now));
+                }
                 let mut tap = DigestTap { inner: &mut backends[i], digest: &mut digests[i] };
                 let out = actors[i].step(&mut tap, now, horizon_s)?;
                 for event in out.events {
+                    // a completed request's checkpoint copy is garbage
+                    if let CbEvent::Complete { id } = event {
+                        ckpt_store.remove(&id);
+                    }
                     events.push(ReplicaEvent { replica: i, event });
+                }
+                // checkpoint copies move to the fleet store immediately:
+                // they must survive this replica's death
+                for rec in actors[i].take_checkpoints() {
+                    ckpt_store.insert(rec.id, rec);
                 }
                 wake[i] = out.until;
             }
@@ -209,7 +337,19 @@ impl ClusterEngine {
         let unrouted = pending.filter(|r| r.arrival_s < horizon_s).count();
 
         let replicas: Vec<CbReport> = actors.into_iter().map(|a| a.finish(horizon_s)).collect();
-        Ok(ClusterReport { replicas, events, horizon_s, routed, drained, unrouted })
+        Ok(ClusterReport {
+            replicas,
+            events,
+            horizon_s,
+            routed,
+            drained,
+            drain_skipped,
+            unrouted,
+            killed,
+            kills_skipped,
+            restored: restored_n,
+            replayed: replayed_n,
+        })
     }
 }
 
@@ -256,9 +396,21 @@ pub struct ClusterReport {
     pub routed: Vec<usize>,
     /// the replica removed mid-run, if a scheduled drain executed
     pub drained: Option<usize>,
+    /// a scheduled drain that could NOT execute (victim already dead, or
+    /// the last live replica) — surfaced instead of silently no-opping
+    pub drain_skipped: Option<usize>,
     /// arrivals inside the horizon the run ended before routing — censored
     /// at the fleet level only (they never reached any replica)
     pub unrouted: usize,
+    /// replicas lost to unplanned fault-plan kills, in kill order
+    pub killed: Vec<usize>,
+    /// planned kills that could not execute (victim out of range, already
+    /// dead, or the last live replica)
+    pub kills_skipped: Vec<usize>,
+    /// kill-lost requests re-admitted from a fleet checkpoint copy
+    pub restored: usize,
+    /// kill-lost requests re-routed without a copy (replay from prompt)
+    pub replayed: usize,
 }
 
 impl ClusterReport {

@@ -35,7 +35,12 @@
 //! sharing. [`DecodeBackend::swap_out`] moves a whole session into a
 //! host-tier map (decode progress preserved) and
 //! [`DecodeBackend::swap_in`] restores it; the scheduler prices the
-//! transfers. [`LiveBackend::kv_bytes`] counts shared rows once: the
+//! transfers. After a replica kill, [`DecodeBackend::restore`] rebuilds a
+//! checkpointed session from scratch — prompt replay plus deterministic
+//! greedy re-decode, bit-identical to the lost cache — because the
+//! victim's host tier died with it; the fleet store only keeps the
+//! checkpoint *metadata*, and the scheduler prices the restore as a
+//! host-tier transfer. [`LiveBackend::kv_bytes`] counts shared rows once: the
 //! store's blocks plus each session's bytes beyond its store-backed
 //! prefix.
 
@@ -357,6 +362,50 @@ impl DecodeBackend for LiveBackend<'_> {
             .map(drop)
             .with_context(|| format!("dropping request {id} that is not in the host tier"))?;
         self.classes.remove(&id);
+        Ok(())
+    }
+
+    fn restore(
+        &mut self,
+        id: u64,
+        tokens: usize,
+        generated: usize,
+        budget: usize,
+        class: usize,
+    ) -> Result<()> {
+        // checkpoint restore after a replica kill: the parked session died
+        // with its replica, so rebuild it from scratch — replay the prompt
+        // and re-run the `generated` greedy decode steps. Greedy decode is
+        // deterministic, so the rebuilt cache is bit-identical to the lost
+        // one; the scheduler prices the restore as a host-tier transfer.
+        let meta = &self.cluster.artifact.meta;
+        if tokens == 0 || tokens > meta.seq_len {
+            bail!(
+                "restoring request {id} with {tokens} prompt tokens; artifact supports 1..={}",
+                meta.seq_len
+            );
+        }
+        let prompt = self.prompt(id, tokens);
+        let t0 = Instant::now();
+        let mut sess = if self.positional {
+            let mut sess = DecodeSession::deferred_positional(self.cluster, &prompt, tokens + budget)
+                .with_context(|| format!("restoring request {id}"))?;
+            sess.replay_range(0, tokens)
+                .with_context(|| format!("replaying prompt of restored request {id}"))?;
+            sess
+        } else {
+            DecodeSession::with_budget(self.cluster, &prompt, tokens + budget)
+                .with_context(|| format!("restoring request {id}"))?
+        };
+        for _ in 0..generated {
+            sess.step().with_context(|| format!("re-decoding restored request {id}"))?;
+        }
+        self.steps += generated;
+        self.host_compute_s += t0.elapsed().as_secs_f64();
+        // restored sessions are fully private: their rows are their own
+        self.blocked.insert(id, 0);
+        self.classes.insert(id, class);
+        self.sessions.insert(id, sess);
         Ok(())
     }
 

@@ -34,8 +34,15 @@
 //! least-loaded, prefix-affinity over per-replica shadow digests) decides
 //! which replica each request joins, and a scheduled drain spills a
 //! removed replica's queue to the survivors without losing a request.
+//! The [`chaos`] layer drives the fleet through seeded deterministic
+//! fault plans ([`crate::sim::fault::FaultPlan`]): unplanned replica
+//! kills with checkpoint-restore recovery over the swap tier, link
+//! degradation, swap slowdown, and arrival bursts — all events on the
+//! virtual clock (engines never observe wall time), soaked over many
+//! seeds by `astra soak` against the invariant checklist.
 
 pub mod batcher;
+pub mod chaos;
 pub mod cli;
 pub mod cluster;
 pub mod engine;
@@ -44,6 +51,7 @@ pub mod policy;
 pub mod scheduler;
 
 pub use batcher::{Batcher, Request};
+pub use chaos::{assert_chaos_invariants, chaos_invariants, skew_arrivals};
 pub use cluster::{
     parse_route, ClusterEngine, ClusterReport, ReplicaEvent, ReplicaView, RouteKind, RoutePolicy,
     ShadowDigest,
@@ -52,6 +60,6 @@ pub use engine::{ServeEngine, ServeReport};
 pub use live::{serve_live, LiveBackend, LiveReport};
 pub use policy::{PolicyKind, Preemption, SchedPolicy};
 pub use scheduler::{
-    CbConfig, CbEngine, CbEvent, CbReport, ClassReport, DecodeBackend, KvBudget, ModelBackend,
-    PrefixAttach, SlotState,
+    CbConfig, CbEngine, CbEvent, CbReport, CheckpointRecord, ClassReport, DecodeBackend, KvBudget,
+    ModelBackend, PrefixAttach, SlotState,
 };

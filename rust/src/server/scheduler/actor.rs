@@ -243,6 +243,33 @@ pub(crate) struct DrainOutcome {
     pub(crate) events: Vec<CbEvent>,
 }
 
+/// Work lost to an unplanned replica kill: every queued or in-flight
+/// request, stripped of the accounting that died with the replica (only
+/// the once-only TTFT flag survives — a first token, once emitted,
+/// happened) for the cluster loop to re-route.
+pub(crate) struct KillOutcome {
+    pub(crate) lost: Vec<(Request, ReqStats)>,
+    pub(crate) events: Vec<CbEvent>,
+}
+
+/// One proactive checkpoint copy in the fleet host tier: everything a
+/// survivor needs to rebuild the slot as of `generated` decode steps —
+/// the analogue of a [`super::slots::SwapEntry`] that outlives its
+/// replica. `bytes` is the full checkpointed occupancy (prompt rows plus
+/// `generated` full-precision steps), which is what the restore transfer
+/// is priced at.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointRecord {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub tokens: usize,
+    pub generated: usize,
+    pub remaining: usize,
+    pub budget: usize,
+    pub bytes: usize,
+    pub last_token_at: f64,
+}
+
 /// The continuous-batching engine as an actor: a [`CbEngine`] (cost
 /// model + config, immutable for the run) plus every piece of per-run
 /// mutable state the old monolithic loop kept in locals.
@@ -263,6 +290,20 @@ pub struct EngineActor {
     tree: RadixTree,
     prompt_cache: BTreeMap<u64, Vec<usize>>,
     swapped: BTreeMap<u64, SwapEntry>,
+    /// ids in `swapped` whose entry is a fleet checkpoint copy, not a
+    /// swap-out this replica performed: they seat through
+    /// [`DecodeBackend::restore`] (no parked session exists here) and
+    /// emit [`CbEvent::Restore`] instead of `SwapIn`
+    restored: BTreeSet<u64>,
+    /// fault-plan slowdown on the swap/checkpoint tier this step
+    /// (1.0 = identity; set by the cluster loop per step)
+    swap_slowdown: f64,
+    /// checkpoint period in decode steps (0 = off), derived from
+    /// `CbConfig::checkpoint_every` gated on the swap tier being priced
+    ckpt_every: usize,
+    /// checkpoint copies taken since the cluster loop last collected
+    /// them into the fleet store
+    pending_ckpts: Vec<CheckpointRecord>,
     next_seq: u64,
     events: Vec<CbEvent>,
     stats: BTreeMap<u64, ReqStats>,
@@ -317,6 +358,17 @@ impl EngineActor {
         let swap_on = swap_policy.enabled()
             && engine.cfg.kv_cap_bytes > 0
             && engine.cfg.decode_tokens > 0;
+        // the checkpoint tier IS the swap tier: without a priced host
+        // link there is nowhere to copy to (and prefill-only slots hold
+        // no decode progress worth checkpointing)
+        let ckpt_every = if engine.cfg.checkpoint_every > 0
+            && swap_policy.enabled()
+            && engine.cfg.decode_tokens > 0
+        {
+            engine.cfg.checkpoint_every
+        } else {
+            0
+        };
         let batcher = Batcher::new(engine.cfg.max_batch.max(1), engine.cfg.max_wait_s);
         let pool = KvPool::new(engine.cfg.kv_cap_bytes);
         let tree = RadixTree::new(block_tokens);
@@ -337,6 +389,10 @@ impl EngineActor {
             tree,
             prompt_cache: BTreeMap::new(),
             swapped: BTreeMap::new(),
+            restored: BTreeSet::new(),
+            swap_slowdown: 1.0,
+            ckpt_every,
+            pending_ckpts: Vec::new(),
             next_seq: 0,
             events: Vec::new(),
             stats: BTreeMap::new(),
@@ -439,6 +495,10 @@ impl EngineActor {
             tree,
             prompt_cache,
             swapped,
+            restored,
+            swap_slowdown,
+            ckpt_every,
+            pending_ckpts,
             next_seq,
             events,
             stats,
@@ -470,8 +530,12 @@ impl EngineActor {
         let chunk_budget = *chunk_budget;
         let prefix_on = *prefix_on;
         let block_tokens = *block_tokens;
-        let swap_policy = *swap_policy;
+        // the fault plan's slowdown window scales every host-tier
+        // transfer this step prices (swap out/in, checkpoint, restore);
+        // factor 1.0 is the bit-exact identity
+        let swap_policy = swap_policy.slowed(*swap_slowdown);
         let swap_on = *swap_on;
+        let ckpt_every = *ckpt_every;
 
         // a request whose full KV budget exceeds the cap can never be
         // served; drop it rather than head-of-line-block forever.
@@ -727,7 +791,14 @@ impl EngineActor {
             events.push(CbEvent::Admit { ids: batch.iter().map(|r| r.id).collect() });
             for &(id, is_swap, covered) in &order {
                 if is_swap {
-                    events.push(CbEvent::SwapIn { id });
+                    // a fleet checkpoint copy restores; a local swap-out
+                    // swaps back in — same host-link pricing, distinct
+                    // decisions in the stream
+                    if restored.contains(&id) {
+                        events.push(CbEvent::Restore { id });
+                    } else {
+                        events.push(CbEvent::SwapIn { id });
+                    }
                 } else if covered > 0 {
                     events.push(CbEvent::PrefixHit { id, tokens: covered });
                     *prefix_hits += 1;
@@ -865,9 +936,23 @@ impl EngineActor {
                     *next_seq += 1;
                     if is_swap {
                         let (req, e) = swap_iter.next().expect("order/swapped lists diverged");
-                        backend.swap_in(req.id)?;
-                        *swap_ins += 1;
-                        *swap_bytes += e.bytes;
+                        if restored.remove(&req.id) {
+                            // no parked session exists on this replica:
+                            // the backend rebuilds the slot from the
+                            // checkpoint metadata (live: deterministic
+                            // replay of prompt + generated greedy steps)
+                            backend.restore(
+                                req.id,
+                                e.tokens,
+                                e.generated,
+                                e.budget,
+                                engine.cfg.class_of(req.id),
+                            )?;
+                        } else {
+                            backend.swap_in(req.id)?;
+                            *swap_ins += 1;
+                            *swap_bytes += e.bytes;
+                        }
                         pool.acquire_private(e.bytes);
                         slots.push(Slot {
                             id: req.id,
@@ -1001,11 +1086,26 @@ impl EngineActor {
                 );
                 evaluate_on_trace(&fused, &engine.params, &engine.trace, now)
             };
+            // proactive checkpoints: every `ckpt_every`-th generated
+            // token of a decoding slot copies its full post-step
+            // occupancy to the host tier, priced like a swap-out on this
+            // iteration's clock. A slot completing this step is not
+            // checkpointed — there is nothing left to restore.
+            let mut ckpt_s = 0.0f64;
+            if ckpt_every > 0 {
+                for s in slots.iter().filter(|s| s.state == SlotState::Decoding) {
+                    if (s.generated + 1) % ckpt_every == 0 && s.remaining > 1 {
+                        let occ = engine.slot_prompt_bytes(s.tokens)
+                            + (s.generated + 1) * engine.kv_step_bytes();
+                        ckpt_s += swap_policy.transfer_s(occ);
+                    }
+                }
+            }
             model_time.accumulate(&bd);
-            // swap transfers ride this iteration's clock (and its
-            // comm accounting) — the host link is priced, not free
-            model_time.comm_s += swap_out_s;
-            let done = now + bd.total() + swap_out_s;
+            // swap and checkpoint transfers ride this iteration's clock
+            // (and its comm accounting) — the host link is priced, not free
+            model_time.comm_s += swap_out_s + ckpt_s;
+            let done = now + bd.total() + swap_out_s + ckpt_s;
             if done > horizon_s {
                 // the iteration straddles the horizon: nothing advances
                 return Ok(Some(done));
@@ -1072,6 +1172,26 @@ impl EngineActor {
                 let step_bytes = engine.kv_step_bytes();
                 pool.acquire_private(step_bytes);
                 slots[i].kv_bytes += step_bytes;
+                // checkpoint effects, matching the pricing pass above
+                // exactly (post-step: generated incremented, remaining
+                // decremented): record the copy for the fleet store
+                if ckpt_every > 0
+                    && slots[i].generated % ckpt_every == 0
+                    && slots[i].remaining > 0
+                {
+                    events.push(CbEvent::Checkpoint { id: slots[i].id });
+                    pending_ckpts.push(CheckpointRecord {
+                        id: slots[i].id,
+                        arrival_s: slots[i].arrival_s,
+                        tokens: slots[i].tokens,
+                        generated: slots[i].generated,
+                        remaining: slots[i].remaining,
+                        budget: slots[i].budget,
+                        bytes: engine.slot_prompt_bytes(slots[i].tokens)
+                            + slots[i].generated * engine.kv_step_bytes(),
+                        last_token_at: now,
+                    });
+                }
                 if slots[i].remaining == 0 {
                     let s = slots.swap_remove(i);
                     pool.release_private(s.kv_bytes);
@@ -1138,12 +1258,17 @@ impl EngineActor {
         }
         // host-tier entries die with the replica; their requests are
         // already queued (swap keeps the request in the batcher) and will
-        // rebuild from scratch on a survivor
+        // rebuild from scratch on a survivor. Restore-pending ids never
+        // had a parked session on this backend — their entry is fleet
+        // checkpoint metadata, so there is nothing to drop.
         let parked: Vec<u64> = self.swapped.keys().copied().collect();
         for id in parked {
-            backend.drop_swapped(id)?;
+            if !self.restored.contains(&id) {
+                backend.drop_swapped(id)?;
+            }
         }
         self.swapped.clear();
+        self.restored.clear();
         let mut spilled = Vec::new();
         for req in self.batcher.drain_all() {
             let st = self.stats.remove(&req.id).unwrap_or(ReqStats {
@@ -1154,6 +1279,94 @@ impl EngineActor {
             spilled.push((req, st));
         }
         Ok(DrainOutcome { spilled, events: self.events[mark..].to_vec() })
+    }
+
+    /// Unplanned death at virtual time `now` — the fault-plan kill, as
+    /// opposed to the scheduled [`EngineActor::drain`]: nothing is
+    /// preserved. In-flight slots are torn down (their pool bytes, block
+    /// refs, and backend sessions released — no `Evict` event and no
+    /// `kv_evictions` count: this is a fault, not a scheduling decision),
+    /// the host swap tier dies with the replica, and every request the
+    /// replica held is surrendered as *lost* ([`CbEvent::Killed`], one
+    /// per request) with only its once-only TTFT flag carried — accrued
+    /// queue-wait episodes died with the replica's accounting.
+    pub(crate) fn kill<B: DecodeBackend>(
+        &mut self,
+        backend: &mut B,
+        now: f64,
+    ) -> Result<KillOutcome> {
+        let mark = self.events.len();
+        while let Some(s) = self.slots.pop() {
+            self.pool.release_private(s.kv_bytes);
+            for &b in &s.blocks {
+                self.pool.unref_block(b);
+            }
+            // own blocks whose rows never finished replaying die unbacked
+            if let Some(&(first_pending, _, _)) = s.pending.first() {
+                for b in self.tree.remove_subtree(first_pending) {
+                    self.pool.drop_unready(b);
+                }
+            }
+            backend.evict(s.id)?;
+            self.batcher.push(Request { id: s.id, arrival_s: s.arrival_s, tokens: s.tokens });
+        }
+        let parked: Vec<u64> = self.swapped.keys().copied().collect();
+        for id in parked {
+            if !self.restored.contains(&id) {
+                backend.drop_swapped(id)?;
+            }
+        }
+        self.swapped.clear();
+        self.restored.clear();
+        let mut lost = Vec::new();
+        for req in self.batcher.drain_all() {
+            self.events.push(CbEvent::Killed { id: req.id });
+            let ttft_recorded =
+                self.stats.remove(&req.id).map(|st| st.ttft_recorded).unwrap_or(false);
+            lost.push((req, ReqStats { queued_since: now, queue_wait_s: 0.0, ttft_recorded }));
+        }
+        Ok(KillOutcome { lost, events: self.events[mark..].to_vec() })
+    }
+
+    /// Adopt a request lost by a killed replica *with* a fleet checkpoint
+    /// copy: it queues like a swapped-out request at the checkpointed
+    /// size and decode progress, and seats through
+    /// [`DecodeBackend::restore`] / [`CbEvent::Restore`] when admitted.
+    pub(crate) fn adopt_restored(&mut self, req: Request, st: ReqStats, rec: &CheckpointRecord) {
+        self.swapped.insert(
+            req.id,
+            SwapEntry {
+                tokens: rec.tokens,
+                generated: rec.generated,
+                remaining: rec.remaining,
+                budget: rec.budget,
+                bytes: rec.bytes,
+                last_token_at: rec.last_token_at,
+            },
+        );
+        self.restored.insert(req.id);
+        self.stats.insert(req.id, st);
+        self.batcher.push(req);
+    }
+
+    /// Surrender the checkpoint copies taken since the last collection —
+    /// the cluster loop moves them into the fleet store after every step
+    /// (they must survive this replica's death, so they cannot live here).
+    pub(crate) fn take_checkpoints(&mut self) -> Vec<CheckpointRecord> {
+        std::mem::take(&mut self.pending_ckpts)
+    }
+
+    /// Set the fault-plan slowdown factor on the swap/checkpoint tier for
+    /// the next step (1.0 = no fault active).
+    pub(crate) fn set_swap_slowdown(&mut self, factor: f64) {
+        self.swap_slowdown = factor;
+    }
+
+    /// Structural quiescence of the KV pool: no private bytes and no
+    /// referenced blocks — what must hold after a kill or drain tore every
+    /// slot down (cached refcount-0 blocks may remain).
+    pub(crate) fn pool_quiescent(&self) -> bool {
+        self.pool.quiescent()
     }
 
     /// Census a request the driver never routed to any actor (it arrived

@@ -144,7 +144,7 @@ mod slots;
 #[path = "tests.rs"]
 mod tests;
 
-pub use actor::{EngineActor, StepOutcome};
+pub use actor::{CheckpointRecord, EngineActor, StepOutcome};
 pub use report::{CbReport, ClassReport};
 pub use slots::SlotState;
 
@@ -247,6 +247,15 @@ pub struct CbConfig {
     /// higher-class queued requests in one pass, draining deep two-class
     /// queues faster. Ignored by policies without the hook.
     pub slo_preempt_budget: usize,
+    /// proactive checkpointing for fault recovery (`--checkpoint-every`):
+    /// every K decode steps a decoding slot's full occupancy is copied to
+    /// the host tier over the swap link ([`CbEvent::Checkpoint`], transfer
+    /// time charged on the virtual clock), so an unplanned replica kill
+    /// can restore the slot on a survivor ([`CbEvent::Restore`]) instead
+    /// of replaying its whole prompt. 0 (default) disables checkpointing;
+    /// requires `swap_bandwidth_mbps > 0` (the checkpoint tier *is* the
+    /// priced swap tier) and decode to be on.
+    pub checkpoint_every: usize,
 }
 
 impl Default for CbConfig {
@@ -272,6 +281,7 @@ impl Default for CbConfig {
             classes: Vec::new(),
             age_bound_s: 0.5,
             slo_preempt_budget: 1,
+            checkpoint_every: 0,
         }
     }
 }
@@ -351,6 +361,19 @@ pub enum CbEvent {
     /// cache back (charged at the host-link bandwidth), resuming decode
     /// where it left off
     SwapIn { id: u64 },
+    /// an unplanned replica kill lost this in-flight or queued request;
+    /// the cluster loop re-routes it to a survivor (replay from prompt,
+    /// or [`CbEvent::Restore`] when a checkpoint copy exists)
+    Killed { id: u64 },
+    /// proactive checkpoint: slot `id`'s full occupancy was copied to the
+    /// host tier over the swap link (`CbConfig::checkpoint_every`),
+    /// priced into the iteration like a swap-out
+    Checkpoint { id: u64 },
+    /// a killed request re-entered a slot on a survivor by transferring
+    /// its latest checkpoint copy back from the fleet host tier —
+    /// decode progress up to the checkpoint is preserved, like
+    /// [`CbEvent::SwapIn`] but sourced from a dead replica's checkpoint
+    Restore { id: u64 },
 }
 
 /// LEGACY flat admission gate over Appendix-G mixed-KV memory — the
@@ -466,6 +489,22 @@ pub trait DecodeBackend {
     /// drained from the fleet: drop the parked state (the request is
     /// still queued and will rebuild from scratch on a survivor).
     fn drop_swapped(&mut self, _id: u64) -> Result<()> {
+        Ok(())
+    }
+    /// A killed request restores onto this backend from a fleet-level
+    /// checkpoint copy: rebuild the slot's state as of `generated` decode
+    /// steps past its `tokens`-token prompt (live: deterministically
+    /// replay prompt + `generated` greedy steps — greedy decode makes the
+    /// rebuilt cache bit-identical to the checkpointed one; the model
+    /// already priced the restore as one host-link transfer).
+    fn restore(
+        &mut self,
+        _id: u64,
+        _tokens: usize,
+        _generated: usize,
+        _budget: usize,
+        _class: usize,
+    ) -> Result<()> {
         Ok(())
     }
     /// Actual bytes currently held by in-flight slots plus the shared

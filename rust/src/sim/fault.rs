@@ -1,0 +1,262 @@
+//! Seeded deterministic fault plans for chaos soaking.
+//!
+//! A [`FaultPlan`] is a *pure data* schedule of faults drawn once from a
+//! seed: replica kills, link-degradation windows, swap-tier slowdown
+//! windows, and arrival bursts. Everything is expressed in virtual-clock
+//! seconds — the serving stack (`server/chaos`, `server/cluster`) replays
+//! the plan against its own deterministic event loop, so the same seed
+//! always produces the same faults at the same points in the same run, no
+//! matter how fast the host executes. The empty plan is the identity: a
+//! run with `FaultPlan::empty()` must be bit-identical to a run with no
+//! plan at all, which is the anchor property the chaos test suite pins.
+//!
+//! The plan deliberately knows nothing about engines, requests, or
+//! backends: it answers only "what multiplies the link bandwidth at time
+//! t", "what slows the swap tier at time t", "which replicas die when",
+//! and "which arrival spans collapse into a burst". The *interpretation*
+//! (losing a queue, restoring from a checkpoint) lives above, in
+//! `server/chaos` and the cluster loop.
+
+use crate::comm::trace::BandwidthTrace;
+use crate::util::rng::Rng;
+
+/// Unplanned death of a replica: unlike `--drain-at`, the victim's queue
+/// and host swap tier are *lost*, not spilled cleanly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaKill {
+    pub replica: usize,
+    pub at_s: f64,
+}
+
+/// A link-degradation window: while active, effective bandwidth is scaled
+/// by `bandwidth_scale` and a Bernoulli per-packet loss of `loss_rate` is
+/// applied on top. A reliable (retransmitting) link converts loss into
+/// extra copies — expected billed bytes are `bytes / (1 - p)` (see
+/// `comm/link.rs::prop_retransmit_expected_bytes`) — so loss shows up as a
+/// further goodput factor of `1 - loss_rate`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkWindow {
+    pub from_s: f64,
+    pub to_s: f64,
+    /// multiplies the trace bandwidth (0 < scale <= 1)
+    pub bandwidth_scale: f64,
+    /// Bernoulli per-packet loss applied during the window
+    pub loss_rate: f64,
+}
+
+/// A swap/checkpoint-tier slowdown window: while active, the host link's
+/// bandwidth is divided (and latency multiplied) by `slowdown`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwapWindow {
+    pub from_s: f64,
+    pub to_s: f64,
+    /// >= 1.0; 1.0 is the identity
+    pub slowdown: f64,
+}
+
+/// A clock-skew burst: every arrival scheduled inside
+/// `[at_s, at_s + window_s)` lands at exactly `at_s` instead — the
+/// thundering herd a fleet sees when a partition heals and queued clients
+/// all reconnect at once.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalBurst {
+    pub at_s: f64,
+    pub window_s: f64,
+}
+
+/// A complete seeded fault schedule for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// sorted by `at_s`
+    pub kills: Vec<ReplicaKill>,
+    pub links: Vec<LinkWindow>,
+    pub swaps: Vec<SwapWindow>,
+    pub bursts: Vec<ArrivalBurst>,
+}
+
+impl FaultPlan {
+    /// The identity plan: injects nothing, perturbs nothing.
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+            && self.links.is_empty()
+            && self.swaps.is_empty()
+            && self.bursts.is_empty()
+    }
+
+    /// Draw a plan from a seed for a `replicas`-wide fleet over
+    /// `horizon_s` virtual seconds. Deterministic: same inputs, same plan.
+    pub fn seeded(seed: u64, replicas: usize, horizon_s: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xfa17_7b1a_9e37_79b9);
+        let mut plan = FaultPlan::default();
+
+        // Kills: up to replicas-1 distinct victims (someone must survive to
+        // adopt the dead replica's work), in the middle of the run so the
+        // victims are actually mid-decode. The cluster loop additionally
+        // refuses to kill the last live replica at execution time.
+        if replicas > 1 {
+            let n_kills = rng.below(replicas); // 0..replicas-1
+            let mut victims: Vec<usize> = Vec::new();
+            for _ in 0..n_kills {
+                let v = rng.below(replicas);
+                if !victims.contains(&v) {
+                    victims.push(v);
+                }
+            }
+            for v in victims {
+                let at_s = (0.1 + 0.7 * rng.f64()) * horizon_s;
+                plan.kills.push(ReplicaKill { replica: v, at_s });
+            }
+            plan.kills.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        }
+
+        // Link-degradation windows: 0..3 windows, each spanning at least
+        // 20% of the horizon, bandwidth scaled into [0.3, 1.0) with loss
+        // up to 0.5 on top.
+        for _ in 0..rng.below(3) {
+            let from_s = rng.f64() * 0.7 * horizon_s;
+            let span = (0.2 + 0.6 * rng.f64()) * horizon_s;
+            plan.links.push(LinkWindow {
+                from_s,
+                to_s: (from_s + span).min(horizon_s),
+                bandwidth_scale: 0.3 + 0.7 * rng.f64(),
+                loss_rate: 0.5 * rng.f64(),
+            });
+        }
+
+        // Swap-tier slowdowns: 0..3 windows, 1x..8x.
+        for _ in 0..rng.below(3) {
+            let from_s = rng.f64() * 0.7 * horizon_s;
+            let span = (0.1 + 0.5 * rng.f64()) * horizon_s;
+            plan.swaps.push(SwapWindow {
+                from_s,
+                to_s: (from_s + span).min(horizon_s),
+                slowdown: 1.0 + 7.0 * rng.f64(),
+            });
+        }
+
+        // Arrival bursts: 0..4 collapse windows of 5-15% of the horizon.
+        for _ in 0..rng.below(4) {
+            let at_s = rng.f64() * 0.8 * horizon_s;
+            plan.bursts.push(ArrivalBurst { at_s, window_s: (0.05 + 0.10 * rng.f64()) * horizon_s });
+        }
+
+        plan
+    }
+
+    /// Combined goodput multiplier on inter-device links at time `t`:
+    /// the product over active windows of `bandwidth_scale * (1 - loss)`
+    /// (loss on a reliable link costs `1/(1-p)` extra copies, i.e. a
+    /// `1-p` goodput factor). 1.0 outside every window.
+    pub fn link_factor(&self, t: f64) -> f64 {
+        let mut f = 1.0;
+        for w in &self.links {
+            if t >= w.from_s && t < w.to_s {
+                f *= w.bandwidth_scale * (1.0 - w.loss_rate);
+            }
+        }
+        f
+    }
+
+    /// Swap/checkpoint-tier slowdown factor at time `t` (product over
+    /// active windows; 1.0 outside every window).
+    pub fn swap_slowdown(&self, t: f64) -> f64 {
+        let mut f = 1.0;
+        for w in &self.swaps {
+            if t >= w.from_s && t < w.to_s {
+                f *= w.slowdown;
+            }
+        }
+        f
+    }
+
+    /// A copy of `trace` with every link window applied: resampled on a
+    /// fine fixed grid with each slot's bandwidth multiplied by
+    /// [`FaultPlan::link_factor`] at the slot midpoint. With no link
+    /// windows the trace is returned unchanged (clone), preserving
+    /// bit-identical transfer integrals for the empty plan.
+    pub fn degraded_trace(&self, trace: &BandwidthTrace, horizon_s: f64) -> BandwidthTrace {
+        if self.links.is_empty() {
+            return trace.clone();
+        }
+        let slot_s = 0.1f64;
+        let n = (horizon_s / slot_s).ceil().max(1.0) as usize;
+        let mbps = (0..n)
+            .map(|i| {
+                let t_mid = (i as f64 + 0.5) * slot_s;
+                trace.at(t_mid) * self.link_factor(t_mid)
+            })
+            .collect();
+        BandwidthTrace { slot_s, mbps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_bounded() {
+        for seed in 0..200u64 {
+            let a = FaultPlan::seeded(seed, 4, 10.0);
+            let b = FaultPlan::seeded(seed, 4, 10.0);
+            assert_eq!(a, b, "seed {seed} not deterministic");
+            assert!(a.kills.len() < 4, "must leave a survivor");
+            for k in &a.kills {
+                assert!(k.replica < 4);
+                assert!(k.at_s > 0.0 && k.at_s < 10.0);
+            }
+            for w in &a.links {
+                assert!(w.from_s < w.to_s && w.to_s <= 10.0);
+                assert!(w.bandwidth_scale >= 0.3 && w.bandwidth_scale <= 1.0);
+                assert!((0.0..0.5).contains(&w.loss_rate));
+            }
+            for w in &a.swaps {
+                assert!(w.slowdown >= 1.0 && w.slowdown <= 8.0);
+            }
+            assert!(a.kills.windows(2).all(|p| p[0].at_s <= p[1].at_s), "kills sorted");
+        }
+    }
+
+    #[test]
+    fn single_replica_plans_never_kill() {
+        for seed in 0..50u64 {
+            assert!(FaultPlan::seeded(seed, 1, 10.0).kills.is_empty());
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_the_identity() {
+        let plan = FaultPlan::empty();
+        assert!(plan.is_empty());
+        assert_eq!(plan.link_factor(3.0), 1.0);
+        assert_eq!(plan.swap_slowdown(3.0), 1.0);
+        let trace = BandwidthTrace::constant(80.0, 10.0);
+        let same = plan.degraded_trace(&trace, 10.0);
+        assert_eq!(same.slot_s.to_bits(), trace.slot_s.to_bits());
+        assert_eq!(same.mbps.len(), trace.mbps.len());
+        assert_eq!(same.mbps[0].to_bits(), trace.mbps[0].to_bits());
+    }
+
+    #[test]
+    fn factors_apply_only_inside_windows() {
+        let plan = FaultPlan {
+            links: vec![LinkWindow { from_s: 2.0, to_s: 4.0, bandwidth_scale: 0.5, loss_rate: 0.2 }],
+            swaps: vec![SwapWindow { from_s: 1.0, to_s: 3.0, slowdown: 4.0 }],
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.link_factor(1.0), 1.0);
+        assert!((plan.link_factor(3.0) - 0.5 * 0.8).abs() < 1e-12);
+        assert_eq!(plan.link_factor(4.0), 1.0, "window is half-open");
+        assert_eq!(plan.swap_slowdown(0.5), 1.0);
+        assert_eq!(plan.swap_slowdown(2.0), 4.0);
+        // degraded trace: inside the window the 100 Mbps constant drops
+        let trace = BandwidthTrace::constant(100.0, 10.0);
+        let deg = plan.degraded_trace(&trace, 10.0);
+        assert!((deg.at(3.0) - 40.0).abs() < 1e-9);
+        assert!((deg.at(7.0) - 100.0).abs() < 1e-9);
+    }
+}

@@ -8,11 +8,17 @@
 //!  * [`engine`] — a general binary-heap event queue used by the serving
 //!    simulator (request streams under dynamic bandwidth, Figure 6) and
 //!    by failure-injection tests.
+//!
+//! Plus [`fault`]: seeded deterministic [`fault::FaultPlan`]s (replica
+//! kills, link degradation, swap slowdown, arrival bursts) expressed on
+//! the virtual clock, consumed by `server/chaos` and the cluster loop.
 
 pub mod engine;
+pub mod fault;
 pub mod latency;
 
 pub use engine::{Engine, Event};
+pub use fault::{ArrivalBurst, FaultPlan, LinkWindow, ReplicaKill, SwapWindow};
 pub use latency::{
     evaluate, evaluate_batched, evaluate_on_trace, evaluate_on_trace_batched, Breakdown, SimParams,
 };

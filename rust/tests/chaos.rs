@@ -1,0 +1,337 @@
+//! Chaos soak harness: seeded deterministic fault plans against the
+//! multi-replica cluster loop. Every test here enforces the same core
+//! contract — a fault schedule reshapes *when* work happens, never
+//! *whether* it happens: no request is lost or double-completed across
+//! replica kills, checkpoint restores replay no token twice, TTFT is
+//! recorded once per request however many times faults requeue it, and
+//! the empty plan is bit-identical to no plan at all.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use astra::comm::trace::BandwidthTrace;
+use astra::config::RunConfig;
+use astra::coordinator::Cluster;
+use astra::model::shape::{TransformerShape, VqSetting};
+use astra::parallel::strategies::{Strategy, StrategyKind};
+use astra::server::chaos::{assert_chaos_invariants, chaos_invariants};
+use astra::server::cluster::{ClusterEngine, ClusterReport, RouteKind};
+use astra::server::live::{live_arrivals, live_engine, LiveBackend};
+use astra::server::scheduler::{CbConfig, CbEngine, CbEvent};
+use astra::server::Request;
+use astra::sim::fault::{FaultPlan, ReplicaKill};
+use astra::sim::latency::SimParams;
+use astra::util::rng::Rng;
+
+fn engine(cfg: CbConfig) -> CbEngine {
+    CbEngine::new(
+        TransformerShape::paper_encoder(1024),
+        Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+        SimParams::paper_encoder(),
+        BandwidthTrace::constant(100.0, 1e9),
+        cfg,
+    )
+}
+
+fn fleet(cfg: &CbConfig, replicas: usize, plan: Option<FaultPlan>) -> ClusterEngine {
+    let engines: Vec<CbEngine> = (0..replicas).map(|_| engine(cfg.clone())).collect();
+    let f = ClusterEngine::new(engines, RouteKind::RoundRobin);
+    match plan {
+        Some(p) => f.with_faults(p),
+        None => f,
+    }
+}
+
+/// Virtual completion time of the last finished request on an
+/// all-at-zero arrival trace (latency == completion time there) — the
+/// anchor the kill-time fractions below are derived from, so the kills
+/// land mid-run whatever the cost model prices the steps at.
+fn makespan(report: &ClusterReport) -> f64 {
+    report.replicas.iter().map(|r| r.latency.max()).fold(0.0, f64::max)
+}
+
+/// Every `Killed` event corresponds to exactly one re-route: restored
+/// from a checkpoint or replayed from the prompt.
+fn killed_events(report: &ClusterReport) -> usize {
+    report.events.iter().filter(|e| matches!(e.event, CbEvent::Killed { .. })).count()
+}
+
+#[test]
+fn empty_fault_plan_is_bit_identical_on_a_fleet_fixture() {
+    // the identity anchor on a fully-loaded fixture (prefix cache +
+    // chunked prefill + swap + checkpoints all on): wiring an empty plan
+    // must not perturb one bit of the streams or the timing
+    let cfg = CbConfig {
+        max_slots: 4,
+        decode_tokens: 16,
+        prefill_chunk_tokens: 256,
+        prefix_cache: true,
+        kv_block_tokens: 64,
+        prompt_groups: 3,
+        swap_bandwidth_mbps: 1e5,
+        checkpoint_every: 4,
+        seed: 11,
+        prompt_vocab: 512,
+        ..CbConfig::default()
+    };
+    let arrivals = astra::server::batcher::poisson_arrivals(&mut Rng::new(42), 8.0, 15.0, 1024);
+    let p = fleet(&cfg, 3, None).serve_stream(arrivals.clone(), 15.0).unwrap();
+    let f = fleet(&cfg, 3, Some(FaultPlan::empty())).serve_stream(arrivals, 15.0).unwrap();
+    assert_eq!(f.events, p.events, "empty plan perturbed the decision stream");
+    assert!(f.killed.is_empty() && f.restored == 0 && f.replayed == 0);
+    for (a, b) in f.replicas.iter().zip(p.replicas.iter()) {
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.windows, b.windows);
+        assert_eq!(a.latency.p95().to_bits(), b.latency.p95().to_bits(), "timing drifted");
+        assert_eq!(a.swap_bytes, b.swap_bytes);
+    }
+}
+
+#[test]
+fn seeded_soak_holds_the_invariant_checklist_over_100_seeds() {
+    // the VOPR loop in miniature: 100 consecutive seeded plans over a
+    // 3-replica fleet, full invariant checklist on every run. A failing
+    // seed IS the repro — the plan is a pure function of it.
+    let horizon = 6.0;
+    let base = CbConfig {
+        max_slots: 3,
+        decode_tokens: 12,
+        swap_bandwidth_mbps: 1e5,
+        checkpoint_every: 4,
+        seed: 7,
+        ..CbConfig::default()
+    };
+    let cap = 5 * engine(base.clone()).kv_projection(1024);
+    let cfg = CbConfig { kv_cap_bytes: cap, ..base };
+    let (mut kills, mut recovered) = (0usize, 0usize);
+    for seed in 0..100u64 {
+        let plan = FaultPlan::seeded(seed, 3, horizon);
+        let mut rng = Rng::new(7);
+        let arrivals =
+            astra::server::batcher::poisson_arrivals(&mut rng, 5.0, horizon, 1024);
+        let n = arrivals.len();
+        let r = fleet(&cfg, 3, Some(plan)).serve_stream(arrivals, horizon).unwrap();
+        assert_chaos_invariants(n, &r)
+            .unwrap_or_else(|e| panic!("fault seed {seed}: {e:#}"));
+        assert_eq!(
+            killed_events(&r),
+            r.restored + r.replayed,
+            "fault seed {seed}: every killed request must be re-routed exactly once"
+        );
+        kills += r.killed.len();
+        recovered += r.restored + r.replayed;
+    }
+    // the soak must actually exercise the failure paths it guards
+    assert!(kills > 0, "100 seeds never killed a replica — the plan generator regressed");
+    assert!(recovered > 0, "kills never caught in-flight work — widen the workload");
+}
+
+#[test]
+fn checkpointed_kills_restore_instead_of_replaying() {
+    // a mid-decode kill with checkpoints on: the victim's in-flight slots
+    // must come back from the fleet checkpoint store (Restore events, the
+    // swap-priced path), not only from prompt replay — and still complete
+    // exactly once each
+    let cfg = CbConfig {
+        max_slots: 2,
+        decode_tokens: 64,
+        swap_bandwidth_mbps: 1e5,
+        checkpoint_every: 4,
+        ..CbConfig::default()
+    };
+    let arrivals: Vec<Request> =
+        (0..10u64).map(|id| Request { id, arrival_s: 0.0, tokens: 1024 }).collect();
+    let baseline = fleet(&cfg, 2, None).serve_stream(arrivals.clone(), 1e4).unwrap();
+    assert_eq!(baseline.completed(), 10);
+    let kill_at = 0.5 * makespan(&baseline);
+    assert!(kill_at > 0.0);
+    let plan = FaultPlan {
+        kills: vec![ReplicaKill { replica: 1, at_s: kill_at }],
+        ..FaultPlan::default()
+    };
+    let r = fleet(&cfg, 2, Some(plan)).serve_stream(arrivals, 1e4).unwrap();
+    assert_eq!(r.killed, vec![1]);
+    assert!(r.restored > 0, "no slot restored from a checkpoint at t={kill_at:.3}");
+    let restores =
+        r.events.iter().filter(|e| matches!(e.event, CbEvent::Restore { .. })).count();
+    assert_eq!(restores, r.restored, "Restore events must match the report");
+    assert!(
+        r.events.iter().any(|e| matches!(e.event, CbEvent::Checkpoint { .. })),
+        "checkpoint_every=4 over 64 decode tokens must emit checkpoints"
+    );
+    assert_eq!(killed_events(&r), r.restored + r.replayed);
+    // nobody lost, nobody double-completed, all on the survivor
+    let mut seen = BTreeSet::new();
+    for e in &r.events {
+        if let CbEvent::Complete { id } = e.event {
+            assert!(seen.insert(id), "request {id} completed twice");
+        }
+    }
+    assert_eq!(r.completed(), 10, "a request was lost across the kill");
+    assert_chaos_invariants(10, &r).unwrap();
+    // restores are NOT swap-ins: the per-replica swap counters only move
+    // for genuine preemption traffic, which this cap-less run has none of
+    assert!(r.replicas.iter().all(|rep| rep.swap_ins == 0));
+}
+
+#[test]
+fn kill_requeues_record_ttft_once_and_never_double_count_prefill_chunks() {
+    // the Prefilling-eviction audit under fault-induced requeues: kill two
+    // replicas mid-run on a chunked-prefill workload, then check (a) TTFT
+    // is recorded at most once per request fleet-wide, however many times
+    // it was killed and re-admitted, and (b) within every admission
+    // episode the PrefillChunk events of a slot tile contiguously — a
+    // mid-chunk kill must restart the episode cleanly, never re-cover or
+    // skip prompt rows inside one
+    let cfg = CbConfig {
+        max_slots: 2,
+        decode_tokens: 16,
+        prefill_chunk_tokens: 256,
+        ..CbConfig::default()
+    };
+    let arrivals: Vec<Request> =
+        (0..12u64).map(|id| Request { id, arrival_s: 0.0, tokens: 1024 }).collect();
+    let baseline = fleet(&cfg, 3, None).serve_stream(arrivals.clone(), 1e4).unwrap();
+    let m = makespan(&baseline);
+    let plan = FaultPlan {
+        kills: vec![
+            ReplicaKill { replica: 1, at_s: 0.35 * m },
+            ReplicaKill { replica: 2, at_s: 0.55 * m },
+        ],
+        ..FaultPlan::default()
+    };
+    let r = fleet(&cfg, 3, Some(plan)).serve_stream(arrivals, 1e4).unwrap();
+    assert_eq!(r.killed, vec![1, 2]);
+    assert!(killed_events(&r) > 0, "the kills caught no work at all");
+    assert_chaos_invariants(12, &r).unwrap();
+
+    // (a) TTFT once per request across every replica it ever visited
+    let admitted: BTreeSet<u64> = r
+        .events
+        .iter()
+        .flat_map(|e| match &e.event {
+            CbEvent::Admit { ids } => ids.clone(),
+            _ => Vec::new(),
+        })
+        .collect();
+    let ttft_samples: usize = r.replicas.iter().map(|rep| rep.ttft.len()).sum();
+    assert!(
+        ttft_samples <= admitted.len(),
+        "{ttft_samples} TTFT samples over {} distinct admitted requests — \
+         a fault requeue re-recorded a first token",
+        admitted.len()
+    );
+
+    // (b) chunk coverage per admission episode: contiguous, no overlap.
+    // An episode opens at Admit and closes at Complete/Evict/Killed;
+    // within it each chunk must start where the previous one ended.
+    let mut cursor: BTreeMap<(usize, u64), Option<usize>> = BTreeMap::new();
+    for e in &r.events {
+        match &e.event {
+            CbEvent::Admit { ids } => {
+                for &id in ids {
+                    cursor.insert((e.replica, id), None);
+                }
+            }
+            CbEvent::PrefillChunk { id, lo, hi } => {
+                assert!(hi > lo && *hi <= 1024, "degenerate chunk [{lo},{hi})");
+                let c = cursor
+                    .get_mut(&(e.replica, *id))
+                    .unwrap_or_else(|| panic!("chunk for {id} outside any episode"));
+                if let Some(prev_hi) = *c {
+                    assert_eq!(
+                        *lo, prev_hi,
+                        "request {id} on replica {}: chunk [{lo},{hi}) double-counts or \
+                         skips rows (episode cursor at {prev_hi})",
+                        e.replica
+                    );
+                }
+                *c = Some(*hi);
+            }
+            CbEvent::Complete { id } | CbEvent::Evict { id } | CbEvent::Killed { id } => {
+                cursor.remove(&(e.replica, *id));
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn live_fleet_under_faults_matches_the_model_and_recovers() {
+    // the differential harness extended to fault schedules: a live fleet
+    // (real DecodeSessions, real checkpoint-restore replay) and the cost
+    // model must emit identical replica-tagged streams INCLUDING the
+    // Killed/Checkpoint/Restore events, and the kill must lose nobody
+    let shape = TransformerShape {
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        seq_len: 16,
+        elem_bytes: 4,
+    };
+    let config = RunConfig { n_devices: 2, ..RunConfig::default() };
+    let cluster =
+        Cluster::synthetic_decoder(&shape, 32, VqSetting::new(2, 8), config, 25).unwrap();
+    let seq = cluster.artifact.meta.seq_len;
+    let cfg = CbConfig {
+        max_slots: 4,
+        max_batch: 4,
+        decode_tokens: 6,
+        prefix_cache: true,
+        kv_block_tokens: 4,
+        prompt_groups: 2,
+        swap_bandwidth_mbps: 1e5,
+        checkpoint_every: 2,
+        ..CbConfig::default()
+    };
+    let params = SimParams::paper_encoder();
+    let trace = BandwidthTrace::constant(100.0, 1e9);
+    let arrivals = live_arrivals(&mut Rng::new(301), 25.0, 4.0, seq);
+    assert!(arrivals.len() > 3, "{}", arrivals.len());
+    let n = arrivals.len();
+    // replica 0 dies at t=2.0, mid-trace for this workload (the drain
+    // differential pins the same instant)
+    let plan = FaultPlan {
+        kills: vec![ReplicaKill { replica: 0, at_s: 2.0 }],
+        ..FaultPlan::default()
+    };
+    let pinned = live_engine(&cluster, cfg.clone(), params.clone(), trace.clone()).cfg;
+    let mk_fleet = || {
+        let engines: Vec<_> = (0..2)
+            .map(|_| live_engine(&cluster, cfg.clone(), params.clone(), trace.clone()))
+            .collect();
+        ClusterEngine::new(engines, RouteKind::RoundRobin).with_faults(plan.clone())
+    };
+    let m = mk_fleet().serve_stream(arrivals.clone(), 1e4).unwrap();
+    let mut backends: Vec<LiveBackend> =
+        (0..2).map(|_| LiveBackend::for_config(&cluster, &pinned)).collect();
+    let l = mk_fleet().serve_stream_with(&mut backends, arrivals, 1e4).unwrap();
+
+    assert_eq!(m.events, l.events, "fleet streams diverged under the fault plan");
+    assert_eq!(m.killed, vec![0]);
+    assert_eq!(l.killed, vec![0]);
+    assert_eq!(m.restored, l.restored);
+    assert_eq!(m.replayed, l.replayed);
+    assert!(killed_events(&m) > 0, "the kill at t=2.0 caught no work");
+    assert_eq!(m.completed(), n, "a request was lost across the kill");
+    for (name, ok, detail) in chaos_invariants(n, &l) {
+        assert!(ok, "live run broke `{name}`: {detail}");
+    }
+    // the survivor's real session memory kept agreeing with the model
+    assert!(l.replicas.iter().all(|rep| rep.kv_violations == 0));
+    // every survivor-side completion produced a real full generation
+    let done: BTreeSet<u64> = m
+        .events
+        .iter()
+        .filter_map(|e| match e.event {
+            CbEvent::Complete { id } => Some(id),
+            _ => None,
+        })
+        .collect();
+    let full = backends
+        .iter()
+        .flat_map(|b| b.generations.iter())
+        .filter(|(id, toks)| done.contains(id) && !toks.is_empty())
+        .count();
+    assert!(full > 0, "no completed request carries a real generation");
+}

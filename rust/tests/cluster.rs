@@ -94,6 +94,27 @@ fn drain_spills_to_survivors_without_losing_a_request() {
 }
 
 #[test]
+fn last_replica_drain_is_skipped_and_reported() {
+    // the silent-skip bugfix: draining the only live replica would leave
+    // the queue nowhere to spill, so the loop skips it — but it must SAY
+    // so. The report carries `drain_skipped`, `drained` stays None, and
+    // the replica keeps serving to completion as if no drain were asked.
+    let cfg = CbConfig { max_slots: 2, ..CbConfig::default() };
+    let arrivals: Vec<Request> =
+        (0..12u64).map(|id| Request { id, arrival_s: 0.0, tokens: 1024 }).collect();
+    let mut fleet =
+        ClusterEngine::new(vec![engine(cfg.clone())], RouteKind::RoundRobin).with_drain(0, 1e-6);
+    let r = fleet.serve_stream(arrivals.clone(), 1e4).unwrap();
+    assert_eq!(r.drained, None, "a skipped drain must not report as drained");
+    assert_eq!(r.drain_skipped, Some(0), "the skip must be surfaced, not silent");
+    assert_eq!(r.completed(), 12, "the survivor keeps serving after the skipped drain");
+    // and the stream is exactly the undrained run — the skip is a no-op
+    let mut plain = ClusterEngine::new(vec![engine(cfg)], RouteKind::RoundRobin);
+    let p = plain.serve_stream(arrivals, 1e4).unwrap();
+    assert_eq!(r.events, p.events, "skipped drain perturbed the event stream");
+}
+
+#[test]
 fn prefix_affinity_beats_round_robin_on_grouped_prompts() {
     // the router's acceptance property: on a staggered grouped-prompt
     // trace that both policies fully complete, prefix-affinity must buy a

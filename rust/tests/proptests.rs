@@ -14,6 +14,7 @@ use astra::server::cluster::{ClusterEngine, RouteKind};
 use astra::server::policy::PolicyKind;
 use astra::server::scheduler::{CbConfig, CbEngine, CbEvent};
 use astra::server::Request;
+use astra::sim::fault::FaultPlan;
 use astra::sim::latency::{
     evaluate, evaluate_batched, evaluate_on_trace, evaluate_on_trace_batched, SimParams,
 };
@@ -274,9 +275,14 @@ fn prop_chunked_prefill_covers_prompts_and_anchors_to_unchunked() {
                     progress.remove(id); // recompute: next episode restarts
                 }
                 CbEvent::Reject { .. } => {}
-                // prefix cache and swap are off in this property run
-                CbEvent::PrefixHit { .. } | CbEvent::SwapOut { .. } | CbEvent::SwapIn { .. } => {
-                    unreachable!("{label}: prefix/swap event without the feature enabled")
+                // prefix cache, swap, and faults are off in this property run
+                CbEvent::PrefixHit { .. }
+                | CbEvent::SwapOut { .. }
+                | CbEvent::SwapIn { .. }
+                | CbEvent::Killed { .. }
+                | CbEvent::Checkpoint { .. }
+                | CbEvent::Restore { .. } => {
+                    unreachable!("{label}: prefix/swap/fault event without the feature enabled")
                 }
             }
         }
@@ -644,6 +650,77 @@ fn prop_single_replica_cluster_reproduces_engine_streams() {
             assert_eq!(f.replicas[0].kv_rejected, r.kv_rejected, "{label} {route:?}");
             assert_eq!(f.replicas[0].prefix_hits, r.prefix_hits, "{label} {route:?}");
             assert_eq!(f.replicas[0].windows, r.windows, "{label} {route:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_zero_fault_plan_reproduces_fleet_streams() {
+    // the chaos layer's identity anchor: a fleet wired with an *empty*
+    // FaultPlan must be bit-identical to the same fleet with no plan at
+    // all — same events, same counters, same virtual timestamps — over
+    // random configs, routes, and truncating horizons. Any fault-path
+    // bookkeeping that leaks into the faultless run breaks this.
+    let mut rng = Rng::new(4800);
+    for case in 0..12 {
+        let n = 2 + rng.below(4);
+        let t = n * (8 + rng.below(32));
+        let shape = TransformerShape::paper_encoder(t);
+        let strategy = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, n);
+        let cfg = CbConfig {
+            max_slots: 2 + rng.below(4),
+            max_batch: 1 + rng.below(4),
+            decode_tokens: 1 + rng.below(16),
+            prefill_chunk_tokens: if rng.chance(0.5) { 1 + rng.below(t) } else { 0 },
+            prefix_cache: rng.chance(0.5),
+            kv_block_tokens: 1 + rng.below(t),
+            prompt_groups: rng.below(3),
+            seed: rng.next_u64(),
+            ..CbConfig::default()
+        };
+        let mk = |cfg: CbConfig| {
+            CbEngine::new(
+                shape,
+                strategy,
+                SimParams::paper_encoder(),
+                BandwidthTrace::constant(100.0, 1e9),
+                cfg,
+            )
+        };
+        let replicas = 2 + rng.below(2);
+        let arrivals = {
+            let mut arr = Vec::new();
+            let mut at = 0.0;
+            for id in 1..=(8 + rng.below(16)) as u64 {
+                at += rng.exp(10.0);
+                arr.push(Request { id, arrival_s: at, tokens: t });
+            }
+            arr
+        };
+        let horizon = 1.0 + rng.f64() * 15.0;
+        let route =
+            [RouteKind::RoundRobin, RouteKind::LeastLoaded, RouteKind::PrefixAffinity][case % 3];
+        let label = format!("case {case}: t={t} replicas={replicas} horizon={horizon:.2}");
+
+        let mut plain = ClusterEngine::new((0..replicas).map(|_| mk(cfg.clone())).collect(), route);
+        let p = plain.serve_stream(arrivals.clone(), horizon).unwrap();
+        let mut faulted = ClusterEngine::new((0..replicas).map(|_| mk(cfg.clone())).collect(), route)
+            .with_faults(FaultPlan::empty());
+        let f = faulted.serve_stream(arrivals, horizon).unwrap();
+
+        assert_eq!(f.events, p.events, "{label}: streams diverged under the empty plan");
+        assert_eq!(f.completed(), p.completed(), "{label}");
+        assert_eq!(f.censored(), p.censored(), "{label}");
+        assert_eq!(f.routed, p.routed, "{label}");
+        assert!(f.killed.is_empty() && f.restored == 0 && f.replayed == 0, "{label}");
+        for (a, b) in f.replicas.iter().zip(p.replicas.iter()) {
+            assert_eq!(a.windows, b.windows, "{label}: replica {} windows", a.replica);
+            assert_eq!(
+                a.latency.p95().to_bits(),
+                b.latency.p95().to_bits(),
+                "{label}: replica {} latency bits",
+                a.replica
+            );
         }
     }
 }
