@@ -3,9 +3,32 @@
 //! on the device owning the sequence tail. That device's cache holds its
 //! *local* prefill tokens in full precision and the other devices' tokens
 //! as dequantized VQ codes — Appendix G's memory accounting.
+//!
+//! ## Fused batched decode
+//!
+//! [`step_batch`] advances any number of in-flight sessions through **one
+//! GEMM per layer per iteration**: per-slot hidden states are gathered into
+//! a `[batch, d_model]` activation matrix, the layer's LN/QKV/output/MLP
+//! matmuls run once over the whole batch, and only attention (which reads
+//! each slot's private cache) is per-slot. Every operator in
+//! [`crate::tensor`] is row-independent with a fixed inner accumulation
+//! order, so each batch row is bit-identical to the `[1, D]` serial step —
+//! [`DecodeSession::step`] is literally `step_batch` on a 1-slot batch, and
+//! the serial escape hatch in the serving layer is the same arithmetic
+//! executed one slot at a time.
+//!
+//! ## Arena-backed shared blocks
+//!
+//! A session can cover its prompt prefix by *attaching* sealed
+//! [`crate::kv::arena`] blocks ([`DecodeSession::attach_block`]): an `Arc`
+//! clone instead of the row-copying [`DecodeSession::import_rows`]. Decode
+//! attention and [`DecodeSession::export_rows`] resolve rows below the
+//! attached watermark through the shared storage (same head-major layout,
+//! same ascending-`i` order), so attach is bit-identical to import.
 
 use anyhow::{bail, Result};
 
+use crate::kv::arena::BlockRef;
 use crate::model::native::{self, BlockWeights};
 use crate::tensor::Tensor;
 
@@ -17,12 +40,17 @@ pub struct DecodeSession<'a> {
     cluster: &'a Cluster,
     k_cache: Vec<Tensor>,
     v_cache: Vec<Tensor>,
+    /// sealed arena blocks covering rows `[0, attached_hi)`; reads below
+    /// the watermark resolve here, the private tensors hold everything
+    /// after it. The tensor rows under an attached block stay zero and
+    /// unused — accounting (not the f32 arrays) is the modeled resource.
+    attached: Vec<BlockRef>,
+    attached_hi: usize,
     pub len: usize,
     pub s_max: usize,
     /// prompt length; rows `[0, len.min(prompt_len))` have been replayed
-    /// (all of them at construction, except for [`Self::deferred`]
-    /// sessions, which receive the prompt chunk by chunk through
-    /// [`Self::replay_range`])
+    /// (all of them at construction, except for deferred sessions, which
+    /// receive the prompt chunk by chunk through [`Self::replay_range`])
     pub prompt_len: usize,
     pub generated: Vec<usize>,
     /// last prompt token id — the first decode step conditions on this
@@ -40,8 +68,9 @@ pub struct DecodeSession<'a> {
     /// are full precision depends only on a token's absolute position
     /// inside the artifact's full window — NOT on this prompt's total
     /// length — so K/V rows are a pure function of the token-id prefix and
-    /// block-aligned prefixes can be copied between sessions bit for bit
-    /// ([`Self::export_rows`] / [`Self::import_rows`]). Accounting uses
+    /// block-aligned prefixes can be shared between sessions bit for bit
+    /// ([`Self::export_rows`] / [`Self::attach_block`] /
+    /// [`Self::import_rows`]). Accounting uses
     /// [`crate::model::kv_cache_bytes_astra_positional`]. Off (the
     /// default) preserves the classic prompt-scaled partition exactly.
     positional: bool,
@@ -69,77 +98,76 @@ pub fn next_conditioning_token(generated: &[usize], prompt_tail: usize) -> usize
     generated.last().copied().unwrap_or(prompt_tail)
 }
 
+/// Builder for [`DecodeSession`] — the one construction surface (replacing
+/// the old `with_budget` / `deferred` / `deferred_positional` /
+/// `with_budget_positional` constructor sprawl).
+///
+/// Defaults: cache budget `prompt + seq_len` rows, immediate full replay,
+/// classic (prompt-scaled) locality.
+pub struct SessionBuilder<'a, 'p> {
+    cluster: &'a Cluster,
+    prompt: &'p [usize],
+    s_max: Option<usize>,
+    deferred: bool,
+    positional: bool,
+}
+
+impl<'a, 'p> SessionBuilder<'a, 'p> {
+    /// Explicit per-slot cache budget: the session allocates `s_max` KV
+    /// rows and can generate `s_max - prompt.len()` tokens. Continuous-
+    /// batching slots size this to prompt + decode budget so KV-pressure
+    /// admission ([`crate::kv::pool::KvPool`]) sees the true footprint.
+    pub fn budget(mut self, s_max: usize) -> Self {
+        self.s_max = Some(s_max);
+        self
+    }
+
+    /// Defer the prompt replay: the cache is allocated but no rows are
+    /// written until [`DecodeSession::replay_range`] (or an attach/import)
+    /// delivers them. [`DecodeSession::step`] refuses to run until the
+    /// whole prompt is covered.
+    pub fn deferred(mut self) -> Self {
+        self.deferred = true;
+        self
+    }
+
+    /// Positional-locality mode — the prefix-cache serving path (see the
+    /// field doc on [`DecodeSession`]).
+    pub fn positional(mut self) -> Self {
+        self.positional = true;
+        self
+    }
+
+    pub fn build(self) -> Result<DecodeSession<'a>> {
+        let s_max = self
+            .s_max
+            .unwrap_or(self.prompt.len() + self.cluster.artifact.meta.seq_len);
+        let mut sess = DecodeSession::alloc(self.cluster, self.prompt, s_max)?;
+        sess.positional = self.positional;
+        if self.deferred {
+            sess.pending_prompt = self.prompt.to_vec();
+        } else {
+            sess.fill_from_prompt(self.prompt)?;
+        }
+        Ok(sess)
+    }
+}
+
 impl<'a> DecodeSession<'a> {
-    /// Seed the cache from the prompt token ids, replaying the tail
-    /// device's view of the prefill (local rows full precision, remote
-    /// rows dequantized). Decoder artifacts only. Accepts any prompt of
-    /// 1..=seq_len tokens (variable-length serving); the default cache
-    /// budget leaves room for `seq_len` generated tokens.
+    /// Start building a session. Decoder artifacts only; accepts any
+    /// prompt of 1..=seq_len tokens (variable-length serving).
+    pub fn builder<'p>(cluster: &'a Cluster, prompt: &'p [usize]) -> SessionBuilder<'a, 'p> {
+        SessionBuilder { cluster, prompt, s_max: None, deferred: false, positional: false }
+    }
+
+    /// Seed the cache from the prompt token ids with the default budget —
+    /// shorthand for `builder(cluster, prompt).build()`.
     pub fn new(cluster: &'a Cluster, prompt: &[usize]) -> Result<DecodeSession<'a>> {
-        let s_max = prompt.len() + cluster.artifact.meta.seq_len;
-        Self::with_budget(cluster, prompt, s_max)
+        Self::builder(cluster, prompt).build()
     }
 
-    /// `new` with an explicit per-slot cache budget: the session allocates
-    /// `s_max` KV rows and can generate `s_max - prompt.len()` tokens.
-    /// Continuous-batching slots size this to prompt + decode budget so
-    /// KV-pressure admission (`crate::kv::pool::KvPool`) sees the true
-    /// per-slot footprint.
-    pub fn with_budget(
-        cluster: &'a Cluster,
-        prompt: &[usize],
-        s_max: usize,
-    ) -> Result<DecodeSession<'a>> {
-        let mut sess = Self::alloc(cluster, prompt, s_max)?;
-        sess.fill_from_prompt(prompt)?;
-        Ok(sess)
-    }
-
-    /// `with_budget` with the prompt replay *deferred*: the cache is
-    /// allocated but no rows are written until [`Self::replay_range`]
-    /// delivers them chunk by chunk (the live half of the scheduler's
-    /// chunked prefill). [`Self::step`] refuses to run until the whole
-    /// prompt has been replayed.
-    pub fn deferred(
-        cluster: &'a Cluster,
-        prompt: &[usize],
-        s_max: usize,
-    ) -> Result<DecodeSession<'a>> {
-        let mut sess = Self::alloc(cluster, prompt, s_max)?;
-        sess.pending_prompt = prompt.to_vec();
-        Ok(sess)
-    }
-
-    /// [`Self::deferred`] in positional-locality mode — the prefix-cache
-    /// serving path: rows may arrive as imported shared blocks
-    /// ([`Self::import_rows`]) followed by [`Self::replay_range`] chunks
-    /// of the uncovered suffix.
-    pub fn deferred_positional(
-        cluster: &'a Cluster,
-        prompt: &[usize],
-        s_max: usize,
-    ) -> Result<DecodeSession<'a>> {
-        let mut sess = Self::deferred(cluster, prompt, s_max)?;
-        sess.positional = true;
-        Ok(sess)
-    }
-
-    /// [`Self::with_budget`] in positional-locality mode (full replay at
-    /// construction) — the donor side of block sharing, and the reference
-    /// a prefix-attached session must match bit for bit.
-    pub fn with_budget_positional(
-        cluster: &'a Cluster,
-        prompt: &[usize],
-        s_max: usize,
-    ) -> Result<DecodeSession<'a>> {
-        let mut sess = Self::alloc(cluster, prompt, s_max)?;
-        sess.positional = true;
-        sess.fill_from_prompt(prompt)?;
-        Ok(sess)
-    }
-
-    /// Validation + cache allocation shared by the immediate and deferred
-    /// constructors. The returned session holds zero replayed rows.
+    /// Validation + cache allocation shared by every builder path. The
+    /// returned session holds zero replayed rows.
     fn alloc(cluster: &'a Cluster, prompt: &[usize], s_max: usize) -> Result<DecodeSession<'a>> {
         let meta = &cluster.artifact.meta;
         if !meta.causal {
@@ -167,6 +195,8 @@ impl<'a> DecodeSession<'a> {
             cluster,
             k_cache: (0..meta.n_layers).map(|_| Tensor::zeros(&[hh, s_max, dh])).collect(),
             v_cache: (0..meta.n_layers).map(|_| Tensor::zeros(&[hh, s_max, dh])).collect(),
+            attached: Vec::new(),
+            attached_hi: 0,
             len: 0,
             s_max,
             prompt_len: prompt.len(),
@@ -317,73 +347,73 @@ impl<'a> DecodeSession<'a> {
         Ok(())
     }
 
-    /// Generate one token greedily; returns its id.
+    /// Generate one token greedily; returns its id. This is exactly
+    /// [`step_batch`] on a batch of one — the serial anchor and the fused
+    /// path share every instruction.
     pub fn step(&mut self) -> Result<usize> {
-        let meta = &self.cluster.artifact.meta;
-        if self.len < self.prompt_len {
-            bail!(
-                "prompt replay incomplete ({} of {} rows): deliver the remaining chunks first",
-                self.len,
-                self.prompt_len
-            );
-        }
-        if self.len >= self.s_max {
-            bail!("cache full ({} rows)", self.s_max);
-        }
-        let hh = meta.n_heads;
-        let dh = meta.d_model / hh;
-        // embed the most recent token at position len-1's successor; before
-        // any generation this is the prompt's last token, not id 0
-        let last_id = self.conditioning_token();
-        let pos_idx = (self.len).min(meta.seq_len - 1); // clamp learned pos
-        let embed = self.cluster.artifact.tensor("embed")?;
-        let pos = self.cluster.artifact.tensor("pos")?;
-        let mut h = Tensor::zeros(&[1, meta.d_model]);
-        for j in 0..meta.d_model {
-            h.row_mut(0)[j] = embed.row(last_id)[j] + pos.row(pos_idx)[j];
-        }
-        let valid: Vec<f32> = (0..self.s_max)
-            .map(|i| if i < self.len { 1.0 } else { 0.0 })
-            .collect();
-        let valid_t = Tensor::from_vec(&[self.s_max], valid)?;
-
-        for li in 0..meta.n_layers {
-            let blk = &self.cluster.native_blocks[li];
-            let (h_new, k_new, v_new) =
-                native_decode_step(&h, &self.k_cache[li], &self.v_cache[li], &valid_t, blk, hh)?;
-            // append k/v rows at position len
-            for head in 0..hh {
-                for j in 0..dh {
-                    self.k_cache[li].data[(head * self.s_max + self.len) * dh + j] =
-                        k_new.data[head * dh + j];
-                    self.v_cache[li].data[(head * self.s_max + self.len) * dh + j] =
-                        v_new.data[head * dh + j];
-                }
-            }
-            h = h_new;
-        }
-        self.len += 1;
-        let logits = native::lm_head(
-            &h,
-            &self.cluster.artifact.tensor("ln_f.g")?.data,
-            &self.cluster.artifact.tensor("ln_f.b")?.data,
-            self.cluster.artifact.tensor("head.w")?,
-            &self.cluster.artifact.tensor("head.b")?.data,
-        )?;
-        let next = logits
-            .row(0)
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        self.generated.push(next);
-        Ok(next)
+        let mut one = [self];
+        let toks = step_batch(&mut one)?;
+        Ok(toks[0])
     }
 
     /// The token id the next `step()` will embed.
     pub fn conditioning_token(&self) -> usize {
         next_conditioning_token(&self.generated, self.prompt_tail)
+    }
+
+    /// Head dimension from the artifact geometry.
+    fn head_dim(&self) -> usize {
+        let meta = &self.cluster.artifact.meta;
+        meta.d_model / meta.n_heads
+    }
+
+    /// K row slice of `(li, head, i)`: attached arena block below the
+    /// watermark, private tensor above it.
+    #[inline]
+    fn k_row(&self, li: usize, head: usize, i: usize) -> &[f32] {
+        let dh = self.head_dim();
+        if i < self.attached_hi {
+            let blk = self
+                .attached
+                .iter()
+                .find(|b| i >= b.lo && i < b.hi)
+                .expect("attached blocks tile [0, attached_hi)");
+            return blk.k_row(li, head, i, dh);
+        }
+        let off = (head * self.s_max + i) * dh;
+        &self.k_cache[li].data[off..off + dh]
+    }
+
+    /// V row slice of `(li, head, i)` — see [`Self::k_row`].
+    #[inline]
+    fn v_row(&self, li: usize, head: usize, i: usize) -> &[f32] {
+        let dh = self.head_dim();
+        if i < self.attached_hi {
+            let blk = self
+                .attached
+                .iter()
+                .find(|b| i >= b.lo && i < b.hi)
+                .expect("attached blocks tile [0, attached_hi)");
+            return blk.v_row(li, head, i, dh);
+        }
+        let off = (head * self.s_max + i) * dh;
+        &self.v_cache[li].data[off..off + dh]
+    }
+
+    /// Append one generated token's K/V row at position `len` (not yet
+    /// advanced) in every head of layer `li`.
+    fn append_kv_row(&mut self, li: usize, k_new: &[f32], v_new: &[f32]) {
+        let meta = &self.cluster.artifact.meta;
+        let hh = meta.n_heads;
+        let dh = meta.d_model / hh;
+        for head in 0..hh {
+            for j in 0..dh {
+                self.k_cache[li].data[(head * self.s_max + self.len) * dh + j] =
+                    k_new[head * dh + j];
+                self.v_cache[li].data[(head * self.s_max + self.len) * dh + j] =
+                    v_new[head * dh + j];
+            }
+        }
     }
 
     fn accounting_shape(&self) -> crate::model::TransformerShape {
@@ -465,7 +495,9 @@ impl<'a> DecodeSession<'a> {
     /// Copy the K/V rows of cache positions `[lo, hi)` out of every layer
     /// — the contribution of one finished KV block to the shared store.
     /// Returns one `(k_rows, v_rows)` pair per layer, each flattened
-    /// `[heads x (hi - lo) x dh]`.
+    /// `[heads x (hi - lo) x dh]`. Rows below the attached watermark are
+    /// resolved through the shared arena blocks, so an attached session
+    /// exports exactly what it reads.
     pub fn export_rows(&self, lo: usize, hi: usize) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
         if lo >= hi || hi > self.len {
             bail!("export_rows: bad range [{lo}, {hi}) over {} replayed rows", self.len);
@@ -479,10 +511,8 @@ impl<'a> DecodeSession<'a> {
             let mut v = Vec::with_capacity(hh * (hi - lo) * dh);
             for head in 0..hh {
                 for i in lo..hi {
-                    for j in 0..dh {
-                        k.push(self.k_cache[li].data[(head * self.s_max + i) * dh + j]);
-                        v.push(self.v_cache[li].data[(head * self.s_max + i) * dh + j]);
-                    }
+                    k.extend_from_slice(self.k_row(li, head, i));
+                    v.extend_from_slice(self.v_row(li, head, i));
                 }
             }
             out.push((k, v));
@@ -490,8 +520,53 @@ impl<'a> DecodeSession<'a> {
         Ok(out)
     }
 
+    /// Zero-copy attach of a sealed arena block covering `[rows.lo,
+    /// rows.hi)` — the arena-backed replacement for [`Self::import_rows`]:
+    /// the attach is an `Arc` clone, and decode reads the shared rows in
+    /// place. Blocks must arrive contiguously, before any replayed or
+    /// imported rows, and (like imports) only make sense in positional
+    /// mode where rows are a pure function of the token-id prefix.
+    pub fn attach_block(&mut self, rows: BlockRef) -> Result<()> {
+        let meta = &self.cluster.artifact.meta;
+        let (lo, hi) = (rows.lo, rows.hi);
+        if lo != self.len || lo != self.attached_hi {
+            bail!(
+                "attach_block: blocks must be contiguous and precede replayed rows \
+                 (attached to {}, session at {}, got lo={lo})",
+                self.attached_hi,
+                self.len
+            );
+        }
+        if lo >= hi || hi > self.prompt_len {
+            bail!("attach_block: bad range [{lo}, {hi}) for a {}-token prompt", self.prompt_len);
+        }
+        if rows.layers.len() != meta.n_layers {
+            bail!(
+                "attach_block: {} layers of rows for a {}-layer model",
+                rows.layers.len(),
+                meta.n_layers
+            );
+        }
+        let hh = meta.n_heads;
+        let dh = meta.d_model / hh;
+        let want = hh * (hi - lo) * dh;
+        for (li, (k, v)) in rows.layers.iter().enumerate() {
+            if k.len() != want || v.len() != want {
+                bail!("attach_block: layer {li} holds {} floats, expected {want}", k.len());
+            }
+        }
+        self.attached.push(rows);
+        self.attached_hi = hi;
+        self.len = hi;
+        if self.len == self.prompt_len {
+            self.pending_prompt = Vec::new(); // fully covered: nothing left to replay
+        }
+        Ok(())
+    }
+
     /// Write previously exported rows into positions `[lo, hi)` — the
-    /// attach side of prefix sharing. Blocks must arrive contiguously
+    /// row-copying attach path, kept as the comparison anchor for the
+    /// zero-copy [`Self::attach_block`]. Blocks must arrive contiguously
     /// (`lo` equals the rows already present), before any replay of the
     /// suffix. Because positional locality makes the rows a pure function
     /// of the token-id prefix, an import followed by suffix-only
@@ -538,48 +613,147 @@ impl<'a> DecodeSession<'a> {
     }
 }
 
-/// One decode step of one block, mirroring python `decode_step_block`.
-/// Returns (h_out [1, D], k_new [H*dh], v_new [H*dh]).
-fn native_decode_step(
-    h_t: &Tensor,
-    k_cache: &Tensor,
-    v_cache: &Tensor,
-    valid: &Tensor,
-    blk: &BlockWeights,
-    hh: usize,
-) -> Result<(Tensor, Tensor, Tensor)> {
-    let d = h_t.shape[1];
-    let dh = d / hh;
-    let s_max = k_cache.shape[1];
-    let xn = crate::tensor::layer_norm(h_t, &blk.ln1_g, &blk.ln1_b, 1e-5);
-    let mut q = crate::tensor::matmul(&xn, &blk.wq)?;
-    crate::tensor::add_bias(&mut q, &blk.bq);
-    let mut k_t = crate::tensor::matmul(&xn, &blk.wk)?;
-    crate::tensor::add_bias(&mut k_t, &blk.bk);
-    let mut v_t = crate::tensor::matmul(&xn, &blk.wv)?;
-    crate::tensor::add_bias(&mut v_t, &blk.bv);
+/// Advance every session one greedy token through **one fused batched GEMM
+/// per layer**: hidden states are gathered into `[batch, d_model]`, the
+/// layer's LN/QKV/output/MLP operators run once over the batch, attention
+/// is per-slot over each slot's own cache, and the new K/V rows scatter
+/// back into per-slot storage. Returns the generated token ids in session
+/// order.
+///
+/// Bit-identity with the serial path is by construction: every batched
+/// operator is row-independent with a fixed inner accumulation order, and
+/// the per-slot attention walks rows in the same ascending-`i` order the
+/// serial kernel used, so batch row `r` computes exactly what a `[1, D]`
+/// step of session `r` computes.
+pub fn step_batch(sessions: &mut [&mut DecodeSession<'_>]) -> Result<Vec<usize>> {
+    if sessions.is_empty() {
+        return Ok(Vec::new());
+    }
+    let cluster: &Cluster = sessions[0].cluster;
+    for s in sessions.iter() {
+        if !std::ptr::eq(s.cluster, cluster) {
+            bail!("step_batch: sessions span different clusters");
+        }
+        if s.len < s.prompt_len {
+            bail!(
+                "prompt replay incomplete ({} of {} rows): deliver the remaining chunks first",
+                s.len,
+                s.prompt_len
+            );
+        }
+        if s.len >= s.s_max {
+            bail!("cache full ({} rows)", s.s_max);
+        }
+    }
+    let meta = &cluster.artifact.meta;
+    let b = sessions.len();
+    let d = meta.d_model;
+    // gather: embed each slot's conditioning token at its own position
+    let embed = cluster.artifact.tensor("embed")?;
+    let pos = cluster.artifact.tensor("pos")?;
+    let mut h = Tensor::zeros(&[b, d]);
+    for r in 0..b {
+        let s = &*sessions[r];
+        let last_id = s.conditioning_token();
+        let pos_idx = s.len.min(meta.seq_len - 1); // clamp learned pos
+        for j in 0..d {
+            h.row_mut(r)[j] = embed.row(last_id)[j] + pos.row(pos_idx)[j];
+        }
+    }
+    for li in 0..meta.n_layers {
+        let blk = &cluster.native_blocks[li];
+        // one fused GEMM per projection across the whole batch
+        let xn = crate::tensor::layer_norm(&h, &blk.ln1_g, &blk.ln1_b, 1e-5);
+        let mut q = crate::tensor::matmul(&xn, &blk.wq)?;
+        crate::tensor::add_bias(&mut q, &blk.bq);
+        let mut k_t = crate::tensor::matmul(&xn, &blk.wk)?;
+        crate::tensor::add_bias(&mut k_t, &blk.bk);
+        let mut v_t = crate::tensor::matmul(&xn, &blk.wv)?;
+        crate::tensor::add_bias(&mut v_t, &blk.bv);
+        // per-slot attention: reads are slot-private (own cache + attached
+        // arena blocks), arithmetic identical to the serial kernel
+        let mut att_out = Tensor::zeros(&[b, d]);
+        for r in 0..b {
+            let s = &*sessions[r];
+            attend_one(s, li, q.row(r), k_t.row(r), v_t.row(r), att_out.row_mut(r));
+        }
+        let mut h1 = crate::tensor::matmul(&att_out, &blk.wo)?;
+        crate::tensor::add_bias(&mut h1, &blk.bo);
+        crate::tensor::add_inplace(&mut h1, &h);
+        // MLP, fused across the batch
+        let xn2 = crate::tensor::layer_norm(&h1, &blk.ln2_g, &blk.ln2_b, 1e-5);
+        let mut m = crate::tensor::matmul(&xn2, &blk.w1)?;
+        crate::tensor::add_bias(&mut m, &blk.b1);
+        crate::tensor::gelu(&mut m);
+        let mut m2 = crate::tensor::matmul(&m, &blk.w2)?;
+        crate::tensor::add_bias(&mut m2, &blk.b2);
+        crate::tensor::add_inplace(&mut m2, &h1);
+        // scatter: append each slot's new K/V row at its own `len`
+        for r in 0..b {
+            let k_new = k_t.row(r).to_vec();
+            let v_new = v_t.row(r).to_vec();
+            sessions[r].append_kv_row(li, &k_new, &v_new);
+        }
+        h = m2;
+    }
+    let logits = native::lm_head(
+        &h,
+        &cluster.artifact.tensor("ln_f.g")?.data,
+        &cluster.artifact.tensor("ln_f.b")?.data,
+        cluster.artifact.tensor("head.w")?,
+        &cluster.artifact.tensor("head.b")?.data,
+    )?;
+    let mut out = Vec::with_capacity(b);
+    for r in 0..b {
+        let next = logits
+            .row(r)
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        sessions[r].len += 1;
+        sessions[r].generated.push(next);
+        out.push(next);
+    }
+    Ok(out)
+}
 
+/// One slot's attention for one layer, mirroring python `decode_step_block`:
+/// logits over the slot's cached rows (ascending `i`, resolved through
+/// attached arena blocks below the watermark) plus the new token itself,
+/// softmax, weighted value sum into `out[head * dh + j]`.
+///
+/// The old serial kernel masked invalid rows to `-inf`; because valid rows
+/// are always the contiguous prefix `[0, len)`, iterating only them is
+/// bit-identical (`exp(-inf) = 0` contributed exactly `+0.0` to the sum,
+/// and `max(x, -inf) = x`).
+fn attend_one(
+    s: &DecodeSession<'_>,
+    li: usize,
+    q_row: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    out: &mut [f32],
+) {
+    let dh = s.head_dim();
+    let hh = q_row.len() / dh;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut att_out = Tensor::zeros(&[1, d]);
     for head in 0..hh {
-        // logits over cached rows (masked) + the new token itself
-        let qh: Vec<f32> = q.row(0)[head * dh..(head + 1) * dh].to_vec();
-        let mut logits = Vec::with_capacity(s_max + 1);
-        for i in 0..s_max {
-            if valid.data[i] < 0.5 {
-                logits.push(f32::NEG_INFINITY);
-                continue;
-            }
+        let qh = &q_row[head * dh..(head + 1) * dh];
+        let mut logits = Vec::with_capacity(s.len + 1);
+        for i in 0..s.len {
+            let krow = s.k_row(li, head, i);
             let mut acc = 0.0f32;
             for j in 0..dh {
-                acc += qh[j] * k_cache.data[(head * s_max + i) * dh + j];
+                acc += qh[j] * krow[j];
             }
             logits.push(acc * scale);
         }
         // self
         let mut acc = 0.0f32;
         for j in 0..dh {
-            acc += qh[j] * k_t.row(0)[head * dh + j];
+            acc += qh[j] * k_new[head * dh + j];
         }
         logits.push(acc * scale);
         // softmax
@@ -592,35 +766,23 @@ fn native_decode_step(
         // weighted value sum
         for j in 0..dh {
             let mut o = 0.0f32;
-            for i in 0..s_max {
-                if valid.data[i] < 0.5 {
-                    continue;
-                }
-                o += logits[i] * v_cache.data[(head * s_max + i) * dh + j];
+            for i in 0..s.len {
+                o += logits[i] * s.v_row(li, head, i)[j];
             }
-            o += logits[s_max] * v_t.row(0)[head * dh + j];
-            att_out.row_mut(0)[head * dh + j] = o / sum;
+            o += logits[s.len] * v_new[head * dh + j];
+            out[head * dh + j] = o / sum;
         }
     }
-    let mut h1 = crate::tensor::matmul(&att_out, &blk.wo)?;
-    crate::tensor::add_bias(&mut h1, &blk.bo);
-    crate::tensor::add_inplace(&mut h1, h_t);
-    // MLP
-    let xn2 = crate::tensor::layer_norm(&h1, &blk.ln2_g, &blk.ln2_b, 1e-5);
-    let mut m = crate::tensor::matmul(&xn2, &blk.w1)?;
-    crate::tensor::add_bias(&mut m, &blk.b1);
-    crate::tensor::gelu(&mut m);
-    let mut m2 = crate::tensor::matmul(&m, &blk.w2)?;
-    crate::tensor::add_bias(&mut m2, &blk.b2);
-    crate::tensor::add_inplace(&mut m2, &h1);
-    Ok((m2, k_t, v_t))
 }
 
 #[cfg(test)]
 mod tests {
-    use super::{next_conditioning_token, prompt_partition, DecodeSession};
+    use std::sync::Arc;
+
+    use super::{next_conditioning_token, prompt_partition, step_batch, DecodeSession};
     use crate::config::RunConfig;
     use crate::coordinator::{Cluster, TokenPartition};
+    use crate::kv::arena::{BlockRows, KvArena};
     use crate::model::shape::VqSetting;
     use crate::model::TransformerShape;
 
@@ -672,7 +834,7 @@ mod tests {
         let cluster = tiny_cluster();
         let err = DecodeSession::new(&cluster, &[]).err().expect("empty prompt must fail");
         assert!(err.to_string().contains("non-empty"), "{err}");
-        assert!(DecodeSession::with_budget(&cluster, &[], 8).is_err());
+        assert!(DecodeSession::builder(&cluster, &[]).budget(8).build().is_err());
         // one token is the minimum viable prompt
         assert!(DecodeSession::new(&cluster, &[3]).is_ok());
     }
@@ -707,8 +869,9 @@ mod tests {
         let cluster = tiny_cluster();
         let vocab = cluster.artifact.meta.vocab_size;
         let prompt: Vec<usize> = (0..13).map(|i| (i * 7 + 2) % vocab).collect();
-        let mut full = DecodeSession::with_budget(&cluster, &prompt, 13 + 4).unwrap();
-        let mut chunked = DecodeSession::deferred(&cluster, &prompt, 13 + 4).unwrap();
+        let mut full = DecodeSession::builder(&cluster, &prompt).budget(13 + 4).build().unwrap();
+        let mut chunked =
+            DecodeSession::builder(&cluster, &prompt).deferred().budget(13 + 4).build().unwrap();
         // decode refuses to run mid-replay
         assert!(chunked.step().is_err());
         assert_eq!(chunked.cache_bytes_mixed(), 0);
@@ -731,14 +894,15 @@ mod tests {
         let cluster = tiny_cluster();
         let vocab = cluster.artifact.meta.vocab_size;
         let prompt = [1usize, 2, 3, 4, 5, 6];
-        let mut sess = DecodeSession::deferred(&cluster, &prompt, 12).unwrap();
+        let mut sess =
+            DecodeSession::builder(&cluster, &prompt).deferred().budget(12).build().unwrap();
         assert!(sess.replay_range(2, 4).is_err(), "must start at 0");
         assert!(sess.replay_range(0, 0).is_err(), "empty chunk");
         assert!(sess.replay_range(0, 7).is_err(), "past the prompt");
         sess.replay_range(0, 3).unwrap();
         assert!(sess.replay_range(0, 4).is_err(), "must resume at row 3");
         // partial occupancy: fewer bytes than a fully replayed session
-        let full = DecodeSession::with_budget(&cluster, &prompt, 12).unwrap();
+        let full = DecodeSession::builder(&cluster, &prompt).budget(12).build().unwrap();
         assert!(sess.cache_bytes_mixed() < full.cache_bytes_mixed());
         sess.replay_range(3, 6).unwrap();
         // replay complete: buffers freed, further chunks rejected
@@ -757,8 +921,14 @@ mod tests {
         let vocab = cluster.artifact.meta.vocab_size;
         let prompt: Vec<usize> = (0..13).map(|i| (i * 7 + 2) % vocab).collect();
         let block = 4usize; // 3 full blocks cover [0, 12); token 12 is the suffix
-        let mut donor = DecodeSession::with_budget_positional(&cluster, &prompt, 13 + 4).unwrap();
-        let mut attached = DecodeSession::deferred_positional(&cluster, &prompt, 13 + 4).unwrap();
+        let mut donor =
+            DecodeSession::builder(&cluster, &prompt).positional().budget(13 + 4).build().unwrap();
+        let mut attached = DecodeSession::builder(&cluster, &prompt)
+            .deferred()
+            .positional()
+            .budget(13 + 4)
+            .build()
+            .unwrap();
         assert!(attached.step().is_err(), "no decode before the prompt is complete");
         for k in 0..3 {
             let rows = donor.export_rows(k * block, (k + 1) * block).unwrap();
@@ -789,8 +959,8 @@ mod tests {
         let vocab = cluster.artifact.meta.vocab_size;
         let long: Vec<usize> = (0..12).map(|i| (i * 5 + 3) % vocab).collect();
         let short = long[..8].to_vec();
-        let a = DecodeSession::with_budget_positional(&cluster, &long, 16).unwrap();
-        let b = DecodeSession::with_budget_positional(&cluster, &short, 16).unwrap();
+        let a = DecodeSession::builder(&cluster, &long).positional().budget(16).build().unwrap();
+        let b = DecodeSession::builder(&cluster, &short).positional().budget(16).build().unwrap();
         let ra = a.export_rows(0, 8).unwrap();
         let rb = b.export_rows(0, 8).unwrap();
         assert_eq!(ra, rb, "shared 8-token prefix must yield identical rows");
@@ -812,9 +982,15 @@ mod tests {
     fn import_rows_enforces_contiguity_shape_and_bounds() {
         let cluster = tiny_cluster();
         let prompt = [1usize, 2, 3, 4, 5, 6, 7, 8];
-        let donor = DecodeSession::with_budget_positional(&cluster, &prompt, 12).unwrap();
+        let donor =
+            DecodeSession::builder(&cluster, &prompt).positional().budget(12).build().unwrap();
         let rows = donor.export_rows(0, 4).unwrap();
-        let mut sess = DecodeSession::deferred_positional(&cluster, &prompt, 12).unwrap();
+        let mut sess = DecodeSession::builder(&cluster, &prompt)
+            .deferred()
+            .positional()
+            .budget(12)
+            .build()
+            .unwrap();
         assert!(sess.import_rows(4, 8, &donor.export_rows(4, 8).unwrap()).is_err(), "gap");
         assert!(sess.import_rows(0, 0, &rows).is_err(), "empty");
         assert!(sess.import_rows(0, 9, &rows).is_err(), "past the prompt");
@@ -835,15 +1011,214 @@ mod tests {
         let cluster = tiny_cluster();
         let prompt = [1usize, 2, 3, 4, 5];
         // budget must at least hold the prompt
-        assert!(DecodeSession::with_budget(&cluster, &prompt, 4).is_err());
-        let mut sess = DecodeSession::with_budget(&cluster, &prompt, 7).unwrap();
+        assert!(DecodeSession::builder(&cluster, &prompt).budget(4).build().is_err());
+        let mut sess = DecodeSession::builder(&cluster, &prompt).budget(7).build().unwrap();
         sess.step().unwrap();
         sess.step().unwrap();
         let err = sess.step().expect_err("cache must be full at s_max");
         assert!(err.to_string().contains("cache full"), "{err}");
         // budget accounting: current occupancy grows toward the ceiling
         assert!(sess.cache_bytes_mixed() <= sess.cache_bytes_budget());
-        let fresh = DecodeSession::with_budget(&cluster, &prompt, 7).unwrap();
+        let fresh = DecodeSession::builder(&cluster, &prompt).budget(7).build().unwrap();
         assert!(fresh.cache_bytes_mixed() < sess.cache_bytes_mixed());
+    }
+
+    #[test]
+    fn batched_decode_matches_serial_decode_bit_for_bit() {
+        // the tentpole's correctness anchor: for every batch size 1..=8,
+        // over mixed prompt lengths, with one arena-attached (prefix-hit)
+        // slot in the mix and a mid-batch eviction, the fused batched step
+        // must produce the same tokens AND the same raw cache floats as
+        // stepping each session alone.
+        let cluster = tiny_cluster();
+        let meta = &cluster.artifact.meta;
+        let vocab = meta.vocab_size;
+        let (hh, dh) = (meta.n_heads, meta.d_model / meta.n_heads);
+        for b in 1usize..=8 {
+            let prompts: Vec<Vec<usize>> = (0..b)
+                .map(|r| {
+                    let plen = 1 + (r * 3 + b) % 12;
+                    (0..plen).map(|i| (i * 7 + r * 5 + 2) % vocab).collect()
+                })
+                .collect();
+            // `make` captures `&cluster`, so both worlds borrow one cluster
+            let make = |r: usize, p: &[usize]| {
+                if r == 1 {
+                    // a prefix-hit slot: its whole prompt arrives as one
+                    // sealed arena block from a donor session
+                    let donor = DecodeSession::builder(&cluster, p)
+                        .positional()
+                        .budget(p.len() + 6)
+                        .build()
+                        .unwrap();
+                    let rows =
+                        BlockRows::new(0, p.len(), donor.export_rows(0, p.len()).unwrap(), hh, dh)
+                            .unwrap();
+                    let mut s = DecodeSession::builder(&cluster, p)
+                        .deferred()
+                        .positional()
+                        .budget(p.len() + 6)
+                        .build()
+                        .unwrap();
+                    s.attach_block(Arc::new(rows)).unwrap();
+                    s
+                } else {
+                    DecodeSession::builder(&cluster, p).budget(p.len() + 6).build().unwrap()
+                }
+            };
+            let mut serial: Vec<DecodeSession<'_>> =
+                prompts.iter().enumerate().map(|(r, p)| make(r, p)).collect();
+            let mut batched: Vec<DecodeSession<'_>> =
+                prompts.iter().enumerate().map(|(r, p)| make(r, p)).collect();
+            for round in 0..3 {
+                let serial_toks: Vec<usize> =
+                    serial.iter_mut().map(|s| s.step().unwrap()).collect();
+                let mut refs: Vec<&mut DecodeSession<'_>> = batched.iter_mut().collect();
+                let batched_toks = step_batch(&mut refs).unwrap();
+                assert_eq!(serial_toks, batched_toks, "b={b} round={round}");
+                if round == 0 && b > 2 {
+                    // mid-batch eviction: a middle slot leaves both worlds
+                    serial.remove(b / 2);
+                    batched.remove(b / 2);
+                }
+            }
+            for (s, bt) in serial.iter().zip(batched.iter()) {
+                assert_eq!(s.len, bt.len, "b={b}");
+                assert_eq!(s.generated, bt.generated, "b={b}");
+                assert_eq!(
+                    s.export_rows(0, s.len).unwrap(),
+                    bt.export_rows(0, bt.len).unwrap(),
+                    "raw cache floats diverged at b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arena_attach_is_bit_identical_to_row_copy_import() {
+        // zero-copy attach vs the old copying import: same tokens, same
+        // raw cache floats (export resolves attached rows through the
+        // arena, imported rows through the private tensor)
+        let cluster = tiny_cluster();
+        let meta = &cluster.artifact.meta;
+        let vocab = meta.vocab_size;
+        let (hh, dh) = (meta.n_heads, meta.d_model / meta.n_heads);
+        let prompt: Vec<usize> = (0..13).map(|i| (i * 7 + 2) % vocab).collect();
+        let block = 4usize;
+        let donor =
+            DecodeSession::builder(&cluster, &prompt).positional().budget(13 + 4).build().unwrap();
+        let mut imported = DecodeSession::builder(&cluster, &prompt)
+            .deferred()
+            .positional()
+            .budget(13 + 4)
+            .build()
+            .unwrap();
+        let mut attached = DecodeSession::builder(&cluster, &prompt)
+            .deferred()
+            .positional()
+            .budget(13 + 4)
+            .build()
+            .unwrap();
+        for k in 0..3 {
+            let rows = donor.export_rows(k * block, (k + 1) * block).unwrap();
+            imported.import_rows(k * block, (k + 1) * block, &rows).unwrap();
+            let sealed = BlockRows::new(k * block, (k + 1) * block, rows, hh, dh).unwrap();
+            attached.attach_block(Arc::new(sealed)).unwrap();
+        }
+        attached.replay_range(12, 13).unwrap();
+        imported.replay_range(12, 13).unwrap();
+        assert_eq!(attached.cache_bytes_mixed(), imported.cache_bytes_mixed());
+        let a: Vec<usize> = (0..4).map(|_| attached.step().unwrap()).collect();
+        let i: Vec<usize> = (0..4).map(|_| imported.step().unwrap()).collect();
+        assert_eq!(a, i, "attach diverged from import");
+        assert_eq!(
+            attached.export_rows(0, attached.len).unwrap(),
+            imported.export_rows(0, imported.len).unwrap(),
+            "raw cache floats diverged between attach and import"
+        );
+    }
+
+    #[test]
+    fn attached_block_survives_creator_drop() {
+        // aliasing: the arena entry is refcounted, so dropping the creator
+        // session — and even evicting the block from the arena — must not
+        // invalidate sessions that already attached it
+        let cluster = tiny_cluster();
+        let meta = &cluster.artifact.meta;
+        let vocab = meta.vocab_size;
+        let (hh, dh) = (meta.n_heads, meta.d_model / meta.n_heads);
+        let prompt: Vec<usize> = (0..12).map(|i| (i * 5 + 3) % vocab).collect();
+        let mut arena = KvArena::new();
+        {
+            let donor = DecodeSession::builder(&cluster, &prompt)
+                .positional()
+                .budget(16)
+                .build()
+                .unwrap();
+            for k in 0..3u64 {
+                let (lo, hi) = (k as usize * 4, k as usize * 4 + 4);
+                let rows =
+                    BlockRows::new(lo, hi, donor.export_rows(lo, hi).unwrap(), hh, dh).unwrap();
+                arena.insert(k, 100, rows);
+            }
+        } // donor dropped here
+        let mut attached = DecodeSession::builder(&cluster, &prompt)
+            .deferred()
+            .positional()
+            .budget(16)
+            .build()
+            .unwrap();
+        for k in 0..3u64 {
+            attached.attach_block(arena.attach(k).unwrap()).unwrap();
+        }
+        // even the arena's own references can go away mid-flight
+        for k in 0..3u64 {
+            arena.remove(k);
+        }
+        let mut control =
+            DecodeSession::builder(&cluster, &prompt).positional().budget(16).build().unwrap();
+        let a: Vec<usize> = (0..4).map(|_| attached.step().unwrap()).collect();
+        let c: Vec<usize> = (0..4).map(|_| control.step().unwrap()).collect();
+        assert_eq!(a, c, "attached session diverged after creator drop");
+        assert_eq!(
+            attached.export_rows(0, attached.len).unwrap(),
+            control.export_rows(0, control.len).unwrap()
+        );
+    }
+
+    #[test]
+    fn attach_block_enforces_contiguity_and_geometry() {
+        let cluster = tiny_cluster();
+        let meta = &cluster.artifact.meta;
+        let vocab = meta.vocab_size;
+        let (hh, dh) = (meta.n_heads, meta.d_model / meta.n_heads);
+        let prompt: Vec<usize> = (0..8).map(|i| (i * 5 + 3) % vocab).collect();
+        let donor =
+            DecodeSession::builder(&cluster, &prompt).positional().budget(12).build().unwrap();
+        let seal = |lo: usize, hi: usize| {
+            Arc::new(BlockRows::new(lo, hi, donor.export_rows(lo, hi).unwrap(), hh, dh).unwrap())
+        };
+        let mut sess = DecodeSession::builder(&cluster, &prompt)
+            .deferred()
+            .positional()
+            .budget(12)
+            .build()
+            .unwrap();
+        assert!(sess.attach_block(seal(4, 8)).is_err(), "gap");
+        // wrong layer count is rejected
+        let skinny = Arc::new(BlockRows {
+            lo: 0,
+            hi: 4,
+            layers: vec![(vec![0.0; hh * 4 * dh], vec![0.0; hh * 4 * dh])],
+        });
+        assert!(sess.attach_block(skinny).is_err(), "layer count");
+        sess.attach_block(seal(0, 4)).unwrap();
+        assert_eq!(sess.len, 4);
+        // after a replayed row, further attaches are refused (blocks must
+        // precede private rows so reads below the watermark stay arena-only)
+        sess.replay_range(4, 6).unwrap();
+        assert!(sess.attach_block(seal(6, 8)).is_err(), "attach after replay");
+        sess.replay_range(6, 8).unwrap();
+        assert!(sess.step().is_ok());
     }
 }

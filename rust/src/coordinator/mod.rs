@@ -21,4 +21,5 @@ pub mod decode;
 pub mod partition;
 
 pub use cluster::{Cluster, ComputeBackend, PrefillOutput, PrefillReport};
+pub use decode::{step_batch, DecodeSession, SessionBuilder};
 pub use partition::TokenPartition;

@@ -1,0 +1,183 @@
+//! Arena-backed storage for sealed KV blocks.
+//!
+//! A sealed block's rows are exported once from the creating
+//! [`crate::coordinator::decode::DecodeSession`] into an immutable
+//! [`BlockRows`] arena entry; every later attach is an `Arc` clone
+//! ([`BlockRef`]) instead of the old `export_rows`/`import_rows` row copy.
+//! Because the entry is refcounted, dropping the creator session (or even
+//! evicting the block from the arena) never invalidates sessions that
+//! already attached it.
+//!
+//! ## Layout contract with [`crate::kv::pool`]
+//!
+//! The pool accounts blocks as `[lo, hi)` token ranges; the arena stores the
+//! matching rows per layer in the same head-major order a session's cache
+//! tensor uses, so reads are stride-compatible with the private cache:
+//!
+//! ```text
+//! layers[li].0  (K) and .1 (V):  index = (head * (hi - lo) + (i - lo)) * d_head + j
+//! ```
+//!
+//! i.e. exactly [`crate::coordinator::decode::DecodeSession::export_rows`]'s
+//! flattening. Decode attention resolves rows `i < attached_hi` through the
+//! attached blocks and everything later through the session's own tensor,
+//! in ascending-`i` order either way, which is what keeps arena attach
+//! bit-identical to row-copy import.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// Immutable rows of one sealed block: per-layer `(k, v)` in the head-major
+/// flattening documented at module level.
+#[derive(Debug)]
+pub struct BlockRows {
+    /// First token row covered (inclusive).
+    pub lo: usize,
+    /// One past the last token row covered.
+    pub hi: usize,
+    /// Per-layer `(k, v)` row data.
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl BlockRows {
+    /// Validate the flattening against the model geometry.
+    pub fn new(
+        lo: usize,
+        hi: usize,
+        layers: Vec<(Vec<f32>, Vec<f32>)>,
+        n_heads: usize,
+        d_head: usize,
+    ) -> Result<BlockRows> {
+        if hi <= lo {
+            bail!("block rows [{lo}, {hi}) are empty");
+        }
+        let want = n_heads * (hi - lo) * d_head;
+        for (li, (k, v)) in layers.iter().enumerate() {
+            if k.len() != want || v.len() != want {
+                bail!(
+                    "layer {li} block rows have {}/{} floats, expected {want}",
+                    k.len(),
+                    v.len()
+                );
+            }
+        }
+        Ok(BlockRows { lo, hi, layers })
+    }
+
+    /// Token rows covered.
+    pub fn rows(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// K row slice for `(li, head, i)` (absolute token index).
+    #[inline]
+    pub fn k_row(&self, li: usize, head: usize, i: usize, d_head: usize) -> &[f32] {
+        let off = (head * self.rows() + (i - self.lo)) * d_head;
+        &self.layers[li].0[off..off + d_head]
+    }
+
+    /// V row slice for `(li, head, i)` (absolute token index).
+    #[inline]
+    pub fn v_row(&self, li: usize, head: usize, i: usize, d_head: usize) -> &[f32] {
+        let off = (head * self.rows() + (i - self.lo)) * d_head;
+        &self.layers[li].1[off..off + d_head]
+    }
+}
+
+/// Shared handle to a sealed block's rows. Cloning is the whole attach.
+pub type BlockRef = Arc<BlockRows>;
+
+/// The arena: sealed blocks by pool block id, with byte accounting that
+/// mirrors what [`crate::kv::pool::KvPool`] charged for each block.
+#[derive(Debug, Default)]
+pub struct KvArena {
+    entries: BTreeMap<u64, (usize, BlockRef)>,
+    bytes: usize,
+}
+
+impl KvArena {
+    pub fn new() -> KvArena {
+        KvArena::default()
+    }
+
+    /// Seal `rows` under `block`, accounted at `bytes` (the pool's modeled
+    /// mixed-precision charge, not the f32 arena footprint).
+    pub fn insert(&mut self, block: u64, bytes: usize, rows: BlockRows) -> BlockRef {
+        let rf: BlockRef = Arc::new(rows);
+        if let Some((old, _)) = self.entries.insert(block, (bytes, rf.clone())) {
+            self.bytes -= old;
+        }
+        self.bytes += bytes;
+        rf
+    }
+
+    /// Zero-copy attach: an `Arc` clone of the sealed rows.
+    pub fn attach(&self, block: u64) -> Option<BlockRef> {
+        self.entries.get(&block).map(|(_, rf)| rf.clone())
+    }
+
+    /// Drop the arena's own reference; returns the accounted bytes.
+    /// Outstanding [`BlockRef`]s keep the rows alive.
+    pub fn remove(&mut self, block: u64) -> Option<usize> {
+        let (bytes, _) = self.entries.remove(&block)?;
+        self.bytes -= bytes;
+        Some(bytes)
+    }
+
+    /// Total accounted bytes of resident blocks.
+    pub fn total_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Number of resident blocks.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(lo: usize, hi: usize, layers: usize, hh: usize, dh: usize, fill: f32) -> BlockRows {
+        let n = hh * (hi - lo) * dh;
+        let layers = (0..layers).map(|_| (vec![fill; n], vec![-fill; n])).collect();
+        BlockRows::new(lo, hi, layers, hh, dh).unwrap()
+    }
+
+    #[test]
+    fn attach_is_refcounted_and_survives_removal() {
+        let mut arena = KvArena::new();
+        arena.insert(7, 100, rows(0, 4, 2, 2, 8, 1.5));
+        let rf = arena.attach(7).unwrap();
+        assert_eq!(arena.total_bytes(), 100);
+        assert_eq!(arena.remove(7), Some(100));
+        assert_eq!(arena.total_bytes(), 0);
+        assert!(arena.attach(7).is_none());
+        // the outstanding ref still reads the sealed rows
+        assert_eq!(rf.k_row(1, 1, 3, 8)[0], 1.5);
+        assert_eq!(rf.v_row(0, 0, 0, 8)[7], -1.5);
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_flattenings() {
+        assert!(BlockRows::new(2, 2, vec![], 2, 8).is_err());
+        let bad = vec![(vec![0.0; 3], vec![0.0; 3])];
+        assert!(BlockRows::new(0, 4, bad, 2, 8).is_err());
+    }
+
+    #[test]
+    fn reinserting_a_block_id_replaces_its_accounting() {
+        let mut arena = KvArena::new();
+        arena.insert(1, 60, rows(0, 2, 1, 2, 4, 0.0));
+        arena.insert(1, 80, rows(0, 2, 1, 2, 4, 0.0));
+        assert_eq!(arena.total_bytes(), 80);
+        assert_eq!(arena.len(), 1);
+    }
+}

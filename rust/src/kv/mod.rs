@@ -26,13 +26,18 @@
 //! [`crate::coordinator::decode::DecodeSession`]: in positional-locality
 //! mode the mixed-precision row selection depends only on a token's
 //! absolute position (not the prompt's total length), so a block's K/V
-//! rows are a pure function of the token-id prefix and can be copied
-//! between sessions bit for bit.
+//! rows are a pure function of the token-id prefix and can be shared
+//! between sessions bit for bit. The *storage* for shared blocks is
+//! [`arena`]: sealed rows are exported once into a refcounted
+//! [`arena::BlockRows`] entry and every attach is a zero-copy
+//! [`arena::BlockRef`] clone.
 
+pub mod arena;
 pub mod pool;
 pub mod prefix;
 pub mod swap;
 
+pub use arena::{BlockRef, BlockRows, KvArena};
 pub use pool::KvPool;
 pub use prefix::RadixTree;
 pub use swap::SwapPolicy;

@@ -22,6 +22,13 @@
 //! creator slot; bytes counted in the creator's private share) and marked
 //! ready once the rows exist — only ready blocks are attachable, and an
 //! unready block whose creator is evicted is dropped, never cached.
+//!
+//! The pool tracks *accounting* only; the rows themselves live in
+//! [`crate::kv::arena::KvArena`] under the matching block id, laid out per
+//! layer as `(head * block_tokens + (i - lo)) * d_head + j` — the same
+//! flattening `DecodeSession::export_rows` produces. Live attach hands a
+//! refcounted arena view straight to the session (no row copies); the
+//! pool's lo/hi/bytes stay the single source of truth for what fits.
 
 use std::collections::BTreeMap;
 

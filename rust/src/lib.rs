@@ -117,6 +117,45 @@
 //!
 //! The crate is dependency-light by necessity (offline image): JSON, CLI
 //! parsing, PRNG, and the bench harness live in [`util`].
+//!
+//! # Execution model: batch-fused live decode
+//!
+//! Live decode advances every in-flight slot through **one fused batched
+//! GEMM per layer per scheduler iteration**. The backend boundary is
+//! [`server::scheduler::DecodeBackend::step`], which receives a
+//! [`server::scheduler::StepBatch`] naming the iteration's planned
+//! prefill chunks and decoding slots; the live backend then:
+//!
+//! 1. **replays prefill chunks in parallel** — each chunk targets a
+//!    distinct session, so the replays fan out across
+//!    `std::thread::scope` threads with disjoint `&mut` borrows;
+//! 2. **gathers** each decoding slot's embedded last token into one
+//!    `[batch, d_model]` activation matrix
+//!    ([`coordinator::decode::step_batch`]);
+//! 3. runs the **per-layer batched GEMMs** — LN, Q/K/V projections, the
+//!    output projection, and the FFN all operate on the whole batch in a
+//!    single [`tensor::matmul`] per weight — while attention stays
+//!    per-slot (each row attends over its own KV cache);
+//! 4. **scatters** the new K/V rows back into each slot's cache and takes
+//!    the per-row argmax through a batched LM head.
+//!
+//! Every kernel involved is row-independent with a fixed inner
+//! accumulation order, so the fused path is **bit-identical** to stepping
+//! each session alone — `DecodeSession::step` is literally the batch-1
+//! case, `CbConfig::serial_decode` forces one-session-at-a-time execution
+//! for benchmarking, and `tests/live_vs_model.rs` pins batched == serial
+//! differentially.
+//!
+//! Shared prompt prefixes never copy floats: sealed block rows are
+//! exported once into the refcounted [`kv::arena::KvArena`], whose
+//! flattened row layout (`(head, token, d_head)`, token rows relative to
+//! the block's `lo`) is exactly the
+//! [`coordinator::decode::DecodeSession::export_rows`] form priced by
+//! [`kv::pool::KvPool`]'s Appendix-G block bytes — an attach is an `Arc`
+//! clone ([`coordinator::decode::DecodeSession::attach_block`]), reads
+//! resolve through the block for rows below the attached prefix and
+//! through the session's private tensor above it, and an attached block
+//! outlives both its creator session and its arena entry.
 
 pub mod comm;
 pub mod config;
@@ -133,3 +172,17 @@ pub mod vq;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// One-stop import surface for driving the serving stack: the cluster and
+/// its sessions, the batch-first backend API, and the KV arena types that
+/// cross the backend boundary.
+pub mod prelude {
+    pub use crate::coordinator::{step_batch, Cluster, DecodeSession, SessionBuilder};
+    pub use crate::kv::{BlockRef, BlockRows, KvArena, KvPool};
+    pub use crate::server::{
+        serve_live, AdmitBatch, AdmitEntry, CbConfig, CbEngine, CbEvent, CbReport, ChunkPlan,
+        ClusterEngine, DecodeBackend, LiveBackend, LiveReport, ModelBackend, PrefixAttach,
+        Request, StepBatch,
+    };
+    pub use crate::Result;
+}

@@ -13,6 +13,9 @@ use anyhow::{bail, Context, Result};
 use crate::tensor::Tensor;
 
 use super::artifact::{Artifact, GraphSpec};
+// The image-vendored `xla` bindings are absent from this build; the in-repo
+// stub keeps the same API and fails cleanly at `PjRtClient::cpu()`.
+use super::xla;
 
 fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(&t.data);

@@ -9,6 +9,7 @@
 
 pub mod artifact;
 pub mod executor;
+pub(crate) mod xla;
 
 pub use artifact::{Artifact, GraphSpec, TensorSpec};
 pub use executor::{Executor, ModelRuntime};

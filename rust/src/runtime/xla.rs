@@ -1,0 +1,137 @@
+//! Minimal in-repo stand-in for the `xla` (xla_extension) bindings.
+//!
+//! The original paper image vendored a PJRT-backed `xla` crate; this build
+//! container does not ship it, and the crate cannot be added offline. The
+//! executor only ever reaches these types after [`PjRtClient::cpu`] succeeds,
+//! so the stub keeps the exact API surface `runtime/executor.rs` compiles
+//! against and fails cleanly at client creation. Everything here is plain
+//! data (`Send + Sync`), which also lets `&Cluster` cross scoped-thread
+//! boundaries in the live decode path.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type mirroring the binding crate's; converts into `anyhow::Error`
+/// through `std::error::Error`.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl XlaError {
+    fn unavailable() -> Self {
+        XlaError("PJRT runtime unavailable: the xla crate is not vendored in this build".into())
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Element types the executor distinguishes on output literals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+/// Host-side literal (dense array) handle.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn ty(&self) -> Result<ElementType, XlaError> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Array shape (dims only; the executor reads dims as usizes).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Computation wrapper handed to `PjRtClient::compile`.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. `cpu()` is the single gate: with the bindings
+/// absent it returns an error, so no downstream stub method ever runs.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}

@@ -242,6 +242,8 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         decode_jitter: args.usize_or("decode-jitter", 0)?,
         prompt_groups: args.usize_or("prompt-groups", 0)?,
         checkpoint_every: args.usize_or("checkpoint-every", 0)?,
+        serial_decode: args.flag("serial-decode"),
+        copy_engine: args.flag("copy-engine"),
         seed,
         prompt_vocab: 256,
         policy,
@@ -385,6 +387,8 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         decode_jitter: args.usize_or("decode-jitter", 0)?,
         prompt_groups: args.usize_or("prompt-groups", 0)?,
         checkpoint_every: args.usize_or("checkpoint-every", 0)?,
+        serial_decode: args.flag("serial-decode"),
+        copy_engine: args.flag("copy-engine"),
         policy,
         classes,
         age_bound_s,

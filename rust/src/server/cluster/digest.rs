@@ -16,8 +16,7 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use super::super::live::prompt_stream_key;
-use super::super::scheduler::{DecodeBackend, PrefixAttach};
-use crate::server::batcher::Request;
+use super::super::scheduler::{AdmitBatch, DecodeBackend, StepBatch};
 
 /// Per-replica mirror of the shared-block spans the replica's engine has
 /// registered, keyed by prompt stream (the same `prompt_stream_key` the
@@ -97,23 +96,12 @@ pub(crate) struct DigestTap<'a, B: DecodeBackend + ?Sized> {
 }
 
 impl<B: DecodeBackend + ?Sized> DecodeBackend for DigestTap<'_, B> {
-    fn admit(
-        &mut self,
-        batch: &[Request],
-        decode_budgets: &[usize],
-        classes: &[usize],
-        prefill_limit: usize,
-        prefixes: &[PrefixAttach],
-    ) -> Result<()> {
-        self.inner.admit(batch, decode_budgets, classes, prefill_limit, prefixes)
+    fn admit(&mut self, batch: &AdmitBatch) -> Result<()> {
+        self.inner.admit(batch)
     }
 
-    fn prefill_chunk(&mut self, id: u64, lo: usize, hi: usize) -> Result<()> {
-        self.inner.prefill_chunk(id, lo, hi)
-    }
-
-    fn step(&mut self, ids: &[u64]) -> Result<()> {
-        self.inner.step(ids)
+    fn step(&mut self, batch: &StepBatch) -> Result<()> {
+        self.inner.step(batch)
     }
 
     fn complete(&mut self, id: u64) -> Result<()> {

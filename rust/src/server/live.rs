@@ -5,15 +5,25 @@
 //! every scheduling decision — admission order, batch composition, KV
 //! admission, eviction. This module plugs a [`LiveBackend`] into that loop
 //! so each decision executes for real: an admission replays the request's
-//! variable-length prompt into a fresh mixed-precision KV cache
-//! ([`DecodeSession::with_budget`], sized prompt + decode budget) — or,
-//! under chunked prefill, opens a deferred session and replays only the
-//! admission chunk, the rest arriving chunk by chunk through
-//! [`DecodeSession::replay_range`] as the scheduler fuses it into decode
-//! iterations — a batched decode step greedily generates one token per
-//! in-flight slot, and an eviction drops the session for later recompute.
-//! Per-request latency comes from the shared virtual clock; real generated
-//! tokens and measured host compute come from the sessions.
+//! variable-length prompt into a fresh mixed-precision KV cache (built
+//! through [`SessionBuilder`](crate::coordinator::SessionBuilder), sized
+//! prompt + decode budget) — or, under chunked prefill, opens a deferred
+//! session and replays only the admission chunk, the rest arriving chunk
+//! by chunk as the scheduler fuses it into decode iterations — and an
+//! eviction drops the session for later recompute. Per-request latency
+//! comes from the shared virtual clock; real generated tokens and measured
+//! host compute come from the sessions.
+//!
+//! Execution crosses the backend boundary once per scheduler iteration:
+//! [`DecodeBackend::step`] receives a [`StepBatch`] naming the planned
+//! prefill chunks *and* the decoding slots. Chunk replays fan out across
+//! `std::thread::scope` threads (each chunk owns a distinct session, so
+//! the `&mut` borrows are disjoint), and all decoding slots advance
+//! together through [`step_batch`] — one fused batched GEMM per layer
+//! across the whole batch, bit-identical per row to stepping each session
+//! alone. `CbConfig::serial_decode` is the escape hatch: the same batch
+//! executes one session at a time through the single-session kernels,
+//! anchoring the tokens/sec benchmarks in `live_bench`.
 //!
 //! Because the decisions are made by the shared loop, a live run and a
 //! [`ModelBackend`](super::scheduler::ModelBackend) run over the same
@@ -24,34 +34,35 @@
 //!
 //! # Prefix sharing and swap, live
 //!
-//! Under `CbConfig::prefix_cache` the backend keeps a *block store*: when
+//! Under `CbConfig::prefix_cache` the backend keeps a [`KvArena`]: when
 //! the scheduler marks a slot's prompt block ready
-//! ([`DecodeBackend::register_block`]) the real K/V rows are copied out of
-//! the session, so they outlive it; an admission carrying a
-//! [`PrefixAttach`](super::scheduler::PrefixAttach) imports those rows
-//! into a fresh positional-locality session
-//! ([`DecodeSession::import_rows`]) and replays only the uncovered suffix
-//! — bit-identical to a full replay, so generations are independent of
-//! sharing. [`DecodeBackend::swap_out`] moves a whole session into a
-//! host-tier map (decode progress preserved) and
-//! [`DecodeBackend::swap_in`] restores it; the scheduler prices the
-//! transfers. After a replica kill, [`DecodeBackend::restore`] rebuilds a
-//! checkpointed session from scratch — prompt replay plus deterministic
-//! greedy re-decode, bit-identical to the lost cache — because the
-//! victim's host tier died with it; the fleet store only keeps the
-//! checkpoint *metadata*, and the scheduler prices the restore as a
-//! host-tier transfer. [`LiveBackend::kv_bytes`] counts shared rows once: the
-//! store's blocks plus each session's bytes beyond its store-backed
-//! prefix.
+//! ([`DecodeBackend::register_block`]) the real K/V rows are exported
+//! *once* into a refcounted arena entry; an admission carrying a
+//! [`PrefixAttach`](super::scheduler::PrefixAttach) attaches those rows
+//! zero-copy ([`DecodeSession::attach_block`] clones an `Arc`, no float
+//! moves) and replays only the uncovered suffix — bit-identical to a full
+//! replay, so generations are independent of sharing, and an attached
+//! block outlives both its creator session and its arena entry.
+//! [`DecodeBackend::swap_out`] moves a whole session into a host-tier map
+//! (decode progress preserved) and [`DecodeBackend::swap_in`] restores it;
+//! the scheduler prices the transfers. After a replica kill,
+//! [`DecodeBackend::restore`] rebuilds a checkpointed session from scratch
+//! — prompt replay plus deterministic greedy re-decode, bit-identical to
+//! the lost cache — because the victim's host tier died with it; the fleet
+//! store only keeps the checkpoint *metadata*, and the scheduler prices
+//! the restore as a host-tier transfer. [`LiveBackend::kv_bytes`] counts
+//! shared rows once: the arena's blocks plus each session's bytes beyond
+//! its arena-backed prefix.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::trace::BandwidthTrace;
-use crate::coordinator::decode::DecodeSession;
+use crate::coordinator::decode::{step_batch, DecodeSession};
 use crate::coordinator::Cluster;
+use crate::kv::arena::{BlockRows, KvArena};
 use crate::model::shape::VqSetting;
 use crate::model::TransformerShape;
 use crate::parallel::strategies::{Strategy, StrategyKind};
@@ -59,7 +70,7 @@ use crate::sim::latency::SimParams;
 use crate::util::rng::Rng;
 
 use super::batcher::Request;
-use super::scheduler::{CbConfig, CbEngine, CbReport, DecodeBackend, PrefixAttach};
+use super::scheduler::{AdmitBatch, CbConfig, CbEngine, CbReport, DecodeBackend, StepBatch};
 
 /// Deterministic synthetic prompt for request `id`: `tokens` ids drawn
 /// from a stream forked from (seed, id), so repeated runs — and the model
@@ -101,20 +112,8 @@ pub fn live_arrivals(rng: &mut Rng, rate: f64, horizon_s: f64, seq_len: usize) -
     out
 }
 
-/// K/V rows of one shared block, copied out of their creator session so
-/// attachments survive it.
-struct StoredBlock {
-    lo: usize,
-    hi: usize,
-    /// accounting size (Appendix-G prefix difference), as priced by the
-    /// scheduler's pool
-    bytes: usize,
-    /// per-layer (k_rows, v_rows), the [`DecodeSession::export_rows`] form
-    layers: Vec<(Vec<f32>, Vec<f32>)>,
-}
-
 /// The live execution backend: one [`DecodeSession`] per in-flight slot,
-/// plus the shared block store and the swap host tier.
+/// plus the shared block arena and the swap host tier.
 pub struct LiveBackend<'a> {
     cluster: &'a Cluster,
     sessions: BTreeMap<u64, DecodeSession<'a>>,
@@ -123,11 +122,17 @@ pub struct LiveBackend<'a> {
     prompt_seed: u64,
     /// prompt-content classes (0 = every id its own stream)
     prompt_groups: usize,
-    /// positional-locality sessions + block store active (prefix cache)
+    /// positional-locality sessions + block arena active (prefix cache)
     positional: bool,
-    store: BTreeMap<u64, StoredBlock>,
-    store_bytes: usize,
-    /// per-session tokens whose rows are backed by the store (attached
+    /// execute the step batch one session at a time through the
+    /// single-session kernels (`CbConfig::serial_decode`) — scheduling
+    /// never reads the flag, so the event stream is identical either way
+    serial: bool,
+    /// shared block arena: sealed rows exported once at
+    /// [`DecodeBackend::register_block`], every attach a zero-copy
+    /// refcount bump
+    store: KvArena,
+    /// per-session tokens whose rows are backed by the arena (attached
     /// prefix, growing past each of the creator's registered blocks) —
     /// subtracted from the session's bytes so shared rows count once
     blocked: BTreeMap<u64, usize>,
@@ -154,8 +159,8 @@ impl<'a> LiveBackend<'a> {
             prompt_seed,
             prompt_groups: 0,
             positional: false,
-            store: BTreeMap::new(),
-            store_bytes: 0,
+            serial: false,
+            store: KvArena::new(),
             blocked: BTreeMap::new(),
             swapped: BTreeMap::new(),
             classes: BTreeMap::new(),
@@ -171,6 +176,7 @@ impl<'a> LiveBackend<'a> {
         let mut b = LiveBackend::new(cluster, cfg.seed);
         b.prompt_groups = cfg.prompt_groups;
         b.positional = cfg.prefix_cache && cfg.decode_tokens > 0;
+        b.serial = cfg.serial_decode;
         b
     }
 
@@ -184,14 +190,14 @@ impl<'a> LiveBackend<'a> {
         )
     }
 
-    /// Actual Appendix-G bytes held right now: the shared block store plus
-    /// every in-flight session's bytes beyond its store-backed prefix
+    /// Actual Appendix-G bytes held right now: the shared block arena plus
+    /// every in-flight session's bytes beyond its arena-backed prefix
     /// (shared rows count once however many sessions attach). Swapped-out
     /// sessions live in host memory and do not count. This must track the
     /// scheduler's pool accounting exactly — the loop counts a
     /// `kv_violations` whenever it exceeds the cap.
     pub fn kv_bytes(&self) -> usize {
-        self.store_bytes
+        self.store.total_bytes()
             + self
                 .sessions
                 .iter()
@@ -207,7 +213,7 @@ impl<'a> LiveBackend<'a> {
         self.sessions.len()
     }
 
-    /// Blocks currently held in the shared store (diagnostics).
+    /// Blocks currently held in the shared arena (diagnostics).
     pub fn stored_blocks(&self) -> usize {
         self.store.len()
     }
@@ -219,19 +225,12 @@ impl<'a> LiveBackend<'a> {
 }
 
 impl DecodeBackend for LiveBackend<'_> {
-    fn admit(
-        &mut self,
-        batch: &[Request],
-        decode_budgets: &[usize],
-        classes: &[usize],
-        prefill_limit: usize,
-        prefixes: &[PrefixAttach],
-    ) -> Result<()> {
+    fn admit(&mut self, batch: &AdmitBatch) -> Result<()> {
         let meta = &self.cluster.artifact.meta;
-        for (i, req) in batch.iter().enumerate() {
-            let budget = decode_budgets[i];
-            self.classes.insert(req.id, classes.get(i).copied().unwrap_or(0));
-            if budget == 0 {
+        for entry in &batch.entries {
+            let req = &entry.req;
+            self.classes.insert(req.id, entry.class);
+            if entry.budget == 0 {
                 continue; // prefill-only: nothing to hold between events
             }
             if req.tokens == 0 || req.tokens > meta.seq_len {
@@ -246,21 +245,25 @@ impl DecodeBackend for LiveBackend<'_> {
             let t0 = Instant::now();
             let sess = if self.positional {
                 // prefix-cache path: positional-locality session; covered
-                // blocks import real rows from the store, then only the
-                // uncovered suffix replays (bit-identical to full replay)
-                let pre = &prefixes[i];
-                let mut sess =
-                    DecodeSession::deferred_positional(self.cluster, &prompt, req.tokens + budget)
-                        .with_context(|| format!("admitting request {}", req.id))?;
+                // blocks attach as zero-copy arena references, then only
+                // the uncovered suffix replays (bit-identical to a full
+                // replay — attached rows ARE the creator's rows)
+                let pre = &entry.prefix;
+                let mut sess = DecodeSession::builder(self.cluster, &prompt)
+                    .budget(req.tokens + entry.budget)
+                    .deferred()
+                    .positional()
+                    .build()
+                    .with_context(|| format!("admitting request {}", req.id))?;
                 for &b in &pre.blocks {
-                    let blk = self
+                    let rows = self
                         .store
-                        .get(&b)
+                        .attach(b)
                         .with_context(|| format!("attach to unknown block {b}"))?;
-                    sess.import_rows(blk.lo, blk.hi, &blk.layers)
-                        .with_context(|| format!("importing block {b} for request {}", req.id))?;
+                    sess.attach_block(rows)
+                        .with_context(|| format!("attaching block {b} for request {}", req.id))?;
                 }
-                let first = (req.tokens - pre.tokens).min(prefill_limit);
+                let first = (req.tokens - pre.tokens).min(batch.prefill_limit);
                 if first > 0 {
                     sess.replay_range(pre.tokens, pre.tokens + first).with_context(|| {
                         format!("admission suffix of request {}", req.id)
@@ -268,35 +271,28 @@ impl DecodeBackend for LiveBackend<'_> {
                 }
                 self.blocked.insert(req.id, pre.tokens);
                 sess
-            } else if prefill_limit >= req.tokens {
+            } else if batch.prefill_limit >= req.tokens {
                 // classic path: the whole prompt replays at admission
-                DecodeSession::with_budget(self.cluster, &prompt, req.tokens + budget)
+                DecodeSession::builder(self.cluster, &prompt)
+                    .budget(req.tokens + entry.budget)
+                    .build()
                     .with_context(|| format!("admitting request {}", req.id))?
             } else {
                 // chunked path: replay only the admission chunk; the rest
-                // arrives through prefill_chunk calls as the scheduler
+                // arrives inside StepBatch chunk plans as the scheduler
                 // fuses it into decode iterations
-                let mut sess =
-                    DecodeSession::deferred(self.cluster, &prompt, req.tokens + budget)
-                        .with_context(|| format!("admitting request {}", req.id))?;
-                sess.replay_range(0, prefill_limit)
+                let mut sess = DecodeSession::builder(self.cluster, &prompt)
+                    .budget(req.tokens + entry.budget)
+                    .deferred()
+                    .build()
+                    .with_context(|| format!("admitting request {}", req.id))?;
+                sess.replay_range(0, batch.prefill_limit)
                     .with_context(|| format!("admission chunk of request {}", req.id))?;
                 sess
             };
             self.host_compute_s += t0.elapsed().as_secs_f64();
             self.sessions.insert(req.id, sess);
         }
-        Ok(())
-    }
-
-    fn prefill_chunk(&mut self, id: u64, lo: usize, hi: usize) -> Result<()> {
-        let t0 = Instant::now();
-        let sess = self
-            .sessions
-            .get_mut(&id)
-            .with_context(|| format!("no live session for prefilling slot {id}"))?;
-        sess.replay_range(lo, hi)?;
-        self.host_compute_s += t0.elapsed().as_secs_f64();
         Ok(())
     }
 
@@ -308,6 +304,7 @@ impl DecodeBackend for LiveBackend<'_> {
         hi: usize,
         bytes: usize,
     ) -> Result<()> {
+        let meta = &self.cluster.artifact.meta;
         let sess = self
             .sessions
             .get(&session)
@@ -315,20 +312,21 @@ impl DecodeBackend for LiveBackend<'_> {
         let layers = sess
             .export_rows(lo, hi)
             .with_context(|| format!("exporting block {block} rows from session {session}"))?;
-        self.store.insert(block, StoredBlock { lo, hi, bytes, layers });
-        self.store_bytes += bytes;
-        // the creator's own rows are store-backed from here on
+        let rows = BlockRows::new(lo, hi, layers, meta.n_heads, meta.d_model / meta.n_heads)
+            .with_context(|| format!("sealing block {block} from session {session}"))?;
+        self.store.insert(block, bytes, rows);
+        // the creator's own rows are arena-backed from here on
         let blocked = self.blocked.entry(session).or_insert(0);
         *blocked = (*blocked).max(hi);
         Ok(())
     }
 
     fn drop_block(&mut self, block: u64) -> Result<()> {
-        let blk = self
-            .store
-            .remove(&block)
+        // sessions holding an attached reference keep the rows alive —
+        // only the arena entry (and its byte accounting) goes away
+        self.store
+            .remove(block)
             .with_context(|| format!("dropping unknown block {block}"))?;
-        self.store_bytes = self.store_bytes.saturating_sub(blk.bytes);
         Ok(())
     }
 
@@ -388,13 +386,19 @@ impl DecodeBackend for LiveBackend<'_> {
         let prompt = self.prompt(id, tokens);
         let t0 = Instant::now();
         let mut sess = if self.positional {
-            let mut sess = DecodeSession::deferred_positional(self.cluster, &prompt, tokens + budget)
+            let mut sess = DecodeSession::builder(self.cluster, &prompt)
+                .budget(tokens + budget)
+                .deferred()
+                .positional()
+                .build()
                 .with_context(|| format!("restoring request {id}"))?;
             sess.replay_range(0, tokens)
                 .with_context(|| format!("replaying prompt of restored request {id}"))?;
             sess
         } else {
-            DecodeSession::with_budget(self.cluster, &prompt, tokens + budget)
+            DecodeSession::builder(self.cluster, &prompt)
+                .budget(tokens + budget)
+                .build()
                 .with_context(|| format!("restoring request {id}"))?
         };
         for _ in 0..generated {
@@ -409,16 +413,84 @@ impl DecodeBackend for LiveBackend<'_> {
         Ok(())
     }
 
-    fn step(&mut self, ids: &[u64]) -> Result<()> {
+    fn step(&mut self, batch: &StepBatch) -> Result<()> {
         let t0 = Instant::now();
-        for &id in ids {
-            let sess = self
-                .sessions
-                .get_mut(&id)
-                .with_context(|| format!("no live session for slot {id}"))?;
-            sess.step()?;
+        if self.serial {
+            // escape hatch: the same batch, one session at a time through
+            // the single-session kernels — the benchmark anchor
+            for c in &batch.chunks {
+                let sess = self
+                    .sessions
+                    .get_mut(&c.id)
+                    .with_context(|| format!("no live session for prefilling slot {}", c.id))?;
+                sess.replay_range(c.lo, c.hi)
+                    .with_context(|| format!("replaying chunk [{}, {}) of slot {}", c.lo, c.hi, c.id))?;
+            }
+            for &id in &batch.decode_ids {
+                let sess = self
+                    .sessions
+                    .get_mut(&id)
+                    .with_context(|| format!("no live session for slot {id}"))?;
+                sess.step()?;
+            }
+        } else {
+            if !batch.chunks.is_empty() {
+                // prefill-chunk replay fans out across scoped threads:
+                // the scheduler plans at most one chunk per slot per
+                // iteration, so each thread owns a distinct session and
+                // the &mut borrows are disjoint
+                let want: BTreeSet<u64> = batch.chunks.iter().map(|c| c.id).collect();
+                let mut grabbed: BTreeMap<u64, &mut DecodeSession<'_>> = self
+                    .sessions
+                    .iter_mut()
+                    .filter(|(id, _)| want.contains(id))
+                    .map(|(id, s)| (*id, s))
+                    .collect();
+                for c in &batch.chunks {
+                    if !grabbed.contains_key(&c.id) {
+                        bail!("no live session for prefilling slot {}", c.id);
+                    }
+                }
+                let joined = std::thread::scope(|scope| {
+                    let handles: Vec<_> = batch
+                        .chunks
+                        .iter()
+                        .map(|&c| {
+                            let sess = grabbed.remove(&c.id).expect("chunk ids are distinct");
+                            scope.spawn(move || sess.replay_range(c.lo, c.hi))
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join()).collect::<Vec<_>>()
+                });
+                // surface failures deterministically, in chunk order
+                for (c, r) in batch.chunks.iter().zip(joined) {
+                    r.map_err(|_| anyhow!("replay thread for slot {} panicked", c.id))?
+                        .with_context(|| {
+                            format!("replaying chunk [{}, {}) of slot {}", c.lo, c.hi, c.id)
+                        })?;
+                }
+            }
+            if !batch.decode_ids.is_empty() {
+                // every decoding slot advances through one fused batched
+                // GEMM per layer — bit-identical per row to serial steps
+                let want: BTreeSet<u64> = batch.decode_ids.iter().copied().collect();
+                let mut slots: Vec<&mut DecodeSession<'_>> = self
+                    .sessions
+                    .iter_mut()
+                    .filter(|(id, _)| want.contains(id))
+                    .map(|(_, s)| s)
+                    .collect();
+                if slots.len() != want.len() {
+                    bail!(
+                        "decode batch names {} slots but only {} have live sessions",
+                        want.len(),
+                        slots.len()
+                    );
+                }
+                step_batch(&mut slots)?;
+            }
         }
-        self.steps += ids.len();
+        self.steps += batch.decode_ids.len();
         self.host_compute_s += t0.elapsed().as_secs_f64();
         Ok(())
     }
@@ -426,7 +498,7 @@ impl DecodeBackend for LiveBackend<'_> {
     fn complete(&mut self, id: u64) -> Result<()> {
         // prefill-only requests never opened a session; record them empty.
         // The session goes away but any rows it registered live on in the
-        // block store — the "recently freed" prefix reuse window.
+        // block arena — the "recently freed" prefix reuse window.
         let generated = self.sessions.remove(&id).map(|s| s.generated).unwrap_or_default();
         self.blocked.remove(&id);
         self.classes.remove(&id);
@@ -641,6 +713,44 @@ mod tests {
         let again = run(&chunked);
         assert_eq!(again.report.events, chunky.report.events);
         assert_eq!(again.generations, chunky.generations);
+    }
+
+    #[test]
+    fn serial_decode_matches_batched_default_bit_for_bit() {
+        // `serial_decode` only changes how the backend executes the step
+        // batch — the scheduler never reads it — so the event stream is
+        // identical by construction and the generations must match token
+        // for token; chunked prefill keeps the scoped-thread replay path
+        // hot on the batched side
+        let cluster = tiny_cluster(11);
+        let base = CbConfig {
+            max_slots: 4,
+            max_batch: 4,
+            decode_tokens: 5,
+            prefill_chunk_tokens: 6,
+            ..CbConfig::default()
+        };
+        let serial = CbConfig { serial_decode: true, ..base.clone() };
+        let arrivals = live_arrivals(&mut Rng::new(9), 12.0, 3.0, 16);
+        assert!(arrivals.len() > 4, "{}", arrivals.len());
+        assert!(arrivals.iter().any(|r| r.tokens > 6), "need prompts longer than the budget");
+        let run = |cfg: &CbConfig| {
+            serve_live(
+                &cluster,
+                cfg.clone(),
+                SimParams::paper_encoder(),
+                BandwidthTrace::constant(100.0, 1e9),
+                arrivals.clone(),
+                1e4,
+            )
+            .unwrap()
+        };
+        let batched = run(&base);
+        let one_by_one = run(&serial);
+        assert_eq!(batched.report.completed, arrivals.len());
+        assert_eq!(batched.report.events, one_by_one.report.events);
+        assert_eq!(batched.generations, one_by_one.generations);
+        assert_eq!(batched.live_steps, one_by_one.live_steps);
     }
 
     #[test]

@@ -60,6 +60,6 @@ pub use engine::{ServeEngine, ServeReport};
 pub use live::{serve_live, LiveBackend, LiveReport};
 pub use policy::{PolicyKind, Preemption, SchedPolicy};
 pub use scheduler::{
-    CbConfig, CbEngine, CbEvent, CbReport, CheckpointRecord, ClassReport, DecodeBackend, KvBudget,
-    ModelBackend, PrefixAttach, SlotState,
+    AdmitBatch, AdmitEntry, CbConfig, CbEngine, CbEvent, CbReport, CheckpointRecord, ChunkPlan,
+    ClassReport, DecodeBackend, KvBudget, ModelBackend, PrefixAttach, SlotState, StepBatch,
 };

@@ -34,7 +34,10 @@ use super::super::live::{prompt_stream_key, synth_prompt};
 use super::super::policy::{AdmissionCandidate, SchedPolicy, SlotView};
 use super::report::CompletionTally;
 use super::slots::{ReqStats, Slot, SlotState, SwapEntry};
-use super::{CbConfig, CbEngine, CbEvent, CbReport, DecodeBackend, PrefixAttach};
+use super::{
+    AdmitBatch, AdmitEntry, CbConfig, CbEngine, CbEvent, CbReport, ChunkPlan, DecodeBackend,
+    PrefixAttach, StepBatch,
+};
 
 /// Move a slot's own blocks whose rows are now replayed (`hi <=
 /// replayed`) from pending to ready: the pool shifts their bytes out of
@@ -857,21 +860,19 @@ impl EngineActor {
             model_time.accumulate(&iter_bd);
             let done = now + iter_bd.total();
 
-            let fresh_reqs: Vec<Request> = fresh.iter().map(|m| m.req.clone()).collect();
-            let fresh_budgets: Vec<usize> = fresh.iter().map(|m| m.budget).collect();
-            let fresh_classes: Vec<usize> =
-                fresh.iter().map(|m| engine.cfg.class_of(m.req.id)).collect();
-            let fresh_prefixes: Vec<PrefixAttach> = fresh
-                .iter()
-                .map(|m| PrefixAttach { tokens: m.covered, blocks: m.attach.clone() })
-                .collect();
-            backend.admit(
-                &fresh_reqs,
-                &fresh_budgets,
-                &fresh_classes,
-                chunk_budget,
-                &fresh_prefixes,
-            )?;
+            let admit_batch = AdmitBatch {
+                entries: fresh
+                    .iter()
+                    .map(|m| AdmitEntry {
+                        req: m.req.clone(),
+                        budget: m.budget,
+                        class: engine.cfg.class_of(m.req.id),
+                        prefix: PrefixAttach { tokens: m.covered, blocks: m.attach.clone() },
+                    })
+                    .collect(),
+                prefill_limit: chunk_budget,
+            };
+            backend.admit(&admit_batch)?;
 
             for (req, &(_, is_swap, covered)) in batch.iter().zip(order.iter()) {
                 let st = stats.entry(req.id).or_insert(ReqStats {
@@ -1105,16 +1106,45 @@ impl EngineActor {
             // swap and checkpoint transfers ride this iteration's clock
             // (and its comm accounting) — the host link is priced, not free
             model_time.comm_s += swap_out_s + ckpt_s;
-            let done = now + bd.total() + swap_out_s + ckpt_s;
+            // with the copy engine, those transfers overlap the decode
+            // step: the clock charges max(compute, transfer) instead of
+            // their sum (the comm accounting above still prices them)
+            let done = if engine.cfg.copy_engine {
+                now + bd.total().max(swap_out_s + ckpt_s)
+            } else {
+                now + bd.total() + swap_out_s + ckpt_s
+            };
             if done > horizon_s {
                 // the iteration straddles the horizon: nothing advances
                 return Ok(Some(done));
             }
             let now = done;
-            // chunk effects: record and replay the planned chunks, grow
-            // the mixed cache per chunk, release finished prompts into
-            // decode (their first decode step — and TTFT — comes next
-            // iteration, never fused with their own last chunk)
+            // one fused execution call for the whole iteration: every
+            // planned prefill chunk plus every decoding slot crosses the
+            // backend's real batch boundary together (chunked slots never
+            // decode in their own chunk's iteration, so the sets are
+            // disjoint and replay-before-decode ordering is irrelevant)
+            let step_batch = StepBatch {
+                chunks: plan
+                    .iter()
+                    .map(|&(i, take)| {
+                        let next_token = match slots[i].state {
+                            SlotState::Prefilling { next_token, .. } => next_token,
+                            SlotState::Decoding => unreachable!("planned a decoding slot"),
+                        };
+                        ChunkPlan { id: slots[i].id, lo: next_token, hi: next_token + take }
+                    })
+                    .collect(),
+                decode_ids: decode_ids.clone(),
+            };
+            if !step_batch.is_empty() {
+                backend.step(&step_batch)?;
+            }
+            // chunk effects: record the planned chunks (the backend already
+            // replayed them above), grow the mixed cache per chunk, release
+            // finished prompts into decode (their first decode step — and
+            // TTFT — comes next iteration, never fused with their own last
+            // chunk)
             for &(i, take) in &plan {
                 let (next_token, total) = match slots[i].state {
                     SlotState::Prefilling { next_token, total } => (next_token, total),
@@ -1126,7 +1156,6 @@ impl EngineActor {
                     hi: next_token + take,
                 });
                 *prefill_chunks += 1;
-                backend.prefill_chunk(slots[i].id, next_token, next_token + take)?;
                 let delta = engine.slot_prompt_bytes(next_token + take)
                     - engine.slot_prompt_bytes(next_token);
                 pool.acquire_private(delta);
@@ -1141,7 +1170,6 @@ impl EngineActor {
                 flush_ready_blocks(&mut slots[i], next_token + take, pool, backend)?;
             }
             if b > 0 {
-                backend.step(&decode_ids)?;
                 events.push(CbEvent::Decode { ids: decode_ids.clone() });
             }
             let mut i = 0;

@@ -256,6 +256,21 @@ pub struct CbConfig {
     /// requires `swap_bandwidth_mbps > 0` (the checkpoint tier *is* the
     /// priced swap tier) and decode to be on.
     pub checkpoint_every: usize,
+    /// `--serial-decode`: the live backend's escape hatch — execute decode
+    /// steps and prefill-chunk replays one slot at a time (the pre-fusion
+    /// path) instead of the fused batched kernel + scoped-thread replay.
+    /// Purely an execution-backend knob: scheduling never reads it, so the
+    /// event stream is identical either way and the flag exists to *prove*
+    /// that (and to anchor the tokens/sec microbenchmarks).
+    pub serial_decode: bool,
+    /// `--copy-engine`: model a copy engine that overlaps SwapOut and
+    /// checkpoint transfers behind the decode step instead of serializing
+    /// them into the evicting iteration — the iteration finishes at
+    /// `max(compute, transfer)` rather than `compute + transfer`. The
+    /// transfers are still fully priced in `model_time.comm_s`; only the
+    /// clock stops charging them when compute already covers them. Off
+    /// (default) preserves historical event streams bit for bit.
+    pub copy_engine: bool,
 }
 
 impl Default for CbConfig {
@@ -282,6 +297,8 @@ impl Default for CbConfig {
             age_bound_s: 0.5,
             slo_preempt_budget: 1,
             checkpoint_every: 0,
+            serial_decode: false,
+            copy_engine: false,
         }
     }
 }
@@ -420,6 +437,59 @@ pub struct PrefixAttach {
     pub blocks: Vec<u64>,
 }
 
+/// One admitted request: everything its execution backend needs, in one
+/// struct instead of the four parallel slices the old `admit` took.
+#[derive(Debug, Clone)]
+pub struct AdmitEntry {
+    pub req: Request,
+    /// this request's (possibly jittered) decode-token budget
+    pub budget: usize,
+    /// priority class ([`CbConfig::class_of`]) — advisory for execution
+    /// (the loop already made every class-driven decision), plumbed so
+    /// real backends can tag sessions for QoS accounting or placement
+    pub class: usize,
+    /// shared-prefix coverage delivered with the admission
+    pub prefix: PrefixAttach,
+}
+
+/// A typed admission batch: the per-request [`AdmitEntry`] rows plus the
+/// batch-wide prefill-token limit (`usize::MAX` when chunking is off, so
+/// whole uncovered suffixes replay at admission).
+#[derive(Debug, Clone)]
+pub struct AdmitBatch {
+    pub entries: Vec<AdmitEntry>,
+    pub prefill_limit: usize,
+}
+
+/// One prefill chunk fused into an iteration: replay prompt rows
+/// `[lo, hi)` of slot `id`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPlan {
+    pub id: u64,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// The real batch boundary of one fused iteration: every prefill chunk the
+/// scheduler piggybacked plus every slot taking a decode token. A backend
+/// executes the whole plan as one unit — the live path replays chunks on
+/// scoped threads and advances all decode slots through one fused batched
+/// GEMM per layer ([`crate::coordinator::decode::step_batch`]).
+#[derive(Debug, Clone, Default)]
+pub struct StepBatch {
+    /// prefill chunks fused into this iteration (disjoint slots)
+    pub chunks: Vec<ChunkPlan>,
+    /// slots advancing one decode token (disjoint from `chunks`' slots:
+    /// a chunked slot never decodes in the same iteration)
+    pub decode_ids: Vec<u64>,
+}
+
+impl StepBatch {
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty() && self.decode_ids.is_empty()
+    }
+}
+
 /// Execution backend driven by the scheduler loop. All methods mirror a
 /// decision the loop already recorded as a [`CbEvent`]; a backend performs
 /// the corresponding real work (or nothing, for the cost model). The
@@ -427,31 +497,16 @@ pub struct PrefixAttach {
 /// trivial.
 pub trait DecodeBackend {
     /// A batch was admitted: start real work (live: open a `DecodeSession`
-    /// per request, sized prompt + its decode budget, import the shared
-    /// blocks listed in `prefixes[i]`, and replay the first
-    /// `min(uncovered suffix, prefill_limit)` prompt rows).
-    /// `prefill_limit` is `usize::MAX` when chunking is off (whole
-    /// suffixes replay here); the remainder of a longer suffix arrives
-    /// through [`Self::prefill_chunk`]. `decode_budgets` and `prefixes`
-    /// parallel `batch`, as does `classes` — the request's priority class
-    /// (`CbConfig::class_of`), advisory for execution (the loop already
-    /// made every class-driven decision) but plumbed through so real
-    /// backends can tag sessions for QoS accounting or placement.
-    /// Swapped-in requests are NOT part of `batch`; they arrive through
+    /// per request, sized prompt + its decode budget, attach the shared
+    /// blocks listed in its [`AdmitEntry::prefix`], and replay the first
+    /// `min(uncovered suffix, prefill_limit)` prompt rows). The remainder
+    /// of a longer suffix arrives through [`Self::step`] chunk plans.
+    /// Swapped-in requests are NOT part of the batch; they arrive through
     /// [`Self::swap_in`].
-    fn admit(
-        &mut self,
-        batch: &[Request],
-        decode_budgets: &[usize],
-        classes: &[usize],
-        prefill_limit: usize,
-        prefixes: &[PrefixAttach],
-    ) -> Result<()>;
-    /// Replay prompt rows `[lo, hi)` of slot `id` into its cache — one
-    /// chunk the scheduler fused into a decode iteration.
-    fn prefill_chunk(&mut self, id: u64, lo: usize, hi: usize) -> Result<()>;
-    /// One co-scheduled decode step advancing every listed slot by a token.
-    fn step(&mut self, ids: &[u64]) -> Result<()>;
+    fn admit(&mut self, batch: &AdmitBatch) -> Result<()>;
+    /// Execute one fused iteration: replay every planned prefill chunk and
+    /// advance every listed slot by one decode token.
+    fn step(&mut self, batch: &StepBatch) -> Result<()>;
     /// The request finished; release its state and collect output.
     fn complete(&mut self, id: u64) -> Result<()>;
     /// The slot was evicted back to the queue; drop its state (it will be
@@ -517,20 +572,10 @@ pub trait DecodeBackend {
 pub struct ModelBackend;
 
 impl DecodeBackend for ModelBackend {
-    fn admit(
-        &mut self,
-        _batch: &[Request],
-        _decode_budgets: &[usize],
-        _classes: &[usize],
-        _prefill_limit: usize,
-        _prefixes: &[PrefixAttach],
-    ) -> Result<()> {
+    fn admit(&mut self, _batch: &AdmitBatch) -> Result<()> {
         Ok(())
     }
-    fn prefill_chunk(&mut self, _id: u64, _lo: usize, _hi: usize) -> Result<()> {
-        Ok(())
-    }
-    fn step(&mut self, _ids: &[u64]) -> Result<()> {
+    fn step(&mut self, _batch: &StepBatch) -> Result<()> {
         Ok(())
     }
     fn complete(&mut self, _id: u64) -> Result<()> {

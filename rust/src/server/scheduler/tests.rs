@@ -640,6 +640,94 @@ fn fast_host_link_swaps_and_preserves_decode_progress() {
 }
 
 #[test]
+fn copy_engine_without_transfers_is_bit_identical() {
+    // the copy engine only overlaps swap/checkpoint transfer seconds
+    // behind the decode step's clock; with nothing to overlap the
+    // arithmetic is max(compute, 0) == compute, so a run without swap —
+    // including recompute evictions under a cap — must be bit-identical,
+    // latencies included
+    let base =
+        CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 512, ..CbConfig::default() };
+    let probe = CbEngine::new(
+        TransformerShape::paper_encoder(128),
+        Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+        SimParams::paper_encoder(),
+        BandwidthTrace::constant(100.0, 1e9),
+        base.clone(),
+    );
+    let cap = 2 * probe.kv_projection(128);
+    let mk = |copy: bool| {
+        CbEngine::new(
+            probe.shape,
+            probe.strategy,
+            probe.params.clone(),
+            probe.trace.clone(),
+            CbConfig { kv_cap_bytes: cap, copy_engine: copy, ..base.clone() },
+        )
+    };
+    let arrivals: Vec<Request> =
+        (0..4u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 128 }).collect();
+    let r_off = mk(false).serve_stream(arrivals.clone(), 1e5);
+    let r_on = mk(true).serve_stream(arrivals, 1e5);
+    assert!(r_off.kv_evictions > 0, "{r_off:?}");
+    assert_eq!(r_off.events, r_on.events);
+    assert_eq!(r_off.completed, r_on.completed);
+    assert_eq!(r_off.latency.mean(), r_on.latency.mean());
+    assert_eq!(r_off.model_time.comm_s, r_on.model_time.comm_s);
+}
+
+#[test]
+fn copy_engine_overlaps_swap_transfers_behind_decode() {
+    // burst arrivals on a constant trace: every decision is queue-order
+    // driven, so the overlap moves only the clock — identical event
+    // stream and swap traffic, but completions land strictly earlier
+    // (max(compute, transfer) < compute + transfer whenever an iteration
+    // both decodes and swaps) while the transfers stay fully priced in
+    // the comm accounting
+    let base =
+        CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 512, ..CbConfig::default() };
+    let probe = CbEngine::new(
+        TransformerShape::paper_encoder(128),
+        Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+        SimParams::paper_encoder(),
+        BandwidthTrace::constant(100.0, 1e9),
+        base.clone(),
+    );
+    let cap = 2 * probe.kv_projection(128);
+    let mk = |copy: bool| {
+        CbEngine::new(
+            probe.shape,
+            probe.strategy,
+            probe.params.clone(),
+            probe.trace.clone(),
+            CbConfig {
+                kv_cap_bytes: cap,
+                swap_bandwidth_mbps: 1e6,
+                copy_engine: copy,
+                ..base.clone()
+            },
+        )
+    };
+    let arrivals: Vec<Request> =
+        (0..4u64).map(|i| Request { id: i, arrival_s: 0.0, tokens: 128 }).collect();
+    let r_serial = mk(false).serve_stream(arrivals.clone(), 1e5);
+    let r_copy = mk(true).serve_stream(arrivals, 1e5);
+    assert_eq!(r_serial.events, r_copy.events, "overlap changed a scheduling decision");
+    assert_eq!(r_copy.completed, 4, "{r_copy:?}");
+    assert!(r_copy.swap_outs > 0, "{r_copy:?}");
+    assert_eq!(r_copy.swap_outs, r_serial.swap_outs);
+    assert_eq!(r_copy.swap_bytes, r_serial.swap_bytes);
+    assert_eq!(r_copy.kv_violations, 0);
+    assert_eq!(r_copy.model_time.comm_s, r_serial.model_time.comm_s);
+    assert!(
+        r_copy.latency.mean() < r_serial.latency.mean(),
+        "overlap must shorten completions: {} vs {}",
+        r_copy.latency.mean(),
+        r_serial.latency.mean()
+    );
+}
+
+#[test]
 fn decode_jitter_staggers_completions_within_bounds() {
     let base = CbConfig {
         max_slots: 8,

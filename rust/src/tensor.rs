@@ -102,6 +102,13 @@ impl Tensor {
 
 /// C = A @ B for A [m, k], B [k, n]. Cache-blocked over k with an
 /// accumulate-into-row inner loop (auto-vectorizes well on one core).
+///
+/// Every output row is an independent function of its input row, and the
+/// inner accumulation walks k in one fixed order regardless of m — so
+/// stacking per-slot hidden states into one [batch, d_model] activation
+/// (the fused live-decode path) produces bit-identical floats to running
+/// the rows one at a time. The batched-vs-serial pins in
+/// `tests/live_vs_model.rs` lean on exactly this property.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let (m, k) = a.dims2()?;
     let (kb, n) = b.dims2()?;

@@ -141,7 +141,9 @@ impl MetricSet {
 /// cache hit rates, and SLO attainment regress downward; everything else
 /// (latencies, TTFT, ITL, swap traffic) upward.
 fn higher_is_better(name: &str) -> bool {
-    ["throughput", "goodput", "hit_rate", "attainment"].iter().any(|k| name.contains(k))
+    ["throughput", "goodput", "hit_rate", "attainment", "tokens_per_s"]
+        .iter()
+        .any(|k| name.contains(k))
 }
 
 /// Integer-valued determinism pins — completion/step/event counts and the

@@ -430,6 +430,52 @@ fn fleet_live_and_model_agree_across_a_mid_trace_drain() {
 }
 
 #[test]
+fn serial_decode_escape_hatch_is_bit_identical_to_batched() {
+    // --serial-decode only changes how the live backend executes a
+    // StepBatch (one session at a time vs one fused batched GEMM per
+    // layer); the scheduler never reads the flag, so the decision stream
+    // is identical by construction and every generated token must match —
+    // across the plain, chunked, and prefix-cache regimes
+    let cluster = tiny_cluster(2, 29);
+    let seq = cluster.artifact.meta.seq_len;
+    let base = CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 6, ..CbConfig::default() };
+    let chunked = CbConfig { prefill_chunk_tokens: 5, ..base.clone() };
+    let prefixed = CbConfig {
+        prefix_cache: true,
+        kv_block_tokens: 4,
+        prompt_groups: 2,
+        ..base.clone()
+    };
+    for (label, cfg) in
+        [("plain", &base), ("chunked", &chunked), ("prefix", &prefixed)]
+    {
+        let arrivals = live_arrivals(&mut Rng::new(401), 25.0, 4.0, seq);
+        assert!(arrivals.len() > 3, "{label}: {}", arrivals.len());
+        let (m, batched) = run_pair(&cluster, cfg, &arrivals, 1e4);
+        let serial_cfg = CbConfig { serial_decode: true, ..cfg.clone() };
+        let (m_serial, serial) = run_pair(&cluster, &serial_cfg, &arrivals, 1e4);
+        assert_agree(&m, &batched, label);
+        assert_agree(&m_serial, &serial, label);
+        assert_eq!(m.events, m_serial.events, "{label}: serial flag leaked into scheduling");
+        assert_eq!(
+            batched.report.events, serial.report.events,
+            "{label}: event streams diverged"
+        );
+        assert_eq!(
+            batched.generations, serial.generations,
+            "{label}: batched decode changed a generated token"
+        );
+        assert_eq!(batched.live_steps, serial.live_steps, "{label}");
+        assert!(m.completed > 0, "{label}");
+        // decode batches of size >= 2 actually ran fused
+        assert!(
+            m.events.iter().any(|e| matches!(e, CbEvent::Decode { ids } if ids.len() >= 2)),
+            "{label}: no multi-slot decode batch in the trace"
+        );
+    }
+}
+
+#[test]
 fn kv_capped_run_admits_later_but_loses_no_one() {
     // the cap reshapes the schedule (different decision stream, deferred
     // admissions) without dropping feasible work — and the live path
