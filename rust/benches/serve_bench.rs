@@ -19,6 +19,7 @@ use astra::sim::latency::SimParams;
 use astra::util::bench::{black_box, header, Bench, MetricSet};
 use astra::util::cli::Args;
 use astra::util::rng::Rng;
+use astra::workload::{ArrivalProcess, PromptLengths, WorkloadSpec};
 
 fn engine(trace: BandwidthTrace, cfg: CbConfig) -> CbEngine {
     CbEngine::new(
@@ -149,6 +150,42 @@ fn emit_json(out: &str) {
         m.push(name, "fleet_hit_rate", r.fleet_hit_rate());
         m.push(name, "load_skew", r.load_skew());
     }
+    // cancel-heavy bursty workload: Markov-modulated arrival bursts (lo
+    // 1/s, hi 30/s) against 2.5 s client patience on a 3-slot engine, so
+    // queued requests abandon during bursts and mid-decode sessions
+    // cancel once their token stream stalls. wasted_decode_tokens and
+    // p95_time_to_token both regress *upward* in the gate: a scheduler
+    // change that keeps decoding for abandoned clients, or stretches
+    // per-token delivery tails, fails here even if throughput holds
+    let cancel_cfg = CbConfig {
+        max_slots: 3,
+        max_batch: 4,
+        decode_tokens: 24,
+        seed: 9,
+        patience_s: 2.5,
+        patience_spread: 1.0,
+        ..CbConfig::default()
+    };
+    let cancel_spec = WorkloadSpec {
+        seed: 9,
+        horizon_s: 20.0,
+        process: ArrivalProcess::MarkovBursts {
+            lo_rate: 1.0,
+            hi_rate: 30.0,
+            states: 6,
+            dwell_s: 1.0,
+        },
+        prompts: PromptLengths::Fixed(1024),
+        tenant_weights: Vec::new(),
+    };
+    let name = "cb3_bursty_cancel";
+    let mut e = engine(const100, cancel_cfg);
+    let mut r = e.serve_stream(cancel_spec.generate(), 30.0);
+    m.push(name, "completed", r.completed as f64);
+    m.push(name, "throughput", r.throughput);
+    m.push(name, "cancelled", r.cancelled as f64);
+    m.push(name, "wasted_decode_tokens", r.wasted_decode_tokens as f64);
+    m.push(name, "p95_time_to_token", r.time_to_token.p95());
     m.write(out).expect("writing bench metrics");
 }
 

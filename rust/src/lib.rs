@@ -112,6 +112,13 @@
 //!   schedules over the same cost model.
 //! * [`vq`] is the native grouped vector-quantization engine used on the
 //!   hot path (encode/decode/bit-packing), mirroring the Pallas kernels.
+//! * [`workload`] generates what the server is asked to serve: seeded
+//!   arrival traces (homogeneous Poisson, sinusoidal diurnal curves,
+//!   Markov-modulated bursts reusing the [`comm::trace`] machinery as a
+//!   rate curve, weighted multi-tenant mixes onto QoS classes), plus the
+//!   streaming-client model (per-request patience deadlines, heavy-tailed
+//!   decode lengths) and per-token delivery accounting. See *Workload
+//!   model* below.
 //! * [`model`] holds shape/FLOP/memory math and a pure-rust reference
 //!   transformer used to cross-check PJRT numerics.
 //!
@@ -156,6 +163,35 @@
 //! resolve through the block for rows below the attached prefix and
 //! through the session's private tensor above it, and an attached block
 //! outlives both its creator session and its arena entry.
+//!
+//! # Workload model: streaming clients and generative traces
+//!
+//! The serving stack is exercised by the [`workload`] subsystem rather
+//! than hard-coded Poisson streams. A [`workload::WorkloadSpec`] is *pure
+//! data* drawn deterministically from a seed (the same contract as
+//! [`sim::fault::FaultPlan`]): it expands once into a `Vec<Request>` via
+//! Lewis–Shedler thinning against a diurnal or Markov-burst rate curve,
+//! and the engine only ever sees the resulting trace. The plain-Poisson
+//! spec reproduces the historical generators bit for bit.
+//!
+//! On top of arrivals sits the *client* model, also seeded pure data:
+//! each request draws a patience deadline
+//! ([`workload::patience_for`], `CbConfig::patience_s`) and optionally a
+//! bounded-Pareto decode length ([`workload::tail_budget`],
+//! `CbConfig::length_tail_alpha`). The engine owns the state transitions:
+//! when a client has waited longer than its patience since the last
+//! delivered token, the request is **cancelled mid-decode**
+//! ([`server::scheduler::CbEvent::Cancelled`]) — its slot, KV blocks,
+//! pending radix registrations, swap-tier parking, and fleet-held
+//! checkpoints are all freed immediately, and the chaos checklist extends
+//! to `completed + rejected + censored + cancelled == arrivals`. Per-token
+//! delivery timestamps ([`workload::TokenStream`]) feed the report's
+//! time-to-token distribution and the post-hoc waste accounting
+//! ([`workload::wasted_deliveries`]): tokens generated after the client
+//! gave up are `wasted_decode_tokens`, the metric the cancellation path
+//! exists to minimize. All knobs default off, reproducing the pre-client
+//! event streams bit for bit, and the differential harness pins live ==
+//! model including `Cancelled` events.
 
 pub mod comm;
 pub mod config;
@@ -169,6 +205,7 @@ pub mod sim;
 pub mod tensor;
 pub mod util;
 pub mod vq;
+pub mod workload;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
@@ -184,5 +221,6 @@ pub mod prelude {
         ClusterEngine, DecodeBackend, LiveBackend, LiveReport, ModelBackend, PrefixAttach,
         Request, StepBatch,
     };
+    pub use crate::workload::{ArrivalProcess, PromptLengths, TokenStream, WorkloadSpec};
     pub use crate::Result;
 }

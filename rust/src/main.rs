@@ -96,6 +96,33 @@ SUBCOMMANDS
              --slo-preempt-budget K: victims the slo-class proactive
              preemption hook may evict per iteration (default 1, the
              historical single-victim behavior)
+             --slo-preempt-cost S: budget, in modeled seconds per
+             iteration, for the *cost* of proactive SLO evictions — each
+             victim is priced at its swap round trip or recompute time
+             (whichever the engine would pick) and victims past the
+             budget stay resident (0 = unpriced)
+             --arrivals poisson|diurnal|bursty: generative arrival trace
+             (default poisson reproduces the classic stream bit for bit).
+             diurnal sweeps the rate sinusoidally from --rate up to
+             --peak-rate over --period seconds; bursty drives it with a
+             seeded Markov chain over --burst-states levels in
+             [--rate, --peak-rate], dwelling --dwell seconds per state
+             --peak-rate R (default 3x --rate)  --period S  --dwell S
+             --burst-states K
+             --tenants w0,w1,...: weighted multi-tenant mix — each arrival
+             draws a tenant by weight and its id maps tenant k to QoS
+             class k under --classes
+             --patience S: streaming-client patience — a request whose
+             client has seen no token for longer than its patience is
+             cancelled mid-decode (slot, KV blocks, swap/checkpoint state
+             all freed; Cancelled events). 0 = infinitely patient clients,
+             the exact legacy path. Enables per-token delivery timestamps
+             and the cancelled / wasted-decode-tokens / time-to-token rows
+             --patience-spread F: log-uniform per-request patience spread
+             (factor around --patience; 0 = uniform patience)
+             --length-tail A: bounded-Pareto decode-length tail with
+             exponent A over [1, --decode-tokens] — a few long requests,
+             many short ones (0 = all full-length)
              --replicas N: run N engine replicas under one deterministic
              cluster event loop (fleet mode; works with and without
              --live). --replicas 1 is exactly the single-engine path

@@ -63,6 +63,21 @@ impl Batcher {
         self.queue.is_empty()
     }
 
+    /// Iterate the queued requests front-to-back without disturbing them
+    /// (the cancellation sweep's read pass).
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.queue.iter()
+    }
+
+    /// Remove a queued request by id wherever it sits (client
+    /// cancellation — unlike `next_batch*`, not restricted to the head).
+    /// `enqueued` is a lifetime counter and stays untouched. Returns the
+    /// request, or `None` if it was not queued.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let pos = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(pos)
+    }
+
     /// Form the next batch at time `now`: returns requests if either the
     /// batch is full or the oldest request has waited past max_wait (or the
     /// queue is non-empty and `force`).

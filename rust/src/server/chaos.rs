@@ -17,9 +17,11 @@
 //!   arrival list before anything routes;
 //! * [`chaos_invariants`] / [`assert_chaos_invariants`] — the soak
 //!   checklist every seeded plan must pass: no request lost or
-//!   double-completed, no double-rejects, `kv_violations == 0`. (Pool
-//!   refcount quiescence after a kill is enforced *structurally*, by an
-//!   `ensure!` at the kill site — it cannot be observed from a report.)
+//!   double-completed, no double-rejects, no double-cancels,
+//!   `completed + rejected + censored + cancelled == arrivals`,
+//!   `kv_violations == 0`. (Pool refcount quiescence after a kill is
+//!   enforced *structurally*, by an `ensure!` at the kill site — it
+//!   cannot be observed from a report.)
 
 use anyhow::{ensure, Result};
 
@@ -58,20 +60,25 @@ pub fn skew_arrivals(plan: &FaultPlan, mut arrivals: Vec<Request>) -> Vec<Reques
 pub fn chaos_invariants(n_arrivals: usize, report: &ClusterReport) -> Vec<(&'static str, bool, String)> {
     let mut completes: Vec<u64> = Vec::new();
     let mut rejects: Vec<u64> = Vec::new();
+    let mut cancels: Vec<u64> = Vec::new();
     for e in &report.events {
         match &e.event {
             CbEvent::Complete { id } => completes.push(*id),
             CbEvent::Reject { id } => rejects.push(*id),
+            CbEvent::Cancelled { id } => cancels.push(*id),
             _ => {}
         }
     }
     let total_completes = completes.len();
     let total_rejects = rejects.len();
+    let total_cancels = cancels.len();
     completes.sort_unstable();
     completes.dedup();
     rejects.sort_unstable();
     rejects.dedup();
-    let accounted = completes.len() + rejects.len() + report.censored();
+    cancels.sort_unstable();
+    cancels.dedup();
+    let accounted = completes.len() + rejects.len() + report.censored() + cancels.len();
     vec![
         (
             "no double-completed request",
@@ -84,13 +91,19 @@ pub fn chaos_invariants(n_arrivals: usize, report: &ClusterReport) -> Vec<(&'sta
             format!("{} Reject events over {} ids", total_rejects, rejects.len()),
         ),
         (
-            "no request lost (completed + rejected + censored == arrivals)",
+            "no double-cancelled request",
+            cancels.len() == total_cancels,
+            format!("{} Cancelled events over {} ids", total_cancels, cancels.len()),
+        ),
+        (
+            "no request lost (completed + rejected + censored + cancelled == arrivals)",
             accounted == n_arrivals,
             format!(
-                "{} completed + {} rejected + {} censored == {} of {} arrivals",
+                "{} completed + {} rejected + {} censored + {} cancelled == {} of {} arrivals",
                 completes.len(),
                 rejects.len(),
                 report.censored(),
+                cancels.len(),
                 accounted,
                 n_arrivals
             ),

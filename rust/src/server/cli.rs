@@ -20,6 +20,7 @@ use crate::sim::latency::{evaluate, SimParams};
 use crate::tensor::Tensor;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
+use crate::workload::{ArrivalProcess, PromptLengths, WorkloadSpec};
 
 fn run_config(args: &Args) -> Result<RunConfig> {
     let mut c = match args.get("config") {
@@ -144,6 +145,82 @@ fn policy_from_args(args: &Args) -> Result<(PolicyKind, Vec<f64>, f64)> {
     Ok((policy, classes, args.f64_or("age-bound", 0.5)?))
 }
 
+/// Parse the client-model knobs shared by the serve-cb paths into an
+/// existing config: `--patience S` (mean client patience before a stalled
+/// request is abandoned; 0 = infinitely patient clients, the exact legacy
+/// code path), `--patience-spread F` (log-uniform per-request spread
+/// around the mean), `--length-tail A` (bounded-Pareto decode-length tail
+/// exponent; 0 = every request wants the full budget), and
+/// `--slo-preempt-cost S` (per-iteration budget, in modeled seconds, for
+/// pricing proactive SLO evictions through the swap policy; 0 = unpriced).
+fn client_model_from_args(args: &Args, cfg: &mut CbConfig) -> Result<()> {
+    cfg.patience_s = args.f64_or("patience", 0.0)?;
+    cfg.patience_spread = args.f64_or("patience-spread", 0.0)?;
+    cfg.length_tail_alpha = args.f64_or("length-tail", 0.0)?;
+    cfg.slo_preempt_cost_s = args.f64_or("slo-preempt-cost", 0.0)?;
+    Ok(())
+}
+
+/// Parse the generative-trace flags into a [`WorkloadSpec`], or `None`
+/// for the classic fixed-rate configuration (served by the legacy
+/// generators, bit for bit): `--arrivals poisson|diurnal|bursty` picks
+/// the process (`--rate` is the base/lo rate, `--peak-rate` the ceiling,
+/// default 3x the base), `--period S` the diurnal period (default: the
+/// horizon), `--burst-states K` / `--dwell S` the Markov burst chain, and
+/// `--tenants w0,w1,...` layers a weighted multi-tenant mix onto the ids
+/// (tenant k lands in QoS class k under `--classes`).
+fn workload_from_args(
+    args: &Args,
+    seed: u64,
+    rate: f64,
+    horizon_s: f64,
+    prompts: PromptLengths,
+) -> Result<Option<WorkloadSpec>> {
+    let kind = args.get_or("arrivals", "poisson");
+    let tenants = args.f64_list_or("tenants", &[])?;
+    if kind == "poisson" && tenants.is_empty() {
+        return Ok(None);
+    }
+    let peak = args.f64_or("peak-rate", 3.0 * rate)?;
+    let process = match kind.as_str() {
+        "poisson" => ArrivalProcess::Poisson { rate },
+        "diurnal" => ArrivalProcess::Diurnal {
+            base_rate: rate,
+            peak_rate: peak,
+            period_s: args.f64_or("period", horizon_s)?,
+        },
+        "bursty" => ArrivalProcess::MarkovBursts {
+            lo_rate: rate,
+            hi_rate: peak,
+            states: args.usize_or("burst-states", 5)?,
+            dwell_s: args.f64_or("dwell", 2.0)?,
+        },
+        other => anyhow::bail!("unknown --arrivals `{other}` (poisson|diurnal|bursty)"),
+    };
+    Ok(Some(WorkloadSpec { seed, horizon_s, process, prompts, tenant_weights: tenants }))
+}
+
+/// Client-model report row (printed only when the run produced client
+/// outcomes — cancellations, wasted tokens, or delivery timestamps).
+fn print_client_rows(r: &mut CbReport) {
+    if r.cancelled == 0 && r.wasted_decode_tokens == 0 && r.time_to_token.is_empty() {
+        return;
+    }
+    let (p50, p95) = if r.time_to_token.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (r.time_to_token.p50(), r.time_to_token.p95())
+    };
+    println!(
+        "clients   cancelled {:>5}  wasted decode tokens {:>6}  \
+         time-to-token p50 {:>7.1} ms  p95 {:>7.1} ms",
+        r.cancelled,
+        r.wasted_decode_tokens,
+        p50 * 1e3,
+        p95 * 1e3
+    );
+}
+
 /// Parse `--route-policy` (fleet request routing; default round-robin).
 fn route_from_args(args: &Args) -> Result<RouteKind> {
     let name = args.get_or("route-policy", "round-robin");
@@ -227,7 +304,7 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown trace `{other}` (constant|markov)"),
     };
     let (policy, classes, age_bound_s) = policy_from_args(args)?;
-    let cfg = CbConfig {
+    let mut cfg = CbConfig {
         max_slots: args.usize_or("slots", 8)?,
         max_batch: args.usize_or("max-batch", 8)?,
         max_wait_s: args.f64_or("max-wait", 0.02)?,
@@ -252,23 +329,30 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         slo_preempt_budget: args.usize_or("slo-preempt-budget", 1)?,
         ..CbConfig::default()
     };
+    client_model_from_args(args, &mut cfg)?;
+    let workload =
+        workload_from_args(args, seed, rate, horizon, PromptLengths::Fixed(shape.seq_len))?;
     let replicas = args.usize_or("replicas", 1)?;
     if replicas > 1 {
         let proto = CbEngine::new(shape, strategy, params, trace, cfg);
-        return serve_cb_fleet(args, proto, rate, horizon, seed, replicas);
+        return serve_cb_fleet(args, proto, rate, horizon, seed, replicas, workload);
     }
 
     println!(
-        "== serve-cb: {} on {model} T={tokens} N={n}, {} trace, rate {rate}/s, {horizon} s ==",
+        "== serve-cb: {} on {model} T={tokens} N={n}, {} trace, {} arrivals, \
+         rate {rate}/s, {horizon} s ==",
         strategy.name(),
         args.get_or("trace", "constant"),
+        args.get_or("arrivals", "poisson"),
     );
     let mut rows = Vec::new();
     for (mode, cfg) in [("fifo-b1", cfg.clone().batch1()), ("cont-batch", cfg)] {
         let mut engine =
             CbEngine::new(shape, strategy, params.clone(), trace.clone(), cfg.clone());
-        let mut rng = Rng::new(seed);
-        let mut r = engine.serve_poisson(&mut rng, rate, horizon);
+        let mut r = match &workload {
+            Some(spec) => engine.serve_stream(spec.generate(), horizon),
+            None => engine.serve_poisson(&mut Rng::new(seed), rate, horizon),
+        };
         println!(
             "-- {mode} (slots={}, batch<={}, {} decode tokens, SLO {:.1} s, policy {:?}{}) --",
             cfg.max_slots,
@@ -325,6 +409,7 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         if r.slo_preemptions > 0 {
             println!("SLO preemptions {}", r.slo_preemptions);
         }
+        print_client_rows(&mut r);
         print_class_rows(&mut r);
         rows.push((mode, r.completed));
     }
@@ -372,7 +457,7 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
     let rate = args.f64_or("rate", 8.0)?;
     let horizon = args.f64_or("horizon", 30.0)?;
     let (policy, classes, age_bound_s) = policy_from_args(args)?;
-    let cfg = CbConfig {
+    let mut cfg = CbConfig {
         max_slots: args.usize_or("slots", 4)?,
         max_batch: args.usize_or("max-batch", 4)?,
         max_wait_s: args.f64_or("max-wait", 0.02)?,
@@ -396,9 +481,23 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         // seed + prompt_vocab are pinned to the cluster by `live_engine`
         ..CbConfig::default()
     };
-    let mut rng = Rng::new(cluster.config.seed);
-    let arrivals =
-        crate::server::live::live_arrivals(&mut rng, rate, horizon, meta.seq_len);
+    client_model_from_args(args, &mut cfg)?;
+    let workload = workload_from_args(
+        args,
+        cluster.config.seed,
+        rate,
+        horizon,
+        PromptLengths::UniformHalf(meta.seq_len),
+    )?;
+    let arrivals = match &workload {
+        Some(spec) => spec.generate(),
+        None => crate::server::live::live_arrivals(
+            &mut Rng::new(cluster.config.seed),
+            rate,
+            horizon,
+            meta.seq_len,
+        ),
+    };
     let replicas = args.usize_or("replicas", 1)?;
     if replicas > 1 {
         return serve_cb_live_fleet(args, &cluster, &cfg, arrivals, horizon, replicas);
@@ -474,6 +573,7 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         println!("scheduling policy {:?}: {} SLO preemptions", cfg.policy, r.slo_preemptions);
         print_class_rows(&mut r);
     }
+    print_client_rows(&mut r);
     if let Some((id, toks)) = live.generations.iter().find(|(_, t)| !t.is_empty()) {
         let k = toks.len().min(8);
         println!("sample generation (request {id}): {:?}", &toks[..k]);
@@ -558,6 +658,7 @@ fn serve_cb_fleet(
     horizon: f64,
     seed: u64,
     replicas: usize,
+    workload: Option<WorkloadSpec>,
 ) -> Result<()> {
     let route = route_from_args(args)?;
     let seq_len = proto.shape.seq_len;
@@ -570,8 +671,15 @@ fn serve_cb_fleet(
         let fs: u64 = fs.parse().context("bad --fault-seed")?;
         fleet = fleet.with_faults(FaultPlan::seeded(fs, replicas, horizon));
     }
-    let mut rng = Rng::new(seed);
-    let arrivals = crate::server::batcher::poisson_arrivals(&mut rng, rate, horizon, seq_len);
+    let arrivals = match &workload {
+        Some(spec) => spec.generate(),
+        None => crate::server::batcher::poisson_arrivals(
+            &mut Rng::new(seed),
+            rate,
+            horizon,
+            seq_len,
+        ),
+    };
     let n_arrivals = arrivals.len();
     let mut report = fleet.serve_stream(arrivals, horizon)?;
 
@@ -681,6 +789,13 @@ fn print_fleet_report(report: &mut ClusterReport) {
         report.fleet_hit_rate() * 100.0,
         report.load_skew(),
     );
+    if report.cancelled() > 0 || report.wasted_decode_tokens() > 0 {
+        println!(
+            "clients    cancelled {}  wasted decode tokens {}",
+            report.cancelled(),
+            report.wasted_decode_tokens()
+        );
+    }
     if !report.killed.is_empty() || report.restored > 0 || report.replayed > 0 {
         println!(
             "chaos      killed {:?}  recovered {} from checkpoints, {} replayed from prompt",
@@ -748,7 +863,7 @@ pub fn soak(args: &Args) -> Result<()> {
     };
     let strategy = Strategy::new(strategy_kind_from_args(args)?, n);
     let trace = BandwidthTrace::constant(bw, 1e9);
-    let cfg = CbConfig {
+    let mut cfg = CbConfig {
         max_slots: args.usize_or("slots", 8)?,
         max_batch: args.usize_or("max-batch", 8)?,
         decode_tokens: args.usize_or("decode-tokens", 16)?,
@@ -759,9 +874,12 @@ pub fn soak(args: &Args) -> Result<()> {
         seed,
         ..CbConfig::default()
     };
+    client_model_from_args(args, &mut cfg)?;
     let route = route_from_args(args)?;
     let proto = CbEngine::new(shape, strategy, params, trace, cfg);
     let seq_len = proto.shape.seq_len;
+    let workload =
+        workload_from_args(args, seed, rate, horizon, PromptLengths::Fixed(seq_len))?;
 
     println!(
         "== soak: {seeds} seeds x {replicas} replicas, rate {rate}/s, {horizon} s, \
@@ -776,8 +894,15 @@ pub fn soak(args: &Args) -> Result<()> {
         }
         let engines: Vec<CbEngine> = (0..replicas).map(|_| proto.clone()).collect();
         let mut fleet = ClusterEngine::new(engines, route).with_faults(plan);
-        let mut rng = Rng::new(seed);
-        let arrivals = crate::server::batcher::poisson_arrivals(&mut rng, rate, horizon, seq_len);
+        let arrivals = match &workload {
+            Some(spec) => spec.generate(),
+            None => crate::server::batcher::poisson_arrivals(
+                &mut Rng::new(seed),
+                rate,
+                horizon,
+                seq_len,
+            ),
+        };
         let n_arrivals = arrivals.len();
         let report = fleet
             .serve_stream(arrivals, horizon)

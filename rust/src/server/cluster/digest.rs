@@ -112,6 +112,10 @@ impl<B: DecodeBackend + ?Sized> DecodeBackend for DigestTap<'_, B> {
         self.inner.evict(id)
     }
 
+    fn cancel(&mut self, id: u64) -> Result<()> {
+        self.inner.cancel(id)
+    }
+
     fn register_block(
         &mut self,
         session: u64,

@@ -317,8 +317,11 @@ impl ClusterEngine {
                 let mut tap = DigestTap { inner: &mut backends[i], digest: &mut digests[i] };
                 let out = actors[i].step(&mut tap, now, horizon_s)?;
                 for event in out.events {
-                    // a completed request's checkpoint copy is garbage
-                    if let CbEvent::Complete { id } = event {
+                    // a completed or client-cancelled request's
+                    // checkpoint copy is garbage — cancellation is
+                    // terminal fleet-wide, so the copy must not restore
+                    // a request nobody is waiting for after a kill
+                    if let CbEvent::Complete { id } | CbEvent::Cancelled { id } = event {
                         ckpt_store.remove(&id);
                     }
                     events.push(ReplicaEvent { replica: i, event });
@@ -427,6 +430,17 @@ impl ClusterReport {
 
     pub fn kv_rejected(&self) -> usize {
         self.replicas.iter().map(|r| r.kv_rejected).sum()
+    }
+
+    /// Fleet total of client-cancelled requests (`CbConfig::patience_s`).
+    pub fn cancelled(&self) -> usize {
+        self.replicas.iter().map(|r| r.cancelled).sum()
+    }
+
+    /// Fleet total of tokens decoded after their client abandoned the
+    /// stream — the wasted-work metric the cancellation sweep minimizes.
+    pub fn wasted_decode_tokens(&self) -> usize {
+        self.replicas.iter().map(|r| r.wasted_decode_tokens).sum()
     }
 
     pub fn kv_violations(&self) -> usize {

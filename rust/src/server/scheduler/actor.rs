@@ -28,6 +28,7 @@ use crate::kv::prefix::RadixTree;
 use crate::kv::swap::SwapPolicy;
 use crate::sim::latency::{evaluate_on_trace, evaluate_on_trace_batched, Breakdown};
 use crate::util::stats::Summary;
+use crate::workload::{wasted_deliveries, TokenStream};
 
 use super::super::batcher::{Batcher, Request};
 use super::super::live::{prompt_stream_key, synth_prompt};
@@ -331,6 +332,11 @@ pub struct EngineActor {
     swap_ins: usize,
     swap_bytes: usize,
     slo_preemptions: usize,
+    /// per-request token delivery records (client model on only:
+    /// `CbConfig::patience_s > 0`)
+    streams: BTreeMap<u64, TokenStream>,
+    /// requests cancelled by their impatient client
+    cancelled: usize,
     replica: usize,
 }
 
@@ -419,6 +425,8 @@ impl EngineActor {
             swap_ins: 0,
             swap_bytes: 0,
             slo_preemptions: 0,
+            streams: BTreeMap::new(),
+            cancelled: 0,
             replica,
         }
     }
@@ -525,6 +533,8 @@ impl EngineActor {
             swap_ins,
             swap_bytes,
             slo_preemptions,
+            streams,
+            cancelled,
             ..
         } = self;
         let engine: &CbEngine = engine;
@@ -539,6 +549,72 @@ impl EngineActor {
         let swap_policy = swap_policy.slowed(*swap_slowdown);
         let swap_on = *swap_on;
         let ckpt_every = *ckpt_every;
+
+        // ---- client cancellation sweep (client model on only): a
+        //      request whose client stopped listening is torn down for
+        //      good — terminal, never requeued. Queued and swapped
+        //      requests cancel on any silence since their last sign of
+        //      life (arrival, or the last token delivered before an
+        //      eviction); in-flight slots cancel only on an OBSERVED
+        //      inter-token stall after at least one delivery —
+        //      pre-first-token abandonment is the queue's job, so a
+        //      borderline admission can never churn through
+        //      admit/cancel cycles. ----
+        if engine.cfg.patience_s > 0.0 {
+            let gone: Vec<u64> = batcher
+                .iter()
+                .filter(|r| {
+                    let seen =
+                        streams.get(&r.id).map(|s| s.last_seen()).unwrap_or(r.arrival_s);
+                    now - seen > engine.patience_for(r.id)
+                })
+                .map(|r| r.id)
+                .collect();
+            for id in gone {
+                batcher.remove(id);
+                // parked swap state dies with the cancellation; a fleet
+                // checkpoint copy never lived on this backend, so there
+                // is nothing parked to drop for restore-pending ids
+                if swapped.remove(&id).is_some() && !restored.remove(&id) {
+                    backend.drop_swapped(id)?;
+                }
+                stats.remove(&id);
+                events.push(CbEvent::Cancelled { id });
+                *cancelled += 1;
+            }
+            let mut i = 0;
+            while i < slots.len() {
+                let id = slots[i].id;
+                let stalled = streams
+                    .get(&id)
+                    .map(|st| {
+                        st.delivered() > 0 && now - st.last_seen() > engine.patience_for(id)
+                    })
+                    .unwrap_or(false);
+                if !stalled {
+                    i += 1;
+                    continue;
+                }
+                // the kill-site teardown for one slot: release pool
+                // bytes and block refs, drop unbacked pending blocks,
+                // tell the backend — but no requeue and no swap: the
+                // client is gone
+                let s = slots.remove(i);
+                pool.release_private(s.kv_bytes);
+                for &b in &s.blocks {
+                    pool.unref_block(b);
+                }
+                if let Some(&(first_pending, _, _)) = s.pending.first() {
+                    for b in tree.remove_subtree(first_pending) {
+                        pool.drop_unready(b);
+                    }
+                }
+                backend.cancel(s.id)?;
+                stats.remove(&s.id);
+                events.push(CbEvent::Cancelled { id: s.id });
+                *cancelled += 1;
+            }
+        }
 
         // a request whose full KV budget exceeds the cap can never be
         // served; drop it rather than head-of-line-block forever.
@@ -567,6 +643,7 @@ impl EngineActor {
         //      Policies without the hook skip this entirely, keeping
         //      the default path bit-identical. ----
         let mut preempt_swap_s = 0.0f64;
+        let mut preempt_cost_s = 0.0f64;
         if policy.preempts() && slots.len() >= max_slots && !batcher.is_empty() {
             let mut cands = candidate_views(
                 engine,
@@ -625,6 +702,31 @@ impl EngineActor {
                         if !pool.fits(need.saturating_sub(slots[vi].kv_bytes)) {
                             continue;
                         }
+                    }
+                    // cost-aware budget (`--slo-preempt-cost`): price
+                    // this eviction exactly as the preemption machinery
+                    // will resolve it — the swap round trip when swap
+                    // wins, the modeled recompute otherwise — and skip
+                    // victims once the iteration's accumulated price
+                    // would exceed the budget. Off (<= 0) keeps the
+                    // flat-count behavior bit for bit.
+                    if engine.cfg.slo_preempt_cost_s > 0.0 {
+                        let v = &slots[vi];
+                        let occ = engine.slot_prompt_bytes(v.tokens)
+                            + v.generated * engine.kv_step_bytes();
+                        let recompute = engine.recompute_cost_s(v.tokens, v.generated, now);
+                        let price = if swap_on
+                            && v.state == SlotState::Decoding
+                            && swap_policy.swap_beats_recompute(occ, recompute)
+                        {
+                            swap_policy.round_trip_s(occ)
+                        } else {
+                            recompute
+                        };
+                        if preempt_cost_s + price > engine.cfg.slo_preempt_cost_s {
+                            continue;
+                        }
+                        preempt_cost_s += price;
                     }
                     preempt_slot(
                         engine,
@@ -1197,6 +1299,19 @@ impl EngineActor {
                     itl.add(now - slots[i].last_token_at);
                 }
                 slots[i].last_token_at = now;
+                // client-model delivery record: one timestamp per token
+                // the client has never seen. Re-generation after a
+                // recompute eviction recreates tokens the client already
+                // holds (greedy decode is deterministic), so deliveries
+                // resume only past the high-water mark.
+                if engine.cfg.patience_s > 0.0 {
+                    let stream = streams
+                        .entry(slots[i].id)
+                        .or_insert_with(|| TokenStream::new(slots[i].arrival_s));
+                    if slots[i].generated > stream.deliveries.len() {
+                        stream.deliveries.push(now);
+                    }
+                }
                 let step_bytes = engine.kv_step_bytes();
                 pool.acquire_private(step_bytes);
                 slots[i].kv_bytes += step_bytes;
@@ -1432,6 +1547,22 @@ impl EngineActor {
             }
         }
 
+        // post-hoc waste accounting over the delivery records: tokens
+        // delivered after their client's abandon point
+        // ([`crate::workload::abandon_time`] semantics), plus the pooled
+        // arrival-to-each-token latency. Pure functions of the streams,
+        // so a cancellation-blind run's report can be re-scored with any
+        // patience by the same arithmetic.
+        let mut wasted_decode_tokens = 0usize;
+        let mut time_to_token = Summary::new();
+        for (&id, s) in &self.streams {
+            wasted_decode_tokens +=
+                wasted_deliveries(s.arrival_s, &s.deliveries, self.engine.patience_for(id));
+            for &d in &s.deliveries {
+                time_to_token.add(d - s.arrival_s);
+            }
+        }
+
         CbReport {
             completed: self.tally.completed,
             censored: self.censored,
@@ -1469,6 +1600,10 @@ impl EngineActor {
             slo_preemptions: self.slo_preemptions,
             classes: self.tally.classes,
             replica: self.replica,
+            cancelled: self.cancelled,
+            wasted_decode_tokens,
+            time_to_token,
+            streams: self.streams,
         }
     }
 }

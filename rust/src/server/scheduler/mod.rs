@@ -129,6 +129,24 @@
 //! `decode_tokens ± jitter`, so saturating waves stop completing in the
 //! same iteration and staggered completion paths get exercised.
 //!
+//! # The client model
+//!
+//! With `CbConfig::patience_s > 0` the engine serves *impatient streaming
+//! clients* ([`crate::workload`]): every generated token is stamped into
+//! the request's per-token delivery record
+//! ([`crate::workload::TokenStream`], reported in `CbReport::streams`),
+//! and a client that has seen nothing for longer than its patience
+//! abandons the request — the engine cancels it ([`CbEvent::Cancelled`]),
+//! freeing the slot, its pool bytes and shared-block refs, or its queue /
+//! parked-swap entry immediately. Queued and swapped requests cancel on
+//! any silence since their last sign of life (arrival or last delivered
+//! token); an in-flight slot cancels only on an observed inter-token
+//! stall after at least one delivery, so admission order can never churn
+//! a borderline request through admit/cancel cycles.
+//! `CbConfig::length_tail_alpha` completes the model with bounded-Pareto
+//! decode budgets (EOS-driven unknown-length generations). Both knobs
+//! default off, reproducing the pre-workload event streams bit for bit.
+//!
 //! The engine reports tail latency (p50/p95/p99), time-to-first-token,
 //! queue depth over time, goodput under an SLO, both horizon- and
 //! completion-based throughput with censored (unfinished) requests
@@ -271,6 +289,39 @@ pub struct CbConfig {
     /// clock stops charging them when compute already covers them. Off
     /// (default) preserves historical event streams bit for bit.
     pub copy_engine: bool,
+    /// client patience between observed events, seconds (`--patience`):
+    /// a request whose client has seen nothing (no arrival-ack token, no
+    /// next token) for longer than its patience is abandoned and the
+    /// engine cancels it ([`CbEvent::Cancelled`]) — queued and swapped
+    /// requests cancel on any silence since their last sign of life;
+    /// in-flight slots cancel only on an observed *inter-token* stall
+    /// after at least one delivery (pre-first-token abandonment is the
+    /// queue's job, so a borderline admission cannot churn). <= 0
+    /// (default) disables the client model entirely — no sweep runs, no
+    /// streams change.
+    pub patience_s: f64,
+    /// multiplicative spread of per-client patience (`--patience-spread`):
+    /// each request's patience is drawn log-uniformly over
+    /// `[patience_s/(1+spread), patience_s*(1+spread)]` from `(seed, id)`
+    /// ([`crate::workload::patience_for`]). 0 (default) gives every
+    /// client exactly `patience_s`.
+    pub patience_spread: f64,
+    /// tail index of the bounded-Pareto decode-length distribution
+    /// (`--length-tail`): models EOS/stop-sequence-driven unknown-length
+    /// decodes — budgets are drawn on `[1, decode_tokens]` from
+    /// `(seed, id)` ([`crate::workload::tail_budget`]), most short, a
+    /// heavy tail at the maximum; smaller alpha = heavier tail. <= 0
+    /// (default) keeps the `decode_tokens ± decode_jitter` behavior.
+    pub length_tail_alpha: f64,
+    /// per-iteration *cost* budget for the proactive SLO hook, seconds
+    /// (`--slo-preempt-cost`): each proactive eviction is priced like an
+    /// ordinary preemption (the swap round-trip when the victim would
+    /// swap, the modeled recompute otherwise) and the hook stops
+    /// evicting once the iteration's accumulated price would exceed this
+    /// budget — so one cheap victim is preferred over one enormous one.
+    /// <= 0 (default) keeps the flat `slo_preempt_budget` count
+    /// unpriced, bit-identical to the historical streams.
+    pub slo_preempt_cost_s: f64,
 }
 
 impl Default for CbConfig {
@@ -299,6 +350,10 @@ impl Default for CbConfig {
             checkpoint_every: 0,
             serial_decode: false,
             copy_engine: false,
+            patience_s: 0.0,
+            patience_spread: 0.0,
+            length_tail_alpha: 0.0,
+            slo_preempt_cost_s: 0.0,
         }
     }
 }
@@ -391,6 +446,12 @@ pub enum CbEvent {
     /// decode progress up to the checkpoint is preserved, like
     /// [`CbEvent::SwapIn`] but sourced from a dead replica's checkpoint
     Restore { id: u64 },
+    /// the request's client abandoned it (`CbConfig::patience_s`): the
+    /// engine freed its slot and KV blocks — or removed it from the
+    /// queue / dropped its parked swap state — immediately, with no
+    /// requeue. A cancelled request is terminal: never completed, never
+    /// censored, never re-admitted.
+    Cancelled { id: u64 },
 }
 
 /// LEGACY flat admission gate over Appendix-G mixed-KV memory — the
@@ -562,6 +623,16 @@ pub trait DecodeBackend {
     ) -> Result<()> {
         Ok(())
     }
+    /// The request's client abandoned it mid-decode
+    /// ([`CbEvent::Cancelled`]): drop the slot's state for good — the
+    /// request will never be re-admitted, so nothing needs preserving.
+    /// Defaults to [`Self::evict`] (the teardown is identical; only the
+    /// scheduler-side bookkeeping differs), which is also why the loop
+    /// calls this only for requests currently holding a slot — parked
+    /// swap state is dropped through [`Self::drop_swapped`].
+    fn cancel(&mut self, id: u64) -> Result<()> {
+        self.evict(id)
+    }
     /// Actual bytes currently held by in-flight slots plus the shared
     /// block store (0 if untracked); the loop counts a `kv_violations`
     /// whenever this exceeds the cap.
@@ -688,13 +759,22 @@ impl CbEngine {
         self.slot_prompt_bytes(hi) - self.slot_prompt_bytes(lo)
     }
 
-    /// The decode budget request `id` will receive: `decode_tokens`, or a
-    /// deterministic sample in `decode_tokens ± decode_jitter` drawn from
-    /// `(seed, id)` — the same everywhere the request is priced, admitted,
-    /// or re-admitted, on either backend.
+    /// The decode budget request `id` will receive: `decode_tokens`; a
+    /// bounded-Pareto draw on `[1, decode_tokens]` when
+    /// `length_tail_alpha > 0` (the EOS/unknown-length client model,
+    /// [`crate::workload::tail_budget`]); or a deterministic sample in
+    /// `decode_tokens ± decode_jitter`. All draws come from `(seed, id)`
+    /// — the same everywhere the request is priced, admitted, or
+    /// re-admitted, on either backend.
     pub fn decode_budget(&self, id: u64) -> usize {
         let d = self.cfg.decode_tokens;
-        if d == 0 || self.cfg.decode_jitter == 0 {
+        if d == 0 {
+            return 0;
+        }
+        if self.cfg.length_tail_alpha > 0.0 {
+            return crate::workload::tail_budget(self.cfg.seed, id, d, self.cfg.length_tail_alpha);
+        }
+        if self.cfg.decode_jitter == 0 {
             return d;
         }
         let j = self.cfg.decode_jitter.min(d - 1);
@@ -702,6 +782,19 @@ impl CbEngine {
             self.cfg.seed ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0xa076_1d64_78bd_642f,
         );
         d - j + rng.below(2 * j + 1)
+    }
+
+    /// The patience of request `id`'s client — how long a silence
+    /// (arrival with no first token, or a stalled token stream) it
+    /// tolerates before abandoning ([`crate::workload::patience_for`];
+    /// infinite when the client model is off).
+    pub fn patience_for(&self, id: u64) -> f64 {
+        crate::workload::patience_for(
+            self.cfg.seed,
+            id,
+            self.cfg.patience_s,
+            self.cfg.patience_spread,
+        )
     }
 
     /// Bytes request `id` will hold once `budget` decode tokens are

@@ -1,8 +1,11 @@
 //! Outcome accounting for a continuous-batching run: the report struct,
 //! the shared completion tally, and per-priority-class breakdowns.
 
+use std::collections::BTreeMap;
+
 use crate::sim::latency::Breakdown;
 use crate::util::stats::{Summary, WindowedCounter};
+use crate::workload::TokenStream;
 
 use super::CbEvent;
 
@@ -196,6 +199,22 @@ pub struct CbReport {
     /// fleet replica id this report belongs to (0 for single-replica
     /// runs — the historical engine is replica 0 of a fleet of one)
     pub replica: usize,
+    /// requests abandoned by their client and cancelled by the engine
+    /// (`CbConfig::patience_s`); terminal — disjoint from completed,
+    /// censored, and rejected
+    pub cancelled: usize,
+    /// tokens delivered after their client had already abandoned the
+    /// stream ([`crate::workload::wasted_deliveries`] summed over all
+    /// streams) — decode work burned for nobody; 0 with the client
+    /// model off
+    pub wasted_decode_tokens: usize,
+    /// latency from a request's arrival to EACH delivered token, pooled
+    /// over all requests — time-to-token, the streaming generalization
+    /// of TTFT (empty with the client model off)
+    pub time_to_token: Summary,
+    /// per-request token delivery records, keyed by request id
+    /// (populated only with the client model on — `patience_s > 0`)
+    pub streams: BTreeMap<u64, TokenStream>,
 }
 
 impl CbReport {

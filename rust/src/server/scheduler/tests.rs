@@ -1022,3 +1022,42 @@ fn slo_preempt_budget_frees_slots_for_a_high_class_burst() {
         assert_eq!(r.classes[0].completed, 4);
     }
 }
+
+#[test]
+fn slo_preempt_cost_gate_prices_the_proactive_hook() {
+    // the cost-aware budget (`slo_preempt_cost_s`): each proactive victim
+    // is priced at what the engine will actually pay to bring it back —
+    // the swap round trip when swap wins, the modeled recompute otherwise
+    // — and victims past the per-iteration budget stay resident. 0 is the
+    // unpriced legacy hook; a budget too large to bind must reproduce it
+    // bit for bit; a sub-nanosecond budget vetoes every victim without
+    // losing anyone.
+    let mk = |cost: f64| {
+        let cfg = CbConfig {
+            max_slots: 2,
+            max_batch: 2,
+            decode_tokens: 256,
+            policy: PolicyKind::SloClass,
+            classes: vec![0.1, 50.0],
+            slo_preempt_cost_s: cost,
+            ..CbConfig::default()
+        };
+        let arrivals = vec![
+            Request { id: 0, arrival_s: 0.0, tokens: 1024 },
+            Request { id: 2, arrival_s: 0.0, tokens: 1024 },
+            Request { id: 1, arrival_s: 0.05, tokens: 1024 },
+        ];
+        astra_engine(cfg).serve_stream(arrivals, 1e5)
+    };
+    let unpriced = mk(0.0);
+    let lavish = mk(1e9);
+    let stingy = mk(1e-9);
+    assert_eq!(unpriced.events, lavish.events, "an unbinding cost budget changed decisions");
+    assert_eq!(lavish.slo_preemptions, 1, "{lavish:?}");
+    assert_eq!(stingy.slo_preemptions, 0, "the stingy budget must veto the hook: {stingy:?}");
+    assert_eq!(stingy.completed, 3, "a vetoed preemption still serves everyone: {stingy:?}");
+    assert!(
+        !stingy.events.iter().any(|e| matches!(e, CbEvent::Evict { .. })),
+        "{stingy:?}"
+    );
+}

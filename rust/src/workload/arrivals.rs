@@ -1,0 +1,170 @@
+//! Generative arrival processes: seeded, pure-data request traces.
+//!
+//! A [`WorkloadSpec`] expands to a plain `Vec<Request>` up front — the
+//! engine never sees the generator, only the trace. Time-varying
+//! processes use Lewis–Shedler thinning: candidate points are drawn as a
+//! Poisson stream at the peak rate and accepted with probability
+//! `rate(t) / peak`. The plain-Poisson configuration skips the accept
+//! draw entirely, so its RNG consumption — and therefore the emitted
+//! trace — is bit-identical to the historical
+//! [`poisson_arrivals`](crate::server::batcher::poisson_arrivals) (fixed
+//! prompts) and [`live_arrivals`](crate::server::live::live_arrivals)
+//! (variable prompts) generators it replaces.
+
+use crate::comm::trace::BandwidthTrace;
+use crate::server::batcher::Request;
+use crate::util::rng::Rng;
+
+/// Salt for the burst-curve RNG stream, so the Markov rate curve and the
+/// candidate-point stream are independent draws from one seed.
+const CURVE_SALT: u64 = 0x2545_f491_4f6c_dd1d;
+
+/// The arrival-rate process over the run horizon (requests per second).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at `rate` req/s — the historical workload.
+    Poisson { rate: f64 },
+    /// Sinusoidal diurnal load curve: starts at `base_rate`, peaks at
+    /// `peak_rate` half a `period_s` in, and returns — a day of traffic
+    /// compressed into the horizon.
+    Diurnal { base_rate: f64, peak_rate: f64, period_s: f64 },
+    /// Markov-modulated bursts: the rate follows a
+    /// [`BandwidthTrace::markovian`] chain over `states` levels in
+    /// [`lo_rate`, `hi_rate`] req/s, dwelling `dwell_s` per slot — the
+    /// `sim/` trace machinery reused as a piecewise-constant rate curve
+    /// (the "Mbps" samples are read as req/s here).
+    MarkovBursts { lo_rate: f64, hi_rate: f64, states: usize, dwell_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// The thinning envelope: the maximum instantaneous rate.
+    pub fn peak_rate(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Diurnal { base_rate, peak_rate, .. } => base_rate.max(*peak_rate),
+            ArrivalProcess::MarkovBursts { hi_rate, .. } => *hi_rate,
+        }
+    }
+}
+
+/// Prompt-length distribution for generated requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromptLengths {
+    /// Every prompt is exactly this many tokens (the
+    /// [`poisson_arrivals`](crate::server::batcher::poisson_arrivals)
+    /// convention).
+    Fixed(usize),
+    /// Uniform in `[seq_len/2, seq_len]` — the
+    /// [`live_arrivals`](crate::server::live::live_arrivals) convention
+    /// (live runs must not exceed the AOT `seq_len`).
+    UniformHalf(usize),
+}
+
+/// A complete, seeded workload description. `generate()` is a pure
+/// function of this struct — same spec, same trace, any backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub seed: u64,
+    pub horizon_s: f64,
+    pub process: ArrivalProcess,
+    pub prompts: PromptLengths,
+    /// Multi-tenant mix weights. Empty = single-tenant (ids are the plain
+    /// 1..N sequence, and *no extra RNG draws happen* — the bit-for-bit
+    /// anchor). With `T` non-empty weights, each arrival draws a tenant
+    /// `k` proportional to weight and gets id `n*T + k`, so the
+    /// scheduler's `id % classes.len()` class mapping routes tenant `k`
+    /// to QoS class `k` when `--classes` lists `T` deadlines.
+    pub tenant_weights: Vec<f64>,
+}
+
+impl WorkloadSpec {
+    /// The historical fixed-rate workload as a spec (bit-identical to
+    /// [`poisson_arrivals`](crate::server::batcher::poisson_arrivals)).
+    pub fn poisson(seed: u64, rate: f64, horizon_s: f64, tokens: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            seed,
+            horizon_s,
+            process: ArrivalProcess::Poisson { rate },
+            prompts: PromptLengths::Fixed(tokens),
+            tenant_weights: Vec::new(),
+        }
+    }
+
+    /// Instantaneous arrival rate at time `t` (`curve` is the
+    /// pre-drawn Markov rate trace, unused by the other processes).
+    fn rate_at(&self, curve: Option<&BandwidthTrace>, t: f64) -> f64 {
+        match &self.process {
+            ArrivalProcess::Poisson { rate } => *rate,
+            ArrivalProcess::Diurnal { base_rate, peak_rate, period_s } => {
+                let phase = std::f64::consts::TAU * t / period_s.max(1e-9);
+                base_rate + (peak_rate - base_rate) * 0.5 * (1.0 - phase.cos())
+            }
+            ArrivalProcess::MarkovBursts { .. } => curve.expect("burst curve pre-drawn").at(t),
+        }
+    }
+
+    /// Expand the spec into an arrival trace, deterministically from the
+    /// seed. Ids start at 1 (tenant mixes remap them onto `n*T + k`, see
+    /// [`WorkloadSpec::tenant_weights`]); arrivals are strictly inside
+    /// the horizon and sorted by time.
+    pub fn generate(&self) -> Vec<Request> {
+        let peak = self.process.peak_rate();
+        assert!(peak > 0.0, "arrival process needs a positive peak rate");
+        let curve = match &self.process {
+            ArrivalProcess::MarkovBursts { lo_rate, hi_rate, states, dwell_s } => {
+                Some(BandwidthTrace::markovian(
+                    &mut Rng::new(self.seed ^ CURVE_SALT),
+                    *lo_rate,
+                    *hi_rate,
+                    *states,
+                    *dwell_s,
+                    self.horizon_s,
+                ))
+            }
+            _ => None,
+        };
+        let thinning = !matches!(self.process, ArrivalProcess::Poisson { .. });
+        let tenants = self.tenant_weights.len();
+        let weight_sum: f64 = self.tenant_weights.iter().sum();
+        let mixed = tenants > 0 && weight_sum > 0.0;
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        let mut n = 0u64;
+        loop {
+            t += rng.exp(peak);
+            if t >= self.horizon_s {
+                break;
+            }
+            // Thinning accept; skipped (not just always-true) for plain
+            // Poisson so the RNG stream matches the historical generators.
+            if thinning && !rng.chance(self.rate_at(curve.as_ref(), t) / peak) {
+                continue;
+            }
+            n += 1;
+            let tokens = match self.prompts {
+                PromptLengths::Fixed(k) => k,
+                PromptLengths::UniformHalf(seq_len) => {
+                    let lo = (seq_len / 2).max(1);
+                    lo + rng.below(seq_len - lo + 1)
+                }
+            };
+            let id = if mixed {
+                let mut u = rng.f64() * weight_sum;
+                let mut k = tenants - 1;
+                for (i, w) in self.tenant_weights.iter().enumerate() {
+                    if u < *w {
+                        k = i;
+                        break;
+                    }
+                    u -= w;
+                }
+                n * tenants as u64 + k as u64
+            } else {
+                n
+            };
+            out.push(Request { id, arrival_s: t, tokens });
+        }
+        out
+    }
+}

@@ -1,0 +1,57 @@
+//! The client model: per-request patience and heavy-tailed decode
+//! lengths, drawn statelessly from `(seed, id)`.
+//!
+//! Both draws follow the per-request stream idiom already used by
+//! `CbEngine::decode_budget` and `FaultPlan::seeded` — a fresh
+//! [`Rng`] keyed on `seed ^ id * GOLDEN ^ SALT` — so a request's
+//! patience and budget are properties of the *workload*, identical
+//! across replicas, backends, and re-admissions.
+
+use crate::util::rng::Rng;
+
+const GOLDEN: u64 = 0x9e37_79b9_7f4a_7c15;
+/// Salt for patience draws (distinct from the decode-jitter and fault
+/// salts so the streams never alias).
+const PATIENCE_SALT: u64 = 0xc2b2_ae3d_27d4_eb4f;
+/// Salt for heavy-tailed budget draws.
+const TAIL_SALT: u64 = 0x9ddf_ea08_eb38_2d69;
+
+/// How long request `id`'s client waits between observed events (arrival
+/// or a delivered token) before abandoning the request.
+///
+/// `patience_s <= 0` disables the client model (infinite patience —
+/// the historical behavior). `spread == 0` gives every client exactly
+/// `patience_s`; `spread > 0` draws log-uniformly over
+/// `[patience_s / (1+spread), patience_s * (1+spread)]`, so the median
+/// stays at `patience_s` while individual clients vary multiplicatively.
+pub fn patience_for(seed: u64, id: u64, patience_s: f64, spread: f64) -> f64 {
+    if patience_s <= 0.0 {
+        return f64::INFINITY;
+    }
+    if spread <= 0.0 {
+        return patience_s;
+    }
+    let s = 1.0 + spread;
+    let mut rng = Rng::new(seed ^ id.wrapping_mul(GOLDEN) ^ PATIENCE_SALT);
+    patience_s / s * (s * s).powf(rng.f64())
+}
+
+/// Heavy-tailed decode budget for request `id`: a bounded Pareto draw on
+/// `[1, decode_tokens]` with tail index `alpha` — the EOS/stop-sequence
+/// model, where most generations stop early but a heavy tail runs to the
+/// configured maximum. Smaller `alpha` = heavier tail (more long
+/// generations); `alpha <= 0` is handled by the caller as "off".
+///
+/// Inverse-CDF of the bounded Pareto with lower bound 1 and upper bound
+/// `h = decode_tokens`: `x = (1 - u (1 - h^-alpha))^(-1/alpha)`.
+pub fn tail_budget(seed: u64, id: u64, decode_tokens: usize, alpha: f64) -> usize {
+    debug_assert!(alpha > 0.0);
+    if decode_tokens <= 1 {
+        return decode_tokens;
+    }
+    let h = decode_tokens as f64;
+    let mut rng = Rng::new(seed ^ id.wrapping_mul(GOLDEN) ^ TAIL_SALT);
+    let u = rng.f64();
+    let x = (1.0 - u * (1.0 - h.powf(-alpha))).powf(-1.0 / alpha);
+    (x.floor() as usize).clamp(1, decode_tokens)
+}

@@ -1,0 +1,41 @@
+//! Production workload models: generative arrival traces, impatient
+//! streaming clients, and per-token delivery records.
+//!
+//! # Module contract
+//!
+//! Everything in this module is **pure data drawn deterministically from a
+//! seed** — the same contract as [`crate::sim::fault::FaultPlan`]. A
+//! [`WorkloadSpec`](arrivals::WorkloadSpec) expands to a plain
+//! `Vec<Request>` before the engine starts; the client-model draws
+//! ([`client::patience_for`], [`client::tail_budget`]) are stateless
+//! functions of `(seed, id)`. The serving engine owns *all* state
+//! transitions: it decides when a request is `Cancelled`, frees the slot
+//! and KV blocks, and records the [`TokenStream`](stream::TokenStream)
+//! deliveries. Generators never observe engine state, so any trace can be
+//! replayed bit-for-bit against any backend — the property the
+//! `tests/live_vs_model.rs` differential harness and the chaos soak both
+//! lean on.
+//!
+//! Three pieces:
+//!
+//! - [`arrivals`] — arrival processes beyond fixed-rate Poisson: diurnal
+//!   load curves and Markov-modulated bursts (thinning over the `sim/`
+//!   bandwidth-trace machinery), plus multi-tenant mixes layered on the
+//!   `--classes` QoS ids. The plain-Poisson configuration reproduces the
+//!   historical [`poisson_arrivals`](crate::server::batcher::poisson_arrivals)
+//!   and [`live_arrivals`](crate::server::live::live_arrivals) streams bit
+//!   for bit.
+//! - [`client`] — per-request patience (log-uniform spread around
+//!   `--patience`) and heavy-tailed decode budgets (bounded Pareto,
+//!   generalizing `--decode-jitter`).
+//! - [`stream`] — per-token delivery timestamps and the pure post-hoc
+//!   waste accounting (`abandon_time` / `wasted_deliveries`) that defines
+//!   `wasted_decode_tokens`.
+
+pub mod arrivals;
+pub mod client;
+pub mod stream;
+
+pub use arrivals::{ArrivalProcess, PromptLengths, WorkloadSpec};
+pub use client::{patience_for, tail_budget};
+pub use stream::{abandon_time, wasted_deliveries, TokenStream};

@@ -1,0 +1,104 @@
+//! Per-token delivery records and the pure waste accounting built on
+//! them.
+//!
+//! The engine appends one timestamp per *newly generated* token to a
+//! request's [`TokenStream`] (re-generation after a recompute eviction
+//! does not re-deliver — the client already has those tokens), so a
+//! stream is exactly what the client saw: time-to-each-token, not just
+//! TTFT/ITL summaries. [`abandon_time`] and [`wasted_deliveries`] are
+//! pure functions of a stream — the same arithmetic scores a
+//! cancellation-aware run (where the engine stopped at the abandon
+//! point) and a cancellation-blind baseline (where it decoded on for a
+//! client that had already left), which is what makes the wasted-work
+//! acceptance comparison apples-to-apples.
+
+/// The delivery record of one request: its arrival and the virtual-clock
+/// timestamp of every token the engine handed to the client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenStream {
+    pub arrival_s: f64,
+    /// Delivery time of token `i` (monotone non-decreasing).
+    pub deliveries: Vec<f64>,
+}
+
+impl TokenStream {
+    pub fn new(arrival_s: f64) -> TokenStream {
+        TokenStream { arrival_s, deliveries: Vec::new() }
+    }
+
+    /// Tokens delivered so far.
+    pub fn delivered(&self) -> usize {
+        self.deliveries.len()
+    }
+
+    /// Time of the most recent delivery (the arrival when none yet) —
+    /// the client's last observed sign of life.
+    pub fn last_seen(&self) -> f64 {
+        self.deliveries.last().copied().unwrap_or(self.arrival_s)
+    }
+}
+
+/// When a client with the given `patience` between observed events walks
+/// away from this stream: the first gap (arrival→token or token→token)
+/// longer than `patience` ends the wait at `last_seen + patience`; a
+/// stream with no such gap is abandoned `patience` after its final
+/// delivery (the client eventually stops listening either way — tokens
+/// delivered before that point are all useful).
+pub fn abandon_time(arrival_s: f64, deliveries: &[f64], patience_s: f64) -> f64 {
+    let mut last = arrival_s;
+    for &d in deliveries {
+        if d - last > patience_s {
+            return last + patience_s;
+        }
+        last = d;
+    }
+    last + patience_s
+}
+
+/// Tokens delivered strictly after the client abandoned the stream —
+/// decode work the engine burned for nobody. Zero for a client with
+/// infinite patience.
+pub fn wasted_deliveries(arrival_s: f64, deliveries: &[f64], patience_s: f64) -> usize {
+    if !patience_s.is_finite() {
+        return 0;
+    }
+    let gone = abandon_time(arrival_s, deliveries, patience_s);
+    deliveries.iter().filter(|&&d| d > gone).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abandon_at_first_long_gap() {
+        // arrival 0, tokens at 1, 2, 6, 7 with patience 2: the 2→6 gap
+        // kills it at 4; tokens 6 and 7 are wasted.
+        let d = [1.0, 2.0, 6.0, 7.0];
+        assert_eq!(abandon_time(0.0, &d, 2.0), 4.0);
+        assert_eq!(wasted_deliveries(0.0, &d, 2.0), 2);
+    }
+
+    #[test]
+    fn patient_client_wastes_nothing() {
+        let d = [1.0, 2.0, 6.0, 7.0];
+        assert_eq!(abandon_time(0.0, &d, 10.0), 17.0);
+        assert_eq!(wasted_deliveries(0.0, &d, 10.0), 0);
+        assert_eq!(wasted_deliveries(0.0, &d, f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn never_served_abandons_after_arrival() {
+        assert_eq!(abandon_time(3.0, &[], 1.5), 4.5);
+        assert_eq!(wasted_deliveries(3.0, &[], 1.5), 0);
+    }
+
+    #[test]
+    fn last_seen_tracks_deliveries() {
+        let mut s = TokenStream::new(2.0);
+        assert_eq!(s.last_seen(), 2.0);
+        s.deliveries.push(3.5);
+        assert_eq!(s.last_seen(), 3.5);
+        assert_eq!(s.delivered(), 1);
+    }
+}

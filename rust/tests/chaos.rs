@@ -335,3 +335,82 @@ fn live_fleet_under_faults_matches_the_model_and_recovers() {
         .count();
     assert!(full > 0, "no completed request carries a real generation");
 }
+
+/// Every id an event mentions, for the cancellation-terminality sweep.
+fn event_ids(e: &CbEvent) -> Vec<u64> {
+    match e {
+        CbEvent::Admit { ids } | CbEvent::Decode { ids } => ids.clone(),
+        CbEvent::Complete { id }
+        | CbEvent::Evict { id }
+        | CbEvent::Reject { id }
+        | CbEvent::PrefillChunk { id, .. }
+        | CbEvent::PrefixHit { id, .. }
+        | CbEvent::SwapOut { id }
+        | CbEvent::SwapIn { id }
+        | CbEvent::Killed { id }
+        | CbEvent::Checkpoint { id }
+        | CbEvent::Restore { id }
+        | CbEvent::Cancelled { id } => vec![*id],
+    }
+}
+
+#[test]
+fn cancel_heavy_soak_under_faults_keeps_the_checklist() {
+    // cancellation x chaos: an overloaded fleet with impatient clients
+    // (heavy-tailed decode lengths, swap parking, periodic checkpoints)
+    // soaked over seeded fault plans. The seed sweep interleaves cancels
+    // with every other lifecycle edge — cancel of a swapped-out request,
+    // cancel between a checkpoint and its restore, cancel of a request a
+    // replica kill just orphaned onto a survivor's queue — and on every
+    // run the extended accounting must close (completed + rejected +
+    // censored + cancelled == arrivals), no request may be
+    // double-cancelled, cancellation must be terminal, and the KV pool
+    // must stay violation-free.
+    let horizon = 6.0;
+    let base = CbConfig {
+        max_slots: 3,
+        decode_tokens: 12,
+        swap_bandwidth_mbps: 1e5,
+        checkpoint_every: 4,
+        patience_s: 0.8,
+        patience_spread: 1.0,
+        length_tail_alpha: 1.2,
+        seed: 7,
+        ..CbConfig::default()
+    };
+    let cap = 5 * engine(base.clone()).kv_projection(1024);
+    let cfg = CbConfig { kv_cap_bytes: cap, ..base };
+    let (mut kills, mut cancels, mut completes) = (0usize, 0usize, 0usize);
+    for seed in 0..60u64 {
+        let plan = FaultPlan::seeded(seed, 3, horizon);
+        let arrivals =
+            astra::server::batcher::poisson_arrivals(&mut Rng::new(7), 12.0, horizon, 1024);
+        let n = arrivals.len();
+        let r = fleet(&cfg, 3, Some(plan)).serve_stream(arrivals, horizon).unwrap();
+        assert_chaos_invariants(n, &r)
+            .unwrap_or_else(|e| panic!("fault seed {seed}: {e:#}"));
+        // cancellation is terminal fleet-wide: once an id is cancelled,
+        // no later event of any kind may mention it
+        let mut gone: BTreeSet<u64> = BTreeSet::new();
+        for e in &r.events {
+            for id in event_ids(&e.event) {
+                assert!(
+                    !gone.contains(&id),
+                    "fault seed {seed}: {:?} on replica {} touches cancelled request {id}",
+                    e.event,
+                    e.replica
+                );
+            }
+            if let CbEvent::Cancelled { id } = e.event {
+                gone.insert(id);
+            }
+        }
+        kills += r.killed.len();
+        cancels += r.cancelled();
+        completes += r.completed();
+    }
+    // the soak must actually exercise what it guards
+    assert!(kills > 0, "60 seeds never killed a replica");
+    assert!(cancels > 0, "impatient clients never cancelled — patience too generous");
+    assert!(completes > 0, "nothing completed — patience too harsh");
+}

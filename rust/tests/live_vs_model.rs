@@ -77,6 +77,11 @@ fn assert_agree(m: &CbReport, live: &LiveReport, label: &str) {
     assert_eq!(m.swap_bytes, live.report.swap_bytes, "{label}");
     assert_eq!(m.slo_preemptions, live.report.slo_preemptions, "{label}");
     assert_eq!(m.classes.len(), live.report.classes.len(), "{label}");
+    // the client model is part of the decision stream: identical
+    // cancellations, waste accounting, and per-token delivery timestamps
+    assert_eq!(m.cancelled, live.report.cancelled, "{label}");
+    assert_eq!(m.wasted_decode_tokens, live.report.wasted_decode_tokens, "{label}");
+    assert_eq!(m.streams, live.report.streams, "{label}: delivery timestamps diverged");
     // the live sessions' real memory never contradicted the model's gate
     assert_eq!(live.report.kv_violations, 0, "{label}");
 }
@@ -427,6 +432,71 @@ fn fleet_live_and_model_agree_across_a_mid_trace_drain() {
     // before its removal, the survivor finished the fleet's work
     assert!(m.events.iter().any(|e| e.replica == 0));
     assert!(m.replicas[1].completed > 0);
+}
+
+#[test]
+fn live_and_model_agree_with_impatient_clients() {
+    // the streaming-client differential: saturating load over a small
+    // slot count makes queue waits blow past patience deadlines, so
+    // requests are cancelled mid-run (Cancelled events, slots and blocks
+    // freed) — and the live path must make the identical cancellation
+    // decisions, free the identical sessions, and record the identical
+    // per-token delivery timestamps
+    let cluster = tiny_cluster(2, 31);
+    let seq = cluster.artifact.meta.seq_len;
+    let cfg = CbConfig {
+        max_slots: 2,
+        max_batch: 2,
+        decode_tokens: 8,
+        patience_s: 5.0,
+        patience_spread: 1.0,
+        ..CbConfig::default()
+    };
+    let arrivals = live_arrivals(&mut Rng::new(501), 40.0, 4.0, seq);
+    assert!(arrivals.len() > 10, "{}", arrivals.len());
+    let (m, live) = run_pair(&cluster, &cfg, &arrivals, 1e4);
+    assert_agree(&m, &live, "impatient clients");
+    assert!(m.cancelled > 0, "saturation must cancel someone: {m:?}");
+    assert!(m.completed > 0, "patient early arrivals must still finish: {m:?}");
+    assert!(!m.streams.is_empty(), "patience on must record delivery streams");
+    assert!(!m.time_to_token.is_empty());
+    // cancellation is terminal: each Cancelled id appears once and never
+    // completes, and cancelled requests never enter the live generations
+    let mut cancelled = BTreeSet::new();
+    let mut completed = BTreeSet::new();
+    for e in &m.events {
+        match e {
+            CbEvent::Cancelled { id } => {
+                assert!(cancelled.insert(*id), "request {id} cancelled twice")
+            }
+            CbEvent::Complete { id } => {
+                completed.insert(*id);
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(cancelled.len(), m.cancelled);
+    assert!(cancelled.is_disjoint(&completed), "a cancelled request completed");
+    for id in &cancelled {
+        assert!(!live.generations.contains_key(id), "cancelled {id} kept a generation");
+    }
+
+    // the zero-cancellation anchor: patience off is the legacy code path,
+    // and an armed-but-never-firing patience (huge finite deadline) must
+    // reproduce its event stream bit for bit — recording delivery
+    // timestamps without perturbing a single decision
+    let off = CbConfig { patience_s: 0.0, patience_spread: 0.0, ..cfg.clone() };
+    let arrivals = live_arrivals(&mut Rng::new(501), 40.0, 4.0, seq);
+    let (m_off, live_off) = run_pair(&cluster, &off, &arrivals, 1e4);
+    let huge = CbConfig { patience_s: 1e9, ..cfg.clone() };
+    let (m_huge, live_huge) = run_pair(&cluster, &huge, &arrivals, 1e4);
+    assert_eq!(m_off.events, m_huge.events, "an unfired patience sweep changed decisions");
+    assert_eq!(live_off.report.events, live_huge.report.events);
+    assert_eq!(live_off.generations, live_huge.generations);
+    assert_eq!(m_huge.cancelled, 0);
+    assert_eq!(m_huge.wasted_decode_tokens, 0, "infinite-patience clients waste nothing");
+    assert!(!m_huge.streams.is_empty(), "armed patience must record streams");
+    assert!(m_off.streams.is_empty(), "patience off must not record streams");
 }
 
 #[test]
