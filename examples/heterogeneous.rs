@@ -8,6 +8,10 @@
 use anyhow::Result;
 use astra::config::RunConfig;
 use astra::coordinator::{Cluster, TokenPartition};
+use astra::model::shape::{TransformerShape, VqSetting};
+use astra::parallel::cost::{DeviceModel, FleetProfile};
+use astra::parallel::plan::Planner;
+use astra::parallel::strategies::{Strategy, StrategyKind};
 use astra::tensor::{max_abs_diff, Tensor};
 use astra::util::rng::Rng;
 
@@ -19,6 +23,37 @@ fn main() -> Result<()> {
         ("strong skew", vec![4.0, 2.0, 1.0, 0.5]),
         ("one big", vec![13.0, 1.0, 1.0, 1.0]),
     ];
+
+    // --- serving cost model: what the straggler-free planner would do ---
+    // one modeled request (prefill + 32 batched decode steps) at 100 Mbps:
+    // even split priced like the legacy engine vs the planner's argmin
+    // over profile-weighted and hybrid TP/SP candidates — the same
+    // decision `serve-cb --device-speeds ... --replan-every S` makes live
+    let planner = Planner::new(
+        TransformerShape::paper_encoder(1024),
+        Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+        DeviceModel::paper_1660ti(),
+        0.0006,
+    );
+    println!(
+        "{:<14}{:>12}{:>12}{:>9}{:>26}",
+        "fleet", "even (s)", "planned (s)", "speedup", "chosen plan"
+    );
+    for (name, speeds) in &fleets {
+        let profile = FleetProfile::from_speeds(DeviceModel::paper_1660ti(), speeds);
+        let even = planner.score_index(0, &profile, 100.0);
+        let plan = planner.plan(&profile, 100.0);
+        println!(
+            "{:<14}{:>12.3}{:>12.3}{:>9.2}{:>26}",
+            name,
+            even,
+            plan.modeled_latency_s,
+            even / plan.modeled_latency_s,
+            plan.label
+        );
+    }
+    println!();
+
     println!("{:<14}{:>22}{:>10}{:>14}", "fleet", "token split", "FPAR", "logit dev");
     for (name, speeds) in fleets {
         // probe seq_len from the artifact

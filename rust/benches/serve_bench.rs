@@ -186,6 +186,26 @@ fn emit_json(out: &str) {
     m.push(name, "cancelled", r.cancelled as f64);
     m.push(name, "wasted_decode_tokens", r.wasted_decode_tokens as f64);
     m.push(name, "p95_time_to_token", r.time_to_token.p95());
+    // heterogeneous 4/2/1/0.5 fleet under the Markov bandwidth trace:
+    // profile-weighted pricing with the t=0 plan pinned (static) vs
+    // online re-planning every 5 virtual seconds. Gate directions:
+    // completed is an exact pin like every completed metric; p95 and
+    // replans both regress *upward* — longer tails or plan churn fail
+    // the gate even if throughput holds
+    let hetero_static =
+        CbConfig { device_speeds: vec![4.0, 2.0, 1.0, 0.5], ..CbConfig::default() };
+    let hetero_replan = CbConfig { replan_every_s: 5.0, ..hetero_static.clone() };
+    let mut hetero_rng = Rng::new(7);
+    let hetero_trace = BandwidthTrace::markovian(&mut hetero_rng, 20.0, 100.0, 9, 1.0, 60.0);
+    let hetero_cases =
+        [("cb8_hetero_static", hetero_static), ("cb8_hetero_replan", hetero_replan)];
+    for (name, cfg) in hetero_cases {
+        let mut e = engine(hetero_trace.clone(), cfg);
+        let mut r = e.serve_stream(saturating(2000), 60.0);
+        m.push(name, "completed", r.completed as f64);
+        m.push(name, "p95", r.latency.p95());
+        m.push(name, "replans", r.replans as f64);
+    }
     m.write(out).expect("writing bench metrics");
 }
 

@@ -74,19 +74,31 @@ pub struct DecodeSession<'a> {
     /// [`crate::model::kv_cache_bytes_astra_positional`]. Off (the
     /// default) preserves the classic prompt-scaled partition exactly.
     positional: bool,
+    /// profile-weighted split override (heterogeneous serving): when set,
+    /// classic-mode [`Self::local_range`] partitions this prompt
+    /// proportionally to these per-device weights instead of scaling the
+    /// cluster's even partition. Affects only *which* rows are held in
+    /// full precision — never correctness — so sessions admitted under
+    /// different plans coexist in one batch.
+    split_weights: Option<Vec<f64>>,
 }
 
 /// Scale the cluster's token partition down to a `t`-token prompt: each
-/// device keeps its proportional share (floor), and the tail device — the
-/// one that owns the sequence tail and runs decode — absorbs the
-/// remainder. For `t == partition.total()` this reproduces the partition
-/// exactly, so full-length prompts behave as before.
+/// device keeps its proportional share (floor), and the *largest-share*
+/// (fastest) device absorbs the rounding remainder — on a skewed fleet the
+/// old tail-absorbs rule handed the extra tokens to whatever device
+/// happened to sit last, which on a strong-skew profile is the slowest
+/// straggler. Ties break toward the tail-most maximum, so even partitions
+/// keep the historical tail-owns-remainder behavior bit for bit. For
+/// `t == partition.total()` this reproduces the partition exactly.
 pub fn prompt_partition(full: &TokenPartition, t: usize) -> TokenPartition {
-    let n = full.n_devices();
     let total = full.total().max(1);
     let mut sizes: Vec<usize> = full.sizes.iter().map(|&s| s * t / total).collect();
     let used: usize = sizes.iter().sum();
-    sizes[n - 1] += t - used;
+    // max_by_key returns the last maximum, i.e. the tail-most tie
+    let fastest =
+        full.sizes.iter().enumerate().max_by_key(|&(_, &s)| s).map(|(i, _)| i).unwrap_or(0);
+    sizes[fastest] += t - used;
     TokenPartition::explicit(sizes)
 }
 
@@ -110,6 +122,7 @@ pub struct SessionBuilder<'a, 'p> {
     s_max: Option<usize>,
     deferred: bool,
     positional: bool,
+    split_weights: Option<Vec<f64>>,
 }
 
 impl<'a, 'p> SessionBuilder<'a, 'p> {
@@ -138,12 +151,26 @@ impl<'a, 'p> SessionBuilder<'a, 'p> {
         self
     }
 
+    /// Profile-weighted split override (heterogeneous serving, see the
+    /// field doc on [`DecodeSession`]). Ignored unless the weights are
+    /// positive and match the cluster's device count; classic mode only —
+    /// positional locality keeps the even partition that makes rows
+    /// shareable.
+    pub fn split_weights(mut self, weights: Vec<f64>) -> Self {
+        self.split_weights = Some(weights);
+        self
+    }
+
     pub fn build(self) -> Result<DecodeSession<'a>> {
         let s_max = self
             .s_max
             .unwrap_or(self.prompt.len() + self.cluster.artifact.meta.seq_len);
         let mut sess = DecodeSession::alloc(self.cluster, self.prompt, s_max)?;
         sess.positional = self.positional;
+        let n = self.cluster.partition.n_devices();
+        sess.split_weights = self
+            .split_weights
+            .filter(|w| w.len() == n && w.iter().all(|&x| x > 0.0) && !self.positional);
         if self.deferred {
             sess.pending_prompt = self.prompt.to_vec();
         } else {
@@ -157,7 +184,14 @@ impl<'a> DecodeSession<'a> {
     /// Start building a session. Decoder artifacts only; accepts any
     /// prompt of 1..=seq_len tokens (variable-length serving).
     pub fn builder<'p>(cluster: &'a Cluster, prompt: &'p [usize]) -> SessionBuilder<'a, 'p> {
-        SessionBuilder { cluster, prompt, s_max: None, deferred: false, positional: false }
+        SessionBuilder {
+            cluster,
+            prompt,
+            s_max: None,
+            deferred: false,
+            positional: false,
+            split_weights: None,
+        }
     }
 
     /// Seed the cache from the prompt token ids with the default budget —
@@ -204,6 +238,7 @@ impl<'a> DecodeSession<'a> {
             prompt_tail: *prompt.last().expect("prompt checked non-empty"),
             pending_prompt: Vec::new(),
             positional: false,
+            split_weights: None,
         })
     }
 
@@ -223,7 +258,14 @@ impl<'a> DecodeSession<'a> {
             let local = seq / n + seq % n;
             (seq - local, local)
         } else {
-            let part = prompt_partition(&self.cluster.partition, self.prompt_len);
+            // an active heterogeneous plan re-weights this prompt's split;
+            // builder validation guarantees the weights match n and are
+            // positive, so proportional() cannot fail here
+            let part = match &self.split_weights {
+                Some(w) => TokenPartition::proportional(self.prompt_len, w)
+                    .expect("builder-validated split weights"),
+                None => prompt_partition(&self.cluster.partition, self.prompt_len),
+            };
             (part.start(n - 1), part.sizes[n - 1])
         }
     }
@@ -801,6 +843,8 @@ mod tests {
 
     #[test]
     fn prompt_partition_scales_and_tail_owns_remainder() {
+        // even partitions: all shares tie, so the tail-most device still
+        // absorbs the remainder — the historical behavior, pinned exactly
         let full = TokenPartition::explicit(vec![4, 4, 4, 4]);
         assert_eq!(prompt_partition(&full, 16).sizes, vec![4, 4, 4, 4]);
         assert_eq!(prompt_partition(&full, 10).sizes, vec![2, 2, 2, 4]);
@@ -811,6 +855,24 @@ mod tests {
         let p = prompt_partition(&het, 8);
         assert_eq!(p.total(), 8);
         assert!(p.sizes[0] >= p.sizes[1]);
+    }
+
+    #[test]
+    fn prompt_partition_remainder_goes_to_the_fastest_device() {
+        // regression (PR 10): the remainder used to go to the *tail*
+        // device, which on a skewed fleet is the slowest straggler.
+        // Hand-computed: shares [8,4,4] of 16 scaled to 7 tokens floor to
+        // [3,1,1] (used 5), remainder 2 -> device 0 (largest share).
+        let het = TokenPartition::explicit(vec![8, 4, 4]);
+        assert_eq!(prompt_partition(&het, 7).sizes, vec![5, 1, 1]);
+        // fastest device at the tail: floors [0,1,3] (used 4), rem 3 -> tail
+        let rev = TokenPartition::explicit(vec![2, 4, 8]);
+        assert_eq!(prompt_partition(&rev, 7).sizes, vec![0, 1, 6]);
+        // tie between equal shares breaks toward the tail-most maximum
+        let tie = TokenPartition::explicit(vec![4, 4]);
+        assert_eq!(prompt_partition(&tie, 3).sizes, vec![1, 2]);
+        // exact scaling still reproduces the partition
+        assert_eq!(prompt_partition(&het, 16).sizes, vec![8, 4, 4]);
     }
 
     fn tiny_cluster() -> Cluster {

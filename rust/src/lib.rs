@@ -192,6 +192,37 @@
 //! exists to minimize. All knobs default off, reproducing the pre-client
 //! event streams bit for bit, and the differential harness pins live ==
 //! model including `Cancelled` events.
+//!
+//! # Heterogeneous fleets and re-planning
+//!
+//! Real fleets are skewed — a workstation, a laptop, two SBCs — and an
+//! even token split runs every collective at the pace of the slowest
+//! device. A [`parallel::cost::FleetProfile`] (per-device speed factors
+//! plus a per-link bandwidth-factor matrix, `CbConfig::device_speeds` /
+//! `--device-speeds 4,2,1,0.5`) feeds the heterogeneous schedule builders
+//! ([`parallel::strategies::Strategy::schedule_on`] and friends), which
+//! split tokens proportionally to measured speed and price each stage at
+//! its own device's rate. On top sits the pure
+//! [`parallel::plan::Planner`]: profile + bandwidth in, argmin
+//! [`parallel::plan::Plan`] out over a fixed five-candidate list (even
+//! status quo, proportional and damped re-weightings of the configured
+//! strategy, and Galaxy-style hybrid TP/SP re-partitions).
+//!
+//! The engine re-plans *online*: every `--replan-every` seconds it folds
+//! the bandwidth trace into an EWMA estimate, re-scores the candidates,
+//! and swaps plans only past a hysteresis margin
+//! ([`server::scheduler::CbEvent::Replan`], counted in
+//! `CbReport::replans`). In-flight sessions keep the split they were
+//! admitted under; a swap only affects later admissions, where the live
+//! backend partitions prompts by the plan's weights
+//! ([`coordinator::SessionBuilder::split_weights`]). Placement awareness
+//! closes the loop at admission ([`server::policy::PlacementAware`] orders
+//! the queue by modeled decode drain time) and at routing
+//! ([`server::cluster::Placement`] sends work to the replica with the
+//! smallest `(load + 1) / decode_speed`). Every knob defaults off, and a
+//! uniform profile — or `--replan-every 0` — reproduces the legacy
+//! engine's event streams bit for bit (`tests/hetero.rs`,
+//! `tests/live_vs_model.rs`).
 
 pub mod comm;
 pub mod config;

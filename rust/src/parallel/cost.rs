@@ -190,6 +190,116 @@ impl Schedule {
     }
 }
 
+/// Per-device and per-link profile of a heterogeneous fleet.
+///
+/// `devices[i]` models device `i` (its `speed` multiplier carries the
+/// heterogeneity relative to the reference device schedules are evaluated
+/// on); `link_factor[i][j]` is a *relative* bandwidth multiplier for the
+/// `i -> j` link, where `1.0` means "the bandwidth trace's current value".
+/// The collectives in this codebase are ring/multicast schedules gated by
+/// the slowest participating link, so schedule evaluation folds the matrix
+/// down to its off-diagonal minimum ([`FleetProfile::bottleneck_factor`]).
+///
+/// Heterogeneous schedules stay evaluable on a single reference
+/// [`DeviceModel`]: a phase whose per-device work is `F_i` FLOPs (and
+/// `M_i` streamed bytes) on a device of relative speed `w_i` finishes the
+/// fleet-wide phase after `max_i F_i / w_i` reference-FLOPs — so the
+/// `*_on` schedule builders in [`super::strategies`] store that max as the
+/// phase's `compute_flops`/`mem_bytes` and the existing evaluators need no
+/// change (`max_i max(a_i, b_i) == max(max_i a_i, max_i b_i)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetProfile {
+    pub devices: Vec<DeviceModel>,
+    /// relative per-link bandwidth multipliers (`1.0` = trace value)
+    pub link_factor: Vec<Vec<f64>>,
+}
+
+impl FleetProfile {
+    /// `n` copies of `dev` over ideal (trace-speed) links — the
+    /// heterogeneity-off anchor: every `*_on` schedule built from a
+    /// uniform profile is bit-identical to its legacy counterpart.
+    pub fn uniform(dev: DeviceModel, n: usize) -> FleetProfile {
+        FleetProfile::from_speeds(dev, &vec![dev.speed; n.max(1)])
+    }
+
+    /// One device per entry of `speeds`, each `base` scaled by its
+    /// relative speed, over ideal links. Non-positive speeds are clamped
+    /// to a tiny positive floor so weights stay usable as split ratios.
+    pub fn from_speeds(base: DeviceModel, speeds: &[f64]) -> FleetProfile {
+        let n = speeds.len().max(1);
+        let devices: Vec<DeviceModel> = if speeds.is_empty() {
+            vec![base]
+        } else {
+            speeds.iter().map(|&s| base.with_speed(s.max(1e-6))).collect()
+        };
+        FleetProfile { devices, link_factor: vec![vec![1.0; n]; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True when every device runs at the same speed and every link at the
+    /// trace's bandwidth — the profile carries no information beyond the
+    /// legacy single-`DeviceModel` world, and callers delegate to the
+    /// legacy schedule builders for bit-identity.
+    pub fn is_uniform(&self) -> bool {
+        let s0 = self.devices.first().map(|d| d.speed).unwrap_or(1.0);
+        self.devices.iter().all(|d| d.speed == s0)
+            && self.link_factor.iter().flatten().all(|&f| f == 1.0)
+    }
+
+    /// Relative per-device speeds, the weights for proportional splits.
+    pub fn weights(&self) -> Vec<f64> {
+        self.devices.iter().map(|d| d.speed).collect()
+    }
+
+    pub fn max_weight(&self) -> f64 {
+        self.devices.iter().map(|d| d.speed).fold(f64::MIN, f64::max).max(1e-6)
+    }
+
+    pub fn min_weight(&self) -> f64 {
+        self.devices.iter().map(|d| d.speed).fold(f64::MAX, f64::min).max(1e-6)
+    }
+
+    pub fn sum_weights(&self) -> f64 {
+        self.devices.iter().map(|d| d.speed).sum::<f64>().max(1e-6)
+    }
+
+    /// Slowest off-diagonal link multiplier — the factor every collective
+    /// in a ring/multicast schedule is gated by. `1.0` for fleets of one.
+    pub fn bottleneck_factor(&self) -> f64 {
+        let mut min = f64::MAX;
+        for (i, row) in self.link_factor.iter().enumerate() {
+            for (j, &f) in row.iter().enumerate() {
+                if i != j && f < min {
+                    min = f;
+                }
+            }
+        }
+        if min == f64::MAX {
+            1.0
+        } else {
+            min.max(1e-6)
+        }
+    }
+
+    /// Profile-weighted token split: stronger devices take more tokens
+    /// (paper §4.2), remainder to the fastest devices.
+    pub fn split(&self, t: usize) -> crate::coordinator::partition::TokenPartition {
+        crate::coordinator::partition::TokenPartition::proportional(t, &self.weights())
+            .expect("fleet weights are clamped positive")
+    }
+
+    /// The same fleet with damped weights `w^0.5` — a planner candidate
+    /// between "even" and "fully proportional" that hedges against an
+    /// overconfident profile.
+    pub fn damped(&self) -> FleetProfile {
+        let devices = self.devices.iter().map(|d| d.with_speed(d.speed.sqrt())).collect();
+        FleetProfile { devices, link_factor: self.link_factor.clone() }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,5 +424,34 @@ mod tests {
         let t8 = sched.for_batch(8).latency(&dev, 100.0, 0.001);
         assert!(t8 < 8.0 * t1, "{t8} vs {}", 8.0 * t1);
         assert!(t8 > t1, "{t8} vs {t1}");
+    }
+
+    #[test]
+    fn fleet_profile_uniform_and_weights() {
+        let dev = DeviceModel::paper_1660ti();
+        let uni = FleetProfile::uniform(dev, 4);
+        assert_eq!(uni.n(), 4);
+        assert!(uni.is_uniform());
+        assert!((uni.bottleneck_factor() - 1.0).abs() < 1e-12);
+        let skew = FleetProfile::from_speeds(dev, &[4.0, 2.0, 1.0, 0.5]);
+        assert!(!skew.is_uniform());
+        assert_eq!(skew.weights(), vec![4.0, 2.0, 1.0, 0.5]);
+        assert!((skew.max_weight() - 4.0).abs() < 1e-12);
+        assert!((skew.min_weight() - 0.5).abs() < 1e-12);
+        assert!((skew.sum_weights() - 7.5).abs() < 1e-12);
+        // proportional split sums and favors the fast device
+        let part = skew.split(100);
+        assert_eq!(part.total(), 100);
+        assert!(part.sizes[0] > part.sizes[3]);
+        // damping compresses the spread but keeps the ordering
+        let damped = skew.damped();
+        let w = damped.weights();
+        assert!(w[0] > w[3]);
+        assert!(w[0] / w[3] < 4.0 / 0.5);
+        // a degraded link gates the whole bottleneck factor
+        let mut linky = skew.clone();
+        linky.link_factor[0][3] = 0.25;
+        assert!((linky.bottleneck_factor() - 0.25).abs() < 1e-12);
+        assert!(!linky.is_uniform());
     }
 }

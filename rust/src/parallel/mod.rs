@@ -7,7 +7,9 @@
 //! regenerates Figures 1/3/4/5 and Tables 4/7.
 
 pub mod cost;
+pub mod plan;
 pub mod strategies;
 
-pub use cost::{DeviceModel, Phase, Schedule};
+pub use cost::{DeviceModel, FleetProfile, Phase, Schedule};
+pub use plan::{Plan, Planner, SplitMode};
 pub use strategies::{Strategy, StrategyKind};

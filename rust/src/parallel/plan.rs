@@ -1,0 +1,244 @@
+//! Pure heterogeneous planning: profile + bandwidth in, argmin plan out.
+//!
+//! # Module contract
+//!
+//! The [`Planner`] is *pure data in, plan out*: it consumes a
+//! [`FleetProfile`] and the current measured bandwidth, scores a small
+//! fixed candidate list (uneven-split variants of the serving strategy
+//! plus hybrid TP/SP re-partitions, Galaxy-style), and returns the
+//! argmin-latency [`Plan`]. It owns **no clock** and talks to **no
+//! backend** — the same inputs always produce the same plan, and the only
+//! allocations are the returned label and the transient weighted profiles,
+//! so it is cheap enough to run on every `--replan-every` tick.
+//!
+//! Candidate `0` is always the even-split plan priced exactly like today's
+//! static engine (legacy schedule builders on the reference device), so
+//! the chosen plan's modeled latency is never worse than the even-split
+//! baseline by construction, and "planner off" and "planner picked the
+//! status quo" are the same code path.
+
+use crate::model::shape::TransformerShape;
+
+use super::cost::{DeviceModel, FleetProfile, Schedule};
+use super::strategies::{Strategy, StrategyKind};
+
+/// How a candidate splits tokens over the fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SplitMode {
+    /// Legacy even split, priced on the reference device — today's engine.
+    Even,
+    /// Fully proportional to measured device speed.
+    Proportional,
+    /// Proportional to `speed^0.5` — hedges an overconfident profile.
+    Damped,
+}
+
+impl SplitMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SplitMode::Even => "even",
+            SplitMode::Proportional => "proportional",
+            SplitMode::Damped => "damped",
+        }
+    }
+
+    /// The profile a candidate's schedules should be built on. `Even`
+    /// returns a uniform profile so the `*_on` builders delegate to the
+    /// legacy (bit-identical) schedules; `Damped` compresses the weights.
+    pub fn weighted(&self, profile: &FleetProfile) -> FleetProfile {
+        match self {
+            SplitMode::Even => {
+                let base = profile
+                    .devices
+                    .first()
+                    .copied()
+                    .unwrap_or_else(DeviceModel::paper_1660ti)
+                    .with_speed(1.0);
+                FleetProfile::uniform(base, profile.n())
+            }
+            SplitMode::Proportional => profile.clone(),
+            SplitMode::Damped => profile.damped(),
+        }
+    }
+
+    /// Per-device weights a live session should partition its prompt by,
+    /// `None` when the split is even (keep the cluster's own partition).
+    pub fn split_weights(&self, profile: &FleetProfile) -> Option<Vec<f64>> {
+        match self {
+            SplitMode::Even => None,
+            _ => Some(self.weighted(profile).weights()),
+        }
+    }
+}
+
+/// One planner decision: which strategy kind runs with which split, and
+/// the modeled latency that won the argmin. `index` identifies the
+/// candidate slot (stable across re-plans, reported in
+/// `CbEvent::Replan { from, to }`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub index: usize,
+    pub label: String,
+    pub kind: StrategyKind,
+    pub split: SplitMode,
+    pub modeled_latency_s: f64,
+}
+
+impl Plan {
+    /// True when this plan prices exactly like the static engine.
+    pub fn is_even_baseline(&self) -> bool {
+        self.index == 0
+    }
+}
+
+/// Deterministic argmin-latency planner over a fixed candidate list.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    pub shape: TransformerShape,
+    /// the strategy the engine was configured with (candidate 0's kind)
+    pub base: Strategy,
+    /// reference device all schedules are evaluated on
+    pub device: DeviceModel,
+    pub stage_latency_s: f64,
+    /// decode steps weighted against one prefill in the objective — decode
+    /// dominates a serving steady state, so the objective is
+    /// `prefill + decode_steps * batched_decode_step`
+    pub decode_steps: usize,
+    /// decode batch size assumed for the objective's decode term
+    pub decode_batch: usize,
+}
+
+impl Planner {
+    pub fn new(
+        shape: TransformerShape,
+        base: Strategy,
+        device: DeviceModel,
+        stage_latency_s: f64,
+    ) -> Planner {
+        Planner { shape, base, device, stage_latency_s, decode_steps: 32, decode_batch: 8 }
+    }
+
+    /// The fixed candidate list. Slot 0 is the even-split status quo;
+    /// slots 1-2 re-weight the configured strategy; slots 3-4 are the
+    /// Galaxy-style hybrid re-partitions onto TP / SP.
+    pub fn candidates(&self) -> Vec<(StrategyKind, SplitMode)> {
+        vec![
+            (self.base.kind, SplitMode::Even),
+            (self.base.kind, SplitMode::Proportional),
+            (self.base.kind, SplitMode::Damped),
+            (StrategyKind::TensorParallel, SplitMode::Proportional),
+            (StrategyKind::SequenceParallel, SplitMode::Proportional),
+        ]
+    }
+
+    fn objective(&self, prefill: &Schedule, decode: &Schedule, mbps: f64) -> f64 {
+        prefill.latency(&self.device, mbps, self.stage_latency_s)
+            + self.decode_steps as f64 * decode.latency(&self.device, mbps, self.stage_latency_s)
+    }
+
+    /// Modeled objective of candidate `index` under `profile` at `mbps` —
+    /// also used by the re-plan hysteresis check to re-score an incumbent.
+    pub fn score_index(&self, index: usize, profile: &FleetProfile, mbps: f64) -> f64 {
+        let (kind, split) = self.candidates()[index];
+        let strategy = Strategy::new(kind, self.base.n_devices);
+        let ctx = self.shape.seq_len;
+        let (prefill, decode) = match split {
+            SplitMode::Even => (
+                strategy.schedule(&self.shape),
+                strategy.decode_step_schedule(&self.shape, ctx).for_batch(self.decode_batch),
+            ),
+            _ => {
+                let weighted = split.weighted(profile);
+                (
+                    strategy.schedule_on(&self.shape, &weighted),
+                    strategy
+                        .decode_step_schedule_on(&self.shape, ctx, &weighted)
+                        .for_batch(self.decode_batch),
+                )
+            }
+        };
+        self.objective(&prefill, &decode, mbps)
+    }
+
+    /// Argmin over the candidate list; ties keep the lowest index, so a
+    /// uniform profile always returns the even-split status quo (slot 0).
+    pub fn plan(&self, profile: &FleetProfile, mbps: f64) -> Plan {
+        let mut best: Option<Plan> = None;
+        for (index, (kind, split)) in self.candidates().into_iter().enumerate() {
+            let latency = self.score_index(index, profile, mbps);
+            if best.as_ref().is_none_or(|b| latency < b.modeled_latency_s) {
+                let strategy = Strategy::new(kind, self.base.n_devices);
+                best = Some(Plan {
+                    index,
+                    label: format!("{}/{}", strategy.name(), split.name()),
+                    kind,
+                    split,
+                    modeled_latency_s: latency,
+                });
+            }
+        }
+        best.expect("candidate list is non-empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shape::VqSetting;
+    use crate::util::rng::Rng;
+
+    fn planner() -> Planner {
+        Planner::new(
+            TransformerShape::paper_encoder(1024),
+            Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4),
+            DeviceModel::paper_1660ti(),
+            0.0006,
+        )
+    }
+
+    #[test]
+    fn uniform_fleet_keeps_the_even_status_quo() {
+        let p = planner();
+        let uni = FleetProfile::uniform(DeviceModel::paper_1660ti(), 4);
+        for mbps in [10.0, 50.0, 100.0, 500.0] {
+            let plan = p.plan(&uni, mbps);
+            assert_eq!(plan.index, 0, "uniform fleet re-planned at {mbps} Mbps: {plan:?}");
+            assert!(plan.is_even_baseline());
+        }
+    }
+
+    #[test]
+    fn chosen_plan_never_worse_than_even_on_seeded_skewed_fleets() {
+        let p = planner();
+        let mut rng = Rng::new(23);
+        for trial in 0..25 {
+            let speeds: Vec<f64> =
+                (0..4).map(|_| 0.25 + 3.75 * (rng.below(1000) as f64 / 1000.0)).collect();
+            let profile = FleetProfile::from_speeds(DeviceModel::paper_1660ti(), &speeds);
+            for mbps in [10.0, 100.0] {
+                let plan = p.plan(&profile, mbps);
+                let even = p.score_index(0, &profile, mbps);
+                assert!(
+                    plan.modeled_latency_s <= even + 1e-12,
+                    "trial {trial} {speeds:?} at {mbps}: {} vs even {even}",
+                    plan.modeled_latency_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn strong_skew_fleet_beats_even_strictly() {
+        let p = planner();
+        let profile = FleetProfile::from_speeds(DeviceModel::paper_1660ti(), &[4.0, 2.0, 1.0, 0.5]);
+        let plan = p.plan(&profile, 100.0);
+        let even = p.score_index(0, &profile, 100.0);
+        assert!(plan.index != 0, "{plan:?}");
+        assert!(plan.modeled_latency_s < even, "{} vs {even}", plan.modeled_latency_s);
+        // the weights handed to live sessions favor the fast device
+        let w = plan.split.split_weights(&profile).expect("non-even plan carries weights");
+        assert!(w[0] > w[3]);
+        // determinism: same inputs, same plan
+        assert_eq!(p.plan(&profile, 100.0), plan);
+    }
+}

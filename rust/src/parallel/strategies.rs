@@ -21,7 +21,7 @@
 use crate::comm::collective::{allgather, allreduce, code_multicast, CommCost};
 use crate::model::shape::{TransformerShape, VqSetting};
 
-use super::cost::{Phase, Schedule};
+use super::cost::{FleetProfile, Phase, Schedule};
 
 /// Extra local-compute multiplier for BP+AG (DeTransformer performs more
 /// computation locally to cut communication; calibrated from Table 7).
@@ -175,8 +175,8 @@ impl Strategy {
         let n = self.n_devices;
         let l = shape.n_layers;
         let ctx = ctx.max(chunk).max(1);
-        // bottleneck device's share of the chunk (ceil: the tail device
-        // absorbs the remainder, mirroring prompt_partition)
+        // bottleneck device's share of the chunk (ceil: one device absorbs
+        // the remainder, mirroring prompt_partition on even partitions)
         let local = chunk.div_ceil(n.max(1)).max(1);
         let act_bits = (chunk * shape.d_model * shape.elem_bytes * 8) as f64;
         let (flops, launches, comm, mem_bytes) = match self.kind {
@@ -287,6 +287,271 @@ impl Strategy {
         sched.piggyback(dec_flops, dec_bits)
     }
 
+    // ----- heterogeneity-aware variants ---------------------------------
+    //
+    // Each `*_on` method is the profile-weighted generalization of its
+    // legacy counterpart: token splits follow `FleetProfile::split`
+    // (proportional to relative device speed), per-phase cost is the max
+    // over per-device completion times expressed in reference-device units
+    // (`max_i F_i / w_i` — see the `FleetProfile` docs for why that is
+    // exact under the existing single-device evaluators), and every
+    // collective's bits are scaled by the link bottleneck factor. A
+    // uniform profile (or one whose device count does not match the
+    // strategy's) delegates to the legacy method verbatim — the
+    // bit-identity anchor for heterogeneity-off configs.
+
+    /// Profile-weighted prefill schedule: [`Strategy::schedule`] over a
+    /// heterogeneous fleet with proportional token splits.
+    pub fn schedule_on(&self, shape: &TransformerShape, profile: &FleetProfile) -> Schedule {
+        if profile.is_uniform() || profile.n() != self.n_devices {
+            return self.schedule(shape);
+        }
+        let n = self.n_devices;
+        let t = shape.seq_len;
+        let l = shape.n_layers;
+        let act_bits = (t * shape.d_model * shape.elem_bytes * 8) as f64;
+        let w = profile.weights();
+        let wsum = profile.sum_weights();
+        let wmax = profile.max_weight();
+        let bf = profile.bottleneck_factor();
+        let split = profile.split(t);
+        let mut phases = Vec::new();
+        match self.kind {
+            StrategyKind::SingleDevice => {
+                // the whole model runs on the fastest device
+                phases.push(Phase::compute("forward", shape.total_flops() / wmax, l));
+            }
+            StrategyKind::TensorParallel => {
+                // weights sharded proportionally to speed: every device
+                // finishes its share simultaneously, so the fleet phase
+                // time is F / sum(w) reference-units
+                for _ in 0..l {
+                    phases.push(Phase::compute("block/N", shape.block_flops(t, t) / wsum, 1));
+                    phases.push(Phase::comm(
+                        "allreduce x2",
+                        scaled(sum2(allreduce(act_bits, n)), bf),
+                    ));
+                }
+            }
+            StrategyKind::SequenceParallel => {
+                let gate = gated(&split.sizes, &w, |s| shape.block_flops(s, t));
+                for _ in 0..l {
+                    phases.push(Phase::compute("block seq-shard", gate, 1));
+                    phases.push(Phase::comm("allgather", scaled(allgather(act_bits, n), bf)));
+                }
+            }
+            StrategyKind::BlockParallel { n_b, sp_variant } => {
+                let factor = if sp_variant { 1.0 } else { BP_AG_COMPUTE_FACTOR };
+                let per_segment = shape.total_flops() * factor / (wsum * n_b as f64);
+                for _ in 0..n_b {
+                    phases.push(Phase::compute("bp segment", per_segment, l / n_b.max(1)));
+                    let sync = if sp_variant {
+                        sum2(allgather(act_bits, n))
+                    } else {
+                        allgather(act_bits, n)
+                    };
+                    phases.push(Phase::comm("bp sync", scaled(sync, bf)));
+                }
+            }
+            StrategyKind::Astra { vq } => {
+                // the largest local chunk gates the multicast payload
+                let t_gate = split.sizes.iter().copied().max().unwrap_or(0);
+                let code_chunk_bits = (t_gate * vq.bits_per_token()) as f64;
+                let vq_gate = gated(&split.sizes, &w, |s| {
+                    shape.vq_encode_flops(s, vq.groups, vq.codebook_size)
+                        + shape.vq_decode_flops(t - s, vq.groups, vq.codebook_size)
+                });
+                let mpa_gate = gated(&split.sizes, &w, |s| shape.block_flops(s, t));
+                for _ in 0..l {
+                    phases.push(Phase::compute("vq encode/decode", vq_gate, 1));
+                    phases.push(Phase::comm(
+                        "code exchange",
+                        scaled(code_multicast(code_chunk_bits, n), bf),
+                    ));
+                    phases.push(Phase::compute("mpa block", mpa_gate, 1));
+                }
+            }
+        }
+        Schedule { phases }
+    }
+
+    /// Profile-weighted decode step: TP keeps weights sharded by speed
+    /// (fleet rate `sum(w)`); every other strategy places the decode owner
+    /// on the *fastest* device instead of the positional tail — the
+    /// placement the planner and admission policy assume.
+    pub fn decode_step_schedule_on(
+        &self,
+        shape: &TransformerShape,
+        ctx: usize,
+        profile: &FleetProfile,
+    ) -> Schedule {
+        if profile.is_uniform() || profile.n() != self.n_devices {
+            return self.decode_step_schedule(shape, ctx);
+        }
+        let n = self.n_devices;
+        let wsum = profile.sum_weights();
+        let wmax = profile.max_weight();
+        let bf = profile.bottleneck_factor();
+        let mut phases = Vec::new();
+        match self.kind {
+            StrategyKind::TensorParallel => {
+                phases.push(Phase::compute_mem(
+                    "decode block/N",
+                    shape.decode_step_flops(ctx) / wsum,
+                    shape.n_layers,
+                    shape.weight_bytes() / wsum,
+                ));
+                let act_bits = shape.token_bits() as f64;
+                let mut comm = CommCost::ZERO;
+                for _ in 0..shape.n_layers {
+                    comm = comm.plus(sum2(allreduce(act_bits, n)));
+                }
+                phases.push(Phase::comm("decode allreduce x2", scaled(comm, bf)));
+            }
+            _ => {
+                phases.push(Phase::compute_mem(
+                    "decode step (fastest device)",
+                    shape.decode_step_flops(ctx) / wmax,
+                    shape.n_layers,
+                    shape.weight_bytes() / wmax,
+                ));
+            }
+        }
+        Schedule { phases }
+    }
+
+    /// Profile-weighted prefill chunk (see [`Strategy::prefill_chunk_schedule`]).
+    /// Strategies where every device streams the full weight set (SP,
+    /// ASTRA) keep a floor gated by the *slowest* device — uneven token
+    /// splits cannot buy back a memory-bound chunk, which is exactly why
+    /// the planner may prefer a different strategy kind on skewed fleets.
+    pub fn prefill_chunk_schedule_on(
+        &self,
+        shape: &TransformerShape,
+        chunk: usize,
+        ctx: usize,
+        profile: &FleetProfile,
+    ) -> Schedule {
+        if profile.is_uniform() || profile.n() != self.n_devices {
+            return self.prefill_chunk_schedule(shape, chunk, ctx);
+        }
+        let n = self.n_devices;
+        let l = shape.n_layers;
+        let ctx = ctx.max(chunk).max(1);
+        let w = profile.weights();
+        let wsum = profile.sum_weights();
+        let wmax = profile.max_weight();
+        let wmin = profile.min_weight();
+        let bf = profile.bottleneck_factor();
+        let split = profile.split(chunk.max(1));
+        let act_bits = (chunk * shape.d_model * shape.elem_bytes * 8) as f64;
+        let (flops, launches, comm, mem_bytes) = match self.kind {
+            StrategyKind::SingleDevice => (
+                l as f64 * shape.chunk_block_flops(chunk, chunk, ctx) / wmax,
+                l,
+                CommCost::ZERO,
+                shape.weight_bytes() / wmax,
+            ),
+            StrategyKind::TensorParallel => {
+                let mut comm = CommCost::ZERO;
+                for _ in 0..l {
+                    comm = comm.plus(sum2(allreduce(act_bits, n)));
+                }
+                (
+                    l as f64 * shape.chunk_block_flops(chunk, chunk, ctx) / wsum,
+                    l,
+                    scaled(comm, bf),
+                    shape.weight_bytes() / wsum,
+                )
+            }
+            StrategyKind::SequenceParallel => {
+                let mut comm = CommCost::ZERO;
+                for _ in 0..l {
+                    comm = comm.plus(allgather(act_bits, n));
+                }
+                let gate = gated(&split.sizes, &w, |s| shape.chunk_block_flops(s, chunk, ctx));
+                (l as f64 * gate, l, scaled(comm, bf), shape.weight_bytes() / wmin)
+            }
+            StrategyKind::BlockParallel { n_b, sp_variant } => {
+                let factor = if sp_variant { 1.0 } else { BP_AG_COMPUTE_FACTOR };
+                let mut comm = CommCost::ZERO;
+                for _ in 0..n_b {
+                    comm = comm.plus(if sp_variant {
+                        sum2(allgather(act_bits, n))
+                    } else {
+                        allgather(act_bits, n)
+                    });
+                }
+                (
+                    l as f64 * shape.chunk_block_flops(chunk, chunk, ctx) * factor / wsum,
+                    l,
+                    scaled(comm, bf),
+                    shape.weight_bytes() / wsum,
+                )
+            }
+            StrategyKind::Astra { vq } => {
+                let t_gate = split.sizes.iter().copied().max().unwrap_or(0);
+                let code_chunk_bits = (t_gate * vq.bits_per_token()) as f64;
+                let gate = gated(&split.sizes, &w, |s| {
+                    shape.vq_encode_flops(s, vq.groups, vq.codebook_size)
+                        + shape.vq_decode_flops(chunk.saturating_sub(s), vq.groups, vq.codebook_size)
+                        + shape.chunk_block_flops(s, chunk, ctx)
+                });
+                let mut comm = CommCost::ZERO;
+                for _ in 0..l {
+                    comm = comm.plus(code_multicast(code_chunk_bits, n));
+                }
+                (l as f64 * gate, 2 * l, scaled(comm, bf), shape.weight_bytes() / wmin)
+            }
+        };
+        let mut phases = vec![Phase::compute_mem("prefill chunk", flops, launches, mem_bytes)];
+        if comm.bits > 0.0 || comm.stages > 0 {
+            phases.push(Phase::comm("chunk exchange", comm));
+        }
+        Schedule { phases }
+    }
+
+    /// Profile-weighted fused chunk+decode iteration (see
+    /// [`Strategy::fused_iteration_schedule`]). The piggybacked decode
+    /// FLOPs ride the decode owner's device (fastest for non-TP, the
+    /// speed-sharded fleet for TP), an approximation consistent with
+    /// [`Strategy::decode_step_schedule_on`].
+    pub fn fused_iteration_schedule_on(
+        &self,
+        shape: &TransformerShape,
+        chunk: usize,
+        ctx_prefill: usize,
+        decode_batch: usize,
+        ctx_decode: usize,
+        profile: &FleetProfile,
+    ) -> Schedule {
+        if profile.is_uniform() || profile.n() != self.n_devices {
+            return self.fused_iteration_schedule(shape, chunk, ctx_prefill, decode_batch, ctx_decode);
+        }
+        if chunk == 0 {
+            return self
+                .decode_step_schedule_on(shape, ctx_decode, profile)
+                .for_batch(decode_batch.max(1));
+        }
+        let sched = self.prefill_chunk_schedule_on(shape, chunk, ctx_prefill, profile);
+        if decode_batch == 0 {
+            return sched;
+        }
+        let n = self.n_devices;
+        let b = decode_batch as f64;
+        let bf = profile.bottleneck_factor();
+        let (dec_flops, dec_bits) = match self.kind {
+            StrategyKind::TensorParallel => (
+                shape.decode_step_flops(ctx_decode) / profile.sum_weights() * b,
+                sum2(allreduce(shape.token_bits() as f64, n)).bits / bf
+                    * shape.n_layers as f64
+                    * b,
+            ),
+            _ => (shape.decode_step_flops(ctx_decode) / profile.max_weight() * b, 0.0),
+        };
+        sched.piggyback(dec_flops, dec_bits)
+    }
+
     /// Payload bits a single transmitted token costs over the whole model
     /// (the paper's "Total Bits per Token" column).
     pub fn total_bits_per_token(&self, shape: &TransformerShape) -> usize {
@@ -300,6 +565,18 @@ impl Strategy {
 
 fn sum2(c: CommCost) -> CommCost {
     c.plus(c)
+}
+
+/// Fleet phase time in reference-device units: the slowest device's
+/// per-device work `f(tokens_i)` divided by its relative speed, maxed.
+fn gated(sizes: &[usize], weights: &[f64], f: impl Fn(usize) -> f64) -> f64 {
+    sizes.iter().zip(weights).map(|(&s, &w)| f(s) / w.max(1e-6)).fold(0.0, f64::max)
+}
+
+/// A collective over links whose slowest member runs at `factor` times the
+/// trace bandwidth: same sync stages, bits inflated by `1/factor`.
+fn scaled(c: CommCost, factor: f64) -> CommCost {
+    CommCost { bits: c.bits / factor.max(1e-6), stages: c.stages }
 }
 
 /// The baseline set evaluated in Figure 1 / Table 4 at a given device count.
@@ -480,6 +757,71 @@ mod tests {
         // floor, once per chunk) for interleaving freedom
         assert!(chunks > whole, "{chunks} vs {whole}");
         assert!(chunks < 4.0 * whole, "{chunks} vs {whole}");
+    }
+
+    #[test]
+    fn uniform_profile_reproduces_legacy_schedules_bit_for_bit() {
+        let shape = TransformerShape::paper_encoder(1024);
+        let dev = DeviceModel::paper_1660ti();
+        let uni = FleetProfile::uniform(dev, 4);
+        let mut all = figure1_strategies(4);
+        all.push(Strategy::new(StrategyKind::SingleDevice, 1));
+        let uni1 = FleetProfile::uniform(dev, 1);
+        for s in all {
+            let p = if s.n_devices == 1 { &uni1 } else { &uni };
+            let (a, b) = (s.schedule_on(&shape, p), s.schedule(&shape));
+            assert_eq!(a.total_compute_flops(), b.total_compute_flops(), "{}", s.name());
+            assert_eq!(a.total_comm_bits(), b.total_comm_bits(), "{}", s.name());
+            assert_eq!(
+                a.latency(&dev, 50.0, 0.0006),
+                b.latency(&dev, 50.0, 0.0006),
+                "{}",
+                s.name()
+            );
+            let (a, b) = (s.decode_step_schedule_on(&shape, 900, p), s.decode_step_schedule(&shape, 900));
+            assert_eq!(a.latency(&dev, 50.0, 0.0006), b.latency(&dev, 50.0, 0.0006));
+            let (a, b) = (
+                s.prefill_chunk_schedule_on(&shape, 128, 512, p),
+                s.prefill_chunk_schedule(&shape, 128, 512),
+            );
+            assert_eq!(a.latency(&dev, 50.0, 0.0006), b.latency(&dev, 50.0, 0.0006));
+            let (a, b) = (
+                s.fused_iteration_schedule_on(&shape, 128, 512, 8, 1024, p),
+                s.fused_iteration_schedule(&shape, 128, 512, 8, 1024),
+            );
+            assert_eq!(a.latency(&dev, 50.0, 0.0006), b.latency(&dev, 50.0, 0.0006));
+        }
+    }
+
+    #[test]
+    fn proportional_split_beats_even_on_skewed_fleet() {
+        // SP phase compute on a skewed fleet: proportional shares finish
+        // together; an even split leaves the 0.5-speed straggler gating
+        // max_i F_i / w_i. The hand-computed even gate is the comparison.
+        let shape = TransformerShape::paper_encoder(1024);
+        let dev = DeviceModel::paper_1660ti();
+        let profile = FleetProfile::from_speeds(dev, &[4.0, 2.0, 1.0, 0.5]);
+        let t = shape.seq_len;
+        let sp = Strategy::new(StrategyKind::SequenceParallel, 4);
+        let balanced = sp.schedule_on(&shape, &profile).total_compute_flops();
+        let even_gate =
+            shape.n_layers as f64 * shape.block_flops(t / 4, t) / profile.min_weight();
+        assert!(balanced < even_gate, "{balanced} vs even-split gate {even_gate}");
+        // same shape of win for the decode step: fastest-device placement
+        // beats the reference tail device whenever max_weight > 1
+        let astra = Strategy::new(StrategyKind::Astra { vq: VqSetting::new(16, 1024) }, 4);
+        let het = astra.decode_step_schedule_on(&shape, 1024, &profile);
+        let legacy = astra.decode_step_schedule(&shape, 1024);
+        let t_het = het.latency(&dev, 100.0, 0.0006);
+        let t_leg = legacy.latency(&dev, 100.0, 0.0006);
+        assert!(t_het < t_leg, "{t_het} vs {t_leg}");
+        // degraded links inflate comm bits but never sync stages
+        let mut lossy = profile.clone();
+        lossy.link_factor[1][2] = 0.5;
+        let clean = sp.schedule_on(&shape, &profile);
+        let slow = sp.schedule_on(&shape, &lossy);
+        assert!(slow.total_comm_bits() > clean.total_comm_bits());
+        assert_eq!(slow.total_compute_flops(), clean.total_compute_flops());
     }
 
     #[test]

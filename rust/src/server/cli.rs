@@ -131,10 +131,17 @@ pub fn serve(args: &Args) -> Result<()> {
 }
 
 /// Parse the scheduling-policy flags shared by the model and live
-/// serve-cb paths: `--policy fifo|prefix-aware|slo-class`, `--classes
-/// d0,d1,...` (per-class deadlines, seconds; higher class index = higher
-/// priority; ids map round-robin), `--age-bound S` (reordering aging
-/// step). Setting `--classes` without `--policy` implies `slo-class`.
+/// serve-cb paths: `--policy fifo|prefix-aware|slo-class|placement`,
+/// `--classes d0,d1,...` (per-class deadlines, seconds; higher class
+/// index = higher priority; ids map round-robin), `--age-bound S`
+/// (reordering aging step). Setting `--classes` without `--policy`
+/// implies `slo-class`.
+///
+/// The heterogeneous-fleet flags ride the same paths:
+/// `--device-speeds w0,w1,...` (relative per-device speed; unset or all
+/// equal = the legacy uniform fleet, bit for bit) and `--replan-every S`
+/// (online re-planning period, seconds; 0 = the initial profile-weighted
+/// plan is pinned for the whole run).
 fn policy_from_args(args: &Args) -> Result<(PolicyKind, Vec<f64>, f64)> {
     let classes = args.f64_list_or("classes", &[])?;
     let policy = match args.get("policy") {
@@ -225,7 +232,10 @@ fn print_client_rows(r: &mut CbReport) {
 fn route_from_args(args: &Args) -> Result<RouteKind> {
     let name = args.get_or("route-policy", "round-robin");
     parse_route(&name).with_context(|| {
-        format!("unknown --route-policy `{name}` (round-robin|least-loaded|prefix-affinity)")
+        format!(
+            "unknown --route-policy `{name}` \
+             (round-robin|least-loaded|prefix-affinity|placement)"
+        )
     })
 }
 
@@ -327,6 +337,8 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         classes,
         age_bound_s,
         slo_preempt_budget: args.usize_or("slo-preempt-budget", 1)?,
+        device_speeds: args.f64_list_or("device-speeds", &[])?,
+        replan_every_s: args.f64_or("replan-every", 0.0)?,
         ..CbConfig::default()
     };
     client_model_from_args(args, &mut cfg)?;
@@ -409,8 +421,22 @@ pub fn serve_cb(args: &Args) -> Result<()> {
         if r.slo_preemptions > 0 {
             println!("SLO preemptions {}", r.slo_preemptions);
         }
+        if r.replans > 0 {
+            println!("re-plans  {} plan swaps (--replan-every)", r.replans);
+        }
         print_client_rows(&mut r);
         print_class_rows(&mut r);
+        // model-path smoke invariants (`--assert-invariants`, mirroring
+        // the live checklist): every serve mode completes work and the
+        // modeled KV accounting never exceeds its cap
+        if args.flag("assert-invariants") {
+            anyhow::ensure!(r.completed > 0, "model smoke ({mode}): nothing completed");
+            anyhow::ensure!(
+                r.kv_violations == 0,
+                "model smoke ({mode}): {} KV violations",
+                r.kv_violations
+            );
+        }
         rows.push((mode, r.completed));
     }
     if let [(_, fifo), (_, cb)] = rows[..] {
@@ -418,6 +444,9 @@ pub fn serve_cb(args: &Args) -> Result<()> {
             println!("\ncontinuous batching completed {:.2}x the batch-1 FIFO total",
                 cb as f64 / fifo as f64);
         }
+    }
+    if args.flag("assert-invariants") {
+        println!("model smoke invariants hold: completions in every mode, zero KV violations");
     }
     Ok(())
 }
@@ -478,6 +507,8 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
         classes,
         age_bound_s,
         slo_preempt_budget: args.usize_or("slo-preempt-budget", 1)?,
+        device_speeds: args.f64_list_or("device-speeds", &[])?,
+        replan_every_s: args.f64_or("replan-every", 0.0)?,
         // seed + prompt_vocab are pinned to the cluster by `live_engine`
         ..CbConfig::default()
     };
@@ -572,6 +603,12 @@ pub fn serve_cb_live(args: &Args) -> Result<()> {
     if cfg.policy != PolicyKind::Fifo || !cfg.classes.is_empty() {
         println!("scheduling policy {:?}: {} SLO preemptions", cfg.policy, r.slo_preemptions);
         print_class_rows(&mut r);
+    }
+    if !cfg.device_speeds.is_empty() {
+        println!(
+            "heterogeneous fleet {:?}: {} re-plans (--replan-every {})",
+            cfg.device_speeds, r.replans, cfg.replan_every_s
+        );
     }
     print_client_rows(&mut r);
     if let Some((id, toks)) = live.generations.iter().find(|(_, t)| !t.is_empty()) {

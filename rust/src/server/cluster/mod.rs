@@ -48,7 +48,8 @@ mod route;
 
 pub use digest::ShadowDigest;
 pub use route::{
-    parse_route, LeastLoaded, PrefixAffinity, ReplicaView, RouteKind, RoundRobin, RoutePolicy,
+    parse_route, LeastLoaded, Placement, PrefixAffinity, ReplicaView, RouteKind, RoundRobin,
+    RoutePolicy,
 };
 
 use std::collections::BTreeMap;
@@ -381,6 +382,7 @@ fn replica_views(
                 in_flight: a.in_flight(),
                 swapped: a.swapped_out(),
                 covered_tokens,
+                decode_speed: a.decode_speed(),
             }
         })
         .collect()

@@ -28,6 +28,10 @@ pub struct ReplicaView {
     /// replica would serve from its shared KV blocks (0 unless the
     /// policy asked for coverage; see [`RoutePolicy::uses_affinity`])
     pub covered_tokens: usize,
+    /// the replica's fleet decode speed (fastest profiled device's
+    /// weight; 1.0 on uniform/unprofiled replicas) — how fast a unit of
+    /// load drains here, what placement routing divides load by
+    pub decode_speed: f64,
 }
 
 impl ReplicaView {
@@ -130,6 +134,36 @@ impl RoutePolicy for PrefixAffinity {
     }
 }
 
+/// Placement-aware routing for heterogeneous fleets: join the replica
+/// with the least *drain time*, not the least load. A fast replica
+/// (decode speed 4) clears four units of queued work in the time a
+/// reference replica clears one, so the score is
+/// `(load + 1) / decode_speed` — the `+ 1` counts the request being
+/// placed, which is what makes an idle slow replica lose to a busy fast
+/// one exactly when the fast one would still finish first. On a uniform
+/// fleet every speed is 1.0 and this degenerates to [`LeastLoaded`]
+/// (including its lowest-index tie-break).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Placement;
+
+impl RoutePolicy for Placement {
+    fn name(&self) -> &'static str {
+        "placement"
+    }
+
+    fn route(&self, _seq: u64, _now: f64, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        replicas
+            .iter()
+            .min_by(|a, b| {
+                let da = (a.load() as f64 + 1.0) / a.decode_speed.max(1e-6);
+                let db = (b.load() as f64 + 1.0) / b.decode_speed.max(1e-6);
+                da.total_cmp(&db).then(a.replica.cmp(&b.replica))
+            })
+            .expect("route called with no live replicas")
+            .replica
+    }
+}
+
 /// Parseable routing-policy selector (`--route-policy`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum RouteKind {
@@ -137,6 +171,7 @@ pub enum RouteKind {
     RoundRobin,
     LeastLoaded,
     PrefixAffinity,
+    Placement,
 }
 
 impl RouteKind {
@@ -145,6 +180,7 @@ impl RouteKind {
             RouteKind::RoundRobin => "round-robin",
             RouteKind::LeastLoaded => "least-loaded",
             RouteKind::PrefixAffinity => "prefix-affinity",
+            RouteKind::Placement => "placement",
         }
     }
 
@@ -155,6 +191,7 @@ impl RouteKind {
             RouteKind::RoundRobin => Box::new(RoundRobin),
             RouteKind::LeastLoaded => Box::new(LeastLoaded),
             RouteKind::PrefixAffinity => Box::new(PrefixAffinity { block_tokens }),
+            RouteKind::Placement => Box::new(Placement),
         }
     }
 }
@@ -165,6 +202,7 @@ pub fn parse_route(s: &str) -> Option<RouteKind> {
         "round-robin" | "rr" => Some(RouteKind::RoundRobin),
         "least-loaded" | "least" => Some(RouteKind::LeastLoaded),
         "prefix-affinity" | "affinity" => Some(RouteKind::PrefixAffinity),
+        "placement" | "placement-aware" => Some(RouteKind::Placement),
         _ => None,
     }
 }
@@ -174,7 +212,14 @@ mod tests {
     use super::*;
 
     fn view(replica: usize, queued: usize, in_flight: usize, covered: usize) -> ReplicaView {
-        ReplicaView { replica, queued, in_flight, swapped: 0, covered_tokens: covered }
+        ReplicaView {
+            replica,
+            queued,
+            in_flight,
+            swapped: 0,
+            covered_tokens: covered,
+            decode_speed: 1.0,
+        }
     }
 
     fn req() -> Request {
@@ -217,12 +262,37 @@ mod tests {
     }
 
     #[test]
+    fn placement_routes_by_drain_time_not_load() {
+        let p = Placement;
+        let fast = |replica, load| ReplicaView {
+            replica,
+            queued: load,
+            in_flight: 0,
+            swapped: 0,
+            covered_tokens: 0,
+            decode_speed: 4.0,
+        };
+        // fast replica 3 deep drains (3+1)/4 = 1.0; idle slow drains
+        // (0+1)/1 = 1.0 — tie goes to the lower index
+        let views = vec![view(0, 0, 0, 0), fast(1, 3)];
+        assert_eq!(p.route(0, 0.0, &req(), &views), 0);
+        // one unit shallower and the fast replica wins outright
+        let views = vec![view(0, 0, 0, 0), fast(1, 2)];
+        assert_eq!(p.route(0, 0.0, &req(), &views), 1);
+        // uniform speeds: exactly least-loaded, lowest index on ties
+        let views = vec![view(0, 1, 1, 0), view(1, 0, 2, 0)];
+        assert_eq!(p.route(0, 0.0, &req(), &views), 0);
+    }
+
+    #[test]
     fn route_kind_parses_and_makes() {
         assert_eq!(parse_route("rr"), Some(RouteKind::RoundRobin));
         assert_eq!(parse_route("least-loaded"), Some(RouteKind::LeastLoaded));
         assert_eq!(parse_route("affinity"), Some(RouteKind::PrefixAffinity));
+        assert_eq!(parse_route("placement-aware"), Some(RouteKind::Placement));
         assert_eq!(parse_route("nope"), None);
         assert_eq!(RouteKind::default().make(16).name(), "round-robin");
         assert!(RouteKind::PrefixAffinity.make(16).uses_affinity());
+        assert_eq!(RouteKind::Placement.make(16).name(), "placement");
     }
 }

@@ -272,20 +272,28 @@ impl DecodeBackend for LiveBackend<'_> {
                 self.blocked.insert(req.id, pre.tokens);
                 sess
             } else if batch.prefill_limit >= req.tokens {
-                // classic path: the whole prompt replays at admission
-                DecodeSession::builder(self.cluster, &prompt)
-                    .budget(req.tokens + entry.budget)
-                    .build()
-                    .with_context(|| format!("admitting request {}", req.id))?
+                // classic path: the whole prompt replays at admission;
+                // an active heterogeneous plan re-weights which rows this
+                // rank keeps full-precision (in-flight sessions admitted
+                // under an older plan keep their split untouched)
+                let mut b = DecodeSession::builder(self.cluster, &prompt)
+                    .budget(req.tokens + entry.budget);
+                if let Some(w) = &batch.split_weights {
+                    b = b.split_weights(w.clone());
+                }
+                b.build().with_context(|| format!("admitting request {}", req.id))?
             } else {
                 // chunked path: replay only the admission chunk; the rest
                 // arrives inside StepBatch chunk plans as the scheduler
                 // fuses it into decode iterations
-                let mut sess = DecodeSession::builder(self.cluster, &prompt)
+                let mut b = DecodeSession::builder(self.cluster, &prompt)
                     .budget(req.tokens + entry.budget)
-                    .deferred()
-                    .build()
-                    .with_context(|| format!("admitting request {}", req.id))?;
+                    .deferred();
+                if let Some(w) = &batch.split_weights {
+                    b = b.split_weights(w.clone());
+                }
+                let mut sess =
+                    b.build().with_context(|| format!("admitting request {}", req.id))?;
                 sess.replay_range(0, batch.prefill_limit)
                     .with_context(|| format!("admission chunk of request {}", req.id))?;
                 sess

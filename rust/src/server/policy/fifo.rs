@@ -64,6 +64,7 @@ mod tests {
                 class: 0,
                 deadline_s: 0.0,
                 covered_tokens: 64 * (i % 2), // coverage must not matter
+                decode_budget: 8 * (4 - i),   // neither must decode length
             })
             .collect();
         assert_eq!(Fifo.admission_order(5.0, &q), vec![0, 1, 2, 3]);

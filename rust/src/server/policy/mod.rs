@@ -46,14 +46,22 @@
 //!   and the proactive hook evicts a past-deadline lower-class slot when
 //!   a higher-class request that can still meet its deadline is waiting
 //!   with no free slot.
+//! * [`PlacementAware`] — heterogeneous-fleet admission: on a skewed
+//!   fleet every decode step is gated by the slowest KV shard, so slots
+//!   are the scarce resource and the policy drains short-decode requests
+//!   first (their slot time, scaled by the fleet's decode speed, is
+//!   cheap) while an aging boost bounds how long a long-decode request
+//!   can be bypassed.
 
 use anyhow::{bail, Result};
 
 mod fifo;
+mod placement;
 mod prefix_aware;
 mod slo;
 
 pub use fifo::Fifo;
+pub use placement::PlacementAware;
 pub use prefix_aware::PrefixAware;
 pub use slo::SloClass;
 
@@ -65,6 +73,7 @@ pub enum PolicyKind {
     Fifo,
     PrefixAware,
     SloClass,
+    Placement,
 }
 
 /// Parse a `--policy` value.
@@ -73,7 +82,8 @@ pub fn parse_policy(s: &str) -> Result<PolicyKind> {
         "fifo" => PolicyKind::Fifo,
         "prefix-aware" | "prefix" => PolicyKind::PrefixAware,
         "slo-class" | "slo" => PolicyKind::SloClass,
-        other => bail!("unknown policy `{other}` (fifo|prefix-aware|slo-class)"),
+        "placement" | "placement-aware" => PolicyKind::Placement,
+        other => bail!("unknown policy `{other}` (fifo|prefix-aware|slo-class|placement)"),
     })
 }
 
@@ -99,6 +109,10 @@ pub struct AdmissionCandidate {
     /// ([`crate::kv::prefix::RadixTree::covered_tokens`]; 0 with the
     /// prefix cache off)
     pub covered_tokens: usize,
+    /// decode tokens this request would still generate once admitted
+    /// (`CbEngine::decode_budget`) — how long it will pin a slot; what
+    /// [`PlacementAware`] orders by on skewed fleets
+    pub decode_budget: usize,
 }
 
 impl AdmissionCandidate {

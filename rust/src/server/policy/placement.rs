@@ -1,0 +1,123 @@
+//! Placement-aware admission ordering for heterogeneous fleets.
+
+use super::{age_boost, newest_by_admit_seq, AdmissionCandidate, SchedPolicy, SlotView};
+
+/// Orders eligible admissions by the slot time their remaining decode
+/// would pin, shortest first. On a skewed fleet every decode step is
+/// gated by the slowest KV shard, so a slot-second is the scarce
+/// resource: admitting the short-decode request first drains it quickly
+/// and hands the slot on, where FIFO would let one long generation on a
+/// slow-last-hop replica pin a slot while short work queues behind it.
+/// The cost of a candidate is `decode_budget / decode_speed` — the
+/// fleet's decode speed (its fastest device's weight,
+/// [`crate::parallel::FleetProfile::max_weight`]) converts tokens into
+/// modeled slot seconds, so the same policy is calibrated across
+/// replicas of different strength.
+///
+/// Starvation bound: each `age_bound_s` spent in the current queueing
+/// episode forgives one modeled slot-second of cost
+/// ([`super::age_boost`]), so a long-decode request bypassed by shorter
+/// arrivals outranks them once it has waited proportionally to its cost
+/// disadvantage — bypass time is linear, never unbounded. Ties (equal
+/// cost) fall back to queue order, so a uniform workload — every decode
+/// budget equal — degenerates to exactly FIFO.
+///
+/// Victim selection is inherited from FIFO (most recently admitted):
+/// decode length says nothing about who should *lose* a slot, and the
+/// newest slot has the least sunk replay work.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementAware {
+    /// fleet decode speed relative to the reference device
+    /// (`FleetProfile::max_weight`; 1.0 on a uniform or unprofiled fleet)
+    pub decode_speed: f64,
+    /// seconds of sojourn per forgiven slot-second (`CbConfig::age_bound_s`;
+    /// <= 0 disables aging)
+    pub age_bound_s: f64,
+}
+
+impl PlacementAware {
+    /// Modeled slot cost in integer milli-seconds (deterministic
+    /// truncation, like the other reordering policies' integer scores);
+    /// lower admits sooner.
+    fn cost(&self, now: f64, c: &AdmissionCandidate) -> i64 {
+        let ms = c.decode_budget as f64 / self.decode_speed.max(1e-6) * 1000.0;
+        ms as i64 - age_boost(now, c.queued_since, self.age_bound_s) * 1000
+    }
+}
+
+impl SchedPolicy for PlacementAware {
+    fn name(&self) -> &'static str {
+        "placement"
+    }
+
+    fn reorders(&self) -> bool {
+        true
+    }
+
+    fn admission_order(&self, now: f64, queue: &[AdmissionCandidate]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..queue.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.cost(now, &queue[a]).cmp(&self.cost(now, &queue[b])).then(a.cmp(&b))
+        });
+        idx
+    }
+
+    fn victim(&self, _now: f64, slots: &[SlotView]) -> usize {
+        newest_by_admit_seq(slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(id: u64, arrival_s: f64, decode_budget: usize) -> AdmissionCandidate {
+        AdmissionCandidate {
+            id,
+            arrival_s,
+            queued_since: arrival_s,
+            tokens: 128,
+            class: 0,
+            deadline_s: 0.0,
+            covered_tokens: 0,
+            decode_budget,
+        }
+    }
+
+    #[test]
+    fn short_decodes_jump_long_ones() {
+        let p = PlacementAware { decode_speed: 1.0, age_bound_s: 0.5 };
+        let q = vec![cand(1, 0.0, 64), cand(2, 0.0, 4), cand(3, 0.0, 16)];
+        assert_eq!(p.admission_order(0.1, &q), vec![1, 2, 0]);
+        assert!(p.reorders());
+        assert!(!p.preempts());
+    }
+
+    #[test]
+    fn equal_budgets_degenerate_to_fifo() {
+        let p = PlacementAware { decode_speed: 4.0, age_bound_s: 0.5 };
+        let q = vec![cand(5, 0.0, 8), cand(6, 0.0, 8), cand(7, 0.0, 8)];
+        assert_eq!(p.admission_order(0.3, &q), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn aging_eventually_outranks_a_shorter_decode() {
+        let p = PlacementAware { decode_speed: 1.0, age_bound_s: 0.5 };
+        // long head queued at 0 costs 3 modeled slot-seconds more
+        let q = |t: f64| vec![cand(1, 0.0, 4), cand(2, t, 1)];
+        // young long request is bypassed...
+        assert_eq!(p.admission_order(1.0, &q(1.0)), vec![1, 0]);
+        // ...but once it has aged 4 steps more than the short one its
+        // forgiven 4 s outweigh the 3 s budget gap
+        assert_eq!(p.admission_order(2.2, &q(2.0)), vec![0, 1]);
+    }
+
+    #[test]
+    fn faster_fleets_shrink_the_cost_gap() {
+        // at 4x decode speed the same 3-token gap is only 0.75 modeled
+        // slot-seconds, so one aging step already flips the order
+        let p = PlacementAware { decode_speed: 4.0, age_bound_s: 0.5 };
+        let q = vec![cand(1, 0.0, 4), cand(2, 0.6, 1)];
+        assert_eq!(p.admission_order(0.61, &q), vec![0, 1]);
+    }
+}

@@ -77,6 +77,7 @@ mod tests {
             class: 0,
             deadline_s: 0.0,
             covered_tokens: covered,
+            decode_budget: 0,
         }
     }
 

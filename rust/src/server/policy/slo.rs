@@ -150,6 +150,7 @@ mod tests {
             class,
             deadline_s,
             covered_tokens: 0,
+            decode_budget: 0,
         }
     }
 

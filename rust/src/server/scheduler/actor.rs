@@ -26,6 +26,7 @@ use anyhow::Result;
 use crate::kv::pool::KvPool;
 use crate::kv::prefix::RadixTree;
 use crate::kv::swap::SwapPolicy;
+use crate::parallel::plan::Plan;
 use crate::sim::latency::{evaluate_on_trace, evaluate_on_trace_batched, Breakdown};
 use crate::util::stats::Summary;
 use crate::workload::{wasted_deliveries, TokenStream};
@@ -134,6 +135,7 @@ fn candidate_views(
                 class,
                 deadline_s: engine.cfg.class_deadline(class),
                 covered_tokens: covered,
+                decode_budget: engine.decode_budget(r.id),
             }
         })
         .collect()
@@ -338,6 +340,16 @@ pub struct EngineActor {
     /// requests cancelled by their impatient client
     cancelled: usize,
     replica: usize,
+    /// active heterogeneous plan (None on uniform/unprofiled fleets —
+    /// every pricing call then takes the legacy path bit for bit)
+    plan: Option<Plan>,
+    /// EWMA of the bandwidth trace sampled at each re-plan tick — the
+    /// online profile estimate the planner re-scores against
+    ewma_mbps: f64,
+    /// next virtual time the re-planner runs (f64::INFINITY = off)
+    next_replan_at: f64,
+    /// plan swaps executed (reported as `CbReport::replans`)
+    replans: usize,
 }
 
 impl EngineActor {
@@ -348,7 +360,18 @@ impl EngineActor {
 
     /// An actor tagged with a fleet replica id (stamped into its report).
     pub fn with_replica(engine: CbEngine, replica: usize) -> EngineActor {
-        let policy = engine.cfg.make_policy();
+        let policy = engine.make_policy();
+        // heterogeneous fleets start on the planner's argmin for the
+        // trace's opening bandwidth; re-planning thereafter is gated on
+        // `--replan-every` (0 pins this initial plan for the whole run)
+        let ewma_mbps = engine.trace.at(0.0);
+        let plan =
+            engine.profile.as_ref().map(|p| engine.planner().plan(p, ewma_mbps));
+        let next_replan_at = if engine.profile.is_some() && engine.cfg.replan_every_s > 0.0 {
+            engine.cfg.replan_every_s
+        } else {
+            f64::INFINITY
+        };
         let max_slots = engine.cfg.max_slots.max(1);
         // prefill-only workloads have no decode iterations to piggyback
         // chunks on, so chunking applies only when decode happens
@@ -428,6 +451,10 @@ impl EngineActor {
             streams: BTreeMap::new(),
             cancelled: 0,
             replica,
+            plan,
+            ewma_mbps,
+            next_replan_at,
+            replans: 0,
         }
     }
 
@@ -467,6 +494,13 @@ impl EngineActor {
         self.replica
     }
 
+    /// This replica's fleet decode speed (fastest profiled device's
+    /// weight; 1.0 on a uniform or unprofiled fleet) — what
+    /// placement-aware routing prices replica load against.
+    pub(crate) fn decode_speed(&self) -> f64 {
+        self.engine.profile.as_ref().map_or(1.0, |p| p.max_weight())
+    }
+
     /// Run exactly one scheduling iteration at virtual time `now`:
     /// head-of-line rejection, the proactive SLO hook, then either one
     /// admission or one fused chunk+decode iteration — the old loop body,
@@ -483,12 +517,50 @@ impl EngineActor {
         Ok(StepOutcome { until, events: self.events[mark..].to_vec() })
     }
 
+    /// Online re-planning tick: at each `--replan-every` boundary crossed
+    /// by `now`, fold the trace's current bandwidth into the EWMA estimate
+    /// and swap plans when the planner's new argmin beats the incumbent's
+    /// re-scored objective by more than the hysteresis margin. Both
+    /// backends sample the same shared trace, so the live engine re-plans
+    /// at identical ticks with identical inputs — the live-vs-model
+    /// differential covers [`CbEvent::Replan`] like any other event.
+    fn maybe_replan(&mut self, now: f64) {
+        if now < self.next_replan_at {
+            return;
+        }
+        let every = self.engine.cfg.replan_every_s;
+        while self.next_replan_at <= now {
+            self.next_replan_at += every;
+        }
+        let Some(profile) = self.engine.profile.as_ref() else { return };
+        self.ewma_mbps = 0.3 * self.engine.trace.at(now) + 0.7 * self.ewma_mbps;
+        let planner = self.engine.planner();
+        let candidate = planner.plan(profile, self.ewma_mbps);
+        let Some(cur) = self.plan.as_ref() else { return };
+        if candidate.index == cur.index {
+            return;
+        }
+        // hysteresis: a swap re-partitions every subsequent admission, so
+        // the predicted win must clear a margin before we churn
+        let incumbent = planner.score_index(cur.index, profile, self.ewma_mbps);
+        if candidate.modeled_latency_s < incumbent * (1.0 - self.engine.cfg.replan_hysteresis) {
+            self.events.push(CbEvent::Replan { from: cur.index, to: candidate.index });
+            self.replans += 1;
+            self.plan = Some(candidate);
+        }
+    }
+
     fn step_inner<B: DecodeBackend>(
         &mut self,
         backend: &mut B,
         now: f64,
         horizon_s: f64,
     ) -> Result<Option<f64>> {
+        self.maybe_replan(now);
+        // the plan in force for every pricing decision this iteration;
+        // in-flight slots keep the split they were admitted under, so a
+        // swap only changes work admitted from here on
+        let active_plan = self.plan.clone();
         // disjoint field borrows: the body below is the pre-actor loop
         // iteration over what used to be locals
         let EngineActor {
@@ -939,15 +1011,14 @@ impl EngineActor {
                 let bd = if priced.iter().all(|m| m.covered == 0) {
                     let mut pshape = engine.shape;
                     pshape.seq_len = max_first;
-                    let prefill = engine.strategy.schedule(&pshape);
+                    let prefill = engine.sched_prefill(&pshape, active_plan.as_ref());
                     evaluate_on_trace_batched(&prefill, &engine.params, &engine.trace, now, b)
                 } else {
                     // suffix-only pricing: covered tokens are never
                     // recomputed; the chunk schedule charges the new
                     // rows attending over the covered context
                     let ctx = priced.iter().map(|m| m.covered + m.first).max().unwrap();
-                    let sched =
-                        engine.strategy.prefill_chunk_schedule(&engine.shape, max_first, ctx);
+                    let sched = engine.sched_chunk(max_first, ctx, active_plan.as_ref());
                     evaluate_on_trace_batched(&sched, &engine.params, &engine.trace, now, b)
                 };
                 iter_bd.accumulate(&bd);
@@ -973,6 +1044,10 @@ impl EngineActor {
                     })
                     .collect(),
                 prefill_limit: chunk_budget,
+                split_weights: active_plan
+                    .as_ref()
+                    .zip(engine.profile.as_ref())
+                    .and_then(|(p, profile)| p.split.split_weights(profile)),
             };
             backend.admit(&admit_batch)?;
 
@@ -1167,7 +1242,7 @@ impl EngineActor {
             let bd = if plan.is_empty() {
                 // no prefilling slots: the classic batched decode step
                 // (bit-identical pricing to the unchunked scheduler)
-                let step = engine.strategy.decode_step_schedule(&engine.shape, ctx);
+                let step = engine.sched_decode(ctx, active_plan.as_ref());
                 evaluate_on_trace_batched(&step, &engine.params, &engine.trace, now, b)
             } else {
                 // fuse the chunk batch with the piggybacked decode
@@ -1180,13 +1255,8 @@ impl EngineActor {
                     })
                     .max()
                     .unwrap_or(chunk_tokens);
-                let fused = engine.strategy.fused_iteration_schedule(
-                    &engine.shape,
-                    chunk_tokens,
-                    ctx_prefill,
-                    b,
-                    ctx,
-                );
+                let fused =
+                    engine.sched_fused(chunk_tokens, ctx_prefill, b, ctx, active_plan.as_ref());
                 evaluate_on_trace(&fused, &engine.params, &engine.trace, now)
             };
             // proactive checkpoints: every `ckpt_every`-th generated
@@ -1604,6 +1674,7 @@ impl EngineActor {
             wasted_decode_tokens,
             time_to_token,
             streams: self.streams,
+            replans: self.replans,
         }
     }
 }

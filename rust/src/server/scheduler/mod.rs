@@ -179,7 +179,10 @@ use crate::util::rng::Rng;
 
 use super::batcher::Request;
 use super::live::{prompt_stream_key, synth_prompt};
-use super::policy::{Fifo, PolicyKind, PrefixAware, SchedPolicy, SloClass};
+use super::policy::{Fifo, PlacementAware, PolicyKind, PrefixAware, SchedPolicy, SloClass};
+use crate::parallel::cost::FleetProfile;
+use crate::parallel::plan::{Plan, Planner};
+use crate::parallel::Schedule;
 use slots::Slot;
 
 /// Continuous-batching policy knobs.
@@ -322,6 +325,28 @@ pub struct CbConfig {
     /// <= 0 (default) keeps the flat `slo_preempt_budget` count
     /// unpriced, bit-identical to the historical streams.
     pub slo_preempt_cost_s: f64,
+    /// relative per-device speed profile (`--device-speeds 4,2,1,0.5`):
+    /// non-empty with at least two distinct values builds a
+    /// [`crate::parallel::FleetProfile`] and turns on heterogeneous
+    /// pricing — profile-weighted token splits, fastest-device decode
+    /// placement, and the planner's candidate search
+    /// ([`crate::parallel::Planner`]). Empty (default) or all-equal keeps
+    /// the legacy single-reference-device pricing and reproduces
+    /// historical event streams bit for bit.
+    pub device_speeds: Vec<f64>,
+    /// re-plan tick period, virtual seconds (`--replan-every`): every S
+    /// seconds the actor re-runs the planner on its EWMA bandwidth
+    /// estimate and swaps the active plan when the predicted win beats
+    /// the hysteresis ([`CbEvent::Replan`]). 0 (default) pins the plan
+    /// chosen at t=0 for the whole run — and with a uniform (or absent)
+    /// profile that is the even-split status quo, bit-identical to the
+    /// static streams.
+    pub replan_every_s: f64,
+    /// minimum predicted relative win before a re-plan tick swaps plans
+    /// (default 0.05: the challenger must model >= 5% faster than the
+    /// incumbent re-scored at current bandwidth) — the guard against
+    /// plan thrash on noisy traces
+    pub replan_hysteresis: f64,
 }
 
 impl Default for CbConfig {
@@ -354,6 +379,9 @@ impl Default for CbConfig {
             patience_spread: 0.0,
             length_tail_alpha: 0.0,
             slo_preempt_cost_s: 0.0,
+            device_speeds: Vec::new(),
+            replan_every_s: 0.0,
+            replan_hysteresis: 0.05,
         }
     }
 }
@@ -381,7 +409,9 @@ impl CbConfig {
         self.classes.get(class).copied().unwrap_or(0.0)
     }
 
-    /// Build the configured [`SchedPolicy`].
+    /// Build the configured [`SchedPolicy`]. [`PolicyKind::Placement`]
+    /// gets a neutral decode speed here; [`CbEngine::make_policy`] is the
+    /// profile-aware constructor the actor actually uses.
     pub fn make_policy(&self) -> Box<dyn SchedPolicy> {
         match self.policy {
             PolicyKind::Fifo => Box::new(Fifo),
@@ -393,6 +423,9 @@ impl CbConfig {
                 age_bound_s: self.age_bound_s,
                 preempt_budget: self.slo_preempt_budget.max(1),
             }),
+            PolicyKind::Placement => {
+                Box::new(PlacementAware { decode_speed: 1.0, age_bound_s: self.age_bound_s })
+            }
         }
     }
 }
@@ -452,6 +485,14 @@ pub enum CbEvent {
     /// requeue. A cancelled request is terminal: never completed, never
     /// censored, never re-admitted.
     Cancelled { id: u64 },
+    /// a `--replan-every` tick swapped the active heterogeneous plan:
+    /// planner candidate slot `from` -> `to`
+    /// ([`crate::parallel::plan::Planner::candidates`]). Admissions after
+    /// this event price and partition their prompts under the new plan;
+    /// in-flight slots finish on the plan they were admitted under — the
+    /// re-partition happens at the next admission boundary, so there is
+    /// no correctness cliff.
+    Replan { from: usize, to: usize },
 }
 
 /// LEGACY flat admission gate over Appendix-G mixed-KV memory — the
@@ -520,6 +561,12 @@ pub struct AdmitEntry {
 pub struct AdmitBatch {
     pub entries: Vec<AdmitEntry>,
     pub prefill_limit: usize,
+    /// per-device split weights the admitted sessions should partition
+    /// their prompts by (the active heterogeneous plan's weighted
+    /// profile); `None` keeps the cluster's even partition — the
+    /// static/legacy behavior and the value whenever no plan, an
+    /// even-baseline plan, or no profile is active
+    pub split_weights: Option<Vec<f64>>,
 }
 
 /// One prefill chunk fused into an iteration: replay prompt rows
@@ -670,6 +717,11 @@ pub struct CbEngine {
     pub params: SimParams,
     pub trace: BandwidthTrace,
     pub cfg: CbConfig,
+    /// heterogeneous fleet profile derived from `cfg.device_speeds`:
+    /// `None` when the flag is unset or every speed is equal — in which
+    /// case every pricing path below delegates to the legacy
+    /// reference-device schedules bit for bit
+    pub profile: Option<FleetProfile>,
 }
 
 impl CbEngine {
@@ -680,7 +732,108 @@ impl CbEngine {
         trace: BandwidthTrace,
         cfg: CbConfig,
     ) -> CbEngine {
-        CbEngine { shape, strategy, params, trace, cfg }
+        let speeds = &cfg.device_speeds;
+        let profile = if speeds.is_empty() || speeds.iter().all(|&s| s == speeds[0]) {
+            None
+        } else {
+            Some(FleetProfile::from_speeds(params.device, speeds))
+        };
+        CbEngine { shape, strategy, params, trace, cfg, profile }
+    }
+
+    /// The pure planner this engine's actor re-runs on each
+    /// `--replan-every` tick: the objective weighs one prefill against
+    /// this config's decode budget of batched decode steps.
+    pub fn planner(&self) -> Planner {
+        let mut p = Planner::new(
+            self.shape,
+            self.strategy,
+            self.params.device,
+            self.params.stage_latency_s,
+        );
+        p.decode_steps = self.cfg.decode_tokens.max(1);
+        p.decode_batch = self.cfg.max_slots.max(1);
+        p
+    }
+
+    /// Build the configured [`SchedPolicy`], profile-aware: the
+    /// placement policy learns the fleet's decode speed (its fastest
+    /// device) so admission ordering can price decode work in real
+    /// seconds. Every other kind delegates to [`CbConfig::make_policy`].
+    pub fn make_policy(&self) -> Box<dyn SchedPolicy> {
+        match self.cfg.policy {
+            PolicyKind::Placement => Box::new(PlacementAware {
+                decode_speed: self.profile.as_ref().map_or(1.0, |p| p.max_weight()),
+                age_bound_s: self.cfg.age_bound_s,
+            }),
+            _ => self.cfg.make_policy(),
+        }
+    }
+
+    /// The strategy + weighted profile an active non-baseline plan prices
+    /// with; `None` whenever legacy pricing applies (no profile, no plan,
+    /// or the even-split baseline plan) — the bit-identity anchor.
+    fn plan_pricing(&self, plan: Option<&Plan>) -> Option<(Strategy, FleetProfile)> {
+        let profile = self.profile.as_ref()?;
+        let plan = plan?;
+        if plan.is_even_baseline() {
+            return None;
+        }
+        Some((Strategy::new(plan.kind, self.strategy.n_devices), plan.split.weighted(profile)))
+    }
+
+    /// Plan-aware batched-prefill pricing ([`Strategy::schedule`]).
+    pub(crate) fn sched_prefill(&self, pshape: &TransformerShape, plan: Option<&Plan>) -> Schedule {
+        match self.plan_pricing(plan) {
+            Some((s, p)) => s.schedule_on(pshape, &p),
+            None => self.strategy.schedule(pshape),
+        }
+    }
+
+    /// Plan-aware decode-step pricing ([`Strategy::decode_step_schedule`]).
+    pub(crate) fn sched_decode(&self, ctx: usize, plan: Option<&Plan>) -> Schedule {
+        match self.plan_pricing(plan) {
+            Some((s, p)) => s.decode_step_schedule_on(&self.shape, ctx, &p),
+            None => self.strategy.decode_step_schedule(&self.shape, ctx),
+        }
+    }
+
+    /// Plan-aware prefill-chunk pricing
+    /// ([`Strategy::prefill_chunk_schedule`]).
+    pub(crate) fn sched_chunk(&self, chunk: usize, ctx: usize, plan: Option<&Plan>) -> Schedule {
+        match self.plan_pricing(plan) {
+            Some((s, p)) => s.prefill_chunk_schedule_on(&self.shape, chunk, ctx, &p),
+            None => self.strategy.prefill_chunk_schedule(&self.shape, chunk, ctx),
+        }
+    }
+
+    /// Plan-aware fused chunk+decode pricing
+    /// ([`Strategy::fused_iteration_schedule`]).
+    pub(crate) fn sched_fused(
+        &self,
+        chunk: usize,
+        ctx_prefill: usize,
+        decode_batch: usize,
+        ctx_decode: usize,
+        plan: Option<&Plan>,
+    ) -> Schedule {
+        match self.plan_pricing(plan) {
+            Some((s, p)) => s.fused_iteration_schedule_on(
+                &self.shape,
+                chunk,
+                ctx_prefill,
+                decode_batch,
+                ctx_decode,
+                &p,
+            ),
+            None => self.strategy.fused_iteration_schedule(
+                &self.shape,
+                chunk,
+                ctx_prefill,
+                decode_batch,
+                ctx_decode,
+            ),
+        }
     }
 
     /// Modeled mixed-KV bytes a slot holds after `generated` decode tokens

@@ -215,6 +215,9 @@ pub struct CbReport {
     /// per-request token delivery records, keyed by request id
     /// (populated only with the client model on — `patience_s > 0`)
     pub streams: BTreeMap<u64, TokenStream>,
+    /// plan swaps executed by the online re-planner (`--replan-every`);
+    /// 0 with re-planning off or on a uniform fleet
+    pub replans: usize,
 }
 
 impl CbReport {

@@ -351,6 +351,8 @@ fn event_ids(e: &CbEvent) -> Vec<u64> {
         | CbEvent::Checkpoint { id }
         | CbEvent::Restore { id }
         | CbEvent::Cancelled { id } => vec![*id],
+        // a plan swap names candidate indices, not requests
+        CbEvent::Replan { .. } => Vec::new(),
     }
 }
 

@@ -602,3 +602,63 @@ fn eviction_recompute_matches_model_and_preserves_generations() {
         assert_eq!(toks.len(), 3 * seq, "request {id}");
     }
 }
+
+#[test]
+fn heterogeneous_fleet_with_replanning_keeps_the_differential_exact() {
+    // profile-weighted pricing + online re-planning: both backends must
+    // still make identical decisions — including any CbEvent::Replan the
+    // EWMA planner emits (both sample the same shared bandwidth trace) —
+    // and the live sessions' proportional prompt splits must never
+    // contradict the modeled KV gate
+    let cluster = tiny_cluster(4, 7);
+    let seq = cluster.artifact.meta.seq_len;
+    let cfg = CbConfig {
+        max_slots: 4,
+        max_batch: 4,
+        decode_tokens: 6,
+        device_speeds: vec![4.0, 2.0, 1.0, 0.5],
+        replan_every_s: 5.0,
+        ..CbConfig::default()
+    };
+    let tr = BandwidthTrace::markovian(&mut Rng::new(7), 20.0, 100.0, 9, 1.0, 600.0);
+    let arrivals = live_arrivals(&mut Rng::new(44), 12.0, 30.0, seq);
+    assert!(arrivals.len() > 4, "{} arrivals", arrivals.len());
+    let mut model = live_engine(&cluster, cfg.clone(), params(), tr.clone());
+    let m = model.serve_stream_with(&mut ModelBackend, arrivals.clone(), 1e4).unwrap();
+    let live = serve_live(&cluster, cfg.clone(), params(), tr, arrivals, 1e4).unwrap();
+    assert_agree(&m, &live, "hetero replan");
+    assert_eq!(m.replans, live.report.replans, "replan counters diverged");
+    assert!(m.completed > 0);
+    // every completion still decodes its full budget on the live path
+    let full = live
+        .generations
+        .iter()
+        .filter(|(_, toks)| toks.len() == cfg.decode_tokens)
+        .count();
+    assert_eq!(full, m.completed);
+}
+
+#[test]
+fn all_equal_device_speeds_reproduce_the_unprofiled_streams_bit_for_bit() {
+    // `--device-speeds 2,2,2,2` must be indistinguishable from no flag at
+    // all: an all-equal profile collapses to None, so pricing, events,
+    // and generations are the legacy static streams
+    let cluster = tiny_cluster(4, 5);
+    let seq = cluster.artifact.meta.seq_len;
+    let base = CbConfig { max_slots: 4, max_batch: 4, decode_tokens: 6, ..CbConfig::default() };
+    let flagged = CbConfig {
+        device_speeds: vec![2.0, 2.0, 2.0, 2.0],
+        replan_every_s: 5.0,
+        ..base.clone()
+    };
+    let arrivals = live_arrivals(&mut Rng::new(31), 20.0, 8.0, seq);
+    let (m_base, live_base) = run_pair(&cluster, &base, &arrivals, 1e4);
+    let (m_flag, live_flag) = run_pair(&cluster, &flagged, &arrivals, 1e4);
+    assert_eq!(m_base.events, m_flag.events, "uniform profile changed the model stream");
+    assert_eq!(m_flag.replans, 0, "uniform profile must never re-plan");
+    let mut a = live_base.generations.clone();
+    let mut b = live_flag.generations.clone();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b, "uniform profile changed live generations");
+}

@@ -275,14 +275,17 @@ fn prop_chunked_prefill_covers_prompts_and_anchors_to_unchunked() {
                     progress.remove(id); // recompute: next episode restarts
                 }
                 CbEvent::Reject { .. } => {}
-                // prefix cache, swap, and faults are off in this property run
+                // prefix cache, swap, faults, cancellation, and
+                // re-planning are all off in this property run
                 CbEvent::PrefixHit { .. }
                 | CbEvent::SwapOut { .. }
                 | CbEvent::SwapIn { .. }
                 | CbEvent::Killed { .. }
                 | CbEvent::Checkpoint { .. }
-                | CbEvent::Restore { .. } => {
-                    unreachable!("{label}: prefix/swap/fault event without the feature enabled")
+                | CbEvent::Restore { .. }
+                | CbEvent::Cancelled { .. }
+                | CbEvent::Replan { .. } => {
+                    unreachable!("{label}: feature event without the feature enabled")
                 }
             }
         }
